@@ -1,0 +1,59 @@
+//! Perf probe: throughput of the hot kernels (EXPERIMENTS.md §Perf).
+use paraht::linalg::gemm::{gemm, Trans};
+use paraht::linalg::matrix::Matrix;
+use paraht::linalg::qr::QrFactor;
+use paraht::linalg::wy::{Side, WyRep};
+use paraht::util::rng::Rng;
+use paraht::util::timer::bench_min;
+
+fn main() {
+    let mut rng = Rng::new(1);
+    println!("{:<34}{:>10}", "kernel", "GFlop/s");
+    // Square GEMM
+    for n in [128usize, 256, 512] {
+        let a = Matrix::randn(n, n, &mut rng);
+        let b = Matrix::randn(n, n, &mut rng);
+        let mut c = Matrix::zeros(n, n);
+        let t = bench_min(3, 0.2, || {
+            gemm(1.0, a.as_ref(), Trans::No, b.as_ref(), Trans::No, 0.0, c.as_mut())
+        });
+        println!("{:<34}{:>10.2}", format!("gemm nn {n}x{n}x{n}"), 2.0 * (n as f64).powi(3) / t / 1e9);
+    }
+    // Thin GEMMs of the WY apply (m x k with k=16)
+    for (m, k, nc) in [(128usize, 16usize, 512usize), (256, 16, 512)] {
+        let v = Matrix::randn(m, k, &mut rng);
+        let c = Matrix::randn(m, nc, &mut rng);
+        let mut x = Matrix::zeros(k, nc);
+        let t = bench_min(3, 0.2, || {
+            gemm(1.0, v.as_ref(), Trans::Yes, c.as_ref(), Trans::No, 0.0, x.as_mut())
+        });
+        println!("{:<34}{:>10.2}", format!("gemm tn {k}x{nc}x{m}"), 2.0 * (m * k * nc) as f64 / t / 1e9);
+        let mut c2 = c.clone();
+        let t = bench_min(3, 0.2, || {
+            gemm(-1.0, v.as_ref(), Trans::No, x.as_ref(), Trans::No, 1.0, c2.as_mut())
+        });
+        println!("{:<34}{:>10.2}", format!("gemm nn {m}x{nc}x{k}"), 2.0 * (m * k * nc) as f64 / t / 1e9);
+    }
+    // Full WY apply (the stage-1 L_A unit)
+    for (m, k, nc) in [(128usize, 16usize, 512usize)] {
+        let vm = Matrix::randn(m, k, &mut rng);
+        let wy: WyRep = QrFactor::compute_inplace(vm).wy();
+        let mut c = Matrix::randn(m, nc, &mut rng);
+        let t = bench_min(3, 0.3, || {
+            wy.apply(Side::Left, paraht::linalg::Trans::Yes, c.as_mut())
+        });
+        println!("{:<34}{:>10.2}", format!("wy apply left {m}x{nc} k={k}"), 4.0 * (m * k * nc) as f64 / t / 1e9);
+    }
+    // Rotation kernel reference (what moler_stewart runs at)
+    {
+        let n = 512;
+        let mut m = Matrix::randn(n, n, &mut rng);
+        let g = paraht::linalg::givens::Givens { c: 0.8, s: 0.6 };
+        let t = bench_min(3, 0.2, || {
+            for i in 0..n - 1 {
+                g.apply_left(m.as_mut(), i, i + 1, 0..n);
+            }
+        });
+        println!("{:<34}{:>10.2}", "givens row sweep 512", 6.0 * ((n - 1) * n) as f64 / t / 1e9);
+    }
+}

@@ -1,0 +1,68 @@
+//! End-to-end generalized eigenvalue pipeline: the HT reduction as the QZ
+//! preprocessing step it exists for (§1 of the paper).
+//!
+//! Builds a pencil with a *known* real spectrum, reduces it with the
+//! two-stage algorithm, runs the single-shift QZ iteration on the
+//! Hessenberg-triangular result, and checks the recovered eigenvalues.
+//!
+//! ```text
+//! cargo run --release --example qz_pipeline [n]
+//! ```
+
+use paraht::config::Config;
+use paraht::ht::qz::{pencil_with_spectrum, qz};
+use paraht::ht::reduce_to_hessenberg_triangular;
+use paraht::util::rng::Rng;
+use paraht::util::timer::Timer;
+
+fn main() {
+    let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(64);
+    let mut rng = Rng::new(2024);
+
+    // Known spectrum: λ_i = i − n/2 (distinct, real, unit gaps — keeps the
+    // eigenproblem well conditioned at larger n).
+    let want: Vec<f64> = (0..n).map(|i| i as f64 - n as f64 / 2.0).collect();
+    let (a, b) = pencil_with_spectrum(&want, &mut rng);
+    println!(
+        "pencil n={n} with prescribed real spectrum in [{:.2}, {:.2}]",
+        want[0],
+        want[n - 1]
+    );
+
+    // Phase 1+2: two-stage Hessenberg-triangular reduction.
+    let cfg = Config { r: 8, p: 4, q: 4, ..Config::default() };
+    let t = Timer::start();
+    let d = reduce_to_hessenberg_triangular(&a, &b, &cfg).unwrap();
+    println!(
+        "HT reduction: {:.3}s (stage1 {:.3}s, stage2 {:.3}s)",
+        t.secs(),
+        d.stage1_secs,
+        d.stage2_secs
+    );
+    d.verify(&a, &b).assert_ok(1e-10);
+
+    // Phase 3: QZ iteration on the HT pencil.
+    let (mut h, mut t2) = (d.h.clone(), d.t.clone());
+    let (mut q, mut z) = (d.q.clone(), d.z.clone());
+    let timer = Timer::start();
+    let res = qz(&mut h, &mut t2, &mut q, &mut z, 50 * n).expect("QZ converges on real spectrum");
+    println!("QZ iteration: {:.3}s, {} iterations", timer.secs(), res.iterations);
+
+    // Compare recovered vs prescribed eigenvalues (all real by
+    // construction; tolerate tiny imaginary parts from near-degenerate
+    // pairs).
+    let mut got: Vec<f64> = res.eigenvalues.iter().map(|&(re, _)| re).collect();
+    let max_im = res.eigenvalues.iter().map(|&(_, im)| im.abs()).fold(0.0f64, f64::max);
+    println!("largest imaginary part: {max_im:.2e}");
+    got.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    let mut want_sorted = want.clone();
+    want_sorted.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    let max_err = got
+        .iter()
+        .zip(&want_sorted)
+        .map(|(g, w)| (g - w).abs() / w.abs().max(1.0))
+        .fold(0.0f64, f64::max);
+    println!("max relative eigenvalue error: {max_err:.2e}");
+    assert!(max_err < 1e-5, "eigenvalues diverged");
+    println!("OK — full pipeline (stage 1 → stage 2 → QZ) reproduces the spectrum.");
+}

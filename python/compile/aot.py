@@ -1,0 +1,71 @@
+"""AOT: lower the L2 bucket functions to HLO *text* artifacts.
+
+HLO text — NOT serialized HloModuleProto: jax >= 0.5 emits protos with
+64-bit instruction ids which the xla crate's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Outputs:
+  artifacts/<name>.hlo.txt       one module per bucket
+  artifacts/manifest.txt         one line per artifact:
+      name kind m n k path
+  (kind = left | right | panel; m,n,k = bucket dims of C and V)
+
+Python runs ONCE at build time (`make artifacts`); the rust binary only
+reads the artifacts.
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+jax.config.update("jax_enable_x64", True)
+
+from .model import BUCKETS, bucket_args  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def bucket_kind(name: str) -> str:
+    if name.startswith("wy_left"):
+        return "left"
+    if name.startswith("wy_right"):
+        return "right"
+    return "panel"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest_lines = []
+    for name, fn, shapes in BUCKETS:
+        lowered = jax.jit(fn).lower(*bucket_args(shapes))
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        cm, cn = shapes[0]
+        k = shapes[1][1]
+        manifest_lines.append(
+            f"{name} {bucket_kind(name)} {cm} {cn} {k} {name}.hlo.txt"
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote manifest with {len(manifest_lines)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

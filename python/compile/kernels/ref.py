@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the WY block-reflector kernels.
+
+The compact-WY representation is ``Q = I - V T V^T`` (LAPACK larfb,
+forward/columnwise). These references define the exact semantics the
+Pallas kernels (and the rust ``linalg::wy`` implementation) must match:
+
+* left  (trans): ``C <- Q^T C = C - V (T^T (V^T C))``
+* right (no-trans): ``C <- C Q = C - ((C V) T) V^T``
+
+which are the two hot-path applications of the paper's stage-1/stage-2
+updates (L_A, L_B, R_A, R_Z and the stage-2 WY sweeps).
+"""
+
+import jax.numpy as jnp
+
+
+def wy_apply_left_ref(c, v, t):
+    """C <- (I - V T V^T)^T C = C - V T^T V^T C."""
+    w = v.T @ c          # (k, nc)
+    x = t.T @ w          # (k, nc)
+    return c - v @ x
+
+
+def wy_apply_right_ref(c, v, t):
+    """C <- C (I - V T V^T) = C - C V T V^T."""
+    w = c @ v            # (mc, k)
+    x = w @ t            # (mc, k)
+    return c - x @ v.T
+
+
+def form_q_ref(v, t):
+    """Materialize Q = I - V T V^T (m x m)."""
+    m = v.shape[0]
+    return jnp.eye(m, dtype=v.dtype) - v @ t @ v.T

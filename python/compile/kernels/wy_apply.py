@@ -1,0 +1,95 @@
+"""L1 — Pallas WY block-reflector kernels.
+
+The paper's hot spot is the application of compact-WY block reflectors
+(`Q = I − V T Vᵀ`) to large matrix panels — two thin GEMMs per panel.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): on the paper's Xeon the
+update is cache-blocked; here it is re-thought for the MXU/VMEM model:
+
+* `C` is tiled along its long dimension by the Pallas grid; each grid step
+  holds one `(m × BN)` (left) or `(BM × m)` (right) tile of `C` in VMEM.
+* `V` (`m × k`, `k = r = 16`) and `T` (`k × k`) are small and replicated
+  into VMEM for every grid step (their BlockSpec index map is constant).
+* Both GEMMs of the update are **fused in one kernel**, so the `k`-thin
+  intermediate (`Vᵀ C` / `C V`) never round-trips through HBM.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; numerics are validated on the interpret path (pytest +
+hypothesis vs `ref.py`), and the real-TPU resource estimate lives in
+DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile widths for the long dimension of C. 128 matches the MXU/VREG lane
+# width; the bucketed runtime pads the ragged remainder.
+BLOCK_N = 128
+BLOCK_M = 128
+
+
+def _wy_left_kernel(v_ref, t_ref, c_ref, o_ref):
+    """One C-tile of ``C - V (T^T (V^T C))``; all operands VMEM-resident."""
+    v = v_ref[...]                    # (m, k)
+    t = t_ref[...]                    # (k, k)
+    c = c_ref[...]                    # (m, bn)
+    w = v.T @ c                       # (k, bn)   thin GEMM 1
+    x = t.T @ w                       # (k, bn)   tiny triangular GEMM
+    o_ref[...] = c - v @ x            # (m, bn)   thin GEMM 2 (fused)
+
+
+def _wy_right_kernel(v_ref, t_ref, c_ref, o_ref):
+    """One C-tile of ``C - ((C V) T) V^T``."""
+    v = v_ref[...]                    # (m, k)
+    t = t_ref[...]                    # (k, k)
+    c = c_ref[...]                    # (bm, m)
+    w = c @ v                         # (bm, k)
+    x = w @ t                         # (bm, k)
+    o_ref[...] = c - x @ v.T          # (bm, m)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def wy_apply_left(c, v, t):
+    """``C ← QᵀC`` for ``Q = I − V T Vᵀ``; C is (m, n) with n a multiple of
+    BLOCK_N (the AOT buckets guarantee this; the runtime pads)."""
+    m, n = c.shape
+    k = v.shape[1]
+    assert n % BLOCK_N == 0, f"n={n} must be a multiple of {BLOCK_N}"
+    grid = (n // BLOCK_N,)
+    return pl.pallas_call(
+        _wy_left_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, k), lambda i: (0, 0)),        # V: replicated
+            pl.BlockSpec((k, k), lambda i: (0, 0)),        # T: replicated
+            pl.BlockSpec((m, BLOCK_N), lambda i: (0, i)),  # C tile
+        ],
+        out_specs=pl.BlockSpec((m, BLOCK_N), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m, n), c.dtype),
+        interpret=True,
+    )(v, t, c)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def wy_apply_right(c, v, t):
+    """``C ← C·Q`` for ``Q = I − V T Vᵀ``; C is (mrows, m) with mrows a
+    multiple of BLOCK_M."""
+    mrows, m = c.shape
+    k = v.shape[1]
+    assert mrows % BLOCK_M == 0, f"mrows={mrows} must be a multiple of {BLOCK_M}"
+    grid = (mrows // BLOCK_M,)
+    return pl.pallas_call(
+        _wy_right_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, k), lambda i: (0, 0)),
+            pl.BlockSpec((k, k), lambda i: (0, 0)),
+            pl.BlockSpec((BLOCK_M, m), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_M, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mrows, m), c.dtype),
+        interpret=True,
+    )(v, t, c)

@@ -1,0 +1,59 @@
+"""L2 — the JAX compute graphs that get AOT-lowered to HLO artifacts.
+
+Each exported function wraps the L1 Pallas kernels into the exact update
+the rust coordinator offloads:
+
+* ``apply_left``  — `C ← QᵀC`  (stage-1 `L_A`/`L_B`-style left updates)
+* ``apply_right`` — `C ← C·Q`  (stage-1 `R_A`/`R_Z`, stage-2 WY sweeps)
+* ``panel_update`` — the fused stage-1 panel step: the left update of a
+  trailing block followed by a right opposite-reflector update, one HLO
+  module so XLA can schedule both GEMM pairs together.
+
+The functions are shape-monomorphic: `aot.py` lowers one HLO module per
+bucket shape listed in `BUCKETS`, and the rust runtime pads panels to the
+nearest bucket (`runtime/bucket.rs`).
+"""
+
+import jax.numpy as jnp
+
+from .kernels.wy_apply import wy_apply_left, wy_apply_right
+
+
+def apply_left(c, v, t):
+    """C ← (I − V T Vᵀ)ᵀ C via the fused Pallas kernel."""
+    return (wy_apply_left(c, v, t),)
+
+
+def apply_right(c, v, t):
+    """C ← C (I − V T Vᵀ) via the fused Pallas kernel."""
+    return (wy_apply_right(c, v, t),)
+
+
+def panel_update(c, vq, tq, vz, tz):
+    """Fused stage-1 block step on a square trailing tile:
+    left `Q̂ᵀ` then right `Ẑ` — both WY applications in one module."""
+    c1 = wy_apply_left(c, vq, tq)
+    c2 = wy_apply_right(c1, vz, tz)
+    return (c2,)
+
+
+# (name, function, [shapes of parameters]) — f64 everywhere to match the
+# rust substrate. m = p·r = 128, k = r = 16 are the paper's tunings.
+BUCKETS = [
+    ("wy_left_128x16_n128", apply_left, [(128, 128), (128, 16), (16, 16)]),
+    ("wy_left_128x16_n256", apply_left, [(128, 256), (128, 16), (16, 16)]),
+    ("wy_right_128x16_m128", apply_right, [(128, 128), (128, 16), (16, 16)]),
+    ("wy_right_128x16_m256", apply_right, [(256, 128), (128, 16), (16, 16)]),
+    (
+        "panel_update_128",
+        panel_update,
+        [(128, 128), (128, 16), (16, 16), (128, 16), (16, 16)],
+    ),
+]
+
+
+def bucket_args(shapes, dtype=jnp.float64):
+    """ShapeDtypeStructs for lowering."""
+    import jax
+
+    return [jax.ShapeDtypeStruct(s, dtype) for s in shapes]

@@ -1,0 +1,91 @@
+"""L2 tests: bucket model functions, shapes, and the AOT HLO-text path."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+from compile.aot import bucket_kind, to_hlo_text  # noqa: E402
+from compile.kernels.ref import wy_apply_left_ref, wy_apply_right_ref  # noqa: E402
+from compile.model import BUCKETS, apply_left, apply_right, bucket_args, panel_update  # noqa: E402
+
+
+def wy_factors(rng, m, k):
+    v = np.tril(rng.standard_normal((m, k)), -1)
+    for i in range(k):
+        v[i, i] = 1.0
+    taus = 2.0 / np.sum(v * v, axis=0)
+    t = np.zeros((k, k))
+    for i in range(k):
+        t[i, i] = taus[i]
+        if i > 0:
+            w = v[:, :i].T @ v[:, i]
+            t[:i, i] = -taus[i] * (t[:i, :i] @ w)
+    return jnp.asarray(v), jnp.asarray(t)
+
+
+def test_every_bucket_lowers_to_hlo_text():
+    for name, fn, shapes in BUCKETS:
+        lowered = jax.jit(fn).lower(*bucket_args(shapes))
+        text = to_hlo_text(lowered)
+        assert "ENTRY" in text, f"{name}: no ENTRY in HLO"
+        assert "f64" in text, f"{name}: expected f64 module"
+        assert len(text) > 1000
+
+
+def test_bucket_kinds():
+    kinds = {bucket_kind(name) for name, _, _ in BUCKETS}
+    assert kinds == {"left", "right", "panel"}
+
+
+def test_bucket_shapes_consistent():
+    for name, _, shapes in BUCKETS:
+        cm, cn = shapes[0]
+        vk = shapes[1]
+        assert vk[1] == shapes[2][0] == shapes[2][1], f"{name}: T must be k×k"
+        if bucket_kind(name) == "left":
+            assert vk[0] == cm, f"{name}: V rows must match C rows"
+        elif bucket_kind(name) == "right":
+            assert vk[0] == cn, f"{name}: V rows must match C cols"
+
+
+def test_panel_update_equals_composition():
+    """panel_update = apply_left then apply_right, against the oracle."""
+    rng = np.random.default_rng(7)
+    m, k = 128, 16
+    vq, tq = wy_factors(rng, m, k)
+    vz, tz = wy_factors(rng, m, k)
+    c = jnp.asarray(rng.standard_normal((m, m)))
+    (got,) = panel_update(c, vq, tq, vz, tz)
+    want = wy_apply_right_ref(wy_apply_left_ref(c, vq, tq), vz, tz)
+    np.testing.assert_allclose(got, want, rtol=1e-11, atol=1e-11)
+
+
+def test_apply_wrappers_return_tuples():
+    rng = np.random.default_rng(8)
+    v, t = wy_factors(rng, 128, 16)
+    c = jnp.asarray(rng.standard_normal((128, 128)))
+    out = apply_left(c, v, t)
+    assert isinstance(out, tuple) and len(out) == 1
+    out = apply_right(c, v, t)
+    assert isinstance(out, tuple) and len(out) == 1
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "manifest.txt")),
+    reason="artifacts not built",
+)
+def test_manifest_matches_buckets():
+    path = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "manifest.txt")
+    with open(path) as f:
+        lines = [l.split() for l in f if l.strip()]
+    names = {l[0] for l in lines}
+    assert names == {name for name, _, _ in BUCKETS}
+    for l in lines:
+        assert len(l) == 6
+        hlo = os.path.join(os.path.dirname(path), l[5])
+        assert os.path.exists(hlo), f"missing artifact {hlo}"

@@ -1,0 +1,52 @@
+//! Bench: ablations over the paper's design choices — the `p` block
+//! multiplier (§2.2), the `q` sweep-group size (§3.2), the stage-2
+//! lookahead (§3.3), and blocked vs unblocked stage 2 (Alg. 2 vs 3+4).
+
+use paraht::config::Config;
+use paraht::experiments::ablations::{lookahead_ablation, p_sweep, q_sweep};
+
+fn main() {
+    let n: usize = std::env::var("PARAHT_BENCH_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(320);
+    eprintln!("ablations at n={n}");
+
+    println!("\n== p sweep (stage 1): flops/n^3 and time ==");
+    println!("{:<6}{:>10}{:>14}{:>14}", "p", "time[s]", "flops/n^3", "formula");
+    for (p, secs, coeff) in p_sweep(n, 8, &[2, 4, 8, 12], 42) {
+        let formula = (28.0 * p as f64 + 14.0) / (3.0 * (p as f64 - 1.0));
+        println!("{p:<6}{secs:>10.3}{coeff:>14.2}{formula:>14.2}");
+    }
+
+    // q sweep at the paper's bandwidth r=16: the WY accumulation only pays
+    // off once the reflector groups are wide enough (q·r block updates) —
+    // at small r the unblocked Algorithm 2 wins, which is exactly why the
+    // paper pairs r=16 with q=8.
+    let nq = n.max(512);
+    println!("\n== q sweep (stage 2, r=16, n={nq}): sequential time (q=0 → unblocked Alg 2) ==");
+    println!("{:<6}{:>10}", "q", "time[s]");
+    let rows = q_sweep(nq, 16, &[1, 2, 4, 8, 16], 42);
+    for (q, secs) in &rows {
+        println!("{q:<6}{secs:>10.3}");
+    }
+    // Blocked with a reasonable q must beat the unblocked algorithm.
+    let unblocked = rows[0].1;
+    let best_blocked = rows[1..].iter().map(|r| r.1).fold(f64::INFINITY, f64::min);
+    assert!(
+        best_blocked < unblocked,
+        "blocked stage 2 must beat unblocked: {best_blocked:.3}s vs {unblocked:.3}s"
+    );
+
+    println!("\n== lookahead (stage 2, P=14) ==");
+    let cfg = Config { r: 8, q: 4, ..Config::default() };
+    let (with_look, without) = lookahead_ablation(n, &cfg, 14, 42);
+    println!("with lookahead:    {with_look:.4}s");
+    println!(
+        "without lookahead: {without:.4}s   ({:.1}% slower)",
+        100.0 * (without / with_look - 1.0)
+    );
+    assert!(with_look <= without * 1.02, "lookahead must not hurt");
+
+    println!("\nshape checks OK (blocked beats unblocked; lookahead helps)");
+}

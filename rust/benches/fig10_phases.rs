@@ -1,0 +1,44 @@
+//! Bench: regenerate Fig. 10 — parallel speedup and relative runtime of
+//! the two phases of ParaHT.
+//!
+//! Paper shape: most runtime in phase 2 despite phase 1 having slightly
+//! more flops; phase speedups track each other; larger matrices scale
+//! better (speedup ~2 at n=1000, ~10 at n=8000).
+
+use paraht::experiments::{common, figures};
+
+fn main() {
+    let sizes: Vec<usize> = std::env::var("PARAHT_BENCH_SIZES")
+        .ok()
+        .map(|s| s.split(',').filter_map(|p| p.parse().ok()).collect())
+        .unwrap_or_else(|| vec![192, 384, 576]);
+    eprintln!("fig10: sizes {sizes:?}");
+    let data = figures::fig10(&sizes, 42);
+
+    for d in &data {
+        let header: Vec<String> = common::PAPER_THREADS.iter().map(|p| format!("P={p}")).collect();
+        let rows = vec![
+            ("stage 1 speedup".to_string(), d.speedups.iter().map(|x| x.1).collect()),
+            ("stage 2 speedup".to_string(), d.speedups.iter().map(|x| x.2).collect()),
+            ("total speedup".to_string(), d.speedups.iter().map(|x| x.3).collect()),
+        ];
+        common::print_table(&format!("Fig 10 — phase speedups, n={}", d.n), &header, &rows);
+        println!(
+            "relative runtime: stage1 {:.1}%  stage2 {:.1}%",
+            100.0 * d.stage1_fraction,
+            100.0 * d.stage2_fraction
+        );
+    }
+
+    // Shape: scaling improves (or at least holds) with n.
+    let total_last = |d: &figures::PhaseData| d.speedups.last().unwrap().3;
+    if data.len() >= 2 {
+        let s_small = total_last(&data[0]);
+        let s_big = total_last(data.last().unwrap());
+        assert!(
+            s_big >= s_small * 0.9,
+            "larger n should scale at least as well: {s_small:.2} vs {s_big:.2}"
+        );
+    }
+    println!("\nshape checks OK");
+}

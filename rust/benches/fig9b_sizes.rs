@@ -1,0 +1,34 @@
+//! Bench: regenerate Fig. 9b — ParaHT's speedup over LAPACK, HouseHT and
+//! IterHT for varying pencil sizes (random pencils, full machine width;
+//! comparators capped at 14 threads as in the paper).
+//!
+//! Paper shape: ~2x over HouseHT; slightly slower than LAPACK for small
+//! matrices growing to ~4x for large ones; IterHT ahead except when it
+//! needs a second iteration.
+
+use paraht::experiments::{common, figures};
+
+fn main() {
+    let sizes: Vec<usize> = std::env::var("PARAHT_BENCH_SIZES")
+        .ok()
+        .map(|s| s.split(',').filter_map(|p| p.parse().ok()).collect())
+        .unwrap_or_else(|| vec![128, 256, 384, 512]);
+    eprintln!("fig9b: sizes {sizes:?} (set PARAHT_BENCH_SIZES to change)");
+    let rows = figures::fig9b(&sizes, 28, 42);
+
+    let header = vec!["/LAPACK".to_string(), "/HouseHT".to_string(), "/IterHT".to_string()];
+    let trows: Vec<(String, Vec<f64>)> = rows
+        .iter()
+        .map(|r| (format!("n={}", r.n), vec![r.over_lapack, r.over_househt, r.over_iterht]))
+        .collect();
+    common::print_table("Fig 9b — ParaHT speedup over comparators (random)", &header, &trows);
+
+    // Shape: the advantage over LAPACK grows with n.
+    let first = rows.first().unwrap().over_lapack;
+    let last = rows.last().unwrap().over_lapack;
+    assert!(
+        last > first,
+        "speedup over LAPACK should grow with n: {first:.2} -> {last:.2}"
+    );
+    println!("\nshape checks OK (advantage over LAPACK grows with n)");
+}

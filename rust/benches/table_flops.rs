@@ -1,0 +1,46 @@
+//! Bench: the paper's flop-count analysis (§2.2, §3.1) from *measured*
+//! counts: stage 1 `(28p+14)/(3(p−1))·n³`, stage 2 `10n³`, one-stage
+//! `14n³`, two-stage overhead "more than 40%".
+
+use paraht::experiments::flops_table::{measure, stage1_coeff};
+
+fn main() {
+    let sizes: Vec<usize> = std::env::var("PARAHT_BENCH_SIZES")
+        .ok()
+        .map(|s| s.split(',').filter_map(|p| p.parse().ok()).collect())
+        .unwrap_or_else(|| vec![192, 320, 448]);
+    let (r, p, q) = (8usize, 4usize, 4usize);
+    eprintln!("flop table: sizes {sizes:?}, r={r} p={p} q={q}");
+    let rows = measure(&sizes, r, p, q, 42);
+
+    println!("\n== Flop-count table (measured / n^3) ==");
+    println!(
+        "{:<8}{:>10}{:>10}{:>12}{:>12}{:>12}",
+        "n", "stage1", "stage2", "two-stage", "one-stage", "overhead"
+    );
+    for row in &rows {
+        let total = row.stage1 + row.stage2;
+        println!(
+            "{:<8}{:>10.2}{:>10.2}{:>12.2}{:>12.2}{:>11.0}%",
+            row.n,
+            row.stage1,
+            row.stage2,
+            total,
+            row.one_stage,
+            100.0 * (total / row.one_stage - 1.0)
+        );
+    }
+    println!(
+        "paper   {:>10.2}{:>10.2}{:>12.2}{:>12.2}{:>11.0}%   (formulas, p={p})",
+        stage1_coeff(p),
+        10.0,
+        stage1_coeff(p) + 10.0,
+        14.0,
+        100.0 * ((stage1_coeff(p) + 10.0) / 14.0 - 1.0)
+    );
+
+    let last = rows.last().unwrap();
+    let overhead = (last.stage1 + last.stage2) / last.one_stage - 1.0;
+    assert!(overhead > 0.35, "two-stage overhead must exceed ~40%: {:.0}%", overhead * 100.0);
+    println!("\nshape checks OK (overhead {:.0}% > 35%)", overhead * 100.0);
+}

@@ -1,0 +1,161 @@
+//! `DGGHD3`-style blocked one-stage reduction (Kågström, Kressner,
+//! Quintana-Ortí², BIT 2008 — LAPACK 3.9's `dgghd3`), the paper's main
+//! library comparator.
+//!
+//! Same rotation sequence as Moler–Stewart (`14 n³` flops), but the
+//! application of each column's rotations to the *trailing* matrix parts —
+//! `A(:, j+1:n)`, `Q` and `Z` — is deferred and batched: a full rotation
+//! sequence is swept down each column in one cache-friendly pass. These
+//! batched updates are the "≥60% of operations via matrix-matrix-like
+//! kernels" part of dgghd3 that parallel BLAS can spread over cores, while
+//! the `B`-maintenance part stays sequential — exactly the Amdahl structure
+//! §1 of the paper criticizes. The coordinator's simulator slices the
+//! batched updates to model the parallel-BLAS execution of this baseline
+//! (see DESIGN.md §5 on this substitution).
+
+use crate::coordinator::graph::TaskClass;
+use crate::coordinator::recorder::PhaseRecorder;
+use crate::linalg::givens::Givens;
+use crate::linalg::matrix::{MatMut, Matrix};
+
+/// One rotation acting on adjacent lines `(i, i+1)` (rows for left batches,
+/// columns for right batches), stored with its position.
+#[derive(Clone, Copy)]
+pub struct PosRot {
+    /// First line index (acts on `i` and `i+1` is implicit? no — see apply).
+    pub i1: usize,
+    /// Second line index.
+    pub i2: usize,
+    /// The rotation.
+    pub g: Givens,
+}
+
+/// Apply a batch of *left* rotation pairs to a column slice of `m`,
+/// sweeping every rotation down each column in one pass.
+pub fn apply_left_batch(rots: &[PosRot], mut m: MatMut<'_>, cols: std::ops::Range<usize>) {
+    crate::util::flops::add(6 * rots.len() as u64 * (cols.end - cols.start) as u64);
+    for c in cols {
+        let col = m.col_mut(c);
+        for r in rots {
+            let x = col[r.i1];
+            let y = col[r.i2];
+            col[r.i1] = r.g.c * x + r.g.s * y;
+            col[r.i2] = -r.g.s * x + r.g.c * y;
+        }
+    }
+}
+
+/// Apply a batch of *right* rotation pairs (`col_{i1} ← c·col_{i1} +
+/// s·col_{i2}`, `col_{i2} ← −s·col_{i1} + c·col_{i2}`) over a row range.
+pub fn apply_right_batch(rots: &[PosRot], mut m: MatMut<'_>, rows: std::ops::Range<usize>) {
+    for r in rots {
+        r.g.apply_right(m.rb_mut(), r.i1, r.i2, rows.clone());
+    }
+}
+
+/// Blocked one-stage reduction; mathematically identical to
+/// [`crate::baselines::moler_stewart::reduce`], deferred/batched updates.
+pub fn reduce(a: &mut Matrix, b: &mut Matrix, q: &mut Matrix, z: &mut Matrix) {
+    let mut rec = PhaseRecorder::new();
+    reduce_recorded(a, b, q, z, &mut rec);
+}
+
+/// As [`reduce`], recording each phase (sequential rotation generation +
+/// `B` maintenance vs. batched "parallel-BLAS" trailing updates) into the
+/// recorder for comparator simulation.
+pub fn reduce_recorded(
+    a: &mut Matrix,
+    b: &mut Matrix,
+    q: &mut Matrix,
+    z: &mut Matrix,
+    rec: &mut PhaseRecorder,
+) {
+    let n = a.rows();
+    if n < 3 {
+        return;
+    }
+    for j in 0..n - 2 {
+        // --- Sequential part: generate rotations, maintain B and A(:,j). ---
+        let (lefts, rights) = rec.record(TaskClass::BaseSeq, false, || {
+            let mut lefts: Vec<PosRot> = Vec::with_capacity(n - j);
+            let mut rights: Vec<PosRot> = Vec::with_capacity(n - j);
+            for i in (j + 2..n).rev() {
+                let (g, _) = Givens::make(a[(i - 1, j)], a[(i, j)]);
+                // A column j only (the rest is deferred).
+                let x = a[(i - 1, j)];
+                let y = a[(i, j)];
+                a[(i - 1, j)] = g.c * x + g.s * y;
+                a[(i, j)] = 0.0;
+                g.apply_left(b.as_mut(), i - 1, i, i - 1..n);
+                lefts.push(PosRot { i1: i - 1, i2: i, g });
+
+                let (gr, _) = Givens::make(b[(i, i)], b[(i, i - 1)]);
+                gr.apply_right(b.as_mut(), i, i - 1, 0..i + 1);
+                b[(i, i - 1)] = 0.0;
+                rights.push(PosRot { i1: i, i2: i - 1, g: gr });
+            }
+            (lefts, rights)
+        });
+
+        // --- Batched ("BLAS") part: trailing A, Q, Z — one barrier each. ---
+        rec.record(TaskClass::BaseBlas, true, || {
+            apply_left_batch(&lefts, a.as_mut(), j + 1..n);
+        });
+        // Q accumulates Gᵀ of each left rotation, in order — as a column
+        // update that is `apply_right` with the same (c, s).
+        rec.record(TaskClass::BaseBlas, true, || {
+            apply_right_batch(&lefts, q.as_mut(), 0..n);
+        });
+        rec.record(TaskClass::BaseBlas, true, || {
+            apply_right_batch(&rights, a.as_mut(), 0..n);
+        });
+        rec.record(TaskClass::BaseBlas, true, || {
+            apply_right_batch(&rights, z.as_mut(), 0..n);
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::moler_stewart;
+    use crate::linalg::verify::{max_below_band, HtVerification};
+    use crate::pencil::random::random_pencil;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn equals_moler_stewart_to_rounding() {
+        let mut rng = Rng::new(120);
+        let p = random_pencil(40, &mut rng);
+        let (mut a1, mut b1) = (p.a.clone(), p.b.clone());
+        let (mut q1, mut z1) = (Matrix::identity(40), Matrix::identity(40));
+        moler_stewart::reduce(&mut a1, &mut b1, &mut q1, &mut z1);
+        let (mut a2, mut b2) = (p.a.clone(), p.b.clone());
+        let (mut q2, mut z2) = (Matrix::identity(40), Matrix::identity(40));
+        reduce(&mut a2, &mut b2, &mut q2, &mut z2);
+        let mut d = 0.0f64;
+        for jj in 0..40 {
+            for i in 0..40 {
+                d = d.max((a1[(i, jj)] - a2[(i, jj)]).abs());
+                d = d.max((b1[(i, jj)] - b2[(i, jj)]).abs());
+                d = d.max((q1[(i, jj)] - q2[(i, jj)]).abs());
+                d = d.max((z1[(i, jj)] - z2[(i, jj)]).abs());
+            }
+        }
+        assert!(d < 1e-11, "max deviation {d:.3e}");
+    }
+
+    #[test]
+    fn reduces_correctly() {
+        let mut rng = Rng::new(121);
+        let p = random_pencil(60, &mut rng);
+        let (a0, b0) = (p.a.clone(), p.b.clone());
+        let (mut a, mut b) = (p.a, p.b);
+        let mut q = Matrix::identity(60);
+        let mut z = Matrix::identity(60);
+        reduce(&mut a, &mut b, &mut q, &mut z);
+        assert_eq!(max_below_band(&a, 1), 0.0);
+        assert!(max_below_band(&b, 0) < 1e-13 * b.norm_fro());
+        HtVerification::compute(&a0, &b0, &q, &z, &a, &b, 1).assert_ok(1e-12);
+    }
+}

@@ -1,0 +1,16 @@
+//! Every comparator of the paper's §4 experiments, built from scratch:
+//!
+//! * [`moler_stewart`] — the original Givens one-stage reduction
+//!   (LAPACK `dgghrd`; the "sequential LAPACK" normalizer).
+//! * [`dgghd3`] — blocked one-stage (Kågström et al. 2008 / LAPACK 3.9)
+//!   with batched trailing updates.
+//! * [`househt`] — Householder-based one-stage with per-block refinement
+//!   (Bujanovic–Karlsson–Kressner style).
+//! * [`iterht`] — solve-based blocked one-stage with global iterative
+//!   refinement (Steel–Vandebril style); fails on many ∞ eigenvalues.
+
+pub mod dgghd3;
+pub mod househt;
+pub mod iterht;
+pub mod moler_stewart;
+pub mod one_stage;

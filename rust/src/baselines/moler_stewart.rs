@@ -1,0 +1,101 @@
+//! The original one-stage Hessenberg-triangular reduction of Moler &
+//! Stewart (1973) — Givens-rotation based, the algorithm behind LAPACK's
+//! `dgghrd`. Cost: `14 n³ + O(n²)` flops including the accumulation of
+//! `Q` and `Z` (§3.1 of the paper).
+//!
+//! This is the "LAPACK sequential" normalizer of every figure in §4.
+
+use crate::linalg::givens::Givens;
+use crate::linalg::matrix::Matrix;
+
+/// One-stage reduction: `A ← Hessenberg`, `B ← triangular` (B must start
+/// upper triangular), accumulating into `q`, `z`.
+///
+/// For each column `j`, entries `A(i, j)` are annihilated bottom-up with a
+/// left rotation of rows `(i−1, i)`; the resulting fill `B(i, i−1)` is
+/// immediately removed by a right rotation of columns `(i−1, i)`.
+pub fn reduce(a: &mut Matrix, b: &mut Matrix, q: &mut Matrix, z: &mut Matrix) {
+    let n = a.rows();
+    if n < 3 {
+        return;
+    }
+    for j in 0..n - 2 {
+        for i in (j + 2..n).rev() {
+            // Left rotation zeroing A(i, j) against A(i-1, j).
+            let (g, _) = Givens::make(a[(i - 1, j)], a[(i, j)]);
+            g.apply_left(a.as_mut(), i - 1, i, j..n);
+            a[(i, j)] = 0.0;
+            g.apply_left(b.as_mut(), i - 1, i, i - 1..n);
+            // Q accumulates the transpose of the left rotations:
+            // A0 = Q H Zᵀ with H = Gᵀ A ⇒ Q ← Q Gᵀ (columns i-1, i).
+            g_t_right(q, &g, i - 1, i);
+
+            // Right rotation zeroing the fill B(i, i-1) against B(i, i).
+            // Columns (i-1, i): choose G so that col_{i-1} gets the zero.
+            let (gr, _) = Givens::make(b[(i, i)], b[(i, i - 1)]);
+            // Apply to columns (i, i-1) in that order: c*col_i + s*col_{i-1}
+            // → col_i ; -s*col_i + c*col_{i-1} → col_{i-1}.
+            gr.apply_right(b.as_mut(), i, i - 1, 0..i + 1);
+            b[(i, i - 1)] = 0.0;
+            gr.apply_right(a.as_mut(), i, i - 1, 0..n);
+            gr.apply_right(z.as_mut(), i, i - 1, 0..n);
+        }
+    }
+}
+
+/// `M(:, [c1, c2]) ← M(:, [c1, c2]) · Gᵀ` for the rotation `G = [c s; -s c]`
+/// applied to the row pair. Columns transform as `col_{c1} ← c·col_{c1} +
+/// s·col_{c2}`, `col_{c2} ← −s·col_{c1} + c·col_{c2}` — which is exactly
+/// `Givens::apply_right` with the *same* `(c, s)`.
+fn g_t_right(m: &mut Matrix, g: &Givens, c1: usize, c2: usize) {
+    let rows = 0..m.rows();
+    g.apply_right(m.as_mut(), c1, c2, rows);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::verify::{max_below_band, HtVerification};
+    use crate::pencil::random::random_pencil;
+    use crate::pencil::saddle::saddle_pencil;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn reduces_random_pencil() {
+        let mut rng = Rng::new(110);
+        let p = random_pencil(50, &mut rng);
+        let (a0, b0) = (p.a.clone(), p.b.clone());
+        let (mut a, mut b) = (p.a, p.b);
+        let mut q = Matrix::identity(50);
+        let mut z = Matrix::identity(50);
+        reduce(&mut a, &mut b, &mut q, &mut z);
+        assert_eq!(max_below_band(&a, 1), 0.0);
+        assert!(max_below_band(&b, 0) < 1e-13 * b.norm_fro());
+        HtVerification::compute(&a0, &b0, &q, &z, &a, &b, 1).assert_ok(1e-12);
+    }
+
+    #[test]
+    fn handles_singular_b() {
+        // Rotations are oblivious to B's conditioning — the paper's point
+        // about LAPACK in the saddle-point experiments.
+        let mut rng = Rng::new(111);
+        let p = saddle_pencil(40, 0.25, &mut rng);
+        let (a0, b0) = (p.a.clone(), p.b.clone());
+        let (mut a, mut b) = (p.a, p.b);
+        let mut q = Matrix::identity(40);
+        let mut z = Matrix::identity(40);
+        reduce(&mut a, &mut b, &mut q, &mut z);
+        assert_eq!(max_below_band(&a, 1), 0.0);
+        HtVerification::compute(&a0, &b0, &q, &z, &a, &b, 1).assert_ok(1e-12);
+    }
+
+    #[test]
+    fn small_sizes_noop() {
+        let mut a = Matrix::identity(2);
+        let mut b = Matrix::identity(2);
+        let mut q = Matrix::identity(2);
+        let mut z = Matrix::identity(2);
+        reduce(&mut a, &mut b, &mut q, &mut z);
+        assert_eq!(a, Matrix::identity(2));
+    }
+}

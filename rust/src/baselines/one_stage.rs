@@ -1,0 +1,344 @@
+//! Generalized *one-stage* Householder-based Hessenberg-triangular
+//! reduction — the engine behind the `HouseHT` and `IterHT` comparators.
+//!
+//! Structure: Algorithm 1 of the paper with panel width `n_b = 1` (so the
+//! result is true Hessenberg form, not banded): each column is reduced by a
+//! chain of `p`-row Householder reflectors bottom-up, and `B`'s fill is
+//! removed block-wise by *opposite* reflectors. The two comparators differ
+//! in how the opposite reflector is constructed:
+//!
+//! * [`OppositeMethod::Rq`] — orthogonal RQ factorization of the block
+//!   (robust; insensitive to `B`'s conditioning).
+//! * [`OppositeMethod::Solve`] — solve `B_blk x = e₁` and reduce `x`
+//!   (cheap, BLAS-friendly — but the error scales with `cond(B_blk)`;
+//!   singular blocks fail outright). This is the Steel–Vandebril/IterHT
+//!   style construction and the mechanism behind the paper's saddle-point
+//!   results (§4, Fig. 11).
+//! * [`OppositeMethod::SolveWithFallback`] — try the solve, verify the
+//!   produced column, redo robustly on failure (HouseHT-style per-block
+//!   iterative refinement: correct everywhere, pays extra on bad blocks).
+
+use crate::coordinator::graph::TaskClass;
+use crate::coordinator::recorder::PhaseRecorder;
+use crate::error::{Error, Result};
+use crate::linalg::householder::Reflector;
+use crate::linalg::lu::LuFactor;
+use crate::linalg::matrix::Matrix;
+use crate::linalg::qr::QrFactor;
+use crate::linalg::rq::RqFactor;
+use crate::linalg::wy::Side;
+use crate::linalg::Trans;
+
+/// Opposite-reflector construction strategy.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum OppositeMethod {
+    /// Robust RQ-based construction.
+    Rq,
+    /// Triangular-solve construction; `Err(Numerical)` on bad blocks.
+    Solve,
+    /// Solve, verify, fall back to RQ per block.
+    SolveWithFallback,
+}
+
+/// Options for the one-stage reduction.
+#[derive(Clone, Copy, Debug)]
+pub struct OneStageOpts {
+    /// Block height multiplier (reflectors have `≤ p` rows).
+    pub p: usize,
+    /// Opposite-reflector construction.
+    pub method: OppositeMethod,
+    /// Reciprocal-condition threshold below which a solve is rejected.
+    pub rcond_tol: f64,
+    /// Relative residual threshold on the reduced `B` column.
+    pub residual_tol: f64,
+}
+
+impl Default for OneStageOpts {
+    fn default() -> Self {
+        OneStageOpts { p: 8, method: OppositeMethod::Rq, rcond_tol: 1e-12, residual_tol: 1e-8 }
+    }
+}
+
+/// Statistics of one reduction pass.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OneStageStats {
+    /// Blocks where the solve path was rejected and RQ was used instead.
+    pub fallbacks: usize,
+    /// Blocks processed in total.
+    pub blocks: usize,
+    /// Worst relative residual seen on a solve-reduced column.
+    pub worst_residual: f64,
+}
+
+/// Opposite reflector via RQ (first row of `Q̃`), as in stage 1/2.
+fn opposite_rq(blk: &Matrix) -> Reflector {
+    let rq = RqFactor::compute(blk);
+    let row = rq.q_top_rows(1);
+    let x: Vec<f64> = (0..blk.rows()).map(|c| row[(0, c)]).collect();
+    Reflector::reducing(&x).0
+}
+
+/// Opposite reflector via `B_blk x = e₁`: `Ẑ` reduces `x`, so
+/// `B_blk Ẑ e₁ = B_blk x / γ = e₁/γ` — the first block column is clean.
+fn opposite_solve(blk: &Matrix, rcond_tol: f64) -> Result<Reflector> {
+    let s = blk.rows();
+    let lu = LuFactor::compute(blk)?;
+    if lu.rcond_estimate() < rcond_tol {
+        return Err(Error::numerical(format!(
+            "opposite solve: block rcond {:.2e} below {rcond_tol:.1e}",
+            lu.rcond_estimate()
+        )));
+    }
+    let mut x = vec![0.0; s];
+    x[0] = 1.0;
+    lu.solve_vec(&mut x);
+    if !x.iter().all(|v| v.is_finite()) {
+        return Err(Error::numerical("opposite solve: non-finite solution"));
+    }
+    Ok(Reflector::reducing(&x).0)
+}
+
+/// One-stage reduction of `(A, B)` (B upper triangular) to
+/// Hessenberg-triangular form, accumulating into `q`, `z`.
+pub fn reduce(
+    a: &mut Matrix,
+    b: &mut Matrix,
+    q: &mut Matrix,
+    z: &mut Matrix,
+    opts: &OneStageOpts,
+) -> Result<OneStageStats> {
+    let mut rec = PhaseRecorder::new();
+    reduce_recorded(a, b, q, z, opts, &mut rec)
+}
+
+/// As [`reduce`], recording sequential vs. BLAS-sliceable phases for the
+/// comparator simulation (HouseHT/IterHT parallelize through BLAS with a
+/// barrier per call; the trailing applications are deferred per column to
+/// expose them as batched phases — left/right updates commute, so the
+/// result changes only at rounding level).
+pub fn reduce_recorded(
+    a: &mut Matrix,
+    b: &mut Matrix,
+    q: &mut Matrix,
+    z: &mut Matrix,
+    opts: &OneStageOpts,
+    rec: &mut PhaseRecorder,
+) -> Result<OneStageStats> {
+    let n = a.rows();
+    let p = opts.p.max(2);
+    let mut stats = OneStageStats::default();
+    if n < 3 {
+        return Ok(stats);
+    }
+    for j in 0..n - 2 {
+        // Block geometry: rows j+1..n in chains of p with overlap 1.
+        let rows = n - j - 1;
+        if rows < 2 {
+            continue;
+        }
+        let step = p - 1;
+        let nblocks = rows.div_ceil(step);
+        let block = |k: usize| {
+            let i1 = j + 1 + k * step;
+            (i1, (i1 + p).min(n))
+        };
+
+        // ---- Left pass (bottom-up), sequential core: generate the
+        // reflectors, reduce A(:, j), maintain B.
+        let mut hs: Vec<(usize, usize, Reflector)> = Vec::new();
+        rec.record(TaskClass::BaseSeq, false, || {
+            for k in (0..nblocks).rev() {
+                let (i1, i2e) = block(k);
+                if i2e <= i1 + 1 {
+                    continue;
+                }
+                let x: Vec<f64> = (i1..i2e).map(|i| a[(i, j)]).collect();
+                let (h, beta) = Reflector::reducing(&x);
+                a[(i1, j)] = beta;
+                for i in i1 + 1..i2e {
+                    a[(i, j)] = 0.0;
+                }
+                h.apply_left(b.sub_mut(i1..i2e, i1..n));
+                hs.push((i1, i2e, h));
+            }
+        });
+        // ---- Deferred BLAS phases: trailing A columns and Q.
+        rec.record(TaskClass::BaseBlas, true, || {
+            for (i1, i2e, h) in &hs {
+                h.apply_left(a.sub_mut(*i1..*i2e, j + 1..n));
+            }
+        });
+        rec.record(TaskClass::BaseBlas, true, || {
+            for (i1, i2e, h) in &hs {
+                h.apply_right(q.sub_mut(0..n, *i1..*i2e));
+            }
+        });
+
+        // ---- Right pass (bottom-up), sequential core: opposite
+        // reflectors + B update (incl. fallback logic).
+        let mut zs: Vec<(usize, usize, Reflector)> = Vec::new();
+        let mut fail: Option<Error> = None;
+        rec.record(TaskClass::BaseSeq, false, || {
+            for k in (0..nblocks).rev() {
+                let (i1, i2e) = block(k);
+                let s = i2e - i1;
+                if s < 2 {
+                    continue;
+                }
+                stats.blocks += 1;
+                let blk = b.sub(i1..i2e, i1..i2e).to_owned();
+
+                let mut zk = match opts.method {
+                    OppositeMethod::Rq => opposite_rq(&blk),
+                    OppositeMethod::Solve => match opposite_solve(&blk, opts.rcond_tol) {
+                        Ok(r) => r,
+                        Err(e) => {
+                            fail = Some(e);
+                            return;
+                        }
+                    },
+                    OppositeMethod::SolveWithFallback => {
+                        match opposite_solve(&blk, opts.rcond_tol) {
+                            Ok(r) => r,
+                            Err(_) => {
+                                stats.fallbacks += 1;
+                                opposite_rq(&blk)
+                            }
+                        }
+                    }
+                };
+
+                loop {
+                    // Tentatively check the produced column on a copy.
+                    let mut test = blk.clone();
+                    zk.apply_right(test.as_mut());
+                    let mut junk = 0.0f64;
+                    for i in 1..s {
+                        junk = junk.max(test[(i, 0)].abs());
+                    }
+                    let rel = junk / blk.norm_fro().max(1e-300);
+                    stats.worst_residual = stats.worst_residual.max(rel);
+                    if rel <= opts.residual_tol {
+                        break;
+                    }
+                    match opts.method {
+                        OppositeMethod::Rq => break,
+                        OppositeMethod::Solve => {
+                            fail = Some(Error::numerical(format!(
+                                "solve-based opposite reflector residual {rel:.2e} at block ({i1},{i2e})"
+                            )));
+                            return;
+                        }
+                        OppositeMethod::SolveWithFallback => {
+                            stats.fallbacks += 1;
+                            zk = opposite_rq(&blk);
+                        }
+                    }
+                }
+
+                zk.apply_right(b.sub_mut(0..i2e, i1..i2e));
+                for i in i1 + 1..i2e {
+                    b[(i, i1)] = 0.0;
+                }
+                zs.push((i1, i2e, zk));
+            }
+        });
+        if let Some(e) = fail {
+            return Err(e);
+        }
+        // ---- Deferred BLAS phases: A columns and Z.
+        rec.record(TaskClass::BaseBlas, true, || {
+            for (i1, i2e, zk) in &zs {
+                zk.apply_right(a.sub_mut(0..n, *i1..*i2e));
+            }
+        });
+        rec.record(TaskClass::BaseBlas, true, || {
+            for (i1, i2e, zk) in &zs {
+                zk.apply_right(z.sub_mut(0..n, *i1..*i2e));
+            }
+        });
+    }
+    Ok(stats)
+}
+
+/// Convenience used by tests: blocked left reflectors as WY (kept for API
+/// parity with stage 1; the `p`-row chains here are single reflectors).
+pub fn left_block_wy(a: &Matrix, i1: usize, i2e: usize, j: usize) -> crate::linalg::wy::WyRep {
+    let blk = a.sub(i1..i2e, j..j + 1).to_owned();
+    let f = QrFactor::compute_inplace(blk);
+    f.wy()
+}
+
+/// Apply helper re-exported for the parallel driver.
+pub fn apply_wy_right(wy: &crate::linalg::wy::WyRep, c: crate::linalg::matrix::MatMut<'_>) {
+    wy.apply(Side::Right, Trans::No, c);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::verify::{max_below_band, HtVerification};
+    use crate::pencil::random::random_pencil;
+    use crate::pencil::saddle::saddle_pencil;
+    use crate::util::rng::Rng;
+
+    fn run(n: usize, opts: &OneStageOpts, seed: u64, saddle: bool) -> Result<(f64, OneStageStats)> {
+        let mut rng = Rng::new(seed);
+        let p = if saddle { saddle_pencil(n, 0.25, &mut rng) } else { random_pencil(n, &mut rng) };
+        let (a0, b0) = (p.a.clone(), p.b.clone());
+        let (mut a, mut b) = (p.a, p.b);
+        let mut q = Matrix::identity(n);
+        let mut z = Matrix::identity(n);
+        let stats = reduce(&mut a, &mut b, &mut q, &mut z, opts)?;
+        assert_eq!(max_below_band(&a, 1), 0.0, "A not Hessenberg");
+        let v = HtVerification::compute(&a0, &b0, &q, &z, &a, &b, 1);
+        Ok((v.worst(), stats))
+    }
+
+    #[test]
+    fn rq_method_reduces_random() {
+        let opts = OneStageOpts::default();
+        let (worst, stats) = run(50, &opts, 130, false).unwrap();
+        assert!(worst < 1e-11, "worst residual {worst:.3e}");
+        assert_eq!(stats.fallbacks, 0);
+    }
+
+    #[test]
+    fn solve_method_reduces_well_conditioned() {
+        let opts = OneStageOpts { method: OppositeMethod::Solve, ..Default::default() };
+        let (worst, _) = run(50, &opts, 131, false).unwrap();
+        assert!(worst < 1e-10, "worst residual {worst:.3e}");
+    }
+
+    #[test]
+    fn solve_method_fails_on_saddle() {
+        // Singular B blocks → LU failure → Err (the IterHT failure mode).
+        let opts = OneStageOpts { method: OppositeMethod::Solve, ..Default::default() };
+        assert!(run(40, &opts, 132, true).is_err());
+    }
+
+    #[test]
+    fn fallback_method_succeeds_on_saddle_with_fallbacks() {
+        // HouseHT-style: correct on singular B, but pays fallbacks.
+        let opts = OneStageOpts { method: OppositeMethod::SolveWithFallback, ..Default::default() };
+        let (worst, stats) = run(40, &opts, 133, true).unwrap();
+        assert!(worst < 1e-11, "worst {worst:.3e}");
+        assert!(stats.fallbacks > 0, "expected fallbacks on singular B");
+    }
+
+    #[test]
+    fn fallback_rarely_triggers_on_random() {
+        let opts = OneStageOpts { method: OppositeMethod::SolveWithFallback, ..Default::default() };
+        let (_, stats) = run(50, &opts, 134, false).unwrap();
+        assert_eq!(stats.fallbacks, 0, "well-conditioned pencil should not fall back");
+    }
+
+    #[test]
+    fn p_variants() {
+        for p in [2usize, 4, 12] {
+            let opts = OneStageOpts { p, ..Default::default() };
+            let (worst, _) = run(30, &opts, 135, false).unwrap();
+            assert!(worst < 1e-11, "p={p}");
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! Algorithm configuration (the paper's tuning parameters).
+
+use crate::error::{Error, Result};
+
+/// Tuning parameters of the two-stage reduction.
+///
+/// Paper defaults (§4): `r = 16`, `p = 8`, `q = 8`; HouseHT uses `n_b = 64`.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Stage-1 target bandwidth / stage-1 panel width `n_b` (the paper sets
+    /// `r = n_b`; column `j` of the r-Hessenberg result has its last nonzero
+    /// in row `j + r`).
+    pub r: usize,
+    /// Stage-1 block-height multiplier: QR blocks are `p·n_b × n_b`.
+    pub p: usize,
+    /// Stage-2 sweep-group size (columns per generate/apply round).
+    pub q: usize,
+    /// Number of worker threads (real execution) / virtual cores (simulation).
+    pub threads: usize,
+    /// Number of row/column slices per apply task (0 = auto: ~2× threads).
+    pub slices: usize,
+    /// Whether stage-2 lookahead tasks are enabled (§3.3). Ablation switch.
+    pub lookahead: bool,
+    /// Offload large WY applications to the PJRT runtime when available.
+    pub use_pjrt: bool,
+    /// RNG seed for workload generation.
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            r: 16,
+            p: 8,
+            q: 8,
+            threads: 1,
+            slices: 0,
+            lookahead: true,
+            use_pjrt: false,
+            seed: 0x5EED,
+        }
+    }
+}
+
+impl Config {
+    /// Validate parameter consistency.
+    pub fn validate(&self) -> Result<()> {
+        if self.r < 2 {
+            return Err(Error::config("r must be >= 2"));
+        }
+        if self.p < 2 {
+            return Err(Error::config("p must be >= 2 (blocks are p*nb x nb)"));
+        }
+        if self.q < 1 {
+            return Err(Error::config("q must be >= 1"));
+        }
+        if self.threads < 1 {
+            return Err(Error::config("threads must be >= 1"));
+        }
+        Ok(())
+    }
+
+    /// Effective slice count for apply tasks.
+    pub fn effective_slices(&self) -> usize {
+        if self.slices > 0 {
+            self.slices
+        } else {
+            (2 * self.threads).max(4)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_paper_tuning() {
+        let c = Config::default();
+        assert_eq!((c.r, c.p, c.q), (16, 8, 8));
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn rejects_bad_params() {
+        let mut c = Config::default();
+        c.p = 1;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.r = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn auto_slices() {
+        let mut c = Config::default();
+        c.threads = 8;
+        assert_eq!(c.effective_slices(), 16);
+        c.slices = 3;
+        assert_eq!(c.effective_slices(), 3);
+    }
+}

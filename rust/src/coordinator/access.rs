@@ -1,0 +1,114 @@
+//! Data-access declarations for dataflow dependency analysis.
+//!
+//! Every task declares the matrix regions it reads and writes; the graph
+//! builder derives edges from conflicting accesses (RAW, WAR, WAW) in
+//! submission order. This generalizes the hand-drawn dependency graphs of
+//! the paper (Figs. 2 and 7): the panel pipelining of stage 1 and the
+//! lookahead of stage 2 emerge from the declared regions instead of being
+//! wired by hand.
+
+use std::ops::Range;
+
+/// Identifies one of the shared matrices of a reduction.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub enum MatId {
+    /// The pencil's `A` (becomes `H`).
+    A,
+    /// The pencil's `B` (becomes `T`).
+    B,
+    /// Left orthogonal accumulator.
+    Q,
+    /// Right orthogonal accumulator.
+    Z,
+    /// Side-channel slot storage (reflector handoff between tasks).
+    Slots,
+}
+
+/// A rectangular region of a matrix.
+#[derive(Clone, Debug)]
+pub struct Region {
+    /// Which matrix.
+    pub mat: MatId,
+    /// Row range (half-open).
+    pub rows: Range<usize>,
+    /// Column range (half-open).
+    pub cols: Range<usize>,
+}
+
+impl Region {
+    /// Convenience constructor.
+    pub fn new(mat: MatId, rows: Range<usize>, cols: Range<usize>) -> Region {
+        Region { mat, rows, cols }
+    }
+
+    /// Whether the region is empty.
+    pub fn is_empty(&self) -> bool {
+        self.rows.start >= self.rows.end || self.cols.start >= self.cols.end
+    }
+
+    /// Whether two regions overlap (same matrix, intersecting rectangles).
+    pub fn intersects(&self, other: &Region) -> bool {
+        self.mat == other.mat
+            && !self.is_empty()
+            && !other.is_empty()
+            && self.rows.start < other.rows.end
+            && other.rows.start < self.rows.end
+            && self.cols.start < other.cols.end
+            && other.cols.start < self.cols.end
+    }
+}
+
+/// A declared access: region + read/write mode.
+#[derive(Clone, Debug)]
+pub struct Access {
+    /// The region touched.
+    pub region: Region,
+    /// True for writes (exclusive), false for reads (shared).
+    pub write: bool,
+}
+
+impl Access {
+    /// Declare a read.
+    pub fn read(mat: MatId, rows: Range<usize>, cols: Range<usize>) -> Access {
+        Access { region: Region::new(mat, rows, cols), write: false }
+    }
+
+    /// Declare a write.
+    pub fn write(mat: MatId, rows: Range<usize>, cols: Range<usize>) -> Access {
+        Access { region: Region::new(mat, rows, cols), write: true }
+    }
+
+    /// Whether two accesses conflict (overlap and at least one writes).
+    pub fn conflicts(&self, other: &Access) -> bool {
+        (self.write || other.write) && self.region.intersects(&other.region)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intersection_logic() {
+        let a = Region::new(MatId::A, 0..5, 0..5);
+        let b = Region::new(MatId::A, 4..9, 4..9);
+        let c = Region::new(MatId::A, 5..9, 0..5);
+        let d = Region::new(MatId::B, 0..5, 0..5);
+        assert!(a.intersects(&b));
+        assert!(!a.intersects(&c)); // touching edge, half-open
+        assert!(!a.intersects(&d)); // different matrix
+        assert!(!Region::new(MatId::A, 3..3, 0..5).intersects(&a)); // empty
+    }
+
+    #[test]
+    fn conflict_rules() {
+        let r1 = Access::read(MatId::A, 0..5, 0..5);
+        let r2 = Access::read(MatId::A, 0..5, 0..5);
+        let w1 = Access::write(MatId::A, 2..3, 2..3);
+        let w2 = Access::write(MatId::A, 7..9, 7..9);
+        assert!(!r1.conflicts(&r2), "read-read never conflicts");
+        assert!(r1.conflicts(&w1), "read-write conflicts");
+        assert!(w1.conflicts(&r1));
+        assert!(!w1.conflicts(&w2), "disjoint writes fine");
+    }
+}

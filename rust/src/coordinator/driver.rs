@@ -1,0 +1,233 @@
+//! The ParaHT driver: runs the full two-stage reduction through the
+//! coordinator — with real worker threads, or in trace mode for the
+//! makespan simulator — plus the comparator trace collection used by the
+//! figure benchmarks.
+
+use super::graph::TaskTrace;
+use super::recorder::PhaseRecorder;
+use super::sim::simulate_makespan;
+use super::stage1_par::{reduce_to_banded_par, ExecMode};
+use super::stage2_par::reduce_blocked_par;
+use crate::baselines::one_stage::{OneStageOpts, OppositeMethod};
+use crate::baselines::{dgghd3, iterht, moler_stewart, one_stage};
+use crate::config::Config;
+use crate::error::Result;
+use crate::linalg::matrix::Matrix;
+use crate::linalg::verify::HtVerification;
+use crate::util::timer::Timer;
+
+/// Outcome of a ParaHT run through the coordinator.
+pub struct ParaHtRun {
+    /// Hessenberg factor.
+    pub h: Matrix,
+    /// Triangular factor.
+    pub t: Matrix,
+    /// Left orthogonal factor.
+    pub q: Matrix,
+    /// Right orthogonal factor.
+    pub z: Matrix,
+    /// Wall-clock seconds for stage 1 / stage 2 (of this execution).
+    pub stage_secs: (f64, f64),
+    /// Task traces (trace mode only): stage 1 and stage 2.
+    pub traces: Option<(TaskTrace, TaskTrace)>,
+}
+
+impl ParaHtRun {
+    /// Verify against the original pencil.
+    pub fn verify(&self, a0: &Matrix, b0: &Matrix) -> HtVerification {
+        HtVerification::compute(a0, b0, &self.q, &self.z, &self.h, &self.t, 1)
+    }
+}
+
+/// Run the two-stage ParaHT reduction through the coordinator.
+/// `B` must be upper triangular (use
+/// [`crate::pencil::random::pre_triangularize`] otherwise).
+pub fn run_paraht(a: &Matrix, b: &Matrix, cfg: &Config, mode: ExecMode) -> Result<ParaHtRun> {
+    cfg.validate()?;
+    let n = a.rows();
+    let mut h = a.clone();
+    let mut t = b.clone();
+    let mut q = Matrix::identity(n);
+    let mut z = Matrix::identity(n);
+
+    let t1 = Timer::start();
+    let tr1 = reduce_to_banded_par(&mut h, &mut t, &mut q, &mut z, cfg, mode);
+    let s1 = t1.secs();
+    let t2 = Timer::start();
+    let tr2 = reduce_blocked_par(&mut h, &mut t, &mut q, &mut z, cfg, mode);
+    let s2 = t2.secs();
+
+    Ok(ParaHtRun {
+        h,
+        t,
+        q,
+        z,
+        stage_secs: (s1, s2),
+        traces: tr1.zip(tr2),
+    })
+}
+
+/// Simulated speedup data for one algorithm: per-P makespans plus the
+/// sequential total.
+#[derive(Clone, Debug)]
+pub struct SpeedupCurve {
+    /// Algorithm label.
+    pub name: &'static str,
+    /// Sequential (P = 1) time in seconds.
+    pub t1: f64,
+    /// `(P, simulated seconds)` points.
+    pub points: Vec<(usize, f64)>,
+}
+
+impl SpeedupCurve {
+    /// Speedup over a reference sequential time.
+    pub fn speedup_over(&self, t_ref: f64) -> Vec<(usize, f64)> {
+        self.points.iter().map(|&(p, t)| (p, t_ref / t)).collect()
+    }
+}
+
+/// Simulate a ParaHT trace pair over the worker counts.
+pub fn paraht_curve(traces: &(TaskTrace, TaskTrace), ps: &[usize]) -> SpeedupCurve {
+    let t1 = traces.0.total().as_secs_f64() + traces.1.total().as_secs_f64();
+    let points = ps
+        .iter()
+        .map(|&p| {
+            let m1 = simulate_makespan(&traces.0, p).makespan;
+            let m2 = simulate_makespan(&traces.1, p).makespan;
+            (p, m1 + m2)
+        })
+        .collect();
+    SpeedupCurve { name: "ParaHT", t1, points }
+}
+
+/// Simulate a barrier-structured comparator trace over the worker counts.
+pub fn recorder_curve(
+    name: &'static str,
+    rec: &PhaseRecorder,
+    ps: &[usize],
+    slices: usize,
+) -> SpeedupCurve {
+    let t1 = rec.total_secs();
+    let points = ps
+        .iter()
+        .map(|&p| {
+            let tr = rec.to_trace(slices.max(p));
+            (p, simulate_makespan(&tr, p).makespan)
+        })
+        .collect();
+    SpeedupCurve { name, t1, points }
+}
+
+/// Sequential LAPACK normalizer: Moler–Stewart runtime on this pencil.
+pub fn lapack_seq_time(a: &Matrix, b: &Matrix) -> f64 {
+    let n = a.rows();
+    let (mut a, mut b) = (a.clone(), b.clone());
+    let (mut q, mut z) = (Matrix::identity(n), Matrix::identity(n));
+    let t = Timer::start();
+    moler_stewart::reduce(&mut a, &mut b, &mut q, &mut z);
+    t.secs()
+}
+
+/// Traced DGGHD3 comparator run.
+pub fn dgghd3_recorded(a: &Matrix, b: &Matrix) -> PhaseRecorder {
+    let n = a.rows();
+    let (mut a, mut b) = (a.clone(), b.clone());
+    let (mut q, mut z) = (Matrix::identity(n), Matrix::identity(n));
+    let mut rec = PhaseRecorder::new();
+    dgghd3::reduce_recorded(&mut a, &mut b, &mut q, &mut z, &mut rec);
+    rec
+}
+
+/// Traced HouseHT comparator run (never fails; refinement cost included).
+pub fn househt_recorded(a: &Matrix, b: &Matrix) -> PhaseRecorder {
+    let n = a.rows();
+    let (mut a, mut b) = (a.clone(), b.clone());
+    let (mut q, mut z) = (Matrix::identity(n), Matrix::identity(n));
+    let mut rec = PhaseRecorder::new();
+    let opts = OneStageOpts { method: OppositeMethod::SolveWithFallback, ..Default::default() };
+    let _ = one_stage::reduce_recorded(&mut a, &mut b, &mut q, &mut z, &opts, &mut rec);
+    rec
+}
+
+/// Traced IterHT comparator run. `Err` reproduces the paper's
+/// non-convergence on pencils with many infinite eigenvalues.
+pub fn iterht_recorded(a: &Matrix, b: &Matrix) -> Result<(PhaseRecorder, usize)> {
+    let n = a.rows();
+    let (mut am, mut bm) = (a.clone(), b.clone());
+    let (mut q, mut z) = (Matrix::identity(n), Matrix::identity(n));
+    let opts = OneStageOpts {
+        method: OppositeMethod::Solve,
+        residual_tol: iterht::IterHtOpts::default().tol,
+        ..Default::default()
+    };
+    let mut rec = PhaseRecorder::new();
+    let max_iters = iterht::IterHtOpts::default().max_iters;
+    for iter in 1..=max_iters {
+        match one_stage::reduce_recorded(&mut am, &mut bm, &mut q, &mut z, &opts, &mut rec) {
+            Ok(_) => return Ok((rec, iter)),
+            Err(_) => continue,
+        }
+    }
+    Err(crate::Error::numerical(format!(
+        "IterHT failed to converge within {max_iters} iterations of iterative refinement"
+    )))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pencil::random::random_pencil;
+    use crate::pencil::saddle::saddle_pencil;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn paraht_threads_produces_valid_ht() {
+        let mut rng = Rng::new(180);
+        let p = random_pencil(60, &mut rng);
+        let cfg = Config { r: 6, p: 3, q: 4, threads: 4, ..Config::default() };
+        let run = run_paraht(&p.a, &p.b, &cfg, ExecMode::Threads(4)).unwrap();
+        run.verify(&p.a, &p.b).assert_ok(1e-11);
+        assert!(run.traces.is_none());
+    }
+
+    #[test]
+    fn paraht_trace_and_curve() {
+        let mut rng = Rng::new(181);
+        let p = random_pencil(80, &mut rng);
+        let cfg = Config { r: 8, p: 3, q: 4, threads: 1, ..Config::default() };
+        let run = run_paraht(&p.a, &p.b, &cfg, ExecMode::Trace).unwrap();
+        run.verify(&p.a, &p.b).assert_ok(1e-11);
+        let traces = run.traces.expect("trace mode");
+        let curve = paraht_curve(&traces, &[1, 2, 4, 8]);
+        // Monotone improvement.
+        for w in curve.points.windows(2) {
+            assert!(w[1].1 <= w[0].1 + 1e-12);
+        }
+        // P=1 simulation equals total work.
+        assert!((curve.points[0].1 - curve.t1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn comparator_curves_have_amdahl_shape() {
+        let mut rng = Rng::new(182);
+        let p = random_pencil(60, &mut rng);
+        let rec = dgghd3_recorded(&p.a, &p.b);
+        assert!(rec.sliceable_fraction() > 0.3, "dgghd3 BLAS fraction {:.2}", rec.sliceable_fraction());
+        let curve = recorder_curve("DGGHD3", &rec, &[1, 4, 16], 16);
+        let s16 = curve.t1 / curve.points[2].1;
+        // Amdahl: bounded by 1/(1-f).
+        let f = rec.sliceable_fraction();
+        assert!(s16 <= 1.0 / (1.0 - f) + 0.35, "s16={s16} f={f}");
+        assert!(s16 > 1.0);
+    }
+
+    #[test]
+    fn iterht_recorded_fails_on_saddle() {
+        let mut rng = Rng::new(183);
+        let p = saddle_pencil(40, 0.25, &mut rng);
+        assert!(iterht_recorded(&p.a, &p.b).is_err());
+        // But HouseHT completes.
+        let rec = househt_recorded(&p.a, &p.b);
+        assert!(rec.total_secs() > 0.0);
+    }
+}

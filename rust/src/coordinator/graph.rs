@@ -1,0 +1,269 @@
+//! Dataflow task graph: tasks + derived dependency edges.
+//!
+//! Tasks are submitted in the order the sequential algorithm would execute
+//! them; edges are derived from conflicting region accesses (see
+//! [`super::access`]). The graph can then be executed sequentially (with
+//! per-task timing for simulator calibration) or by the worker pool's
+//! dynamic scheduler.
+
+use super::access::Access;
+use std::time::Duration;
+
+/// Task classification — the paper's task names, used for metrics and for
+/// the per-class breakdowns in EXPERIMENTS.md.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub enum TaskClass {
+    /// Stage 1: generate left reflectors (panel QR chain).
+    GL,
+    /// Stage 1: apply left reflectors to `A` (column slice).
+    LA,
+    /// Stage 1: apply left reflectors to `B` (column slice).
+    LB,
+    /// Stage 1: accumulate into `Q` (row slice).
+    LQ,
+    /// Stage 1: generate right (opposite) reflectors, incl. the band part
+    /// of the `B` update.
+    GR,
+    /// Stage 1: apply right reflectors to `B` (row slice above the band).
+    RB,
+    /// Stage 1: apply right reflectors to `A` (row slice).
+    RA,
+    /// Stage 1: accumulate into `Z` (row slice).
+    RZ,
+    /// Stage 2: generate phase of a sweep group.
+    Gen2,
+    /// Stage 2: lookahead update (band needed by the next generate).
+    Look2,
+    /// Stage 2: trailing update (row/column slice).
+    Upd2,
+    /// Stage 2: `Q`/`Z` accumulation slice.
+    Acc2,
+    /// Baseline: sequential portion (rotation generation + B maintenance).
+    BaseSeq,
+    /// Baseline: parallel-BLAS-like batched update slice.
+    BaseBlas,
+}
+
+/// A node in the task graph.
+pub struct TaskNode<'a> {
+    /// Class label.
+    pub class: TaskClass,
+    /// Declared accesses (used to derive edges).
+    pub accesses: Vec<Access>,
+    /// Work closure. `Option` so executors can take it.
+    pub run: Option<Box<dyn FnOnce() + Send + 'a>>,
+    /// Predecessor task ids.
+    pub deps: Vec<usize>,
+    /// Successor task ids (filled by `finalize`).
+    pub succs: Vec<usize>,
+}
+
+/// The dataflow graph.
+pub struct TaskGraph<'a> {
+    /// All tasks in submission order.
+    pub tasks: Vec<TaskNode<'a>>,
+    /// Epoch boundaries (task indices); conflict scans are limited to the
+    /// last [`EPOCH_WINDOW`] epochs — see [`TaskGraph::new_epoch`].
+    epochs: Vec<usize>,
+}
+
+/// Number of trailing epochs scanned for conflicts.
+const EPOCH_WINDOW: usize = 3;
+
+impl<'a> Default for TaskGraph<'a> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<'a> TaskGraph<'a> {
+    /// Empty graph.
+    pub fn new() -> Self {
+        TaskGraph { tasks: Vec::new(), epochs: Vec::new() }
+    }
+
+    /// Mark an epoch boundary (one per stage-1 panel / stage-2 sweep
+    /// group). Conflict scanning in [`TaskGraph::add`] is then limited to
+    /// the last [`EPOCH_WINDOW`] epochs, turning the O(T²) dataflow build
+    /// into O(T·window).
+    ///
+    /// Soundness: every panel/group *collectively rewrites the whole
+    /// trailing region it touches*, so any conflict with a task more than
+    /// `EPOCH_WINDOW` epochs back is transitively ordered through the
+    /// intermediate epochs' writes. Callers that cannot guarantee this
+    /// must simply not call `new_epoch`.
+    pub fn new_epoch(&mut self) {
+        self.epochs.push(self.tasks.len());
+    }
+
+    fn scan_start(&self) -> usize {
+        if self.epochs.len() < EPOCH_WINDOW {
+            0
+        } else {
+            self.epochs[self.epochs.len() - EPOCH_WINDOW]
+        }
+    }
+
+    /// Submit a task; edges to earlier conflicting tasks (within the epoch
+    /// window) are derived. Returns the task id.
+    pub fn add(
+        &mut self,
+        class: TaskClass,
+        accesses: Vec<Access>,
+        run: impl FnOnce() + Send + 'a,
+    ) -> usize {
+        let id = self.tasks.len();
+        let start = self.scan_start();
+        let mut deps = Vec::new();
+        for (off, prev) in self.tasks[start..].iter().enumerate() {
+            // No transitive reduction — keeping all direct conflicts is
+            // correct and simple.
+            if prev
+                .accesses
+                .iter()
+                .any(|pa| accesses.iter().any(|na| pa.conflicts(na)))
+            {
+                deps.push(start + off);
+            }
+        }
+        self.tasks.push(TaskNode {
+            class,
+            accesses,
+            run: Some(Box::new(run)),
+            deps,
+            succs: Vec::new(),
+        });
+        id
+    }
+
+    /// Fill successor lists (call once after all submissions).
+    pub fn finalize(&mut self) {
+        let edges: Vec<(usize, usize)> = self
+            .tasks
+            .iter()
+            .enumerate()
+            .flat_map(|(id, t)| t.deps.iter().map(move |&d| (d, id)))
+            .collect();
+        for (from, to) in edges {
+            self.tasks[from].succs.push(to);
+        }
+    }
+
+    /// Number of tasks.
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Whether the graph is empty.
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    /// Execute sequentially in submission order (which is always a valid
+    /// topological order), timing each task. Returns the per-task trace.
+    pub fn run_sequential(mut self) -> TaskTrace {
+        let mut trace = TaskTrace::default();
+        for t in &mut self.tasks {
+            let f = t.run.take().expect("task already taken");
+            let start = std::time::Instant::now();
+            f();
+            trace.durations.push(start.elapsed());
+            trace.classes.push(t.class);
+            trace.deps.push(std::mem::take(&mut t.deps));
+        }
+        trace
+    }
+
+    /// Extract the dependency structure without running (for simulation of
+    /// a graph whose costs come from a model instead of a measurement).
+    pub fn structure(&self) -> (Vec<TaskClass>, Vec<Vec<usize>>) {
+        (
+            self.tasks.iter().map(|t| t.class).collect(),
+            self.tasks.iter().map(|t| t.deps.clone()).collect(),
+        )
+    }
+}
+
+/// Execution record of a graph: per-task durations + structure. Feed to
+/// [`super::sim::simulate_makespan`] to predict parallel runtime on P
+/// virtual workers — the substitution for the paper's 28-core machine.
+#[derive(Default, Clone)]
+pub struct TaskTrace {
+    /// Wall-clock duration of each task (sequential execution).
+    pub durations: Vec<Duration>,
+    /// Class of each task.
+    pub classes: Vec<TaskClass>,
+    /// Direct dependencies of each task.
+    pub deps: Vec<Vec<usize>>,
+}
+
+impl TaskTrace {
+    /// Total sequential time.
+    pub fn total(&self) -> Duration {
+        self.durations.iter().sum()
+    }
+
+    /// Sum of durations for one class.
+    pub fn class_total(&self, class: TaskClass) -> Duration {
+        self.durations
+            .iter()
+            .zip(&self.classes)
+            .filter(|(_, c)| **c == class)
+            .map(|(d, _)| *d)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::access::{Access, MatId};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn derives_raw_dependencies() {
+        let order = AtomicUsize::new(0);
+        let seen = std::sync::Mutex::new(Vec::new());
+        let mut g = TaskGraph::new();
+        let t0 = g.add(TaskClass::GL, vec![Access::write(MatId::A, 0..10, 0..4)], || {
+            seen.lock().unwrap().push((0, order.fetch_add(1, Ordering::SeqCst)));
+        });
+        // Reads what t0 wrote → edge.
+        let t1 = g.add(TaskClass::LA, vec![Access::read(MatId::A, 5..8, 0..2)], || {
+            seen.lock().unwrap().push((1, order.fetch_add(1, Ordering::SeqCst)));
+        });
+        // Disjoint → no edge.
+        let t2 = g.add(TaskClass::LA, vec![Access::write(MatId::A, 0..10, 7..9)], || {
+            seen.lock().unwrap().push((2, order.fetch_add(1, Ordering::SeqCst)));
+        });
+        assert_eq!(g.tasks[t1].deps, vec![t0]);
+        assert!(g.tasks[t2].deps.is_empty());
+        g.finalize();
+        let trace = g.run_sequential();
+        assert_eq!(trace.durations.len(), 3);
+        drop(trace);
+    }
+
+    #[test]
+    fn war_and_waw_edges() {
+        let mut g = TaskGraph::new();
+        let t0 = g.add(TaskClass::LA, vec![Access::read(MatId::B, 0..5, 0..5)], || {});
+        let t1 = g.add(TaskClass::LB, vec![Access::write(MatId::B, 0..5, 0..5)], || {});
+        let t2 = g.add(TaskClass::GR, vec![Access::write(MatId::B, 2..3, 2..3)], || {});
+        assert_eq!(g.tasks[t1].deps, vec![t0], "WAR");
+        // t2 conflicts with both the read (t0) and the write (t1); no
+        // transitive reduction is performed.
+        assert_eq!(g.tasks[t2].deps, vec![t0, t1], "WAW");
+    }
+
+    #[test]
+    fn trace_class_totals() {
+        let mut g = TaskGraph::new();
+        g.add(TaskClass::GL, vec![], || std::thread::sleep(Duration::from_millis(1)));
+        g.add(TaskClass::LA, vec![], || {});
+        g.finalize();
+        let tr = g.run_sequential();
+        assert!(tr.class_total(TaskClass::GL) >= Duration::from_millis(1));
+        assert!(tr.total() >= tr.class_total(TaskClass::GL));
+    }
+}

@@ -1,0 +1,23 @@
+//! The paper's L3 contribution: the parallel coordinator.
+//!
+//! * [`access`]/[`graph`] — dataflow task graph (tasks declare read/write
+//!   regions; edges derived from conflicts) generalizing Figs. 2 and 7.
+//! * [`pool`] — dependency-counting dynamic scheduler on worker threads.
+//! * [`sim`] — discrete-event makespan simulator: replays a measured task
+//!   trace on P virtual workers (the substitution for the paper's 28-core
+//!   machine; DESIGN.md §5).
+//! * [`slices`] — row/column slicing of the apply tasks (Figs. 3, 8).
+//! * [`stage1_par`]/[`stage2_par`] — task-graph builders for both stages.
+//! * [`baseline_par`] — task-graph builders modelling the comparators'
+//!   parallel-BLAS execution.
+//! * [`driver`] — the ParaHT entry point: real threads or simulation.
+
+pub mod access;
+pub mod graph;
+pub mod pool;
+pub mod sim;
+pub mod slices;
+pub mod stage1_par;
+pub mod stage2_par;
+pub mod recorder;
+pub mod driver;

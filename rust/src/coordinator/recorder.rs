@@ -1,0 +1,132 @@
+//! Phase recorder: barrier-structured traces for the *comparator*
+//! algorithms.
+//!
+//! ParaHT's own parallel execution is simulated from its real task DAG
+//! (`stage1_par`/`stage2_par` traces). The comparators (`DGGHD3`,
+//! `HouseHT`, `IterHT`) parallelize differently in the paper's experiments:
+//! through parallel BLAS inside each blocked operation, with an implicit
+//! barrier per call and a sequential remainder (§1: "If we rely only on the
+//! parallelization of the matrix-matrix multiplications, then 40% of the
+//! work will not be parallelized"; §2.3: "This results in the same amount
+//! of parallelism, but there are fewer synchronization points").
+//!
+//! The recorder captures each phase of a sequential run as either a
+//! *sequential* event or a *sliceable* (parallel-BLAS) event; `to_trace`
+//! expands sliceable events into `s` equal slice tasks between barriers.
+//! The equal split is a model (perfect intra-BLAS balance — generous to
+//! the comparators); see DESIGN.md §5.
+
+use super::graph::{TaskClass, TaskTrace};
+use crate::util::timer::Timer;
+use std::time::Duration;
+
+/// One recorded phase.
+#[derive(Clone, Copy, Debug)]
+pub struct PhaseEvent {
+    /// Task class for breakdowns.
+    pub class: TaskClass,
+    /// Measured duration.
+    pub secs: f64,
+    /// Whether parallel BLAS could slice this phase.
+    pub sliceable: bool,
+}
+
+/// Recorder for a sequential baseline run.
+#[derive(Default)]
+pub struct PhaseRecorder {
+    /// Recorded events in execution order.
+    pub events: Vec<PhaseEvent>,
+}
+
+impl PhaseRecorder {
+    /// New, empty recorder.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a phase by timing the closure.
+    pub fn record<R>(&mut self, class: TaskClass, sliceable: bool, f: impl FnOnce() -> R) -> R {
+        let t = Timer::start();
+        let r = f();
+        self.events.push(PhaseEvent { class, secs: t.secs(), sliceable });
+        r
+    }
+
+    /// Total recorded time.
+    pub fn total_secs(&self) -> f64 {
+        self.events.iter().map(|e| e.secs).sum()
+    }
+
+    /// Fraction of time in sliceable (parallel-BLAS) phases.
+    pub fn sliceable_fraction(&self) -> f64 {
+        let t = self.total_secs();
+        if t == 0.0 {
+            return 0.0;
+        }
+        self.events.iter().filter(|e| e.sliceable).map(|e| e.secs).sum::<f64>() / t
+    }
+
+    /// Expand into a barrier-structured [`TaskTrace`]: every event depends
+    /// on all tasks of the previous event; sliceable events become
+    /// `slices` equal tasks.
+    pub fn to_trace(&self, slices: usize) -> TaskTrace {
+        let slices = slices.max(1);
+        let mut trace = TaskTrace::default();
+        let mut prev: Vec<usize> = Vec::new();
+        for ev in &self.events {
+            let parts = if ev.sliceable { slices } else { 1 };
+            let dur = Duration::from_secs_f64(ev.secs / parts as f64);
+            let mut cur = Vec::with_capacity(parts);
+            for _ in 0..parts {
+                let id = trace.durations.len();
+                trace.durations.push(dur);
+                trace.classes.push(ev.class);
+                trace.deps.push(prev.clone());
+                cur.push(id);
+            }
+            prev = cur;
+        }
+        trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sim::simulate_makespan;
+
+    #[test]
+    fn records_and_expands() {
+        let mut rec = PhaseRecorder::new();
+        rec.record(TaskClass::BaseSeq, false, || std::thread::sleep(Duration::from_millis(2)));
+        rec.record(TaskClass::BaseBlas, true, || std::thread::sleep(Duration::from_millis(4)));
+        let tr = rec.to_trace(4);
+        assert_eq!(tr.durations.len(), 1 + 4);
+        // Barrier structure: every BLAS slice depends on the seq task.
+        for i in 1..5 {
+            assert_eq!(tr.deps[i], vec![0]);
+        }
+        // Amdahl: with 4 workers the BLAS part quarters, the seq part not.
+        let s1 = simulate_makespan(&tr, 1).makespan;
+        let s4 = simulate_makespan(&tr, 4).makespan;
+        assert!(s4 < s1);
+        assert!(s4 >= tr.durations[0].as_secs_f64());
+    }
+
+    #[test]
+    fn fractions() {
+        let mut rec = PhaseRecorder::new();
+        rec.events.push(PhaseEvent { class: TaskClass::BaseSeq, secs: 1.0, sliceable: false });
+        rec.events.push(PhaseEvent { class: TaskClass::BaseBlas, secs: 3.0, sliceable: true });
+        assert!((rec.sliceable_fraction() - 0.75).abs() < 1e-12);
+        assert!((rec.total_secs() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_recorder_empty_trace() {
+        let rec = PhaseRecorder::new();
+        let tr = rec.to_trace(8);
+        assert!(tr.durations.is_empty());
+        assert_eq!(rec.sliceable_fraction(), 0.0);
+    }
+}

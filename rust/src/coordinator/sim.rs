@@ -1,0 +1,172 @@
+//! Discrete-event makespan simulator — the substitution for the paper's
+//! 28-core Xeon (see DESIGN.md §5).
+//!
+//! Input: a [`TaskTrace`] (per-task durations measured during a sequential
+//! execution of the *real* task graph) and a virtual worker count `P`.
+//! The simulator replays the DAG under greedy FIFO list scheduling — the
+//! same policy as the real dynamic scheduler in [`super::pool`] — and
+//! reports the makespan. Speedup curves (Figs. 9–11) are then
+//! `T_ref / makespan(P)`.
+//!
+//! Guarantees (tested): `makespan(1) = Σ durations`; monotone non-increasing
+//! in `P`; bounded below by the critical path and by `total/P`.
+
+use super::graph::{TaskClass, TaskTrace};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+use std::time::Duration;
+
+/// Result of one simulation.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    /// Simulated wall-clock (seconds).
+    pub makespan: f64,
+    /// Sum of all task durations (seconds) — the P=1 time.
+    pub total_work: f64,
+    /// Critical-path length (seconds) — the P=∞ bound.
+    pub critical_path: f64,
+    /// Average worker utilization in [0, 1].
+    pub utilization: f64,
+}
+
+/// Simulate greedy FIFO list scheduling of the traced DAG on `p` workers.
+pub fn simulate_makespan(trace: &TaskTrace, p: usize) -> SimResult {
+    assert!(p >= 1);
+    let n = trace.durations.len();
+    let dur: Vec<f64> = trace.durations.iter().map(Duration::as_secs_f64).collect();
+    let total_work: f64 = dur.iter().sum();
+    if n == 0 {
+        return SimResult { makespan: 0.0, total_work: 0.0, critical_path: 0.0, utilization: 1.0 };
+    }
+
+    // Successor lists + indegrees.
+    let mut indeg = vec![0usize; n];
+    let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (id, deps) in trace.deps.iter().enumerate() {
+        indeg[id] = deps.len();
+        for &d in deps {
+            succs[d].push(id);
+        }
+    }
+
+    // Critical path (longest path; submission order is topological).
+    let mut cp = vec![0.0f64; n];
+    for id in 0..n {
+        let start: f64 = trace.deps[id].iter().map(|&d| cp[d]).fold(0.0, f64::max);
+        cp[id] = start + dur[id];
+    }
+    let critical_path = cp.iter().cloned().fold(0.0, f64::max);
+
+    // Event-driven simulation: ready FIFO (insertion = dependency-release
+    // order, matching the pool), worker completion heap.
+    let mut ready: VecDeque<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+    // Heap of (finish_time, task) as Reverse for min-heap. f64 ordering via
+    // total_cmp wrapper: store as u64 bits of non-negative f64s.
+    let mut running: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::new();
+    let mut free_workers = p;
+    let mut now = 0.0f64;
+    let mut done = 0usize;
+    let key = |t: f64| -> u64 { t.to_bits() }; // non-negative f64s order as bits
+
+    while done < n {
+        // Start as many ready tasks as possible.
+        while free_workers > 0 {
+            if let Some(t) = ready.pop_front() {
+                running.push(Reverse((key(now + dur[t]), t)));
+                free_workers -= 1;
+            } else {
+                break;
+            }
+        }
+        // Advance to the next completion.
+        let Reverse((fk, t)) = running.pop().expect("deadlock: no running tasks");
+        now = f64::from_bits(fk);
+        free_workers += 1;
+        done += 1;
+        for &s in &succs[t] {
+            indeg[s] -= 1;
+            if indeg[s] == 0 {
+                ready.push_back(s);
+            }
+        }
+    }
+
+    SimResult {
+        makespan: now,
+        total_work,
+        critical_path,
+        utilization: if now > 0.0 { total_work / (now * p as f64) } else { 1.0 },
+    }
+}
+
+/// Sum the simulated time attributable to one task class (for the phase
+/// breakdowns of Fig. 10): the fraction of total work in that class.
+pub fn class_fraction(trace: &TaskTrace, class: TaskClass) -> f64 {
+    let total = trace.total().as_secs_f64();
+    if total == 0.0 {
+        return 0.0;
+    }
+    trace.class_total(class).as_secs_f64() / total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_trace(durs_ms: &[u64], deps: Vec<Vec<usize>>) -> TaskTrace {
+        TaskTrace {
+            durations: durs_ms.iter().map(|&m| Duration::from_millis(m)).collect(),
+            classes: vec![TaskClass::Upd2; durs_ms.len()],
+            deps,
+        }
+    }
+
+    #[test]
+    fn p1_equals_total_work() {
+        let tr = mk_trace(&[10, 20, 30], vec![vec![], vec![0], vec![0]]);
+        let r = simulate_makespan(&tr, 1);
+        assert!((r.makespan - 0.060).abs() < 1e-9);
+        assert!((r.total_work - 0.060).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parallel_chain_vs_fanout() {
+        // Pure chain: no speedup.
+        let chain = mk_trace(&[10, 10, 10], vec![vec![], vec![0], vec![1]]);
+        let r = simulate_makespan(&chain, 4);
+        assert!((r.makespan - 0.030).abs() < 1e-9);
+        assert!((r.critical_path - 0.030).abs() < 1e-9);
+        // Fan-out: perfect speedup.
+        let fan = mk_trace(&[10, 10, 10, 10], vec![vec![], vec![], vec![], vec![]]);
+        let r2 = simulate_makespan(&fan, 4);
+        assert!((r2.makespan - 0.010).abs() < 1e-9);
+        assert!((r2.utilization - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn monotone_in_p_and_bounded() {
+        // Random-ish DAG.
+        let mut deps = vec![vec![]];
+        for i in 1..40usize {
+            deps.push(vec![i / 2, i.saturating_sub(3)]);
+        }
+        let durs: Vec<u64> = (1..=40).map(|i| (i * 7 % 13 + 1) as u64).collect();
+        let tr = mk_trace(&durs, deps);
+        let mut last = f64::INFINITY;
+        for p in [1, 2, 4, 8, 16] {
+            let r = simulate_makespan(&tr, p);
+            assert!(r.makespan <= last + 1e-12, "not monotone at p={p}");
+            assert!(r.makespan + 1e-12 >= r.critical_path, "below critical path");
+            assert!(r.makespan + 1e-12 >= r.total_work / p as f64, "beats work bound");
+            last = r.makespan;
+        }
+    }
+
+    #[test]
+    fn two_workers_pack_correctly() {
+        // Tasks 3,3,3 independent on 2 workers → makespan 6.
+        let tr = mk_trace(&[3, 3, 3], vec![vec![], vec![], vec![]]);
+        let r = simulate_makespan(&tr, 2);
+        assert!((r.makespan - 0.006).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,142 @@
+//! Row/column slice partitioning for the apply tasks (paper Fig. 3/8) and
+//! the shared-matrix handle the tasks operate through.
+
+use crate::linalg::matrix::{MatMut, MatRef, Matrix};
+use std::ops::Range;
+
+/// Split `range` into at most `parts` contiguous chunks of balanced size.
+pub fn partition(range: Range<usize>, parts: usize) -> Vec<Range<usize>> {
+    let len = range.end.saturating_sub(range.start);
+    if len == 0 || parts == 0 {
+        return Vec::new();
+    }
+    let parts = parts.min(len);
+    let base = len / parts;
+    let extra = len % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut s = range.start;
+    for i in 0..parts {
+        let sz = base + usize::from(i < extra);
+        out.push(s..s + sz);
+        s += sz;
+    }
+    out
+}
+
+/// Split `range` into at most `parts` chunks of at least `min_chunk`
+/// elements (fewer chunks when the range is small) — keeps per-task work
+/// meaningful so the dataflow graph stays compact while parallelism still
+/// grows with the problem size.
+pub fn partition_capped(range: Range<usize>, parts: usize, min_chunk: usize) -> Vec<Range<usize>> {
+    let len = range.end.saturating_sub(range.start);
+    let eff = parts.min(len / min_chunk.max(1)).max(1);
+    partition(range, eff)
+}
+
+/// Split `range` into chunks of at most `chunk` elements.
+pub fn partition_by_width(range: Range<usize>, chunk: usize) -> Vec<Range<usize>> {
+    let mut out = Vec::new();
+    let mut s = range.start;
+    while s < range.end {
+        let e = (s + chunk).min(range.end);
+        out.push(s..e);
+        s = e;
+    }
+    out
+}
+
+/// A matrix shared across scheduler tasks.
+///
+/// Tasks construct disjoint views at run time; the dataflow edges derived
+/// from declared [`Access`](crate::coordinator::access::Access) regions
+/// guarantee that concurrently-running tasks touch disjoint regions, which
+/// makes the aliased view construction sound (the generalized
+/// `split_at_mut` argument).
+pub struct SharedMat {
+    ptr: *mut f64,
+    rows: usize,
+    cols: usize,
+}
+
+unsafe impl Send for SharedMat {}
+unsafe impl Sync for SharedMat {}
+
+impl SharedMat {
+    /// Wrap a matrix. The caller must keep `m` alive and un-borrowed for
+    /// the lifetime of the scheduler run.
+    pub fn new(m: &mut Matrix) -> SharedMat {
+        SharedMat { ptr: m.data_mut().as_mut_ptr(), rows: m.rows(), cols: m.cols() }
+    }
+
+    /// Number of rows.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    /// Number of columns.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Mutable view of a region.
+    ///
+    /// # Safety
+    /// The caller must guarantee (here: via the task graph's region edges)
+    /// that no concurrently-running task accesses an overlapping region.
+    pub unsafe fn view(&self, r: Range<usize>, c: Range<usize>) -> MatMut<'_> {
+        debug_assert!(r.end <= self.rows && c.end <= self.cols);
+        MatMut::from_raw_parts(
+            self.ptr.add(r.start + c.start * self.rows),
+            r.end - r.start,
+            c.end - c.start,
+            self.rows,
+        )
+    }
+
+    /// Immutable view of a region.
+    ///
+    /// # Safety
+    /// As [`SharedMat::view`], with concurrent reads allowed.
+    pub unsafe fn view_ref(&self, r: Range<usize>, c: Range<usize>) -> MatRef<'_> {
+        debug_assert!(r.end <= self.rows && c.end <= self.cols);
+        MatRef::from_raw_parts(
+            self.ptr.add(r.start + c.start * self.rows) as *const f64,
+            r.end - r.start,
+            c.end - c.start,
+            self.rows,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_balanced() {
+        let p = partition(0..10, 3);
+        assert_eq!(p, vec![0..4, 4..7, 7..10]);
+        let total: usize = p.iter().map(|r| r.len()).sum();
+        assert_eq!(total, 10);
+        assert_eq!(partition(5..5, 3), Vec::<Range<usize>>::new());
+        assert_eq!(partition(0..2, 5).len(), 2, "no empty chunks");
+    }
+
+    #[test]
+    fn partition_widths() {
+        assert_eq!(partition_by_width(0..10, 4), vec![0..4, 4..8, 8..10]);
+        assert_eq!(partition_by_width(3..3, 4).len(), 0);
+    }
+
+    #[test]
+    fn shared_mat_views() {
+        let mut m = Matrix::from_fn(4, 4, |i, j| (i * 10 + j) as f64);
+        let sh = SharedMat::new(&mut m);
+        unsafe {
+            let v = sh.view_ref(1..3, 2..4);
+            assert_eq!(v.at(0, 0), 12.0);
+            let mut w = sh.view(0..1, 0..1);
+            w.set(0, 0, 99.0);
+        }
+        assert_eq!(m[(0, 0)], 99.0);
+    }
+}

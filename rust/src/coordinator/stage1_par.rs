@@ -1,0 +1,372 @@
+//! Parallel stage 1 (§2.3 of the paper): the per-panel task decomposition
+//! `G_L → {L_A, L_B, L_Q}`, `L_B → G_R → {R_A, R_Z}`, with the apply tasks
+//! split into column slices (`L_A`, `L_B` — left updates touch each column
+//! independently) and row slices (`L_Q`, `R_A`, `R_Z` — right updates touch
+//! each row independently), exactly Fig. 3.
+//!
+//! Dependencies — including the cross-panel pipelining of Fig. 2 (the next
+//! panel's `G_L` can start as soon as the slices covering its columns are
+//! done, while trailing slices of the previous panel still run) — are
+//! derived automatically from the declared regions.
+//!
+//! Reflector handoff between the generate and apply tasks goes through
+//! mutex slots; their ordering is modelled as accesses to the pseudo-matrix
+//! [`MatId::Slots`] (row `2·panel` for `Q̂` slots, `2·panel+1` for `Ẑ`).
+
+use super::access::{Access, MatId};
+use super::graph::{TaskClass, TaskGraph, TaskTrace};
+use super::pool::run_parallel;
+use super::slices::{partition_capped, SharedMat};
+use crate::config::Config;
+use crate::ht::stage1::{factor_panel_block, flush_b_subdiagonal, opposite_reflector, panel_plans};
+use crate::linalg::matrix::Matrix;
+use crate::linalg::wy::{Side, WyRep};
+use crate::linalg::Trans;
+use std::sync::Mutex;
+
+/// How to execute a built task graph.
+#[derive(Clone, Copy, Debug)]
+pub enum ExecMode {
+    /// Real worker threads.
+    Threads(usize),
+    /// Sequential execution with per-task timing (simulator calibration).
+    Trace,
+}
+
+/// Reflector slot arena for one stage-1 run (owned outside the graph so
+/// task closures can borrow it).
+pub struct Stage1Arena {
+    slots: Vec<Vec<Mutex<Option<WyRep>>>>, // [2*panel + side][block]
+}
+
+impl Stage1Arena {
+    fn new(plans: &[crate::ht::stage1::PanelPlan]) -> Stage1Arena {
+        let mut slots = Vec::with_capacity(2 * plans.len());
+        for plan in plans {
+            let nb = plan.blocks.len();
+            slots.push((0..nb).map(|_| Mutex::new(None)).collect());
+            slots.push((0..nb).map(|_| Mutex::new(None)).collect());
+        }
+        Stage1Arena { slots }
+    }
+}
+
+/// Build the stage-1 task graph over shared matrices.
+#[allow(clippy::too_many_arguments)]
+pub fn build_graph<'a>(
+    a: &'a SharedMat,
+    b: &'a SharedMat,
+    q: &'a SharedMat,
+    z: &'a SharedMat,
+    arena: &'a Stage1Arena,
+    plans: &'a [crate::ht::stage1::PanelPlan],
+    cfg: &Config,
+) -> TaskGraph<'a> {
+    let n = a.rows();
+    let nb = cfg.r;
+    let nslices = cfg.effective_slices();
+    let mut g = TaskGraph::new();
+
+    for (pi, plan) in plans.iter().enumerate() {
+        let (j, je) = (plan.j, plan.je);
+        if plan.blocks.is_empty() {
+            continue;
+        }
+        g.new_epoch();
+        let blocks = &plan.blocks;
+        let qrow = 2 * pi;
+        let zrow = 2 * pi + 1;
+        let nblk = blocks.len();
+        let panel_top = j + nb; // first row below the target band
+
+        // ---- G_L: factor the panel's QR chain bottom-up. ----
+        g.add(
+            TaskClass::GL,
+            vec![
+                Access::write(MatId::A, panel_top..n, j..je),
+                Access::write(MatId::Slots, qrow..qrow + 1, 0..nblk),
+            ],
+            move || {
+                for (k, &(i1, i2e)) in blocks.iter().enumerate().rev() {
+                    if i2e <= i1 {
+                        continue;
+                    }
+                    let wy = factor_panel_block(unsafe { a.view(i1..i2e, j..je) });
+                    *arena.slots[qrow][k].lock().unwrap() = Some(wy);
+                }
+            },
+        );
+
+        // ---- L_A: column slices of A(panel rows, je..n). ----
+        for cols in partition_capped(je..n, nslices, 32) {
+            let c = cols.clone();
+            g.add(
+                TaskClass::LA,
+                vec![
+                    Access::read(MatId::Slots, qrow..qrow + 1, 0..nblk),
+                    Access::write(MatId::A, panel_top..n, cols),
+                ],
+                move || {
+                    for (k, &(i1, i2e)) in blocks.iter().enumerate().rev() {
+                        if i2e <= i1 {
+                            continue;
+                        }
+                        let slot = arena.slots[qrow][k].lock().unwrap();
+                        let wy = slot.as_ref().expect("GL must have filled slot");
+                        wy.apply(Side::Left, Trans::Yes, unsafe { a.view(i1..i2e, c.clone()) });
+                    }
+                },
+            );
+        }
+
+        // ---- L_B: column slices of B(panel rows, panel_top..n). ----
+        for cols in partition_capped(panel_top..n, nslices, 32) {
+            let c = cols.clone();
+            g.add(
+                TaskClass::LB,
+                vec![
+                    Access::read(MatId::Slots, qrow..qrow + 1, 0..nblk),
+                    Access::write(MatId::B, panel_top..n, cols),
+                ],
+                move || {
+                    for (k, &(i1, i2e)) in blocks.iter().enumerate().rev() {
+                        if i2e <= i1 || c.end <= i1 {
+                            continue;
+                        }
+                        let c0 = c.start.max(i1);
+                        let slot = arena.slots[qrow][k].lock().unwrap();
+                        let wy = slot.as_ref().unwrap();
+                        wy.apply(Side::Left, Trans::Yes, unsafe { a_or(b).view(i1..i2e, c0..c.end) });
+                    }
+                },
+            );
+        }
+
+        // ---- L_Q: row slices of Q(:, block columns). ----
+        for rows in partition_capped(0..n, nslices, 32) {
+            let rr = rows.clone();
+            g.add(
+                TaskClass::LQ,
+                vec![
+                    Access::read(MatId::Slots, qrow..qrow + 1, 0..nblk),
+                    Access::write(MatId::Q, rows, panel_top..n),
+                ],
+                move || {
+                    for (k, &(i1, i2e)) in blocks.iter().enumerate().rev() {
+                        if i2e <= i1 {
+                            continue;
+                        }
+                        let slot = arena.slots[qrow][k].lock().unwrap();
+                        let wy = slot.as_ref().unwrap();
+                        wy.apply(Side::Right, Trans::No, unsafe { q.view(rr.clone(), i1..i2e) });
+                    }
+                },
+            );
+        }
+
+        // ---- G_R: opposite reflectors, per block (bottom-up). ----
+        // The RQ of block k must see block k+1's Ẑ applied to their shared
+        // columns, so the generate tasks chain; but the bulk of each Ẑ's
+        // B-update (rows above the next block's RQ window) is sliced into
+        // parallel tasks — the paper's "only the simple parallelization of
+        // the matrix-matrix multiplications is possible" for G_R (§2.3).
+        for (k, &(i1, i2e)) in blocks.iter().enumerate().rev() {
+            let s = i2e - i1;
+            if s == 0 {
+                continue;
+            }
+            let t = nb.min(s);
+            // Rows the *next* generate (block k-1, and ultimately the next
+            // panel) reads: keep them in the generate task itself.
+            let band_lo = if k == 0 { j.saturating_sub(nb) } else { blocks[k - 1].0 };
+            g.add(
+                TaskClass::GR,
+                vec![
+                    Access::write(MatId::B, band_lo..i2e, i1..i2e),
+                    Access::write(MatId::Slots, zrow..zrow + 1, k..k + 1),
+                ],
+                move || {
+                    let wy = opposite_reflector(unsafe { b.view_ref(i1..i2e, i1..i2e) }, nb);
+                    wy.apply(Side::Right, Trans::No, unsafe { b.view(band_lo..i2e, i1..i2e) });
+                    flush_b_subdiagonal(unsafe { b.view(i1..i2e, i1..i2e) }, t);
+                    *arena.slots[zrow][k].lock().unwrap() = Some(wy);
+                },
+            );
+            // Parallel part of the B update: rows [0, band_lo).
+            for rows in partition_capped(0..band_lo, nslices, 32) {
+                let rr = rows.clone();
+                g.add(
+                    TaskClass::RB,
+                    vec![
+                        Access::read(MatId::Slots, zrow..zrow + 1, k..k + 1),
+                        Access::write(MatId::B, rows, i1..i2e),
+                    ],
+                    move || {
+                        let slot = arena.slots[zrow][k].lock().unwrap();
+                        let wy = slot.as_ref().unwrap();
+                        wy.apply(Side::Right, Trans::No, unsafe { b.view(rr.clone(), i1..i2e) });
+                    },
+                );
+            }
+        }
+
+        // ---- R_A: row slices of A(:, block columns). ----
+        for rows in partition_capped(0..n, nslices, 32) {
+            let rr = rows.clone();
+            g.add(
+                TaskClass::RA,
+                vec![
+                    Access::read(MatId::Slots, zrow..zrow + 1, 0..nblk),
+                    Access::write(MatId::A, rows, panel_top..n),
+                ],
+                move || {
+                    for (k, &(i1, i2e)) in blocks.iter().enumerate().rev() {
+                        if i2e <= i1 {
+                            continue;
+                        }
+                        let slot = arena.slots[zrow][k].lock().unwrap();
+                        let wy = slot.as_ref().unwrap();
+                        wy.apply(Side::Right, Trans::No, unsafe { a.view(rr.clone(), i1..i2e) });
+                    }
+                },
+            );
+        }
+
+        // ---- R_Z: row slices of Z(:, block columns). ----
+        for rows in partition_capped(0..n, nslices, 32) {
+            let rr = rows.clone();
+            g.add(
+                TaskClass::RZ,
+                vec![
+                    Access::read(MatId::Slots, zrow..zrow + 1, 0..nblk),
+                    Access::write(MatId::Z, rows, panel_top..n),
+                ],
+                move || {
+                    for (k, &(i1, i2e)) in blocks.iter().enumerate().rev() {
+                        if i2e <= i1 {
+                            continue;
+                        }
+                        let slot = arena.slots[zrow][k].lock().unwrap();
+                        let wy = slot.as_ref().unwrap();
+                        wy.apply(Side::Right, Trans::No, unsafe { z.view(rr.clone(), i1..i2e) });
+                    }
+                },
+            );
+        }
+    }
+    g.finalize();
+    g
+}
+
+/// Type helper: L_B applies to `b`, not `a` (keeps the closure above tidy).
+#[inline]
+fn a_or(b: &SharedMat) -> &SharedMat {
+    b
+}
+
+/// Parallel (or traced) stage 1: same result as
+/// [`crate::ht::stage1::reduce_to_banded`].
+pub fn reduce_to_banded_par(
+    a: &mut Matrix,
+    b: &mut Matrix,
+    q: &mut Matrix,
+    z: &mut Matrix,
+    cfg: &Config,
+    mode: ExecMode,
+) -> Option<TaskTrace> {
+    let n = a.rows();
+    let plans = panel_plans(n, cfg.r, cfg.p);
+    let arena = Stage1Arena::new(&plans);
+    let sa = SharedMat::new(a);
+    let sb = SharedMat::new(b);
+    let sq = SharedMat::new(q);
+    let sz = SharedMat::new(z);
+    let graph = build_graph(&sa, &sb, &sq, &sz, &arena, &plans, cfg);
+    match mode {
+        ExecMode::Threads(t) => {
+            run_parallel(graph, t);
+            None
+        }
+        ExecMode::Trace => Some(graph.run_sequential()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ht::stage1::reduce_to_banded;
+    use crate::linalg::verify::{max_below_band, HtVerification};
+    use crate::pencil::random::random_pencil;
+    use crate::util::rng::Rng;
+
+    fn max_diff(x: &Matrix, y: &Matrix) -> f64 {
+        let mut d = 0.0f64;
+        for j in 0..x.cols() {
+            for i in 0..x.rows() {
+                d = d.max((x[(i, j)] - y[(i, j)]).abs());
+            }
+        }
+        d
+    }
+
+    fn compare_modes(n: usize, r: usize, p: usize, threads: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let pencil = random_pencil(n, &mut rng);
+        let cfg = Config { r, p, threads, ..Config::default() };
+
+        let (mut a1, mut b1) = (pencil.a.clone(), pencil.b.clone());
+        let (mut q1, mut z1) = (Matrix::identity(n), Matrix::identity(n));
+        reduce_to_banded(&mut a1, &mut b1, &mut q1, &mut z1, &cfg);
+
+        let (mut a2, mut b2) = (pencil.a.clone(), pencil.b.clone());
+        let (mut q2, mut z2) = (Matrix::identity(n), Matrix::identity(n));
+        reduce_to_banded_par(&mut a2, &mut b2, &mut q2, &mut z2, &cfg, ExecMode::Threads(threads));
+
+        // Identical task bodies in a valid topological order ⇒ identical
+        // floating-point results, bit for bit.
+        assert_eq!(max_diff(&a1, &a2), 0.0, "A differs");
+        assert_eq!(max_diff(&b1, &b2), 0.0, "B differs");
+        assert_eq!(max_diff(&q1, &q2), 0.0, "Q differs");
+        assert_eq!(max_diff(&z1, &z2), 0.0, "Z differs");
+    }
+
+    #[test]
+    fn parallel_equals_sequential_small() {
+        compare_modes(40, 4, 3, 4, 160);
+    }
+
+    #[test]
+    fn parallel_equals_sequential_paper_params() {
+        compare_modes(120, 16, 8, 3, 161);
+    }
+
+    #[test]
+    fn parallel_equals_sequential_odd() {
+        compare_modes(53, 5, 3, 5, 162);
+    }
+
+    #[test]
+    fn trace_mode_produces_valid_result_and_trace() {
+        let n = 60;
+        let mut rng = Rng::new(163);
+        let pencil = random_pencil(n, &mut rng);
+        let (a0, b0) = (pencil.a.clone(), pencil.b.clone());
+        let (mut a, mut b) = (pencil.a, pencil.b);
+        let (mut q, mut z) = (Matrix::identity(n), Matrix::identity(n));
+        let cfg = Config { r: 6, p: 3, threads: 4, ..Config::default() };
+        let trace = reduce_to_banded_par(&mut a, &mut b, &mut q, &mut z, &cfg, ExecMode::Trace)
+            .expect("trace mode returns a trace");
+        assert!(max_below_band(&a, 6) < 1e-12 * a.norm_fro());
+        HtVerification::compute(&a0, &b0, &q, &z, &a, &b, 6).assert_ok(1e-11);
+        assert!(!trace.durations.is_empty());
+        // Every task class of Fig. 2 must be present.
+        for cl in [TaskClass::GL, TaskClass::LA, TaskClass::LB, TaskClass::LQ, TaskClass::GR, TaskClass::RA, TaskClass::RZ] {
+            assert!(trace.classes.contains(&cl), "missing class {cl:?}");
+        }
+        // Simulation sanity on the real trace.
+        let s1 = crate::coordinator::sim::simulate_makespan(&trace, 1);
+        let s8 = crate::coordinator::sim::simulate_makespan(&trace, 8);
+        assert!(s8.makespan <= s1.makespan);
+        assert!(s8.makespan >= s1.critical_path - 1e-12);
+    }
+}

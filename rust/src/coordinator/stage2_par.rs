@@ -1,0 +1,429 @@
+//! Parallel stage 2 (§3.3 of the paper): per sweep group, a sequential
+//! *generate* task plus *lookahead* and *update* tasks (Figs. 7, 8).
+//!
+//! The generate task of group `g+1` needs only an `O(rq)` band of `(A, B)`
+//! updated; the apply work of group `g` is therefore split into
+//! *lookahead* tasks covering that band (class [`TaskClass::Look2`]) and
+//! trailing *update* slices ([`TaskClass::Upd2`], row slices for the `Ẑ`
+//! side, column slices for the `Q̂` side) plus `Q`/`Z` accumulation slices
+//! ([`TaskClass::Acc2`]). The dependency that makes generation overlap the
+//! trailing updates — the whole point of §3.3 — falls out of the declared
+//! regions: `Gen2(g+1)` conflicts with the lookahead tasks but not with the
+//! trailing slices.
+
+use super::access::{Access, MatId};
+use super::graph::{TaskClass, TaskGraph, TaskTrace};
+use super::pool::run_parallel;
+use super::slices::{partition_capped, SharedMat};
+use super::stage1_par::ExecMode;
+use crate::config::Config;
+use crate::ht::reflector_store::GroupReflectors;
+use crate::ht::stage2_blocked::{
+    generate_group, max_chase_steps, q_apply_for, z_apply_for, z_ragged_for, QApply, ZApply,
+};
+use crate::linalg::matrix::Matrix;
+use crate::linalg::wy::Side;
+use crate::linalg::Trans;
+use std::sync::{Arc, Mutex};
+
+/// Reflector-store slots plus per-(group, k) caches of the accumulated WY
+/// updates — built once (in the lookahead task) and shared by every
+/// update/accumulation slice, instead of re-running `larft` per slice.
+pub struct Stage2Arena {
+    slots: Vec<Mutex<Option<GroupReflectors>>>,
+    zcache: Vec<Vec<Mutex<Option<Arc<ZApply>>>>>,
+    qcache: Vec<Vec<Mutex<Option<Arc<QApply>>>>>,
+}
+
+impl Stage2Arena {
+    fn new(n: usize, r: usize, groups: &[(usize, usize)]) -> Stage2Arena {
+        fn mk<T>(count: usize) -> Vec<Mutex<Option<T>>> {
+            (0..count).map(|_| Mutex::new(None)).collect()
+        }
+        Stage2Arena {
+            slots: groups.iter().map(|_| Mutex::new(None)).collect(),
+            zcache: groups.iter().map(|&(j1, _)| mk(max_chase_steps(n, r, j1))).collect(),
+            qcache: groups.iter().map(|&(j1, _)| mk(max_chase_steps(n, r, j1))).collect(),
+        }
+    }
+}
+
+/// Geometry of the generate task's touched band, as rectangle unions
+/// (one per chase step) — used both for the `Gen2` access declaration and
+/// to size the lookahead split.
+fn generate_accesses(n: usize, r: usize, j1: usize, qg: usize) -> Vec<Access> {
+    let mut acc = Vec::new();
+    let kmax = max_chase_steps(n, r, j1);
+    for k in 0..kmax {
+        let jb = j1 + if k == 0 { 0 } else { (k - 1) * r + 1 };
+        let col_end_a = (j1 + qg + (k + 1) * r).min(n);
+        let row_end_a = (j1 + qg + (k + 2) * r).min(n);
+        let b_col_start = (j1 + k * r + 1).min(n);
+        // The generate phase touches chase step k only from row
+        // s5(k) = j1 + 1 + max(0, (k−q)·r) down (its minimal right-update
+        // start; the catch-ups and reflector reads all lie below too).
+        // Declaring tight rows is what lets Gen2(g+1) skip the trailing
+        // Upd2 slices of group g — the §3.3 lookahead overlap.
+        let t5 = k as i64 - qg as i64;
+        let row_start = (j1 + 1 + if t5 > 0 { t5 as usize * r } else { 0 }).min(n);
+        if jb < n {
+            acc.push(Access::write(MatId::A, row_start..row_end_a.max(row_start), jb..col_end_a));
+        }
+        if b_col_start < n {
+            let b_row_end = (j1 + qg + (k + 1) * r).min(n);
+            acc.push(Access::write(
+                MatId::B,
+                row_start..b_row_end.max(row_start),
+                b_col_start..col_end_a,
+            ));
+        }
+    }
+    acc
+}
+
+/// Build the stage-2 task graph.
+pub fn build_graph<'a>(
+    a: &'a SharedMat,
+    b: &'a SharedMat,
+    q: &'a SharedMat,
+    z: &'a SharedMat,
+    arena: &'a Stage2Arena,
+    groups: &'a [(usize, usize)],
+    cfg: &Config,
+) -> TaskGraph<'a> {
+    let n = a.rows();
+    let ng = groups.len();
+    let r = cfg.r;
+    let nslices = cfg.effective_slices();
+    // Band depth the next generate may touch above/left of the WY regions:
+    // group g+1's rects start ~(r − q) rows above this group's s5(k) in the
+    // same columns, so a slack of 2(r + q) is comfortably safe while
+    // keeping the lookahead tasks (which sit on the critical path between
+    // consecutive generates) small.
+    let look_depth = 2 * (r + cfg.q);
+    let mut g = TaskGraph::new();
+
+    for (gi, &(j1, qg)) in groups.iter().enumerate() {
+        let slot = &arena.slots[gi];
+        g.new_epoch();
+
+        // ---- Gen2: generate the group's reflectors (sequential task). ----
+        let mut gen_acc = generate_accesses(n, r, j1, qg);
+        gen_acc.push(Access::write(MatId::Slots, gi..gi + 1, 0..1));
+        g.add(TaskClass::Gen2, gen_acc, move || {
+            let store =
+                generate_group(unsafe { a.view(0..n, 0..n) }, unsafe { b.view(0..n, 0..n) }, n, r, j1, qg);
+            *slot.lock().unwrap() = Some(store);
+        });
+
+        let kmax = max_chase_steps(n, r, j1);
+
+        // ---- Right (Ẑ) side, k bottom-up. ----
+        for k in (0..kmax).rev() {
+            // Geometry (recomputed cheaply; the store itself lives in the
+            // slot and is only available at run time).
+            let ci1 = j1 + k * r + 1;
+            if ci1 >= n {
+                continue;
+            }
+            let ci2e = (j1 + qg + (k + 1) * r).min(n);
+            let t5 = k as i64 - qg as i64;
+            let s5 = (j1 + 1 + if t5 > 0 { t5 as usize * r } else { 0 }).min(n);
+            let e4max = (j1 + 1 + (k as i64 + 1).max(0) as usize * r).min(n); // e4(j_last)
+
+            // Lookahead task: ragged rows + the band part of the WY rows.
+            let look_lo = s5.saturating_sub(look_depth).min(s5);
+            g.add(
+                TaskClass::Look2,
+                vec![
+                    Access::read(MatId::Slots, gi..gi + 1, 0..1),
+                    Access::write(MatId::Slots, ng + gi..ng + gi + 1, k..k + 1),
+                    Access::write(MatId::A, look_lo..e4max.max(s5), ci1..ci2e),
+                    Access::write(MatId::B, look_lo..e4max.max(s5), ci1..ci2e),
+                ],
+                move || {
+                    let guard = slot.lock().unwrap();
+                    let store = guard.as_ref().expect("Gen2 fills slot");
+                    z_ragged_for(store, k, unsafe { a.view(0..n, 0..n) }, unsafe {
+                        b.view(0..n, 0..n)
+                    });
+                    if let Some(za) = z_apply_for(store, k) {
+                        let za = Arc::new(za);
+                        if za.s5 > look_lo {
+                            za.wy.apply(Side::Right, Trans::No, unsafe {
+                                a.view(look_lo..za.s5.min(n), za.ci1..za.ci2e)
+                            });
+                            za.wy.apply(Side::Right, Trans::No, unsafe {
+                                b.view(look_lo..za.s5.min(n), za.ci1..za.ci2e)
+                            });
+                        }
+                        *arena.zcache[gi][k].lock().unwrap() = Some(za);
+                    }
+                },
+            );
+
+            // Trailing WY rows [0, look_lo), row-sliced.
+            for rows in partition_capped(0..look_lo, nslices, 64) {
+                let rr = rows.clone();
+                g.add(
+                    TaskClass::Upd2,
+                    vec![
+                        Access::read(MatId::Slots, ng + gi..ng + gi + 1, k..k + 1),
+                        Access::write(MatId::A, rows.clone(), ci1..ci2e),
+                        Access::write(MatId::B, rows, ci1..ci2e),
+                    ],
+                    move || {
+                        let za = arena.zcache[gi][k].lock().unwrap().clone();
+                        if let Some(za) = za {
+                            za.wy.apply(Side::Right, Trans::No, unsafe {
+                                a.view(rr.clone(), za.ci1..za.ci2e)
+                            });
+                            za.wy.apply(Side::Right, Trans::No, unsafe {
+                                b.view(rr.clone(), za.ci1..za.ci2e)
+                            });
+                        }
+                    },
+                );
+            }
+
+        }
+
+        // ---- Z accumulation: one task per row slice, all chase steps
+        // batched (k bottom-up) — keeps task granularity meaningful.
+        for rows in partition_capped(0..n, nslices, 64) {
+            let rr = rows.clone();
+            g.add(
+                TaskClass::Acc2,
+                vec![
+                    Access::read(MatId::Slots, ng + gi..ng + gi + 1, 0..kmax.max(1)),
+                    Access::write(MatId::Z, rows, (j1 + 1).min(n)..n),
+                ],
+                move || {
+                    for k in (0..kmax).rev() {
+                        let za = arena.zcache[gi][k].lock().unwrap().clone();
+                        if let Some(za) = za {
+                            za.wy.apply(Side::Right, Trans::No, unsafe {
+                                z.view(rr.clone(), za.ci1..za.ci2e)
+                            });
+                        }
+                    }
+                },
+            );
+        }
+
+        // ---- Left (Q̂) side, k bottom-up. ----
+        for k in (0..kmax).rev() {
+            let ci1 = j1 + k * r + 1;
+            if ci1 >= n {
+                continue;
+            }
+            let ci2e = (j1 + qg + (k + 1) * r).min(n);
+            let c5 = (j1 + qg + if k == 0 { 0 } else { (k - 1) * r + 1 }).min(n);
+            let c_look = (c5 + look_depth).min(n);
+
+            // Lookahead: the band columns [c5, c_look).
+            g.add(
+                TaskClass::Look2,
+                vec![
+                    Access::read(MatId::Slots, gi..gi + 1, 0..1),
+                    Access::write(MatId::Slots, 2 * ng + gi..2 * ng + gi + 1, k..k + 1),
+                    Access::write(MatId::A, ci1..ci2e, c5..c_look),
+                    Access::write(MatId::B, ci1..ci2e, c5..c_look),
+                ],
+                move || {
+                    let guard = slot.lock().unwrap();
+                    let store = guard.as_ref().unwrap();
+                    if let Some(qa) = q_apply_for(store, k) {
+                        let qa = Arc::new(qa);
+                        let ce = c_look.min(n);
+                        if qa.c5 < ce {
+                            qa.wy.apply(Side::Left, Trans::Yes, unsafe {
+                                a.view(qa.ci1..qa.ci2e, qa.c5..ce)
+                            });
+                        }
+                        if qa.c6 < ce {
+                            qa.wy.apply(Side::Left, Trans::Yes, unsafe {
+                                b.view(qa.ci1..qa.ci2e, qa.c6..ce)
+                            });
+                        }
+                        *arena.qcache[gi][k].lock().unwrap() = Some(qa);
+                    }
+                },
+            );
+
+            // Trailing columns [c_look, n), column-sliced.
+            for cols in partition_capped(c_look..n, nslices, 64) {
+                let cc = cols.clone();
+                g.add(
+                    TaskClass::Upd2,
+                    vec![
+                        Access::read(MatId::Slots, 2 * ng + gi..2 * ng + gi + 1, k..k + 1),
+                        Access::write(MatId::A, ci1..ci2e, cols.clone()),
+                        Access::write(MatId::B, ci1..ci2e, cols),
+                    ],
+                    move || {
+                        let qa = arena.qcache[gi][k].lock().unwrap().clone();
+                        if let Some(qa) = qa {
+                            let c0a = qa.c5.max(cc.start);
+                            if c0a < cc.end {
+                                qa.wy.apply(Side::Left, Trans::Yes, unsafe {
+                                    a.view(qa.ci1..qa.ci2e, c0a..cc.end)
+                                });
+                            }
+                            let c0b = qa.c6.max(cc.start);
+                            if c0b < cc.end {
+                                qa.wy.apply(Side::Left, Trans::Yes, unsafe {
+                                    b.view(qa.ci1..qa.ci2e, c0b..cc.end)
+                                });
+                            }
+                        }
+                    },
+                );
+            }
+
+        }
+
+        // ---- Q accumulation: one task per row slice, all chase steps
+        // batched (k bottom-up).
+        for rows in partition_capped(0..n, nslices, 64) {
+            let rr = rows.clone();
+            g.add(
+                TaskClass::Acc2,
+                vec![
+                    Access::read(MatId::Slots, 2 * ng + gi..2 * ng + gi + 1, 0..kmax.max(1)),
+                    Access::write(MatId::Q, rows, (j1 + 1).min(n)..n),
+                ],
+                move || {
+                    for k in (0..kmax).rev() {
+                        let qa = arena.qcache[gi][k].lock().unwrap().clone();
+                        if let Some(qa) = qa {
+                            qa.wy.apply(Side::Right, Trans::No, unsafe {
+                                q.view(rr.clone(), qa.ci1..qa.ci2e)
+                            });
+                        }
+                    }
+                },
+            );
+        }
+    }
+    g.finalize();
+    g
+}
+
+/// Sweep-group list for a problem of size `n` (paper default `q = 8`).
+pub fn sweep_groups(n: usize, qsize: usize) -> Vec<(usize, usize)> {
+    let mut groups = Vec::new();
+    if n < 3 {
+        return groups;
+    }
+    let mut j1 = 0;
+    while j1 < n - 2 {
+        let qg = qsize.min(n - 2 - j1);
+        groups.push((j1, qg));
+        j1 += qg;
+    }
+    groups
+}
+
+/// Parallel (or traced) stage 2: same result as
+/// [`crate::ht::stage2_blocked::reduce_blocked`].
+pub fn reduce_blocked_par(
+    a: &mut Matrix,
+    b: &mut Matrix,
+    q: &mut Matrix,
+    z: &mut Matrix,
+    cfg: &Config,
+    mode: ExecMode,
+) -> Option<TaskTrace> {
+    let n = a.rows();
+    let groups = sweep_groups(n, cfg.q);
+    let arena = Stage2Arena::new(n, cfg.r, &groups);
+    let sa = SharedMat::new(a);
+    let sb = SharedMat::new(b);
+    let sq = SharedMat::new(q);
+    let sz = SharedMat::new(z);
+    let graph = build_graph(&sa, &sb, &sq, &sz, &arena, &groups, cfg);
+    match mode {
+        ExecMode::Threads(t) => {
+            run_parallel(graph, t);
+            None
+        }
+        ExecMode::Trace => Some(graph.run_sequential()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ht::stage1::reduce_to_banded;
+    use crate::ht::stage2_blocked::reduce_blocked;
+    use crate::linalg::verify::{max_below_band, HtVerification};
+    use crate::pencil::random::random_pencil;
+    use crate::util::rng::Rng;
+
+    fn banded(n: usize, r: usize, seed: u64) -> (Matrix, Matrix, Matrix, Matrix, Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        let pencil = random_pencil(n, &mut rng);
+        let (a0, b0) = (pencil.a.clone(), pencil.b.clone());
+        let mut a = pencil.a;
+        let mut b = pencil.b;
+        let mut q = Matrix::identity(n);
+        let mut z = Matrix::identity(n);
+        let cfg = Config { r, p: 3, ..Config::default() };
+        reduce_to_banded(&mut a, &mut b, &mut q, &mut z, &cfg);
+        (a0, b0, a, b, q, z)
+    }
+
+    fn max_diff(x: &Matrix, y: &Matrix) -> f64 {
+        let mut d = 0.0f64;
+        for j in 0..x.cols() {
+            for i in 0..x.rows() {
+                d = d.max((x[(i, j)] - y[(i, j)]).abs());
+            }
+        }
+        d
+    }
+
+    fn compare(n: usize, r: usize, q: usize, threads: usize, seed: u64) {
+        let (_a0, _b0, a_in, b_in, q_in, z_in) = banded(n, r, seed);
+        let (mut a1, mut b1, mut q1, mut z1) =
+            (a_in.clone(), b_in.clone(), q_in.clone(), z_in.clone());
+        reduce_blocked(&mut a1, &mut b1, &mut q1, &mut z1, r, q);
+        let (mut a2, mut b2, mut q2, mut z2) = (a_in, b_in, q_in, z_in);
+        let cfg = Config { r, q, threads, ..Config::default() };
+        reduce_blocked_par(&mut a2, &mut b2, &mut q2, &mut z2, &cfg, ExecMode::Threads(threads));
+        assert_eq!(max_diff(&a1, &a2), 0.0, "A differs (n={n} r={r} q={q})");
+        assert_eq!(max_diff(&b1, &b2), 0.0, "B differs");
+        assert_eq!(max_diff(&q1, &q2), 0.0, "Q differs");
+        assert_eq!(max_diff(&z1, &z2), 0.0, "Z differs");
+    }
+
+    #[test]
+    fn parallel_equals_blocked_small() {
+        compare(30, 4, 3, 4, 170);
+    }
+
+    #[test]
+    fn parallel_equals_blocked_more() {
+        compare(50, 5, 4, 3, 171);
+        compare(40, 4, 8, 2, 172);
+    }
+
+    #[test]
+    fn trace_mode_valid_and_has_lookahead() {
+        // n large enough that trailing updates exist beyond the lookahead
+        // band (look_depth = 2qr + 2r must be well below n).
+        let (a0, b0, mut a, mut b, mut q, mut z) = banded(150, 4, 173);
+        let cfg = Config { r: 4, q: 3, threads: 4, ..Config::default() };
+        let trace =
+            reduce_blocked_par(&mut a, &mut b, &mut q, &mut z, &cfg, ExecMode::Trace).unwrap();
+        assert!(max_below_band(&a, 1) < 1e-12 * a.norm_fro());
+        HtVerification::compute(&a0, &b0, &q, &z, &a, &b, 1).assert_ok(1e-11);
+        for cl in [TaskClass::Gen2, TaskClass::Look2, TaskClass::Upd2, TaskClass::Acc2] {
+            assert!(trace.classes.contains(&cl), "missing {cl:?}");
+        }
+        // The DAG must expose parallelism: critical path < total work.
+        let s = crate::coordinator::sim::simulate_makespan(&trace, 1_000_000);
+        assert!(s.critical_path < s.total_work);
+    }
+}

@@ -1,0 +1,47 @@
+//! Crate-wide error type.
+
+/// Errors produced by the paraht library.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Dimension mismatch or otherwise invalid matrix arguments.
+    #[error("shape error: {0}")]
+    Shape(String),
+
+    /// Invalid configuration parameter.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Numerical failure (e.g. non-convergence of an iterative baseline).
+    #[error("numerical error: {0}")]
+    Numerical(String),
+
+    /// PJRT runtime failure (artifact loading / compilation / execution).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// I/O failure.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    /// Helper for shape errors.
+    pub fn shape(msg: impl Into<String>) -> Self {
+        Error::Shape(msg.into())
+    }
+    /// Helper for config errors.
+    pub fn config(msg: impl Into<String>) -> Self {
+        Error::Config(msg.into())
+    }
+    /// Helper for numerical errors.
+    pub fn numerical(msg: impl Into<String>) -> Self {
+        Error::Numerical(msg.into())
+    }
+    /// Helper for runtime errors.
+    pub fn runtime(msg: impl Into<String>) -> Self {
+        Error::Runtime(msg.into())
+    }
+}

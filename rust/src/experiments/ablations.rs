@@ -1,0 +1,149 @@
+//! Ablations over the design choices the paper calls out.
+//!
+//! * `p` sweep (§2.2: "modest values between 5 and 12 are usually
+//!   optimal") — stage-1 flop coefficient `(28p+14)/(3(p−1))` decreases
+//!   with `p` while fill-in/block sizes grow.
+//! * `q` sweep (§3.2/§4: `q = 8`) — larger groups amortize WY overhead but
+//!   delay updates.
+//! * lookahead on/off (§3.3) — measured as the simulated makespan of the
+//!   stage-2 DAG with and without the lookahead split.
+//! * blocked vs unblocked stage 2 (Algs. 3+4 vs Alg. 2) — sequential time.
+
+use crate::config::Config;
+use crate::coordinator::sim::simulate_makespan;
+use crate::coordinator::stage1_par::ExecMode;
+use crate::coordinator::stage2_par::reduce_blocked_par;
+use crate::ht::{stage1, stage2_blocked, stage2_unblocked};
+use crate::linalg::matrix::Matrix;
+use crate::pencil::random::random_pencil;
+use crate::util::rng::Rng;
+use crate::util::timer::Timer;
+
+/// Stage-1 cost vs `p`.
+pub fn p_sweep(n: usize, r: usize, ps: &[usize], seed: u64) -> Vec<(usize, f64, f64)> {
+    let mut rng = Rng::new(seed);
+    let pencil = random_pencil(n, &mut rng);
+    ps.iter()
+        .map(|&p| {
+            let (mut a, mut b) = (pencil.a.clone(), pencil.b.clone());
+            let (mut q, mut z) = (Matrix::identity(n), Matrix::identity(n));
+            let cfg = Config { r, p, ..Config::default() };
+            crate::util::flops::set_enabled(true);
+            let t = Timer::start();
+            let ((), f) = crate::util::flops::count(|| {
+                stage1::reduce_to_banded(&mut a, &mut b, &mut q, &mut z, &cfg)
+            });
+            (p, t.secs(), f as f64 / (n as f64).powi(3))
+        })
+        .collect()
+}
+
+/// Stage-2 sequential time vs `q` (q = 0 row encodes the unblocked Alg. 2).
+pub fn q_sweep(n: usize, r: usize, qs: &[usize], seed: u64) -> Vec<(usize, f64)> {
+    let mut rng = Rng::new(seed);
+    let pencil = random_pencil(n, &mut rng);
+    // Pre-reduce to banded once.
+    let (mut a0, mut b0) = (pencil.a.clone(), pencil.b.clone());
+    let (mut q0, mut z0) = (Matrix::identity(n), Matrix::identity(n));
+    let cfg = Config { r, p: 4, ..Config::default() };
+    stage1::reduce_to_banded(&mut a0, &mut b0, &mut q0, &mut z0, &cfg);
+
+    let mut out = Vec::new();
+    // Unblocked reference.
+    {
+        let (mut a, mut b) = (a0.clone(), b0.clone());
+        let (mut q, mut z) = (q0.clone(), z0.clone());
+        let t = Timer::start();
+        stage2_unblocked::reduce_unblocked(&mut a, &mut b, &mut q, &mut z, r);
+        out.push((0, t.secs()));
+    }
+    for &qq in qs {
+        let (mut a, mut b) = (a0.clone(), b0.clone());
+        let (mut q, mut z) = (q0.clone(), z0.clone());
+        let t = Timer::start();
+        stage2_blocked::reduce_blocked(&mut a, &mut b, &mut q, &mut z, r, qq);
+        out.push((qq, t.secs()));
+    }
+    out
+}
+
+/// Stage-2 simulated makespan with/without lookahead, at `threads` workers.
+///
+/// "Without lookahead" contracts the graph: the lookahead split is removed
+/// by simulating the same trace with the `Look2` tasks' edges intact but
+/// the band updates merged into the generate chain — approximated here by
+/// serializing every Look2 task with its group's Gen2 (which is what not
+/// splitting them would do).
+pub fn lookahead_ablation(n: usize, cfg: &Config, threads: usize, seed: u64) -> (f64, f64) {
+    let mut rng = Rng::new(seed);
+    let pencil = random_pencil(n, &mut rng);
+    let (mut a, mut b) = (pencil.a.clone(), pencil.b.clone());
+    let (mut q, mut z) = (Matrix::identity(n), Matrix::identity(n));
+    stage1::reduce_to_banded(&mut a, &mut b, &mut q, &mut z, cfg);
+
+    let trace = reduce_blocked_par(&mut a, &mut b, &mut q, &mut z, cfg, ExecMode::Trace)
+        .expect("trace mode");
+
+    let with_look = simulate_makespan(&trace, threads).makespan;
+
+    // Serialize lookahead into the generate chain: chain all Look2 tasks of
+    // consecutive groups behind their Gen2 — emulate by adding each Look2's
+    // duration onto a strictly serial Gen2 spine.
+    let mut serial = trace.clone();
+    let mut last_gen: Option<usize> = None;
+    for i in 0..serial.classes.len() {
+        match serial.classes[i] {
+            crate::coordinator::graph::TaskClass::Gen2 => {
+                if let Some(lg) = last_gen {
+                    serial.deps[i].push(lg);
+                }
+                last_gen = Some(i);
+            }
+            crate::coordinator::graph::TaskClass::Look2 => {
+                // Lookahead work joins the serial spine.
+                if let Some(lg) = last_gen {
+                    serial.deps[i].push(lg);
+                }
+                last_gen = Some(i);
+            }
+            _ => {}
+        }
+    }
+    let without_look = simulate_makespan(&serial, threads).makespan;
+    (with_look, without_look)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn p_sweep_flops_follow_formula() {
+        // The coefficient (28p+14)/(3(p−1)) decreases with p; at small n
+        // the p=4 vs p=8 gap drowns in edge effects, so assert the robust
+        // p=2 → {4, 8} drops only.
+        let rows = p_sweep(160, 8, &[2, 4, 8], 500);
+        assert!(rows[0].2 > rows[1].2, "p=2 coeff {} > p=4 {}", rows[0].2, rows[1].2);
+        assert!(rows[0].2 > rows[2].2, "p=2 coeff {} > p=8 {}", rows[0].2, rows[2].2);
+    }
+
+    #[test]
+    fn q_sweep_runs_all() {
+        let rows = q_sweep(96, 4, &[2, 8], 501);
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0].0, 0);
+        for (_, t) in &rows {
+            assert!(*t > 0.0);
+        }
+    }
+
+    #[test]
+    fn lookahead_helps_or_equal() {
+        let cfg = Config { r: 4, q: 3, ..Config::default() };
+        let (with_look, without) = lookahead_ablation(140, &cfg, 8, 502);
+        assert!(
+            with_look <= without * 1.02,
+            "lookahead must not hurt: {with_look:.4} vs {without:.4}"
+        );
+    }
+}

@@ -1,0 +1,102 @@
+//! Shared plumbing for the figure-regeneration experiments (§4).
+
+use crate::config::Config;
+use crate::coordinator::driver::{paraht_curve, run_paraht, SpeedupCurve};
+use crate::coordinator::stage1_par::ExecMode;
+use crate::linalg::matrix::Matrix;
+use crate::pencil::random::Pencil;
+
+/// Thread counts matching the paper's Fig. 9a sweep (their machine has
+/// 28 cores; they also report the 14-thread saturation point of the
+/// comparators).
+pub const PAPER_THREADS: &[usize] = &[1, 2, 4, 7, 14, 21, 28];
+
+/// The paper's comparator thread cap (§4: "we limit HouseHT and IterHT to
+/// 14 threads to get a fair comparison").
+pub const COMPARATOR_CAP: usize = 14;
+
+/// Default ParaHT tuning (paper §4: r=16, p=8, q=8). The slice count is
+/// pinned above the largest simulated worker count so the task graph's
+/// parallelism is not artificially capped by the tracing config.
+pub fn paper_config() -> Config {
+    Config { slices: 32, ..Config::default() }
+}
+
+/// A scaled-down tuning for small experiment sizes (same structure, more
+/// panels/groups at small n so the task graphs stay representative).
+pub fn scaled_config(n: usize) -> Config {
+    if n >= 768 {
+        paper_config()
+    } else {
+        Config { r: 8, p: 4, q: 4, slices: 32, ..Config::default() }
+    }
+}
+
+/// Run ParaHT in trace mode and return its simulated speedup curve.
+pub fn paraht_speedup_curve(pencil: &Pencil, cfg: &Config, ps: &[usize]) -> (SpeedupCurve, f64, f64) {
+    let run = run_paraht(&pencil.a, &pencil.b, cfg, ExecMode::Trace).expect("paraht run");
+    let v = run.verify(&pencil.a, &pencil.b);
+    assert!(
+        v.worst() < 1e-9,
+        "ParaHT verification failed: worst residual {:.3e}",
+        v.worst()
+    );
+    let traces = run.traces.expect("trace mode");
+    let t1 = traces.0.total().as_secs_f64();
+    let t2 = traces.1.total().as_secs_f64();
+    (paraht_curve(&traces, ps), t1, t2)
+}
+
+/// Simulated per-stage makespans of a ParaHT trace.
+pub fn paraht_stage_makespans(
+    pencil: &Pencil,
+    cfg: &Config,
+    ps: &[usize],
+) -> (Vec<(usize, f64, f64)>, f64, f64) {
+    let run = run_paraht(&pencil.a, &pencil.b, cfg, ExecMode::Trace).expect("paraht run");
+    let traces = run.traces.expect("trace mode");
+    let pts = ps
+        .iter()
+        .map(|&p| {
+            let m1 = crate::coordinator::sim::simulate_makespan(&traces.0, p).makespan;
+            let m2 = crate::coordinator::sim::simulate_makespan(&traces.1, p).makespan;
+            (p, m1, m2)
+        })
+        .collect();
+    (
+        pts,
+        traces.0.total().as_secs_f64(),
+        traces.1.total().as_secs_f64(),
+    )
+}
+
+/// Pretty-print a table: header + rows of (label, values).
+pub fn print_table(title: &str, header: &[String], rows: &[(String, Vec<f64>)]) {
+    println!("\n== {title} ==");
+    print!("{:<22}", "");
+    for h in header {
+        print!("{h:>12}");
+    }
+    println!();
+    for (label, vals) in rows {
+        print!("{label:<22}");
+        for v in vals {
+            if v.is_nan() {
+                print!("{:>12}", "fail");
+            } else {
+                print!("{v:>12.2}");
+            }
+        }
+        println!();
+    }
+}
+
+/// Geometric-ish sanity check helper used by bench asserts.
+pub fn monotone_nonincreasing(xs: &[f64], slack: f64) -> bool {
+    xs.windows(2).all(|w| w[1] <= w[0] * (1.0 + slack))
+}
+
+/// Identity matrix shorthand used by example drivers.
+pub fn eye(n: usize) -> Matrix {
+    Matrix::identity(n)
+}

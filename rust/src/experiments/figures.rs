@@ -1,0 +1,230 @@
+//! Regeneration of every figure in the paper's §4 evaluation.
+//!
+//! Absolute times come from *this* substrate (from-scratch GEMM, one
+//! measured core, simulated P workers — DESIGN.md §5); every reported
+//! number is a *relative* quantity exactly like the paper's plots, so the
+//! comparison is curve shape: who wins, by what factor, where crossovers
+//! fall.
+
+use super::common::*;
+use crate::coordinator::driver::{
+    dgghd3_recorded, househt_recorded, iterht_recorded, lapack_seq_time, recorder_curve,
+};
+use crate::pencil::random::random_pencil;
+use crate::pencil::saddle::saddle_pencil;
+use crate::util::rng::Rng;
+
+/// One algorithm's speedup-vs-threads series (Fig. 9a).
+#[derive(Clone, Debug)]
+pub struct ThreadSeries {
+    /// Algorithm name.
+    pub name: &'static str,
+    /// `(threads, speedup over sequential LAPACK)` points; NaN = failed.
+    pub points: Vec<(usize, f64)>,
+}
+
+/// Fig. 9a: parallel speedup (vs sequential LAPACK) for a random pencil,
+/// as a function of the number of threads.
+pub fn fig9a(n: usize, seed: u64) -> Vec<ThreadSeries> {
+    let mut rng = Rng::new(seed);
+    let pencil = random_pencil(n, &mut rng);
+    let cfg = scaled_config(n);
+    let t_lapack = lapack_seq_time(&pencil.a, &pencil.b);
+    let ps = PAPER_THREADS;
+
+    let mut out = Vec::new();
+
+    // ParaHT: real task-DAG simulation.
+    let (curve, _, _) = paraht_speedup_curve(&pencil, &cfg, ps);
+    out.push(ThreadSeries {
+        name: "ParaHT",
+        points: curve.points.iter().map(|&(p, t)| (p, t_lapack / t)).collect(),
+    });
+
+    // DGGHD3 with parallel BLAS (barrier model).
+    let rec = dgghd3_recorded(&pencil.a, &pencil.b);
+    let c = recorder_curve("DGGHD3", &rec, ps, 32);
+    out.push(ThreadSeries {
+        name: "DGGHD3",
+        points: c.points.iter().map(|&(p, t)| (p, t_lapack / t)).collect(),
+    });
+
+    // HouseHT / IterHT, capped at 14 threads like the paper.
+    let rec = househt_recorded(&pencil.a, &pencil.b);
+    let c = recorder_curve("HouseHT", &rec, ps, 32);
+    out.push(ThreadSeries {
+        name: "HouseHT",
+        points: c
+            .points
+            .iter()
+            .map(|&(p, t)| (p, t_lapack / if p > COMPARATOR_CAP { c.points.iter().find(|x| x.0 == COMPARATOR_CAP).map(|x| x.1).unwrap_or(t) } else { t }))
+            .collect(),
+    });
+
+    match iterht_recorded(&pencil.a, &pencil.b) {
+        Ok((rec, _iters)) => {
+            let c = recorder_curve("IterHT", &rec, ps, 32);
+            out.push(ThreadSeries {
+                name: "IterHT",
+                points: c
+                    .points
+                    .iter()
+                    .map(|&(p, t)| (p, t_lapack / if p > COMPARATOR_CAP { c.points.iter().find(|x| x.0 == COMPARATOR_CAP).map(|x| x.1).unwrap_or(t) } else { t }))
+                    .collect(),
+            });
+        }
+        Err(_) => out.push(ThreadSeries {
+            name: "IterHT",
+            points: ps.iter().map(|&p| (p, f64::NAN)).collect(),
+        }),
+    }
+    out
+}
+
+/// One row of Fig. 9b / Fig. 11: ParaHT's speedup over each comparator at
+/// one pencil size.
+#[derive(Clone, Debug)]
+pub struct SizeRow {
+    /// Pencil size.
+    pub n: usize,
+    /// Speedup of ParaHT over sequential-BLAS-parallel LAPACK (DGGHD3).
+    pub over_lapack: f64,
+    /// Speedup over HouseHT.
+    pub over_househt: f64,
+    /// Speedup over IterHT (NaN when IterHT fails).
+    pub over_iterht: f64,
+}
+
+fn size_sweep(sizes: &[usize], saddle: bool, threads: usize, seed: u64) -> Vec<SizeRow> {
+    let mut rows = Vec::new();
+    for (i, &n) in sizes.iter().enumerate() {
+        let mut rng = Rng::new(seed + i as u64);
+        let pencil = if saddle {
+            saddle_pencil(n, 0.25, &mut rng)
+        } else {
+            random_pencil(n, &mut rng)
+        };
+        let cfg = scaled_config(n);
+        let ps = [threads];
+
+        let (curve, _, _) = paraht_speedup_curve(&pencil, &cfg, &ps);
+        let t_para = curve.points[0].1;
+
+        // Comparators at min(threads, cap) — the paper's fair comparison.
+        let pc = [threads.min(COMPARATOR_CAP)];
+        let rec = dgghd3_recorded(&pencil.a, &pencil.b);
+        let t_lapack = recorder_curve("DGGHD3", &rec, &pc, 32).points[0].1;
+        let rec = househt_recorded(&pencil.a, &pencil.b);
+        let t_hht = recorder_curve("HouseHT", &rec, &pc, 32).points[0].1;
+        let t_iter = match iterht_recorded(&pencil.a, &pencil.b) {
+            Ok((rec, _)) => recorder_curve("IterHT", &rec, &pc, 32).points[0].1,
+            Err(_) => f64::NAN,
+        };
+
+        rows.push(SizeRow {
+            n,
+            over_lapack: t_lapack / t_para,
+            over_househt: t_hht / t_para,
+            over_iterht: t_iter / t_para,
+        });
+    }
+    rows
+}
+
+/// Fig. 9b: ParaHT's speedup over the comparators for varying (random)
+/// pencil sizes, at the full machine width.
+pub fn fig9b(sizes: &[usize], threads: usize, seed: u64) -> Vec<SizeRow> {
+    size_sweep(sizes, false, threads, seed)
+}
+
+/// Fig. 11: the same sweep on saddle-point pencils with 25% infinite
+/// eigenvalues. IterHT fails to converge (NaN column), HouseHT pays
+/// refinement, ParaHT and LAPACK are unaffected.
+pub fn fig11(sizes: &[usize], threads: usize, seed: u64) -> Vec<SizeRow> {
+    size_sweep(sizes, true, threads, seed)
+}
+
+/// Fig. 10 data: per-phase parallel speedup and relative runtime.
+#[derive(Clone, Debug)]
+pub struct PhaseData {
+    /// Pencil size.
+    pub n: usize,
+    /// `(P, stage-1 speedup, stage-2 speedup, total speedup)`.
+    pub speedups: Vec<(usize, f64, f64, f64)>,
+    /// Sequential share of runtime spent in stage 1 / stage 2.
+    pub stage1_fraction: f64,
+    /// Stage-2 share.
+    pub stage2_fraction: f64,
+}
+
+/// Fig. 10: speedup and relative runtime of the two phases.
+pub fn fig10(sizes: &[usize], seed: u64) -> Vec<PhaseData> {
+    let ps = PAPER_THREADS;
+    sizes
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| {
+            let mut rng = Rng::new(seed + i as u64);
+            let pencil = random_pencil(n, &mut rng);
+            let cfg = scaled_config(n);
+            let (pts, t1, t2) = paraht_stage_makespans(&pencil, &cfg, ps);
+            let speedups = pts
+                .iter()
+                .map(|&(p, m1, m2)| (p, t1 / m1, t2 / m2, (t1 + t2) / (m1 + m2)))
+                .collect();
+            PhaseData {
+                n,
+                speedups,
+                stage1_fraction: t1 / (t1 + t2),
+                stage2_fraction: t2 / (t1 + t2),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig9a_shape() {
+        let series = fig9a(96, 300);
+        assert_eq!(series.len(), 4);
+        let para = &series[0];
+        assert_eq!(para.name, "ParaHT");
+        // ParaHT speedup grows with P (DAG parallelism).
+        let s1 = para.points[0].1;
+        let s_last = para.points.last().unwrap().1;
+        assert!(s_last > s1, "ParaHT must scale: {s1} -> {s_last}");
+        // On one thread ParaHT is slower than LAPACK (extra flops, §4).
+        assert!(s1 < 1.0, "one-core ParaHT should lose to LAPACK, got {s1}");
+    }
+
+    #[test]
+    fn fig9b_shape() {
+        let rows = fig9b(&[72, 120], 28, 301);
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert!(r.over_lapack.is_finite() && r.over_lapack > 0.0);
+            assert!(r.over_househt.is_finite());
+        }
+    }
+
+    #[test]
+    fn fig10_fractions_sum() {
+        let data = fig10(&[96], 302);
+        let d = &data[0];
+        assert!((d.stage1_fraction + d.stage2_fraction - 1.0).abs() < 1e-12);
+        // §4: "most of the runtime of the algorithm is spent inside phase 2
+        // despite phase 1 requiring slightly more flops".
+        assert!(d.stage2_fraction > 0.35, "stage 2 fraction {:.2}", d.stage2_fraction);
+    }
+
+    #[test]
+    fn fig11_iterht_fails() {
+        let rows = fig11(&[64], 28, 303);
+        assert!(rows[0].over_iterht.is_nan(), "IterHT must fail on saddle pencils");
+        assert!(rows[0].over_lapack.is_finite());
+        assert!(rows[0].over_househt.is_finite());
+    }
+}

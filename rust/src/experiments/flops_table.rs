@@ -1,0 +1,123 @@
+//! Flop-count verification table (§2.2 and §3.1 of the paper).
+//!
+//! The paper gives closed-form costs (including `Q`/`Z` accumulation):
+//!
+//! * stage 1: `(28p + 14) / (3(p−1)) · n³` → `11.33 n³` at `p = 8`
+//! * stage 2: `10 n³`
+//! * two-stage total: `21.33 n³`
+//! * one-stage Moler–Stewart: `14 n³` ("an increase of more than 40%")
+//!
+//! We measure with the global flop counters and report measured/n³ next to
+//! the formulas. Agreement is asymptotic — lower-order `O(n²)` terms and
+//! the `r²n²` RQ cost (explicitly called out in §3.1) shrink as n grows.
+
+use crate::config::Config;
+use crate::ht::{stage1, stage2_blocked};
+use crate::linalg::matrix::Matrix;
+use crate::pencil::random::random_pencil;
+use crate::util::{flops, rng::Rng};
+
+/// Measured vs predicted flop coefficients (`flops / n³`).
+#[derive(Clone, Debug)]
+pub struct FlopRow {
+    /// Problem size.
+    pub n: usize,
+    /// Measured stage-1 coefficient.
+    pub stage1: f64,
+    /// Measured stage-2 coefficient.
+    pub stage2: f64,
+    /// Measured one-stage (Moler–Stewart) coefficient.
+    pub one_stage: f64,
+}
+
+/// Paper's predicted stage-1 coefficient for a given `p`.
+pub fn stage1_coeff(p: usize) -> f64 {
+    (28.0 * p as f64 + 14.0) / (3.0 * (p as f64 - 1.0))
+}
+
+/// Measure the flop table at the given sizes (paper tuning `r=16, p=8,
+/// q=8` scaled down via `r=8, p=4` below n=768 — coefficients are
+/// p-dependent; we report against `stage1_coeff(p)` for the p used).
+pub fn measure(sizes: &[usize], r: usize, p: usize, q: usize, seed: u64) -> Vec<FlopRow> {
+    let mut rows = Vec::new();
+    for (i, &n) in sizes.iter().enumerate() {
+        let mut rng = Rng::new(seed + i as u64);
+        let pencil = random_pencil(n, &mut rng);
+        let n3 = (n as f64).powi(3);
+        let cfg = Config { r, p, q, ..Config::default() };
+
+        flops::set_enabled(true);
+
+        // Stage 1.
+        let (mut a, mut b) = (pencil.a.clone(), pencil.b.clone());
+        let (mut qm, mut zm) = (Matrix::identity(n), Matrix::identity(n));
+        let ((), f1) = flops::count(|| stage1::reduce_to_banded(&mut a, &mut b, &mut qm, &mut zm, &cfg));
+
+        // Stage 2 (on the banded result).
+        let ((), f2) =
+            flops::count(|| stage2_blocked::reduce_blocked(&mut a, &mut b, &mut qm, &mut zm, r, q));
+
+        // One-stage Moler–Stewart.
+        let (mut a, mut b) = (pencil.a.clone(), pencil.b.clone());
+        let (mut qm, mut zm) = (Matrix::identity(n), Matrix::identity(n));
+        let ((), f3) =
+            flops::count(|| crate::baselines::moler_stewart::reduce(&mut a, &mut b, &mut qm, &mut zm));
+
+        rows.push(FlopRow {
+            n,
+            stage1: f1 as f64 / n3,
+            stage2: f2 as f64 / n3,
+            one_stage: f3 as f64 / n3,
+        });
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coefficients_match_paper_formulas() {
+        assert!((stage1_coeff(8) - 11.333).abs() < 0.01);
+        // Measured coefficients approach the formulas as n grows. At these
+        // test sizes lower-order terms still matter: accept a band.
+        let rows = measure(&[192, 288], 8, 4, 4, 400);
+        let c1 = stage1_coeff(4);
+        for row in &rows {
+            assert!(
+                (row.stage1 - c1).abs() / c1 < 0.35,
+                "stage1 coeff n={}: got {:.2}, formula {:.2}",
+                row.n,
+                row.stage1,
+                c1
+            );
+            assert!(
+                (row.stage2 - 10.0).abs() / 10.0 < 0.45,
+                "stage2 coeff n={}: got {:.2} vs 10",
+                row.n,
+                row.stage2
+            );
+            assert!(
+                (row.one_stage - 14.0).abs() / 14.0 < 0.30,
+                "one-stage coeff n={}: got {:.2} vs 14",
+                row.n,
+                row.one_stage
+            );
+        }
+        // Convergence: larger n closer to the asymptote for stage 2.
+        let d0 = (rows[0].stage2 - 10.0).abs();
+        let d1 = (rows[1].stage2 - 10.0).abs();
+        assert!(d1 <= d0 * 1.15, "stage-2 coeff should approach 10: {d0:.2} -> {d1:.2}");
+    }
+
+    #[test]
+    fn two_stage_overhead_vs_one_stage() {
+        // Paper: two-stage needs >40% more flops than one-stage.
+        let rows = measure(&[224], 8, 4, 4, 401);
+        let total = rows[0].stage1 + rows[0].stage2;
+        let ratio = total / rows[0].one_stage;
+        assert!(ratio > 1.3, "two-stage/one-stage flop ratio {ratio:.2}");
+        assert!(ratio < 2.2, "ratio implausibly large: {ratio:.2}");
+    }
+}

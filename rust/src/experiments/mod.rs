@@ -1,0 +1,7 @@
+//! Figure/table regeneration (§4 of the paper), shared by the CLI
+//! (`paraht experiment …`) and the bench targets (`cargo bench`).
+
+pub mod ablations;
+pub mod common;
+pub mod figures;
+pub mod flops_table;

@@ -1,0 +1,13 @@
+//! The paper's algorithms: stage 1 (blocked reduction to r-Hessenberg-
+//! triangular form, Alg. 1), stage 2 (bulge-chasing reduction to
+//! Hessenberg-triangular form: unblocked Alg. 2 and blocked Algs. 3–4)
+//! and the combined two-stage driver.
+
+pub mod qz;
+pub mod reflector_store;
+pub mod stage1;
+pub mod stage2_blocked;
+pub mod stage2_unblocked;
+pub mod two_stage;
+
+pub use two_stage::{reduce_to_hessenberg_triangular, HtDecomposition};

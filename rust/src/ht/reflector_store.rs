@@ -1,0 +1,101 @@
+//! Storage for the reflectors of a stage-2 sweep group.
+//!
+//! The blocked algorithm (Algs. 3–4) generates the reflectors
+//! `Q̂ₖʲ, Ẑₖʲ` for `q` consecutive sweeps `j ∈ [j1, j1+q)` before applying
+//! most of their updates. Reflectors near the bottom edge degenerate
+//! (segment shorter than 2) and are stored as `None`; the apply phase and
+//! the parallel driver both read this store.
+
+use crate::linalg::householder::Reflector;
+
+/// Reflectors of one sweep group.
+pub struct GroupReflectors {
+    /// First sweep of the group (0-based).
+    pub j1: usize,
+    /// Number of sweeps in the group (`≤ q`; the last group is partial).
+    pub qg: usize,
+    /// Bandwidth `r`.
+    pub r: usize,
+    /// Problem size.
+    pub n: usize,
+    /// Chase steps allocated per sweep (upper bound over the group).
+    pub nblocks: usize,
+    qhat: Vec<Option<Reflector>>,
+    zhat: Vec<Option<Reflector>>,
+}
+
+impl GroupReflectors {
+    /// Allocate an empty store. `nblocks` follows Algorithm 3:
+    /// `2 + floor((n − j1 − 2)/r)` steps for the group's first sweep
+    /// (an upper bound for the later ones).
+    pub fn new(n: usize, r: usize, j1: usize, qg: usize) -> GroupReflectors {
+        let nblocks = if n >= j1 + 2 { 2 + (n - j1 - 2) / r } else { 0 };
+        GroupReflectors {
+            j1,
+            qg,
+            r,
+            n,
+            nblocks,
+            qhat: (0..qg * nblocks).map(|_| None).collect(),
+            zhat: (0..qg * nblocks).map(|_| None).collect(),
+        }
+    }
+
+    #[inline]
+    fn idx(&self, j: usize, k: usize) -> usize {
+        debug_assert!(j >= self.j1 && j < self.j1 + self.qg);
+        debug_assert!(k < self.nblocks);
+        (j - self.j1) * self.nblocks + k
+    }
+
+    /// Store the pair for sweep `j`, chase step `k`.
+    pub fn set(&mut self, j: usize, k: usize, q: Reflector, z: Reflector) {
+        let i = self.idx(j, k);
+        self.qhat[i] = Some(q);
+        self.zhat[i] = Some(z);
+    }
+
+    /// Left reflector `Q̂ₖʲ` if it exists.
+    pub fn q(&self, j: usize, k: usize) -> Option<&Reflector> {
+        if k >= self.nblocks {
+            return None;
+        }
+        self.qhat[self.idx(j, k)].as_ref()
+    }
+
+    /// Right reflector `Ẑₖʲ` if it exists.
+    pub fn z(&self, j: usize, k: usize) -> Option<&Reflector> {
+        if k >= self.nblocks {
+            return None;
+        }
+        self.zhat[self.idx(j, k)].as_ref()
+    }
+
+    /// Number of stored (non-degenerate) reflector pairs.
+    pub fn stored(&self) -> usize {
+        self.qhat.iter().filter(|r| r.is_some()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dummy(len: usize) -> Reflector {
+        Reflector { v: vec![1.0; len], tau: 0.5 }
+    }
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut s = GroupReflectors::new(40, 4, 3, 5);
+        assert!(s.nblocks >= 9);
+        assert!(s.q(3, 0).is_none());
+        s.set(4, 2, dummy(4), dummy(4));
+        assert!(s.q(4, 2).is_some());
+        assert!(s.z(4, 2).is_some());
+        assert!(s.q(4, 3).is_none());
+        assert_eq!(s.stored(), 1);
+        // Out-of-range k is None, not a panic.
+        assert!(s.q(4, 999).is_none());
+    }
+}

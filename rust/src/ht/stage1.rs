@@ -1,0 +1,260 @@
+//! Stage 1: blocked reduction to r-Hessenberg-triangular form
+//! (Algorithm 1 of the paper; originally Dackland & Kågström / Kågström,
+//! Kressner, Quintana-Ortí²).
+//!
+//! One panel iteration (paper Fig. 1), for panel columns `j .. j+n_b`:
+//!
+//! 1. **Left**: split `A(j+n_b : n, panel)` into overlapping `p·n_b × n_b`
+//!    blocks (overlap `n_b` rows) and QR-factor them bottom-up; each block
+//!    reflector `Q̂ₖ` is applied to the trailing columns of `A`, the rows of
+//!    `B`, and accumulated into `Q`. Afterwards the panel is upper
+//!    triangular below row `j + n_b` ⇒ `A` is r-Hessenberg in those columns
+//!    with `r = n_b`.
+//! 2. **Right**: the row mixing filled `p·n_b`-sized diagonal blocks of `B`.
+//!    For each block (bottom-up), RQ-factor it, LQ-factor the first `n_b`
+//!    rows of the orthogonal factor `Q̃`, and apply the *opposite* block
+//!    reflector `Ẑ` from the right — reducing exactly the first `n_b`
+//!    columns of the block (Watkins' trick) at the cost of `n_b` (not
+//!    `p·n_b`) reflectors. Fill-in left in later columns of each block
+//!    slides down `n_b` rows per panel and falls off the matrix edge.
+//!
+//! Paper index ranges are 1-based inclusive; here everything is 0-based
+//! half-open (`// paper:` comments give the original).
+
+use crate::config::Config;
+use crate::linalg::matrix::{MatMut, MatRef, Matrix};
+use crate::linalg::qr::{lq, QrFactor};
+use crate::linalg::rq::RqFactor;
+use crate::linalg::wy::{Side, WyRep};
+use crate::linalg::Trans;
+
+/// Plan of one panel iteration: the block row ranges shared by the left and
+/// right passes. Extracted so the parallel driver (coordinator) can build
+/// its task graph from the same geometry.
+#[derive(Clone, Debug)]
+pub struct PanelPlan {
+    /// Panel start column `j` (0-based).
+    pub j: usize,
+    /// Panel end column (exclusive): `j + n_b` clipped to `n`.
+    pub je: usize,
+    /// Per-block `(i1, i2e)` row ranges, `k = 0` topmost.
+    pub blocks: Vec<(usize, usize)>,
+}
+
+/// Compute the panel iteration plan for problem size `n`, bandwidth
+/// `r = n_b` and block multiplier `p` (paper lines 3–9 of Algorithm 1).
+pub fn panel_plans(n: usize, nb: usize, p: usize) -> Vec<PanelPlan> {
+    let mut plans = Vec::new();
+    let mut j = 0;
+    // paper: for j = 1 : nb : n-2
+    while j + 2 < n {
+        let je = (j + nb).min(n);
+        // paper: n_blocks = ceil((n - nb - j + 1)/((p-1) nb)), 1-based j.
+        let remaining = n as i64 - nb as i64 - j as i64;
+        if remaining > 0 {
+            let step = (p - 1) * nb;
+            let nblocks = ((remaining as usize) + step - 1) / step;
+            let blocks = (0..nblocks)
+                .map(|k| {
+                    let i1 = j + nb + k * step;
+                    let i2e = (i1 + p * nb).min(n);
+                    (i1, i2e)
+                })
+                .collect();
+            plans.push(PanelPlan { j, je, blocks });
+        }
+        j += nb;
+    }
+    plans
+}
+
+/// The two block reflectors produced while processing one block of one
+/// panel: `q_wy` reduces the panel rows from the left; `z_wy` is the
+/// opposite reflector removing `B`'s fill from the right.
+pub struct BlockReflectors {
+    /// Left block reflector `Q̂ₖ` (WY form), order `i2e - i1`.
+    pub q_wy: WyRep,
+    /// Right opposite block reflector `Ẑₖ` (WY form), order `i2e - i1`.
+    pub z_wy: WyRep,
+}
+
+/// Factor a panel block (a view of `A(i1:i2e, j:je)`) in place: compute the
+/// QR, overwrite the block with `R̂` (exact zeros below the diagonal) and
+/// return the WY form of `Q̂`. (Paper lines 10–11.)
+pub fn factor_panel_block(mut blk: MatMut<'_>) -> WyRep {
+    let owned = blk.rb().to_owned();
+    let f = QrFactor::compute_inplace(owned);
+    // Write back R̂; exact zeros below the diagonal.
+    let r = f.r();
+    for jj in 0..blk.cols() {
+        for ii in 0..blk.rows() {
+            blk.set(ii, jj, if ii <= jj && ii < r.rows() { r[(ii, jj)] } else { 0.0 });
+        }
+    }
+    f.wy()
+}
+
+/// Generate the opposite reflector `Ẑ` for a `B` diagonal block (a view of
+/// `B(i1:i2e, i1:i2e)`; paper lines 19–20): RQ-factor it, take the first
+/// `t = min(n_b, s)` rows of `Q̃`, LQ-factor them; the LQ's orthogonal
+/// factor applied from the right reduces the first `t` columns of the block.
+pub fn opposite_reflector(blk: MatRef<'_>, nb: usize) -> WyRep {
+    let s = blk.rows();
+    let t = nb.min(s);
+    let owned = blk.to_owned();
+    let rq = RqFactor::compute(&owned);
+    let g = rq.q_top_rows(t); // t×s
+    // g = L · Q̂ with Q̂ = Q_qrᵀ (QR of gᵀ). The transformation applied to
+    // columns is Ẑ_app = Q̂ᵀ = Q_qr, i.e. the WY applied with Trans::No.
+    let (_l, wy) = lq(&g);
+    wy
+}
+
+/// Zero out the (numerically tiny) sub-diagonal entries of the first `t`
+/// columns of a `B` diagonal block after the opposite reflector has been
+/// applied. The opposite-reflector argument guarantees they are
+/// `O(eps·‖B‖)`; flushing them keeps `B`'s triangular invariant exact.
+pub fn flush_b_subdiagonal(mut blk: MatMut<'_>, t: usize) {
+    let s = blk.rows();
+    for c in 0..t.min(s) {
+        for i in (c + 1)..s {
+            blk.set(i, c, 0.0);
+        }
+    }
+}
+
+/// Sequential stage 1: reduce `(A, B)` (with `B` upper triangular) to
+/// r-Hessenberg-triangular form, accumulating the transformations into `q`
+/// and `z` (`A₀ = Q A Zᵀ`, `B₀ = Q B Zᵀ` maintained as an invariant).
+pub fn reduce_to_banded(
+    a: &mut Matrix,
+    b: &mut Matrix,
+    q: &mut Matrix,
+    z: &mut Matrix,
+    cfg: &Config,
+) {
+    let n = a.rows();
+    let nb = cfg.r;
+    let p = cfg.p;
+    assert_eq!(a.cols(), n);
+    assert_eq!(b.rows(), n);
+    assert_eq!(b.cols(), n);
+
+    for plan in panel_plans(n, nb, p) {
+        let (j, je) = (plan.j, plan.je);
+
+        // ---- Left pass: QR blocks bottom-up (paper lines 7–15). ----
+        for &(i1, i2e) in plan.blocks.iter().rev() {
+            if i2e <= i1 {
+                continue;
+            }
+            let q_wy = factor_panel_block(a.sub_mut(i1..i2e, j..je));
+            // paper l.12: A(i1:i2, j2+1:n) = Q̂ᵀ A(i1:i2, j2+1:n)
+            q_wy.apply(Side::Left, Trans::Yes, a.sub_mut(i1..i2e, je..n));
+            // paper l.13: B(i1:i2, i1:n) = Q̂ᵀ B(i1:i2, i1:n)
+            q_wy.apply(Side::Left, Trans::Yes, b.sub_mut(i1..i2e, i1..n));
+            // paper l.14: Q(1:n, i1:i2) = Q(1:n, i1:i2) Q̂
+            q_wy.apply(Side::Right, Trans::No, q.sub_mut(0..n, i1..i2e));
+        }
+
+        // ---- Right pass: opposite reflectors bottom-up (lines 16–24). ----
+        for &(i1, i2e) in plan.blocks.iter().rev() {
+            let s = i2e - i1;
+            if s == 0 {
+                continue;
+            }
+            let t = nb.min(s);
+            let z_wy = opposite_reflector(b.sub(i1..i2e, i1..i2e), nb);
+            // paper l.21: A(1:n, i1:i2) = A(1:n, i1:i2) Ẑ
+            z_wy.apply(Side::Right, Trans::No, a.sub_mut(0..n, i1..i2e));
+            // paper l.22: B(1:i2, i1:i2) = B(1:i2, i1:i2) Ẑ
+            z_wy.apply(Side::Right, Trans::No, b.sub_mut(0..i2e, i1..i2e));
+            // paper l.23: Z(1:n, i1:i2) = Z(1:n, i1:i2) Ẑ
+            z_wy.apply(Side::Right, Trans::No, z.sub_mut(0..n, i1..i2e));
+            flush_b_subdiagonal(b.sub_mut(i1..i2e, i1..i2e), t);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::verify::{max_below_band, HtVerification};
+    use crate::pencil::random::random_pencil;
+    use crate::util::rng::Rng;
+
+    fn run_stage1(n: usize, r: usize, p: usize, seed: u64) -> (Matrix, Matrix, HtVerification) {
+        let mut rng = Rng::new(seed);
+        let pencil = random_pencil(n, &mut rng);
+        let (a0, b0) = (pencil.a.clone(), pencil.b.clone());
+        let mut a = pencil.a;
+        let mut b = pencil.b;
+        let mut q = Matrix::identity(n);
+        let mut z = Matrix::identity(n);
+        let cfg = Config { r, p, ..Config::default() };
+        reduce_to_banded(&mut a, &mut b, &mut q, &mut z, &cfg);
+        let v = HtVerification::compute(&a0, &b0, &q, &z, &a, &b, r);
+        (a, b, v)
+    }
+
+    #[test]
+    fn reduces_to_banded_form_small() {
+        let (a, b, v) = run_stage1(40, 4, 3, 11);
+        assert!(max_below_band(&a, 4) < 1e-12 * a.norm_fro(), "A not 4-Hessenberg: {:.3e}", max_below_band(&a, 4));
+        assert_eq!(max_below_band(&b, 0), 0.0, "B not triangular");
+        v.assert_ok(1e-12);
+    }
+
+    #[test]
+    fn reduces_paper_parameters() {
+        // r = 16, p = 8 as in the paper (§4), scaled-down n.
+        let (a, b, v) = run_stage1(200, 16, 8, 12);
+        assert!(max_below_band(&a, 16) < 1e-12 * a.norm_fro());
+        assert_eq!(max_below_band(&b, 0), 0.0);
+        v.assert_ok(1e-12);
+    }
+
+    #[test]
+    fn non_divisible_sizes() {
+        // n not a multiple of nb, blocks clipped at the edge.
+        for &(n, r, p) in &[(37usize, 5usize, 3usize), (53, 7, 4), (29, 4, 2)] {
+            let (a, b, v) = run_stage1(n, r, p, 13);
+            assert!(max_below_band(&a, r) < 1e-12 * a.norm_fro(), "n={n} r={r} p={p}");
+            assert_eq!(max_below_band(&b, 0), 0.0);
+            v.assert_ok(1e-12);
+        }
+    }
+
+    #[test]
+    fn panel_plans_geometry() {
+        let plans = panel_plans(30, 4, 3);
+        // First panel: j=0, blocks start at 4, step 8, width ≤ 12.
+        assert_eq!(plans[0].j, 0);
+        assert_eq!(plans[0].je, 4);
+        assert_eq!(plans[0].blocks[0], (4, 16));
+        assert_eq!(plans[0].blocks[1], (12, 24));
+        // Consecutive blocks overlap by nb rows.
+        for plan in &plans {
+            for w in plan.blocks.windows(2) {
+                let (_, e0) = w[0];
+                let (s1, _) = w[1];
+                if e0 < 30 {
+                    assert_eq!(e0 - s1, 4, "overlap must be nb");
+                }
+            }
+            // Last block reaches n when any block exists.
+            if let Some(&(_, e)) = plan.blocks.last() {
+                assert_eq!(e, 30);
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_matrix_is_noop_or_valid() {
+        // n <= 2: loop body never runs; n slightly above r: single panel.
+        let (a, b, v) = run_stage1(10, 8, 3, 14);
+        assert!(max_below_band(&a, 8) < 1e-12 * a.norm_fro().max(1.0));
+        assert_eq!(max_below_band(&b, 0), 0.0);
+        v.assert_ok(1e-12);
+    }
+}

@@ -1,0 +1,429 @@
+//! Stage 2, blocked (Algorithms 3 + 4): generate the reflectors of `q`
+//! consecutive sweeps while touching a minimal band, then apply the delayed
+//! updates reordered — grouped by chase index `k` and accumulated into
+//! compact-WY block reflectors (the Bischof–Sun–Lang reordering, §3.2).
+//!
+//! ## Range bookkeeping (0-based, half-open; `// paper:` = 1-based incl.)
+//!
+//! Geometry of sweep `j`, chase step `k` is identical to Algorithm 2:
+//! `i1 = j+kr+1`, `i2e = min(j+(k+1)r+1, n)`, `i3e = min(j+(k+2)r+1, n)`,
+//! `jb = j` for `k = 0` else `j+(k-1)r+1`.
+//!
+//! *Generate* (Alg. 3): before producing `Q̂ₖʲ`, the catch-up loop applies
+//! every previous sweep's `Q̂ₖ^ĵ` (`ĵ ∈ [j1, j)`) to the one new column of
+//! `A` (`jb`) and the one new column of `B` (`i1+r-1`) that enter the
+//! band this sweep. `Ẑₖʲ` is then applied to the minimal row ranges
+//! `[i4, i3e)` of `A` and `[i4, i2e)` of `B`, with
+//! `i4 = j1+1+max(0, (k+j−j1−q)·r)` (equations (4)/(5) of the paper; the
+//! appendix listing prints a `+2` offset that conflicts with them — see
+//! `gen_right_row_start`).
+//!
+//! *Apply* (Alg. 4): for each `k` (bottom-up) first the "ragged" rows
+//! `[s5, e4(j))` that differ per sweep are updated reflector-by-reflector,
+//! then rows `[0, s5)` — common to all `q` reflectors — get the accumulated
+//! WY block `Ẑₖ = Ẑₖ^{j1}⋯Ẑₖ^{j1+q-1}`; symmetrically the trailing columns
+//! get `Q̂ₖᵀ`. The apply column/row starts are *one past* the last
+//! generate-updated line: the appendix prints the boundary column itself,
+//! but coverage analysis (each line must receive each reflector exactly
+//! once; see DESIGN.md §7) fixes the off-by-one, and the equality test
+//! against the unblocked Algorithm 2 confirms it.
+
+use super::reflector_store::GroupReflectors;
+use crate::linalg::householder::Reflector;
+use crate::linalg::matrix::{MatMut, Matrix};
+use crate::linalg::rq::RqFactor;
+use crate::linalg::wy::{Side, WyRep};
+use crate::linalg::Trans;
+
+/// Chase-step geometry (0-based, half-open).
+#[inline]
+fn geom(n: usize, r: usize, j: usize, k: usize) -> (usize, usize, usize, usize) {
+    let jb = if k == 0 { j } else { j + (k - 1) * r + 1 };
+    let i1 = j + k * r + 1;
+    let i2e = (j + (k + 1) * r + 1).min(n);
+    let i3e = (j + (k + 2) * r + 1).min(n);
+    (jb, i1, i2e, i3e)
+}
+
+/// Row where the *generate-phase* right update starts (paper's `i4`,
+/// 0-based). We follow the derived equations (4)/(5):
+/// `r1A(k,j) = j1 + 1 + max(0, kr − r − (j1+q−1−j)r)
+///           = j1 + 1 + max(0, (k + j − j1 − q)·r)`.
+/// (The appendix listing prints `(k + j − j1 − q + 2)·r`; with that offset
+/// the generate phase leaves the sub-diagonal rows of each reduced `B`
+/// column stale while later generate steps read them — the equation form
+/// interlocks exactly: `i4(j, k−1) = i4(j−1, k)`.)
+#[inline]
+fn gen_right_row_start(j1: usize, qg: usize, r: usize, j: usize, k: usize) -> usize {
+    let t = k as i64 + j as i64 - j1 as i64 - qg as i64;
+    j1 + 1 + if t > 0 { t as usize * r } else { 0 }
+}
+
+/// Generate phase (Algorithm 3) for the sweep group `[j1, j1+qg)`:
+/// produces all reflectors while updating only the minimal band of
+/// `(A, B)`. `Q`/`Z` are untouched — the apply phase accumulates them.
+pub fn generate_group(
+    mut a: MatMut<'_>,
+    mut b: MatMut<'_>,
+    n: usize,
+    r: usize,
+    j1: usize,
+    qg: usize,
+) -> GroupReflectors {
+    let mut store = GroupReflectors::new(n, r, j1, qg);
+    let nblocks = store.nblocks;
+    for j in j1..j1 + qg {
+        for k in 0..nblocks {
+            let (jb, i1, i2e, _i3e) = geom(n, r, j, k);
+            if jb >= n {
+                break;
+            }
+
+            // Catch-up: apply previous sweeps' Q̂ₖ^ĵ to the new columns
+            // (paper l.9–18). This must run even when the *current* sweep's
+            // step degenerates at the bottom edge — the column `jb` still
+            // needs the earlier sweeps' reflectors (that is why Alg. 3
+            // iterates `2 + ⌊(n−j−1)/r⌋` steps, more than Alg. 2).
+            for jh in j1..j {
+                let (_, h1, h2e, _) = geom(n, r, jh, k);
+                if h2e < h1 + 2 {
+                    continue;
+                }
+                if let Some(qr) = store.q(jh, k) {
+                    // A(î1:î2, jb)
+                    qr.apply_left(a.rb_mut().sub(h1..h2e, jb..jb + 1));
+                    // B(î1:î2, i1+r-1) — paper guard: i1 + r - 1 ≤ n.
+                    let cb = i1 + r - 1;
+                    if cb < n {
+                        qr.apply_left(b.rb_mut().sub(h1..h2e, cb..cb + 1));
+                    }
+                }
+            }
+
+            if i1 >= n || i2e < i1 + 2 {
+                continue; // degenerate step: no reflector.
+            }
+
+            // Generate Q̂ₖʲ reducing A(i1:i2, jb); its action on that column
+            // is known exactly: [β, 0, …, 0].
+            let x: Vec<f64> = (i1..i2e).map(|i| a.at(i, jb)).collect();
+            let (qk, beta) = Reflector::reducing(&x);
+            a.set(i1, jb, beta);
+            for i in i1 + 1..i2e {
+                a.set(i, jb, 0.0);
+            }
+            // paper l.21: B(i1:i2, i1:i2) = Q̂ₖʲ B(i1:i2, i1:i2)
+            qk.apply_left(b.rb_mut().sub(i1..i2e, i1..i2e));
+
+            // Opposite reflector from the RQ of the B block (l.22–23).
+            let blk = b.rb().sub(i1..i2e, i1..i2e).to_owned();
+            let rq = RqFactor::compute(&blk);
+            let row = rq.q_top_rows(1);
+            let xv: Vec<f64> = (0..i2e - i1).map(|c| row[(0, c)]).collect();
+            let (zk, _) = Reflector::reducing(&xv);
+
+            // Minimal right updates (l.24–25).
+            let i4 = gen_right_row_start(j1, qg, r, j, k);
+            let (_, _, i2e2, i3e2) = geom(n, r, j, k);
+            if i4 < i3e2 {
+                zk.apply_right(a.rb_mut().sub(i4..i3e2, i1..i2e));
+            }
+            if i4 < i2e2 {
+                zk.apply_right(b.rb_mut().sub(i4..i2e2, i1..i2e));
+            }
+            // First block column of B is reduced below the diagonal.
+            for i in i1 + 1..i2e {
+                b.set(i, i1, 0.0);
+            }
+
+            store.set(j, k, qk, zk);
+        }
+    }
+    store
+}
+
+/// Build the compact-WY representation of the staircase product
+/// `R_k = R_k^{j1} ⋯ R_k^{j1+qg-1}` for chase step `k`, where sweep `j`'s
+/// reflector acts on rows `i1(j,k)..i2e(j,k)` — offset `j − j1` inside the
+/// union span. Returns `(span_start, WY)` or `None` if no reflector exists.
+fn staircase_wy(
+    refl: impl Fn(usize) -> Option<Reflector>,
+    n: usize,
+    r: usize,
+    j1: usize,
+    qg: usize,
+    k: usize,
+) -> Option<(usize, WyRep)> {
+    let ci1 = j1 + k * r + 1;
+    // Collect existing reflectors in sweep order.
+    let mut cols: Vec<(usize, Reflector)> = Vec::new();
+    let mut span_end = ci1;
+    for j in j1..j1 + qg {
+        if let Some(h) = refl(j) {
+            let (_, i1, i2e, _) = geom(n, r, j, k);
+            debug_assert_eq!(i2e - i1, h.v.len());
+            span_end = span_end.max(i2e);
+            cols.push((i1 - ci1, h));
+        }
+    }
+    if cols.is_empty() {
+        return None;
+    }
+    let m = span_end - ci1;
+    let kk = cols.len();
+    let mut v = Matrix::zeros(m, kk);
+    let mut taus = vec![0.0; kk];
+    for (c, (off, h)) in cols.iter().enumerate() {
+        for (l, &vl) in h.v.iter().enumerate() {
+            v[(off + l, c)] = vl;
+        }
+        taus[c] = h.tau;
+    }
+    Some((ci1, WyRep::from_reflectors(v, &taus)))
+}
+
+/// Apply phase (Algorithm 4): all delayed updates for the group, reordered
+/// by chase index with WY accumulation, plus the `Q`/`Z` accumulation.
+pub fn apply_group(
+    mut a: MatMut<'_>,
+    mut b: MatMut<'_>,
+    mut q: MatMut<'_>,
+    mut z: MatMut<'_>,
+    store: &GroupReflectors,
+) {
+    let n = store.n;
+    let nblocks = store.nblocks;
+
+    // ---- Right (Ẑ) updates, k bottom-up (paper l.2-18). ----
+    for k in (0..nblocks).rev() {
+        z_ragged_for(store, k, a.rb_mut(), b.rb_mut());
+        if let Some(za) = z_apply_for(store, k) {
+            let s5w = za.s5.min(n);
+            if s5w > 0 {
+                za.wy.apply(Side::Right, Trans::No, a.rb_mut().sub(0..s5w, za.ci1..za.ci2e));
+                za.wy.apply(Side::Right, Trans::No, b.rb_mut().sub(0..s5w, za.ci1..za.ci2e));
+            }
+            za.wy.apply(Side::Right, Trans::No, z.rb_mut().sub(0..n, za.ci1..za.ci2e));
+        }
+    }
+
+    // ---- Left (Q̂) updates, k bottom-up (paper l.19-28). ----
+    for k in (0..nblocks).rev() {
+        if let Some(qa) = q_apply_for(store, k) {
+            if qa.c5 < n {
+                qa.wy.apply(Side::Left, Trans::Yes, a.rb_mut().sub(qa.ci1..qa.ci2e, qa.c5..n));
+            }
+            if qa.c6 < n {
+                qa.wy.apply(Side::Left, Trans::Yes, b.rb_mut().sub(qa.ci1..qa.ci2e, qa.c6..n));
+            }
+            qa.wy.apply(Side::Right, Trans::No, q.rb_mut().sub(0..n, qa.ci1..qa.ci2e));
+        }
+    }
+}
+
+/// Ragged per-sweep `Ẑ` rows for chase `k` (paper l.4-10): rows
+/// `[s5, e4(j))` that differ per sweep, applied reflector-by-reflector.
+/// Empty for `j = j1`. Operates on full-matrix views of `A` and `B`.
+pub fn z_ragged_for(store: &GroupReflectors, k: usize, mut a: MatMut<'_>, mut b: MatMut<'_>) {
+    let (n, r, j1, qg) = (store.n, store.r, store.j1, store.qg);
+    let s5 = z_wy_row_end(store, k);
+    for j in j1 + 1..j1 + qg {
+        if let Some(zk) = store.z(j, k) {
+            let (_, i1, i2e, _) = geom(n, r, j, k);
+            let e4 = gen_right_row_start(j1, qg, r, j, k);
+            if e4 > s5 {
+                zk.apply_right(a.rb_mut().sub(s5..e4.min(n), i1..i2e));
+                zk.apply_right(b.rb_mut().sub(s5..e4.min(n), i1..i2e));
+            }
+        }
+    }
+}
+
+/// Upper (exclusive) row bound of the accumulated-WY `Ẑ` region for chase
+/// `k`: `s5 = j1 + 1 + max(0, (k − q)·r)` — the generate right-update start
+/// of the group's first sweep, so WY rows `[0, s5)` + ragged `[s5, e4(j))`
+/// + generate `[e4, i3e)` tile the rows exactly.
+pub fn z_wy_row_end(store: &GroupReflectors, k: usize) -> usize {
+    let t5 = k as i64 - store.qg as i64;
+    store.j1 + 1 + if t5 > 0 { t5 as usize * store.r } else { 0 }
+}
+
+/// The accumulated `Ẑₖ` block update for chase `k` (paper l.11-17).
+pub struct ZApply {
+    /// Column span start of the staircase WY.
+    pub ci1: usize,
+    /// Column span end (exclusive).
+    pub ci2e: usize,
+    /// Rows `[0, s5)` receive the WY (plus all of `Z`).
+    pub s5: usize,
+    /// The staircase block reflector `Ẑₖ = Ẑₖ^{j1}⋯Ẑₖ^{j1+q-1}`.
+    pub wy: WyRep,
+}
+
+/// Build the `Ẑₖ` WY update for chase `k`, if any reflector exists.
+pub fn z_apply_for(store: &GroupReflectors, k: usize) -> Option<ZApply> {
+    let (n, r, j1, qg) = (store.n, store.r, store.j1, store.qg);
+    let (ci1, wy) = staircase_wy(|j| store.z(j, k).cloned(), n, r, j1, qg, k)?;
+    let ci2e = ci1 + wy.m();
+    Some(ZApply { ci1, ci2e, s5: z_wy_row_end(store, k), wy })
+}
+
+/// The accumulated `Q̂ₖ` block update for chase `k` (paper l.20-27).
+pub struct QApply {
+    /// Row span start of the staircase WY (acts on rows of `A`/`B`).
+    pub ci1: usize,
+    /// Row span end (exclusive).
+    pub ci2e: usize,
+    /// `A` columns `[c5, n)` receive `Q̂ₖᵀ`.
+    pub c5: usize,
+    /// `B` columns `[c6, n)` receive `Q̂ₖᵀ`.
+    pub c6: usize,
+    /// The staircase block reflector `Q̂ₖ`.
+    pub wy: WyRep,
+}
+
+/// Build the `Q̂ₖ` WY update for chase `k`, if any reflector exists.
+pub fn q_apply_for(store: &GroupReflectors, k: usize) -> Option<QApply> {
+    let (n, r, j1, qg) = (store.n, store.r, store.j1, store.qg);
+    let (ci1, wy) = staircase_wy(|j| store.q(j, k).cloned(), n, r, j1, qg, k)?;
+    let ci2e = ci1 + wy.m();
+    // One past the last generate-updated column jb(j1+qg-1, k) / block span.
+    let c5 = j1 + qg - 1 + if k == 0 { 0 } else { (k - 1) * r + 1 } + 1;
+    let c6 = (j1 + qg + (k + 1) * r).min(n);
+    Some(QApply { ci1, ci2e, c5, c6, wy })
+}
+
+/// Sequential blocked stage 2: reduce an r-Hessenberg-triangular pencil to
+/// Hessenberg-triangular form with sweep groups of size `q`
+/// (paper defaults: `r = 16`, `q = 8`).
+pub fn reduce_blocked(
+    a: &mut Matrix,
+    b: &mut Matrix,
+    q: &mut Matrix,
+    z: &mut Matrix,
+    r: usize,
+    qsize: usize,
+) {
+    let n = a.rows();
+    if n < 3 {
+        return;
+    }
+    let mut j1 = 0;
+    while j1 < n - 2 {
+        let qg = qsize.min(n - 2 - j1);
+        let store = generate_group(a.as_mut(), b.as_mut(), n, r, j1, qg);
+        apply_group(a.as_mut(), b.as_mut(), q.as_mut(), z.as_mut(), &store);
+        j1 += qg;
+    }
+}
+
+/// Upper bound on chase steps per sweep (shared with the parallel driver).
+pub fn max_chase_steps(n: usize, r: usize, j1: usize) -> usize {
+    if n >= j1 + 2 {
+        2 + (n - j1 - 2) / r
+    } else {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::ht::stage2_unblocked::chase_steps;
+    use crate::ht::stage1::reduce_to_banded;
+    use crate::ht::stage2_unblocked::reduce_unblocked;
+    use crate::linalg::verify::{max_below_band, HtVerification};
+    use crate::pencil::random::random_pencil;
+    use crate::util::rng::Rng;
+
+    fn banded(n: usize, r: usize, seed: u64) -> (Matrix, Matrix, Matrix, Matrix, Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        let pencil = random_pencil(n, &mut rng);
+        let (a0, b0) = (pencil.a.clone(), pencil.b.clone());
+        let mut a = pencil.a;
+        let mut b = pencil.b;
+        let mut q = Matrix::identity(n);
+        let mut z = Matrix::identity(n);
+        let cfg = Config { r, p: 3, ..Config::default() };
+        reduce_to_banded(&mut a, &mut b, &mut q, &mut z, &cfg);
+        (a0, b0, a, b, q, z)
+    }
+
+    fn max_diff(x: &Matrix, y: &Matrix) -> f64 {
+        let mut d = 0.0f64;
+        for j in 0..x.cols() {
+            for i in 0..x.rows() {
+                d = d.max((x[(i, j)] - y[(i, j)]).abs());
+            }
+        }
+        d
+    }
+
+    /// The core validation: blocked (Alg 3+4) must equal unblocked (Alg 2)
+    /// to rounding — same reflector sequence, reordered arithmetic.
+    #[test]
+    fn blocked_equals_unblocked() {
+        for &(n, r, q) in &[(30usize, 4usize, 3usize), (40, 4, 8), (35, 5, 4), (50, 16, 8), (26, 3, 1)] {
+            let (_a0, _b0, a_in, b_in, q_in, z_in) = banded(n, r, 77);
+            let (mut a1, mut b1, mut q1, mut z1) = (a_in.clone(), b_in.clone(), q_in.clone(), z_in.clone());
+            reduce_unblocked(&mut a1, &mut b1, &mut q1, &mut z1, r);
+            let (mut a2, mut b2, mut q2, mut z2) = (a_in.clone(), b_in.clone(), q_in.clone(), z_in.clone());
+            reduce_blocked(&mut a2, &mut b2, &mut q2, &mut z2, r, q);
+            let scale = a1.norm_fro();
+            assert!(max_diff(&a1, &a2) < 1e-11 * scale, "A mismatch n={n} r={r} q={q}: {:.3e}", max_diff(&a1, &a2));
+            assert!(max_diff(&b1, &b2) < 1e-11 * scale, "B mismatch n={n} r={r} q={q}: {:.3e}", max_diff(&b1, &b2));
+            assert!(max_diff(&q1, &q2) < 1e-11, "Q mismatch n={n} r={r} q={q}: {:.3e}", max_diff(&q1, &q2));
+            assert!(max_diff(&z1, &z2) < 1e-11, "Z mismatch n={n} r={r} q={q}: {:.3e}", max_diff(&z1, &z2));
+        }
+    }
+
+    #[test]
+    fn blocked_produces_valid_ht() {
+        let (a0, b0, mut a, mut b, mut q, mut z) = banded(60, 6, 78);
+        reduce_blocked(&mut a, &mut b, &mut q, &mut z, 6, 4);
+        assert!(max_below_band(&a, 1) < 1e-12 * a.norm_fro());
+        assert_eq!(max_below_band(&b, 0), 0.0);
+        HtVerification::compute(&a0, &b0, &q, &z, &a, &b, 1).assert_ok(1e-11);
+    }
+
+    #[test]
+    fn paper_parameters_r16_q8() {
+        let (a0, b0, mut a, mut b, mut q, mut z) = banded(140, 16, 79);
+        reduce_blocked(&mut a, &mut b, &mut q, &mut z, 16, 8);
+        assert!(max_below_band(&a, 1) < 1e-12 * a.norm_fro());
+        HtVerification::compute(&a0, &b0, &q, &z, &a, &b, 1).assert_ok(1e-11);
+    }
+
+    #[test]
+    fn partial_last_group() {
+        // n chosen so the last group has fewer than q sweeps.
+        let (a0, b0, mut a, mut b, mut q, mut z) = banded(29, 4, 80);
+        reduce_blocked(&mut a, &mut b, &mut q, &mut z, 4, 8);
+        assert!(max_below_band(&a, 1) < 1e-12 * a.norm_fro());
+        HtVerification::compute(&a0, &b0, &q, &z, &a, &b, 1).assert_ok(1e-11);
+    }
+
+    #[test]
+    fn q_one_equals_unblocked_exactly_in_structure() {
+        // q = 1: no delayed cross-sweep updates; still must be valid.
+        let (a0, b0, mut a, mut b, mut q, mut z) = banded(25, 3, 81);
+        reduce_blocked(&mut a, &mut b, &mut q, &mut z, 3, 1);
+        assert!(max_below_band(&a, 1) < 1e-12 * a.norm_fro());
+        HtVerification::compute(&a0, &b0, &q, &z, &a, &b, 1).assert_ok(1e-11);
+    }
+
+    #[test]
+    fn geometry_helpers() {
+        // geom matches the unblocked chase_steps where steps exist.
+        let n = 40;
+        let r = 4;
+        for j in 0..5 {
+            for st in chase_steps(n, r, j) {
+                let (jb, i1, i2e, i3e) = geom(n, r, st.j, st.k);
+                assert_eq!((jb, i1, i2e, i3e), (st.jb, st.i1, st.i2e, st.i3e));
+            }
+        }
+        assert!(max_chase_steps(40, 4, 0) >= chase_steps(40, 4, 0).len());
+    }
+}

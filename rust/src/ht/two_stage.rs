@@ -1,0 +1,143 @@
+//! The complete two-stage Hessenberg-triangular reduction — the paper's
+//! headline algorithm (ParaHT in §4) in its sequential form. The parallel
+//! form lives in `coordinator::{stage1_par, stage2_par}` and shares all the
+//! numerical kernels with this driver.
+
+use crate::config::Config;
+use crate::error::Result;
+use crate::linalg::matrix::Matrix;
+use crate::linalg::verify::HtVerification;
+use crate::pencil::random::pre_triangularize;
+use crate::util::timer::Timer;
+
+/// Result of a Hessenberg-triangular reduction:
+/// `A₀ = Q H Zᵀ`, `B₀ = Q T Zᵀ` with `H` Hessenberg, `T` upper triangular.
+pub struct HtDecomposition {
+    /// Hessenberg factor `H`.
+    pub h: Matrix,
+    /// Upper-triangular factor `T`.
+    pub t: Matrix,
+    /// Left orthogonal factor `Q`.
+    pub q: Matrix,
+    /// Right orthogonal factor `Z`.
+    pub z: Matrix,
+    /// Wall-clock seconds spent in stage 1.
+    pub stage1_secs: f64,
+    /// Wall-clock seconds spent in stage 2.
+    pub stage2_secs: f64,
+}
+
+impl HtDecomposition {
+    /// Verify against the original pencil.
+    pub fn verify(&self, a0: &Matrix, b0: &Matrix) -> HtVerification {
+        HtVerification::compute(a0, b0, &self.q, &self.z, &self.h, &self.t, 1)
+    }
+
+    /// Total reduction time.
+    pub fn total_secs(&self) -> f64 {
+        self.stage1_secs + self.stage2_secs
+    }
+}
+
+/// Reduce the pencil `(a, b)` to Hessenberg-triangular form with the
+/// sequential two-stage algorithm. `b` need not be triangular: a QR-based
+/// pre-triangularization is applied first (accumulated into `Q`).
+pub fn reduce_to_hessenberg_triangular(
+    a: &Matrix,
+    b: &Matrix,
+    cfg: &Config,
+) -> Result<HtDecomposition> {
+    cfg.validate()?;
+    let n = a.rows();
+    if a.cols() != n || b.rows() != n || b.cols() != n {
+        return Err(crate::Error::shape(format!(
+            "pencil must be square and consistent: A {}x{}, B {}x{}",
+            a.rows(),
+            a.cols(),
+            b.rows(),
+            b.cols()
+        )));
+    }
+    let mut h = a.clone();
+    let mut t = b.clone();
+    let mut q = Matrix::identity(n);
+    let mut z = Matrix::identity(n);
+
+    // Pre-triangularize B if needed (not counted as a stage; LAPACK users
+    // run dgeqrf+dormqr ahead of dgghd3 the same way).
+    if crate::linalg::verify::max_below_band(&t, 0) != 0.0 {
+        pre_triangularize(&mut h, &mut t, &mut q);
+    }
+
+    let t1 = Timer::start();
+    super::stage1::reduce_to_banded(&mut h, &mut t, &mut q, &mut z, cfg);
+    let stage1_secs = t1.secs();
+
+    let t2 = Timer::start();
+    super::stage2_blocked::reduce_blocked(&mut h, &mut t, &mut q, &mut z, cfg.r, cfg.q);
+    let stage2_secs = t2.secs();
+
+    Ok(HtDecomposition { h, t, q, z, stage1_secs, stage2_secs })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::verify::max_below_band;
+    use crate::pencil::random::{random_pencil, random_pencil_general};
+    use crate::pencil::saddle::saddle_pencil;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn full_two_stage_random() {
+        let mut rng = Rng::new(90);
+        let p = random_pencil(80, &mut rng);
+        let cfg = Config { r: 8, p: 4, q: 4, ..Config::default() };
+        let d = reduce_to_hessenberg_triangular(&p.a, &p.b, &cfg).unwrap();
+        assert!(max_below_band(&d.h, 1) < 1e-12 * d.h.norm_fro());
+        assert_eq!(max_below_band(&d.t, 0), 0.0);
+        d.verify(&p.a, &p.b).assert_ok(1e-11);
+    }
+
+    #[test]
+    fn general_b_pretriangularized() {
+        let mut rng = Rng::new(91);
+        let p = random_pencil_general(40, &mut rng);
+        let cfg = Config { r: 4, p: 3, q: 3, ..Config::default() };
+        let d = reduce_to_hessenberg_triangular(&p.a, &p.b, &cfg).unwrap();
+        d.verify(&p.a, &p.b).assert_ok(1e-11);
+    }
+
+    #[test]
+    fn saddle_point_pencil_reduces() {
+        // The two-stage algorithm is oblivious to infinite eigenvalues
+        // (§4, Fig. 11 discussion) — singular B must work identically.
+        let mut rng = Rng::new(92);
+        let p = saddle_pencil(60, 0.25, &mut rng);
+        let cfg = Config { r: 8, p: 3, q: 4, ..Config::default() };
+        let d = reduce_to_hessenberg_triangular(&p.a, &p.b, &cfg).unwrap();
+        assert!(max_below_band(&d.h, 1) < 1e-12 * d.h.norm_fro());
+        d.verify(&p.a, &p.b).assert_ok(1e-11);
+    }
+
+    #[test]
+    fn rejects_bad_shapes_and_config() {
+        let a = Matrix::zeros(4, 5);
+        let b = Matrix::zeros(4, 4);
+        assert!(reduce_to_hessenberg_triangular(&a, &b, &Config::default()).is_err());
+        let a = Matrix::identity(4);
+        let mut cfg = Config::default();
+        cfg.p = 0;
+        assert!(reduce_to_hessenberg_triangular(&a, &a, &cfg).is_err());
+    }
+
+    #[test]
+    fn identity_pencil_stays_identity_like() {
+        let n = 12;
+        let a = Matrix::identity(n);
+        let b = Matrix::identity(n);
+        let cfg = Config { r: 3, p: 2, q: 2, ..Config::default() };
+        let d = reduce_to_hessenberg_triangular(&a, &b, &cfg).unwrap();
+        d.verify(&a, &b).assert_ok(1e-12);
+    }
+}

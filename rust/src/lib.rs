@@ -1,0 +1,33 @@
+//! # paraht — Parallel two-stage Hessenberg-triangular reduction
+//!
+//! Reproduction of Steel & Vandebril, *"Parallel two-stage reduction to
+//! Hessenberg-triangular form"* (2023).
+//!
+//! Given a pencil `(A, B)` with `A, B ∈ R^{n×n}`, the library computes unitary
+//! `Q`, `Z`, a Hessenberg `H` and an upper-triangular `T` such that
+//! `A = Q H Zᵀ`, `B = Q T Zᵀ` — the standard preprocessing step for the QZ
+//! algorithm for generalized eigenvalue problems.
+//!
+//! The system is a three-layer stack:
+//! * **L3 (rust)** — this crate: the paper's parallel *coordinator* (task
+//!   graph, dynamic scheduler, slicing) plus the full dense-linear-algebra
+//!   substrate it needs (GEMM, Householder/WY, QR/RQ/LQ, Givens).
+//! * **L2 (JAX)** — `python/compile/model.py`: block-reflector update graphs,
+//!   AOT-lowered to HLO text artifacts.
+//! * **L1 (Pallas)** — `python/compile/kernels/`: tiled WY block-reflector
+//!   kernels, validated against a pure-jnp oracle.
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod experiments;
+pub mod ht;
+pub mod linalg;
+pub mod pencil;
+pub mod runtime;
+pub mod util;
+
+pub use config::Config;
+pub use error::{Error, Result};
+pub use linalg::matrix::Matrix;

@@ -1,0 +1,117 @@
+//! Level-1 vector kernels (dot, axpy, nrm2, scal).
+//!
+//! Written over plain slices; columns of col-major views are contiguous so
+//! the factorization code calls these directly on `col`/`col_mut` slices.
+
+/// Dot product `xᵀ y`.
+#[inline]
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    // 4-way unrolled accumulators help LLVM vectorize without changing
+    // results across calls (deterministic order).
+    let n = x.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for c in 0..chunks {
+        let i = 4 * c;
+        s0 += x[i] * y[i];
+        s1 += x[i + 1] * y[i + 1];
+        s2 += x[i + 2] * y[i + 2];
+        s3 += x[i + 3] * y[i + 3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for i in 4 * chunks..n {
+        s += x[i] * y[i];
+    }
+    s
+}
+
+/// `y += alpha * x`.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    if alpha == 0.0 {
+        return;
+    }
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// `x *= alpha`.
+#[inline]
+pub fn scal(alpha: f64, x: &mut [f64]) {
+    for xi in x.iter_mut() {
+        *xi *= alpha;
+    }
+}
+
+/// Euclidean norm with overflow/underflow-safe scaling (LAPACK dnrm2 style).
+pub fn nrm2(x: &[f64]) -> f64 {
+    let mut scale = 0.0f64;
+    let mut ssq = 1.0f64;
+    for &xi in x {
+        if xi != 0.0 {
+            let a = xi.abs();
+            if scale < a {
+                ssq = 1.0 + ssq * (scale / a) * (scale / a);
+                scale = a;
+            } else {
+                ssq += (a / scale) * (a / scale);
+            }
+        }
+    }
+    scale * ssq.sqrt()
+}
+
+/// Index of the element with maximum absolute value (0 if empty).
+pub fn iamax(x: &[f64]) -> usize {
+    let mut best = 0;
+    let mut bv = 0.0;
+    for (i, &xi) in x.iter().enumerate() {
+        if xi.abs() > bv {
+            bv = xi.abs();
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_basic() {
+        assert_eq!(dot(&[1., 2., 3.], &[4., 5., 6.]), 32.0);
+        // length > 4 exercises the unrolled path
+        let x: Vec<f64> = (0..11).map(|i| i as f64).collect();
+        let y = vec![1.0; 11];
+        assert_eq!(dot(&x, &y), 55.0);
+    }
+
+    #[test]
+    fn axpy_basic() {
+        let mut y = vec![1.0, 1.0];
+        axpy(2.0, &[3.0, 4.0], &mut y);
+        assert_eq!(y, vec![7.0, 9.0]);
+    }
+
+    #[test]
+    fn nrm2_safe_scaling() {
+        assert!((nrm2(&[3.0, 4.0]) - 5.0).abs() < 1e-15);
+        // values that would overflow naive sum of squares
+        let big = 1e200;
+        assert!((nrm2(&[big, big]) - big * 2f64.sqrt()).abs() / big < 1e-14);
+        // values that would underflow
+        let small = 1e-200;
+        assert!((nrm2(&[small, small]) - small * 2f64.sqrt()).abs() / small < 1e-14);
+        assert_eq!(nrm2(&[]), 0.0);
+    }
+
+    #[test]
+    fn iamax_basic() {
+        assert_eq!(iamax(&[1.0, -5.0, 3.0]), 1);
+        assert_eq!(iamax(&[]), 0);
+    }
+}

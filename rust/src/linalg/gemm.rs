@@ -1,0 +1,331 @@
+//! General matrix-matrix multiplication: `C = alpha·op(A)·op(B) + beta·C`.
+//!
+//! This is the substrate the paper gets from MKL; here it is built from
+//! scratch. The no-transpose fast path packs `A` into an L2-resident block
+//! and runs a column-axpy microkernel over contiguous columns of `B`/`C`;
+//! the transpose cases use dot-product kernels over contiguous columns.
+//! Absolute throughput is recorded in EXPERIMENTS.md §Perf; all paper plots
+//! are relative so the algorithms only need a *consistent* GEMM.
+
+use super::matrix::{MatMut, MatRef, Matrix};
+use crate::util::flops;
+
+/// Transposition selector for [`gemm`].
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Trans {
+    /// Use the matrix as stored.
+    No,
+    /// Use the transpose.
+    Yes,
+}
+
+/// Cache block size in the k (inner) dimension.
+const KC: usize = 256;
+/// Cache block size in the m (row) dimension.
+const MC: usize = 128;
+
+/// `C = alpha·op(A)·op(B) + beta·C`.
+///
+/// Dimensions: `op(A)` is `m×k`, `op(B)` is `k×n`, `C` is `m×n`; asserts on
+/// mismatch.
+pub fn gemm(alpha: f64, a: MatRef<'_>, ta: Trans, b: MatRef<'_>, tb: Trans, beta: f64, mut c: MatMut<'_>) {
+    let m = c.rows();
+    let n = c.cols();
+    let (am, ak) = match ta {
+        Trans::No => (a.rows(), a.cols()),
+        Trans::Yes => (a.cols(), a.rows()),
+    };
+    let (bk, bn) = match tb {
+        Trans::No => (b.rows(), b.cols()),
+        Trans::Yes => (b.cols(), b.rows()),
+    };
+    assert_eq!(am, m, "gemm: op(A) rows {am} != C rows {m}");
+    assert_eq!(bn, n, "gemm: op(B) cols {bn} != C cols {n}");
+    assert_eq!(ak, bk, "gemm: inner dims {ak} != {bk}");
+    let k = ak;
+
+    // beta scaling first (also handles k == 0).
+    if beta != 1.0 {
+        for j in 0..n {
+            let cj = c.col_mut(j);
+            if beta == 0.0 {
+                cj.fill(0.0);
+            } else {
+                super::blas1::scal(beta, cj);
+            }
+        }
+    }
+    if m == 0 || n == 0 || k == 0 || alpha == 0.0 {
+        return;
+    }
+    flops::add(2 * (m as u64) * (n as u64) * (k as u64));
+
+    match (ta, tb) {
+        (Trans::No, Trans::No) => gemm_nn(alpha, a, b, c),
+        (Trans::Yes, Trans::No) => gemm_tn(alpha, a, b, c),
+        (Trans::No, Trans::Yes) => gemm_nt(alpha, a, b, c),
+        (Trans::Yes, Trans::Yes) => gemm_tt(alpha, a, b, c),
+    }
+}
+
+/// C += alpha * A * B  (A m×k, B k×n). Packed-A column-axpy kernel.
+fn gemm_nn(alpha: f64, a: MatRef<'_>, b: MatRef<'_>, mut c: MatMut<'_>) {
+    let m = c.rows();
+    let n = c.cols();
+    let k = a.cols();
+    // Pack buffer reused across (l0, i0) blocks.
+    let mut pack = vec![0.0f64; MC * KC];
+    let mut l0 = 0;
+    while l0 < k {
+        let kb = KC.min(k - l0);
+        let mut i0 = 0;
+        while i0 < m {
+            let mb = MC.min(m - i0);
+            // Pack A(i0..i0+mb, l0..l0+kb) column-major into `pack`.
+            for l in 0..kb {
+                let src = a.sub(i0..i0 + mb, l0 + l..l0 + l + 1);
+                pack[l * mb..(l + 1) * mb].copy_from_slice(src.col(0));
+            }
+            // For each column of C, accumulate the packed block.
+            for j in 0..n {
+                let bj = b.col(j);
+                let cj = &mut c.col_mut(j)[i0..i0 + mb];
+                // 4-way unroll over l for ILP.
+                let mut l = 0;
+                while l + 4 <= kb {
+                    let x0 = alpha * bj[l0 + l];
+                    let x1 = alpha * bj[l0 + l + 1];
+                    let x2 = alpha * bj[l0 + l + 2];
+                    let x3 = alpha * bj[l0 + l + 3];
+                    let a0 = &pack[l * mb..(l + 1) * mb];
+                    let a1 = &pack[(l + 1) * mb..(l + 2) * mb];
+                    let a2 = &pack[(l + 2) * mb..(l + 3) * mb];
+                    let a3 = &pack[(l + 3) * mb..(l + 4) * mb];
+                    for i in 0..mb {
+                        cj[i] += x0 * a0[i] + x1 * a1[i] + x2 * a2[i] + x3 * a3[i];
+                    }
+                    l += 4;
+                }
+                while l < kb {
+                    let x = alpha * bj[l0 + l];
+                    let al = &pack[l * mb..(l + 1) * mb];
+                    for i in 0..mb {
+                        cj[i] += x * al[i];
+                    }
+                    l += 1;
+                }
+            }
+            i0 += mb;
+        }
+        l0 += kb;
+    }
+}
+
+/// C += alpha * Aᵀ * B  (A k×m, B k×n). Columns of A and B are contiguous;
+/// four B/C columns are processed together so each A column is loaded once
+/// per quad (≈2× over the naive dot-product loop).
+fn gemm_tn(alpha: f64, a: MatRef<'_>, b: MatRef<'_>, mut c: MatMut<'_>) {
+    let m = c.rows();
+    let n = c.cols();
+    let k = a.rows();
+    let mut j = 0;
+    while j + 4 <= n {
+        let (b0, b1, b2, b3) = (b.col(j), b.col(j + 1), b.col(j + 2), b.col(j + 3));
+        for i in 0..m {
+            let ai = a.col(i);
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+            for l in 0..k {
+                let av = ai[l];
+                s0 += av * b0[l];
+                s1 += av * b1[l];
+                s2 += av * b2[l];
+                s3 += av * b3[l];
+            }
+            unsafe {
+                let ld = c.ld();
+                let base = c.ptr();
+                *base.add(i + j * ld) += alpha * s0;
+                *base.add(i + (j + 1) * ld) += alpha * s1;
+                *base.add(i + (j + 2) * ld) += alpha * s2;
+                *base.add(i + (j + 3) * ld) += alpha * s3;
+            }
+        }
+        j += 4;
+    }
+    while j < n {
+        // Same single-accumulator order as the quad path: a column's value
+        // must not depend on which path computes it (the parallel slices
+        // must match the sequential full-width call bit for bit).
+        let bj = b.col(j);
+        let cj = c.col_mut(j);
+        for i in 0..m {
+            let ai = a.col(i);
+            let mut s = 0.0;
+            for l in 0..k {
+                s += ai[l] * bj[l];
+            }
+            cj[i] += alpha * s;
+        }
+        j += 1;
+    }
+}
+
+/// C += alpha * A * Bᵀ  (A m×k, B n×k). Axpy over columns of C with scalars
+/// read down rows of B.
+fn gemm_nt(alpha: f64, a: MatRef<'_>, b: MatRef<'_>, mut c: MatMut<'_>) {
+    let n = c.cols();
+    let k = a.cols();
+    for j in 0..n {
+        let cj = c.col_mut(j);
+        for l in 0..k {
+            let x = alpha * b.at(j, l);
+            if x != 0.0 {
+                super::blas1::axpy(x, a.col(l), cj);
+            }
+        }
+    }
+}
+
+/// C += alpha * Aᵀ * Bᵀ (rare; strided dot).
+fn gemm_tt(alpha: f64, a: MatRef<'_>, b: MatRef<'_>, mut c: MatMut<'_>) {
+    let m = c.rows();
+    let n = c.cols();
+    let k = a.rows();
+    for j in 0..n {
+        for i in 0..m {
+            let mut s = 0.0;
+            for l in 0..k {
+                s += a.at(l, i) * b.at(j, l);
+            }
+            *c.at_mut(i, j) += alpha * s;
+        }
+    }
+}
+
+/// Convenience: allocate and return `A·B`.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.rows(), b.cols());
+    gemm(1.0, a.as_ref(), Trans::No, b.as_ref(), Trans::No, 0.0, c.as_mut());
+    c
+}
+
+/// Convenience: `op(A)·op(B)` into a fresh matrix.
+pub fn matmul_t(a: &Matrix, ta: Trans, b: &Matrix, tb: Trans) -> Matrix {
+    let m = if ta == Trans::No { a.rows() } else { a.cols() };
+    let n = if tb == Trans::No { b.cols() } else { b.rows() };
+    let mut c = Matrix::zeros(m, n);
+    gemm(1.0, a.as_ref(), ta, b.as_ref(), tb, 0.0, c.as_mut());
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Naive reference multiply for validation.
+    fn reference(a: &Matrix, ta: Trans, b: &Matrix, tb: Trans) -> Matrix {
+        let (m, k) = if ta == Trans::No { (a.rows(), a.cols()) } else { (a.cols(), a.rows()) };
+        let n = if tb == Trans::No { b.cols() } else { b.rows() };
+        Matrix::from_fn(m, n, |i, j| {
+            let mut s = 0.0;
+            for l in 0..k {
+                let av = if ta == Trans::No { a[(i, l)] } else { a[(l, i)] };
+                let bv = if tb == Trans::No { b[(l, j)] } else { b[(j, l)] };
+                s += av * bv;
+            }
+            s
+        })
+    }
+
+    fn rel_err(x: &Matrix, y: &Matrix) -> f64 {
+        let mut d = x.clone();
+        for j in 0..d.cols() {
+            for i in 0..d.rows() {
+                d[(i, j)] -= y[(i, j)];
+            }
+        }
+        d.norm_fro() / y.norm_fro().max(1e-300)
+    }
+
+    #[test]
+    fn small_exact() {
+        let a = Matrix::from_rows(2, 3, &[1., 2., 3., 4., 5., 6.]);
+        let b = Matrix::from_rows(3, 2, &[7., 8., 9., 10., 11., 12.]);
+        let c = matmul(&a, &b);
+        assert_eq!(c[(0, 0)], 58.0);
+        assert_eq!(c[(0, 1)], 64.0);
+        assert_eq!(c[(1, 0)], 139.0);
+        assert_eq!(c[(1, 1)], 154.0);
+    }
+
+    #[test]
+    fn all_transpose_cases_match_reference() {
+        let mut rng = Rng::new(99);
+        for &(m, n, k) in &[(5usize, 7usize, 3usize), (17, 13, 33), (130, 70, 300), (1, 9, 4)] {
+            for &ta in &[Trans::No, Trans::Yes] {
+                for &tb in &[Trans::No, Trans::Yes] {
+                    let a = if ta == Trans::No { Matrix::randn(m, k, &mut rng) } else { Matrix::randn(k, m, &mut rng) };
+                    let b = if tb == Trans::No { Matrix::randn(k, n, &mut rng) } else { Matrix::randn(n, k, &mut rng) };
+                    let got = matmul_t(&a, ta, &b, tb);
+                    let want = reference(&a, ta, &b, tb);
+                    assert!(rel_err(&got, &want) < 1e-13, "case {m}x{n}x{k} {ta:?}{tb:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn alpha_beta_semantics() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::randn(6, 4, &mut rng);
+        let b = Matrix::randn(4, 5, &mut rng);
+        let c0 = Matrix::randn(6, 5, &mut rng);
+        // C = 2 A B + 3 C0
+        let mut c = c0.clone();
+        gemm(2.0, a.as_ref(), Trans::No, b.as_ref(), Trans::No, 3.0, c.as_mut());
+        let want = {
+            let ab = matmul(&a, &b);
+            Matrix::from_fn(6, 5, |i, j| 2.0 * ab[(i, j)] + 3.0 * c0[(i, j)])
+        };
+        assert!(rel_err(&c, &want) < 1e-13);
+        // beta = 0 must overwrite even NaN-free garbage
+        let mut c = Matrix::from_fn(6, 5, |_, _| 777.0);
+        gemm(1.0, a.as_ref(), Trans::No, b.as_ref(), Trans::No, 0.0, c.as_mut());
+        let want = matmul(&a, &b);
+        assert!(rel_err(&c, &want) < 1e-13);
+    }
+
+    #[test]
+    fn zero_inner_dim_scales_only() {
+        let a = Matrix::zeros(3, 0);
+        let b = Matrix::zeros(0, 2);
+        let mut c = Matrix::from_fn(3, 2, |_, _| 2.0);
+        gemm(1.0, a.as_ref(), Trans::No, b.as_ref(), Trans::No, 0.5, c.as_mut());
+        assert_eq!(c[(0, 0)], 1.0);
+    }
+
+    #[test]
+    fn counts_flops() {
+        crate::util::flops::set_enabled(true);
+        let mut rng = Rng::new(1);
+        let a = Matrix::randn(10, 20, &mut rng);
+        let b = Matrix::randn(20, 30, &mut rng);
+        let (_, n) = crate::util::flops::count(|| matmul(&a, &b));
+        assert_eq!(n, 2 * 10 * 20 * 30);
+    }
+
+    #[test]
+    fn submatrix_views_with_ld() {
+        // gemm over views whose ld != rows.
+        let mut rng = Rng::new(11);
+        let big_a = Matrix::randn(10, 10, &mut rng);
+        let big_b = Matrix::randn(10, 10, &mut rng);
+        let a = big_a.sub(2..7, 1..9); // 5x8
+        let b = big_b.sub(0..8, 3..9); // 8x6
+        let mut c = Matrix::zeros(5, 6);
+        gemm(1.0, a, Trans::No, b, Trans::No, 0.0, c.as_mut());
+        let want = reference(&a.to_owned(), Trans::No, &b.to_owned(), Trans::No);
+        assert!(rel_err(&c, &want) < 1e-13);
+    }
+}

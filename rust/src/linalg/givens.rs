@@ -1,0 +1,113 @@
+//! Givens plane rotations (LAPACK `dlartg` analogue).
+//!
+//! Used by the one-stage baselines (`MolerStewart`, `Dgghd3`): the original
+//! Hessenberg-triangular reduction of Moler & Stewart is rotation-based, as
+//! is LAPACK's `dgghd3` which the paper compares against.
+
+use super::matrix::MatMut;
+use crate::util::flops;
+
+/// A plane rotation `[c s; -s c]` with `c² + s² = 1`.
+#[derive(Clone, Copy, Debug)]
+pub struct Givens {
+    /// Cosine component.
+    pub c: f64,
+    /// Sine component.
+    pub s: f64,
+}
+
+impl Givens {
+    /// Compute `(G, r)` with `[c s; -s c]·[a; b] = [r; 0]`.
+    pub fn make(a: f64, b: f64) -> (Givens, f64) {
+        if b == 0.0 {
+            return (Givens { c: 1.0, s: 0.0 }, a);
+        }
+        if a == 0.0 {
+            return (Givens { c: 0.0, s: 1.0 }, b);
+        }
+        let r = a.hypot(b);
+        let r = if a.abs() > b.abs() { r.copysign(a) } else { r.copysign(b) };
+        (Givens { c: a / r, s: b / r }, r)
+    }
+
+    /// Apply from the left to rows `i1`, `i2` over columns `cols` of `m`:
+    /// `[row_i1; row_i2] := [c s; -s c]·[row_i1; row_i2]`.
+    pub fn apply_left(&self, mut m: MatMut<'_>, i1: usize, i2: usize, cols: std::ops::Range<usize>) {
+        flops::add(6 * (cols.end - cols.start) as u64);
+        for j in cols {
+            let x = m.at(i1, j);
+            let y = m.at(i2, j);
+            m.set(i1, j, self.c * x + self.s * y);
+            m.set(i2, j, -self.s * x + self.c * y);
+        }
+    }
+
+    /// Apply from the right to columns `j1`, `j2` over rows `rows` of `m`:
+    /// `[col_j1, col_j2] := [col_j1, col_j2]·[c -s; s c]ᵀ`… i.e. the same
+    /// rotation acting on column pairs: `col_j1 := c·col_j1 + s·col_j2`,
+    /// `col_j2 := -s·col_j1 + c·col_j2`.
+    pub fn apply_right(&self, mut m: MatMut<'_>, j1: usize, j2: usize, rows: std::ops::Range<usize>) {
+        flops::add(6 * (rows.end - rows.start) as u64);
+        for i in rows {
+            let x = m.at(i, j1);
+            let y = m.at(i, j2);
+            m.set(i, j1, self.c * x + self.s * y);
+            m.set(i, j2, -self.s * x + self.c * y);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matrix::Matrix;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn make_annihilates() {
+        let mut rng = Rng::new(60);
+        for _ in 0..100 {
+            let a = rng.normal();
+            let b = rng.normal();
+            let (g, r) = Givens::make(a, b);
+            assert!((g.c * a + g.s * b - r).abs() < 1e-13 * r.abs().max(1.0));
+            assert!((-g.s * a + g.c * b).abs() < 1e-13);
+            assert!((g.c * g.c + g.s * g.s - 1.0).abs() < 1e-14);
+        }
+        // degenerate cases
+        let (g, r) = Givens::make(3.0, 0.0);
+        assert_eq!((g.c, g.s, r), (1.0, 0.0, 3.0));
+        let (g, r) = Givens::make(0.0, 2.0);
+        assert_eq!((g.c, g.s, r), (0.0, 1.0, 2.0));
+    }
+
+    #[test]
+    fn left_apply_zeroes_entry() {
+        let mut rng = Rng::new(61);
+        let mut m = Matrix::randn(4, 5, &mut rng);
+        let (g, _) = Givens::make(m[(1, 2)], m[(3, 2)]);
+        g.apply_left(m.as_mut(), 1, 3, 0..5);
+        assert!(m[(3, 2)].abs() < 1e-13);
+    }
+
+    #[test]
+    fn right_apply_zeroes_entry() {
+        let mut rng = Rng::new(62);
+        let mut m = Matrix::randn(5, 4, &mut rng);
+        // Zero m[2,3] against m[2,1]: col pair (1,3):
+        let (g, _) = Givens::make(m[(2, 1)], m[(2, 3)]);
+        g.apply_right(m.as_mut(), 1, 3, 0..5);
+        assert!(m[(2, 3)].abs() < 1e-13);
+    }
+
+    #[test]
+    fn rotation_preserves_norm() {
+        let mut rng = Rng::new(63);
+        let mut m = Matrix::randn(6, 6, &mut rng);
+        let before = m.norm_fro();
+        let (g, _) = Givens::make(1.0, 2.0);
+        g.apply_left(m.as_mut(), 0, 4, 0..6);
+        g.apply_right(m.as_mut(), 2, 3, 0..6);
+        assert!((m.norm_fro() - before).abs() < 1e-12 * before);
+    }
+}

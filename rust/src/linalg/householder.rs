@@ -1,0 +1,172 @@
+//! Elementary Householder reflectors (LAPACK `dlarfg`/`dlarf` analogues).
+//!
+//! Convention (LAPACK): `H = I − τ v vᵀ` with `v[0] = 1`. `H` is symmetric
+//! and orthogonal. `larfg` generates a reflector that maps a vector onto
+//! `±‖x‖ e₁`; `larf_left`/`larf_right` apply one reflector to a matrix view.
+
+use super::blas1::{axpy, dot, nrm2};
+use super::matrix::MatMut;
+use crate::util::flops;
+
+/// Generate a Householder reflector for the vector `[alpha, x...]`.
+///
+/// On return `x` holds the tail of `v` (with implicit `v[0] = 1`) and the
+/// result is `(beta, tau)` such that `H [alpha; x] = [beta; 0]` for
+/// `H = I − τ v vᵀ`. If the tail is zero, `tau = 0` (H = I) and
+/// `beta = alpha`.
+pub fn larfg(alpha: f64, x: &mut [f64]) -> (f64, f64) {
+    let xnorm = nrm2(x);
+    if xnorm == 0.0 {
+        return (alpha, 0.0);
+    }
+    flops::add(3 * x.len() as u64);
+    // beta = -sign(alpha) * hypot(alpha, xnorm): avoids cancellation.
+    let beta = -alpha.signum() * (alpha * alpha + xnorm * xnorm).sqrt();
+    let tau = (beta - alpha) / beta;
+    let inv = 1.0 / (alpha - beta);
+    for xi in x.iter_mut() {
+        *xi *= inv;
+    }
+    (beta, tau)
+}
+
+/// Apply `H = I − τ v vᵀ` from the left: `C := H C`.
+///
+/// `v` has length `C.rows()` with `v[0]` stored explicitly (callers pass the
+/// materialized vector including the leading 1).
+pub fn larf_left(v: &[f64], tau: f64, mut c: MatMut<'_>) {
+    debug_assert_eq!(v.len(), c.rows());
+    if tau == 0.0 || c.rows() == 0 || c.cols() == 0 {
+        return;
+    }
+    flops::add(4 * (v.len() as u64) * (c.cols() as u64));
+    for j in 0..c.cols() {
+        let cj = c.col_mut(j);
+        let w = dot(v, cj); // vᵀ C[:,j]
+        axpy(-tau * w, v, cj); // C[:,j] -= τ (vᵀC_j) v
+    }
+}
+
+/// Apply `H = I − τ v vᵀ` from the right: `C := C H`.
+///
+/// `v` has length `C.cols()`.
+pub fn larf_right(v: &[f64], tau: f64, mut c: MatMut<'_>) {
+    debug_assert_eq!(v.len(), c.cols());
+    if tau == 0.0 || c.rows() == 0 || c.cols() == 0 {
+        return;
+    }
+    let m = c.rows();
+    flops::add(4 * (v.len() as u64) * (m as u64));
+    // w = C v  (m-vector), then C -= τ w vᵀ.
+    let mut w = vec![0.0; m];
+    for j in 0..c.cols() {
+        axpy(v[j], c.rb().col(j), &mut w);
+    }
+    for j in 0..c.cols() {
+        axpy(-tau * v[j], &w, c.col_mut(j));
+    }
+}
+
+/// A stored reflector: the full `v` (leading 1 materialized) and `τ`.
+#[derive(Clone, Debug)]
+pub struct Reflector {
+    /// Householder vector (v[0] = 1).
+    pub v: Vec<f64>,
+    /// Scaling factor τ.
+    pub tau: f64,
+}
+
+impl Reflector {
+    /// Generate the reflector reducing the full vector `x` (length ≥ 1) to
+    /// `±‖x‖ e₁`. Returns `(reflector, beta)`.
+    pub fn reducing(x: &[f64]) -> (Reflector, f64) {
+        assert!(!x.is_empty());
+        let mut v = x.to_vec();
+        let (head, tail) = v.split_at_mut(1);
+        let (beta, tau) = larfg(head[0], tail);
+        head[0] = 1.0;
+        (Reflector { v, tau }, beta)
+    }
+
+    /// `C := H C`.
+    pub fn apply_left(&self, c: MatMut<'_>) {
+        larf_left(&self.v, self.tau, c);
+    }
+
+    /// `C := C H`.
+    pub fn apply_right(&self, c: MatMut<'_>) {
+        larf_right(&self.v, self.tau, c);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matrix::Matrix;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn larfg_annihilates() {
+        let mut rng = Rng::new(17);
+        for len in [2usize, 3, 10, 50] {
+            let x: Vec<f64> = (0..len).map(|_| rng.normal()).collect();
+            let (refl, beta) = Reflector::reducing(&x);
+            // Apply H to x as a column matrix: expect [beta, 0, ..., 0].
+            let mut m = Matrix::from_fn(len, 1, |i, _| x[i]);
+            refl.apply_left(m.as_mut());
+            assert!((m[(0, 0)] - beta).abs() < 1e-12 * beta.abs().max(1.0));
+            for i in 1..len {
+                assert!(m[(i, 0)].abs() < 1e-13, "tail not annihilated: {}", m[(i, 0)]);
+            }
+            // |beta| = ||x||
+            let nx = nrm2(&x);
+            assert!((beta.abs() - nx).abs() < 1e-12 * nx);
+        }
+    }
+
+    #[test]
+    fn larfg_zero_tail_is_identity() {
+        let mut x = vec![0.0, 0.0];
+        let (beta, tau) = larfg(5.0, &mut x);
+        assert_eq!(tau, 0.0);
+        assert_eq!(beta, 5.0);
+    }
+
+    #[test]
+    fn reflector_is_orthogonal_and_symmetric() {
+        let mut rng = Rng::new(23);
+        let x: Vec<f64> = (0..7).map(|_| rng.normal()).collect();
+        let (refl, _) = Reflector::reducing(&x);
+        // Build H explicitly: H = I - tau v v^T.
+        let n = x.len();
+        let h = Matrix::from_fn(n, n, |i, j| {
+            (if i == j { 1.0 } else { 0.0 }) - refl.tau * refl.v[i] * refl.v[j]
+        });
+        // H^T H = I
+        let hth = crate::linalg::gemm::matmul_t(&h, crate::linalg::gemm::Trans::Yes, &h, crate::linalg::gemm::Trans::No);
+        for i in 0..n {
+            for j in 0..n {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((hth[(i, j)] - want).abs() < 1e-13);
+            }
+        }
+    }
+
+    #[test]
+    fn left_right_consistency() {
+        // (H C)^T == C^T H because H is symmetric.
+        let mut rng = Rng::new(31);
+        let x: Vec<f64> = (0..5).map(|_| rng.normal()).collect();
+        let (refl, _) = Reflector::reducing(&x);
+        let c = Matrix::randn(5, 4, &mut rng);
+        let mut hc = c.clone();
+        refl.apply_left(hc.as_mut());
+        let mut ct_h = c.transposed();
+        refl.apply_right(ct_h.as_mut());
+        for i in 0..5 {
+            for j in 0..4 {
+                assert!((hc[(i, j)] - ct_h[(j, i)]).abs() < 1e-13);
+            }
+        }
+    }
+}

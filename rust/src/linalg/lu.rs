@@ -1,0 +1,179 @@
+//! Small dense LU factorization with partial pivoting (LAPACK `dgetrf`/
+//! `dgetrs` analogue, unblocked — used on `p·n_b`-sized blocks only).
+//!
+//! This powers the *solve-based* opposite-reflector construction of the
+//! `IterHT`/`HouseHT` baselines: solving with `B` instead of orthogonally
+//! factoring it is cheaper but inherits `B`'s conditioning — exactly the
+//! sensitivity the paper exploits in its saddle-point experiments (§4).
+
+use crate::error::{Error, Result};
+use crate::linalg::matrix::Matrix;
+use crate::util::flops;
+
+/// LU factorization with partial pivoting: `P A = L U` stored in place.
+pub struct LuFactor {
+    /// Combined `L\U` storage (unit diagonal of `L` implicit).
+    pub lu: Matrix,
+    /// Pivot row chosen at each step.
+    pub piv: Vec<usize>,
+}
+
+impl LuFactor {
+    /// Factor a copy of the square matrix `a`. Returns `Err(Numerical)` on
+    /// an exactly-zero pivot (singular to working precision).
+    pub fn compute(a: &Matrix) -> Result<LuFactor> {
+        let n = a.rows();
+        assert_eq!(a.cols(), n, "LU: square only");
+        let mut lu = a.clone();
+        let mut piv = vec![0usize; n];
+        flops::add(2 * (n as u64).pow(3) / 3);
+        for k in 0..n {
+            // Partial pivot.
+            let mut p = k;
+            let mut best = lu[(k, k)].abs();
+            for i in k + 1..n {
+                if lu[(i, k)].abs() > best {
+                    best = lu[(i, k)].abs();
+                    p = i;
+                }
+            }
+            piv[k] = p;
+            if best == 0.0 {
+                return Err(Error::numerical(format!("LU: zero pivot at column {k}")));
+            }
+            if p != k {
+                for j in 0..n {
+                    let t = lu[(k, j)];
+                    lu[(k, j)] = lu[(p, j)];
+                    lu[(p, j)] = t;
+                }
+            }
+            let inv = 1.0 / lu[(k, k)];
+            for i in k + 1..n {
+                lu[(i, k)] *= inv;
+            }
+            for j in k + 1..n {
+                let ukj = lu[(k, j)];
+                if ukj != 0.0 {
+                    for i in k + 1..n {
+                        let l = lu[(i, k)];
+                        lu[(i, j)] -= l * ukj;
+                    }
+                }
+            }
+        }
+        Ok(LuFactor { lu, piv })
+    }
+
+    /// Solve `A x = b` in place (`b` overwritten by `x`).
+    pub fn solve_vec(&self, b: &mut [f64]) {
+        let n = self.lu.rows();
+        debug_assert_eq!(b.len(), n);
+        flops::add(2 * (n as u64).pow(2));
+        // Apply row permutation.
+        for k in 0..n {
+            b.swap(k, self.piv[k]);
+        }
+        // L y = Pb (unit lower).
+        for i in 1..n {
+            let mut s = b[i];
+            for j in 0..i {
+                s -= self.lu[(i, j)] * b[j];
+            }
+            b[i] = s;
+        }
+        // U x = y.
+        for i in (0..n).rev() {
+            let mut s = b[i];
+            for j in i + 1..n {
+                s -= self.lu[(i, j)] * b[j];
+            }
+            b[i] = s / self.lu[(i, i)];
+        }
+    }
+
+    /// Solve for several right-hand sides (columns of `rhs`, in place).
+    pub fn solve(&self, rhs: &mut Matrix) {
+        for j in 0..rhs.cols() {
+            let mut col: Vec<f64> = (0..rhs.rows()).map(|i| rhs[(i, j)]).collect();
+            self.solve_vec(&mut col);
+            for (i, v) in col.into_iter().enumerate() {
+                rhs[(i, j)] = v;
+            }
+        }
+    }
+
+    /// Crude reciprocal-condition estimate: `min |U_ii| / max |U_ii|`.
+    pub fn rcond_estimate(&self) -> f64 {
+        let n = self.lu.rows();
+        let mut mn = f64::INFINITY;
+        let mut mx = 0.0f64;
+        for i in 0..n {
+            let d = self.lu[(i, i)].abs();
+            mn = mn.min(d);
+            mx = mx.max(d);
+        }
+        if mx == 0.0 {
+            0.0
+        } else {
+            mn / mx
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::matmul;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn solves_random_systems() {
+        let mut rng = Rng::new(100);
+        for &n in &[1usize, 2, 5, 17, 40] {
+            let a = Matrix::randn(n, n, &mut rng);
+            let xtrue = Matrix::randn(n, 1, &mut rng);
+            let b = matmul(&a, &xtrue);
+            let f = LuFactor::compute(&a).unwrap();
+            let mut x: Vec<f64> = (0..n).map(|i| b[(i, 0)]).collect();
+            f.solve_vec(&mut x);
+            for i in 0..n {
+                assert!((x[i] - xtrue[(i, 0)]).abs() < 1e-10, "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn multi_rhs() {
+        let mut rng = Rng::new(101);
+        let n = 8;
+        let a = Matrix::randn(n, n, &mut rng);
+        let xt = Matrix::randn(n, 3, &mut rng);
+        let mut b = matmul(&a, &xt);
+        let f = LuFactor::compute(&a).unwrap();
+        f.solve(&mut b);
+        for j in 0..3 {
+            for i in 0..n {
+                assert!((b[(i, j)] - xt[(i, j)]).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn detects_exact_singularity() {
+        let mut a = Matrix::identity(4);
+        a[(2, 2)] = 0.0;
+        // Column 2 entirely zero below and above diag → zero pivot.
+        assert!(LuFactor::compute(&a).is_err());
+    }
+
+    #[test]
+    fn rcond_reflects_conditioning() {
+        let good = LuFactor::compute(&Matrix::identity(5)).unwrap();
+        assert!((good.rcond_estimate() - 1.0).abs() < 1e-15);
+        let mut bad = Matrix::identity(5);
+        bad[(4, 4)] = 1e-14;
+        let f = LuFactor::compute(&bad).unwrap();
+        assert!(f.rcond_estimate() < 1e-10);
+    }
+}

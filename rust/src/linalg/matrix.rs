@@ -1,0 +1,542 @@
+//! Column-major dense `f64` matrices and borrowed views.
+//!
+//! The whole library operates on LAPACK-style column-major storage so that
+//! (a) columns are contiguous — the slicing used by the parallel apply tasks
+//! (§2.3 of the paper) hands out disjoint column panels as contiguous
+//! memory, and (b) the index arithmetic matches the Fortran conventions of
+//! the paper's pseudocode (translated to 0-based half-open ranges here).
+//!
+//! `Matrix` owns its storage; `MatRef`/`MatMut` are lightweight borrowed
+//! views with an explicit leading dimension (`ld`), the unit all block
+//! algorithms are written against.
+
+use crate::util::rng::Rng;
+use std::fmt;
+use std::marker::PhantomData;
+use std::ops::{Index, IndexMut, Range};
+
+/// Owned column-major matrix.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    data: Vec<f64>,
+    rows: usize,
+    cols: usize,
+}
+
+impl Matrix {
+    /// `rows × cols` matrix of zeros.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { data: vec![0.0; rows * cols], rows, cols }
+    }
+
+    /// `n × n` identity.
+    pub fn identity(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a function of (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut m = Matrix::zeros(rows, cols);
+        for j in 0..cols {
+            for i in 0..rows {
+                m[(i, j)] = f(i, j);
+            }
+        }
+        m
+    }
+
+    /// Matrix with i.i.d. standard-normal entries.
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        Matrix::from_fn(rows, cols, |_, _| rng.normal())
+    }
+
+    /// Build from a row-major slice (convenient in tests).
+    pub fn from_rows(rows: usize, cols: usize, v: &[f64]) -> Self {
+        assert_eq!(v.len(), rows * cols);
+        Matrix::from_fn(rows, cols, |i, j| v[i * cols + j])
+    }
+
+    /// Number of rows.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Raw column-major data.
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Mutable raw column-major data.
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Immutable view of the whole matrix.
+    pub fn as_ref(&self) -> MatRef<'_> {
+        MatRef {
+            ptr: self.data.as_ptr(),
+            rows: self.rows,
+            cols: self.cols,
+            ld: self.rows,
+            _marker: PhantomData,
+        }
+    }
+
+    /// Mutable view of the whole matrix.
+    pub fn as_mut(&mut self) -> MatMut<'_> {
+        MatMut {
+            ptr: self.data.as_mut_ptr(),
+            rows: self.rows,
+            cols: self.cols,
+            ld: self.rows,
+            _marker: PhantomData,
+        }
+    }
+
+    /// Immutable subview over half-open ranges.
+    pub fn sub(&self, r: Range<usize>, c: Range<usize>) -> MatRef<'_> {
+        self.as_ref().sub(r, c)
+    }
+
+    /// Mutable subview over half-open ranges.
+    pub fn sub_mut(&mut self, r: Range<usize>, c: Range<usize>) -> MatMut<'_> {
+        self.as_mut().sub(r, c)
+    }
+
+    /// Transposed copy.
+    pub fn transposed(&self) -> Matrix {
+        Matrix::from_fn(self.cols, self.rows, |i, j| self[(j, i)])
+    }
+
+    /// Frobenius norm.
+    pub fn norm_fro(&self) -> f64 {
+        self.as_ref().norm_fro()
+    }
+
+    /// Maximum absolute entry.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, &x| m.max(x.abs()))
+    }
+}
+
+impl Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols, "index ({i},{j}) out of {}x{}", self.rows, self.cols);
+        &self.data[i + j * self.rows]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols, "index ({i},{j}) out of {}x{}", self.rows, self.cols);
+        &mut self.data[i + j * self.rows]
+    }
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        let rmax = self.rows.min(8);
+        let cmax = self.cols.min(8);
+        for i in 0..rmax {
+            write!(f, "  ")?;
+            for j in 0..cmax {
+                write!(f, "{:>11.4e} ", self[(i, j)])?;
+            }
+            writeln!(f, "{}", if self.cols > cmax { "..." } else { "" })?;
+        }
+        if self.rows > rmax {
+            writeln!(f, "  ...")?;
+        }
+        write!(f, "]")
+    }
+}
+
+/// Immutable borrowed view (column-major, leading dimension `ld`).
+#[derive(Clone, Copy)]
+pub struct MatRef<'a> {
+    ptr: *const f64,
+    rows: usize,
+    cols: usize,
+    ld: usize,
+    _marker: PhantomData<&'a f64>,
+}
+
+// Views are plain borrows of f64 data; sharing across threads is safe.
+unsafe impl Send for MatRef<'_> {}
+unsafe impl Sync for MatRef<'_> {}
+
+impl<'a> MatRef<'a> {
+    /// Construct from raw parts. Caller guarantees the pointed-to region
+    /// (`ld*(cols-1)+rows` elements) outlives `'a` and is not mutated.
+    ///
+    /// # Safety
+    /// See above; standard borrowed-view contract.
+    pub unsafe fn from_raw_parts(ptr: *const f64, rows: usize, cols: usize, ld: usize) -> Self {
+        debug_assert!(ld >= rows || cols <= 1);
+        MatRef { ptr, rows, cols, ld, _marker: PhantomData }
+    }
+
+    /// Number of rows.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    /// Number of columns.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    /// Leading dimension.
+    #[inline]
+    pub fn ld(&self) -> usize {
+        self.ld
+    }
+    /// Raw pointer to (0,0).
+    #[inline]
+    pub fn ptr(&self) -> *const f64 {
+        self.ptr
+    }
+
+    /// Element access.
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols, "index ({i},{j}) out of {}x{}", self.rows, self.cols);
+        unsafe { *self.ptr.add(i + j * self.ld) }
+    }
+
+    /// Column `j` as a contiguous slice.
+    #[inline]
+    pub fn col(&self, j: usize) -> &'a [f64] {
+        debug_assert!(j < self.cols);
+        unsafe { std::slice::from_raw_parts(self.ptr.add(j * self.ld), self.rows) }
+    }
+
+    /// Subview over half-open ranges.
+    pub fn sub(&self, r: Range<usize>, c: Range<usize>) -> MatRef<'a> {
+        assert!(r.start <= r.end && r.end <= self.rows, "row range {r:?} out of {}", self.rows);
+        assert!(c.start <= c.end && c.end <= self.cols, "col range {c:?} out of {}", self.cols);
+        MatRef {
+            ptr: unsafe { self.ptr.add(r.start + c.start * self.ld) },
+            rows: r.end - r.start,
+            cols: c.end - c.start,
+            ld: self.ld,
+            _marker: PhantomData,
+        }
+    }
+
+    /// Copy into a new owned matrix.
+    pub fn to_owned(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.rows, self.cols);
+        for j in 0..self.cols {
+            m.data[j * self.rows..(j + 1) * self.rows].copy_from_slice(self.col(j));
+        }
+        m
+    }
+
+    /// Frobenius norm (no overflow guard; fine for the well-scaled data here).
+    pub fn norm_fro(&self) -> f64 {
+        let mut s = 0.0;
+        for j in 0..self.cols {
+            for &x in self.col(j) {
+                s += x * x;
+            }
+        }
+        s.sqrt()
+    }
+
+    /// Maximum absolute entry.
+    pub fn max_abs(&self) -> f64 {
+        let mut m = 0.0f64;
+        for j in 0..self.cols {
+            for &x in self.col(j) {
+                m = m.max(x.abs());
+            }
+        }
+        m
+    }
+}
+
+/// Mutable borrowed view (column-major, leading dimension `ld`).
+pub struct MatMut<'a> {
+    ptr: *mut f64,
+    rows: usize,
+    cols: usize,
+    ld: usize,
+    _marker: PhantomData<&'a mut f64>,
+}
+
+unsafe impl Send for MatMut<'_> {}
+
+impl<'a> MatMut<'a> {
+    /// Construct from raw parts. Caller guarantees exclusive access to the
+    /// region for `'a`.
+    ///
+    /// # Safety
+    /// See above; standard exclusive-view contract.
+    pub unsafe fn from_raw_parts(ptr: *mut f64, rows: usize, cols: usize, ld: usize) -> Self {
+        debug_assert!(ld >= rows || cols <= 1);
+        MatMut { ptr, rows, cols, ld, _marker: PhantomData }
+    }
+
+    /// Number of rows.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    /// Number of columns.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    /// Leading dimension.
+    #[inline]
+    pub fn ld(&self) -> usize {
+        self.ld
+    }
+    /// Raw pointer to (0,0).
+    #[inline]
+    pub fn ptr(&self) -> *mut f64 {
+        self.ptr
+    }
+
+    /// Element access.
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        unsafe { *self.ptr.add(i + j * self.ld) }
+    }
+
+    /// Mutable element access.
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        unsafe { &mut *self.ptr.add(i + j * self.ld) }
+    }
+
+    /// Set element.
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        *self.at_mut(i, j) = v;
+    }
+
+    /// Column `j` as a contiguous mutable slice.
+    #[inline]
+    pub fn col_mut(&mut self, j: usize) -> &mut [f64] {
+        debug_assert!(j < self.cols);
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.add(j * self.ld), self.rows) }
+    }
+
+    /// Immutable snapshot view of this view.
+    pub fn rb(&self) -> MatRef<'_> {
+        MatRef { ptr: self.ptr, rows: self.rows, cols: self.cols, ld: self.ld, _marker: PhantomData }
+    }
+
+    /// Reborrow mutably (shorter lifetime).
+    pub fn rb_mut(&mut self) -> MatMut<'_> {
+        MatMut { ptr: self.ptr, rows: self.rows, cols: self.cols, ld: self.ld, _marker: PhantomData }
+    }
+
+    /// Mutable subview over half-open ranges (consumes the borrow; use
+    /// `rb_mut().sub(..)` to keep the parent).
+    pub fn sub(self, r: Range<usize>, c: Range<usize>) -> MatMut<'a> {
+        assert!(r.start <= r.end && r.end <= self.rows, "row range {r:?} out of {}", self.rows);
+        assert!(c.start <= c.end && c.end <= self.cols, "col range {c:?} out of {}", self.cols);
+        MatMut {
+            ptr: unsafe { self.ptr.add(r.start + c.start * self.ld) },
+            rows: r.end - r.start,
+            cols: c.end - c.start,
+            ld: self.ld,
+            _marker: PhantomData,
+        }
+    }
+
+    /// Split into two disjoint column panels `[0, j)` and `[j, cols)`.
+    pub fn split_at_col(self, j: usize) -> (MatMut<'a>, MatMut<'a>) {
+        assert!(j <= self.cols);
+        let left = MatMut {
+            ptr: self.ptr,
+            rows: self.rows,
+            cols: j,
+            ld: self.ld,
+            _marker: PhantomData,
+        };
+        let right = MatMut {
+            ptr: unsafe { self.ptr.add(j * self.ld) },
+            rows: self.rows,
+            cols: self.cols - j,
+            ld: self.ld,
+            _marker: PhantomData,
+        };
+        (left, right)
+    }
+
+    /// Split into two disjoint row panels `[0, i)` and `[i, rows)`.
+    pub fn split_at_row(self, i: usize) -> (MatMut<'a>, MatMut<'a>) {
+        assert!(i <= self.rows);
+        let top = MatMut {
+            ptr: self.ptr,
+            rows: i,
+            cols: self.cols,
+            ld: self.ld,
+            _marker: PhantomData,
+        };
+        let bottom = MatMut {
+            ptr: unsafe { self.ptr.add(i) },
+            rows: self.rows - i,
+            cols: self.cols,
+            ld: self.ld,
+            _marker: PhantomData,
+        };
+        (top, bottom)
+    }
+
+    /// Fill every entry with `v`.
+    pub fn fill(&mut self, v: f64) {
+        for j in 0..self.cols {
+            self.col_mut(j).fill(v);
+        }
+    }
+
+    /// Copy from an equally-shaped source view.
+    pub fn copy_from(&mut self, src: MatRef<'_>) {
+        assert_eq!(self.rows, src.rows());
+        assert_eq!(self.cols, src.cols());
+        for j in 0..self.cols {
+            self.col_mut(j).copy_from_slice(src.col(j));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_roundtrip() {
+        let mut m = Matrix::zeros(3, 4);
+        m[(2, 3)] = 5.0;
+        m[(0, 1)] = -1.0;
+        assert_eq!(m[(2, 3)], 5.0);
+        assert_eq!(m[(0, 1)], -1.0);
+        assert_eq!(m.data()[2 + 3 * 3], 5.0); // col-major layout
+    }
+
+    #[test]
+    fn identity_and_from_fn() {
+        let i3 = Matrix::identity(3);
+        for i in 0..3 {
+            for j in 0..3 {
+                assert_eq!(i3[(i, j)], if i == j { 1.0 } else { 0.0 });
+            }
+        }
+        let m = Matrix::from_fn(2, 3, |i, j| (i * 10 + j) as f64);
+        assert_eq!(m[(1, 2)], 12.0);
+    }
+
+    #[test]
+    fn from_rows_matches() {
+        let m = Matrix::from_rows(2, 3, &[1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m[(0, 0)], 1.0);
+        assert_eq!(m[(0, 2)], 3.0);
+        assert_eq!(m[(1, 0)], 4.0);
+    }
+
+    #[test]
+    fn subview_indexing() {
+        let m = Matrix::from_fn(5, 5, |i, j| (i * 10 + j) as f64);
+        let v = m.sub(1..4, 2..5);
+        assert_eq!(v.rows(), 3);
+        assert_eq!(v.cols(), 3);
+        assert_eq!(v.at(0, 0), 12.0);
+        assert_eq!(v.at(2, 2), 34.0);
+        let vv = v.sub(1..3, 0..2);
+        assert_eq!(vv.at(0, 0), 22.0);
+    }
+
+    #[test]
+    fn subview_mut_writes_through() {
+        let mut m = Matrix::zeros(4, 4);
+        {
+            let mut v = m.sub_mut(1..3, 1..3);
+            v.set(0, 0, 7.0);
+            v.set(1, 1, 8.0);
+        }
+        assert_eq!(m[(1, 1)], 7.0);
+        assert_eq!(m[(2, 2)], 8.0);
+    }
+
+    #[test]
+    fn split_cols_disjoint() {
+        let mut m = Matrix::zeros(3, 6);
+        let (mut l, mut r) = m.as_mut().split_at_col(2);
+        l.fill(1.0);
+        r.fill(2.0);
+        assert_eq!(m[(0, 1)], 1.0);
+        assert_eq!(m[(0, 2)], 2.0);
+        assert_eq!(m[(2, 5)], 2.0);
+    }
+
+    #[test]
+    fn split_rows_disjoint() {
+        let mut m = Matrix::zeros(6, 3);
+        let (mut t, mut b) = m.as_mut().split_at_row(4);
+        t.fill(1.0);
+        b.fill(2.0);
+        assert_eq!(m[(3, 0)], 1.0);
+        assert_eq!(m[(4, 0)], 2.0);
+    }
+
+    #[test]
+    fn col_slices_contiguous() {
+        let m = Matrix::from_fn(4, 3, |i, j| (j * 4 + i) as f64);
+        assert_eq!(m.as_ref().col(1), &[4.0, 5.0, 6.0, 7.0]);
+        let v = m.sub(1..3, 1..3);
+        assert_eq!(v.col(0), &[5.0, 6.0]);
+    }
+
+    #[test]
+    fn norms() {
+        let m = Matrix::from_rows(2, 2, &[3., 0., 0., 4.]);
+        assert!((m.norm_fro() - 5.0).abs() < 1e-15);
+        assert_eq!(m.max_abs(), 4.0);
+    }
+
+    #[test]
+    fn transpose() {
+        let m = Matrix::from_rows(2, 3, &[1., 2., 3., 4., 5., 6.]);
+        let t = m.transposed();
+        assert_eq!(t.rows(), 3);
+        assert_eq!(t[(2, 1)], 6.0);
+        assert_eq!(t[(0, 1)], 4.0);
+    }
+
+    #[test]
+    fn copy_from_view() {
+        let src = Matrix::from_fn(3, 3, |i, j| (i + j) as f64);
+        let mut dst = Matrix::zeros(3, 3);
+        dst.as_mut().copy_from(src.as_ref());
+        assert_eq!(dst, src);
+    }
+
+    #[test]
+    #[should_panic]
+    fn subview_out_of_range_panics() {
+        let m = Matrix::zeros(3, 3);
+        let _ = m.sub(0..4, 0..3);
+    }
+}

@@ -1,0 +1,21 @@
+//! Dense linear-algebra substrate (the role MKL plays in the paper).
+//!
+//! Everything is built from scratch over column-major `f64` storage:
+//! level-1 kernels, a blocked GEMM, Householder reflectors with compact-WY
+//! block representations, QR/LQ/RQ factorizations, Givens rotations, and
+//! the verification helpers that back the paper's accuracy claims.
+
+pub mod blas1;
+pub mod gemm;
+pub mod givens;
+pub mod householder;
+pub mod lu;
+pub mod matrix;
+pub mod qr;
+pub mod rq;
+pub mod verify;
+pub mod wy;
+
+pub use gemm::{gemm, matmul, matmul_t, Trans};
+pub use matrix::{MatMut, MatRef, Matrix};
+pub use wy::{Side, WyRep};

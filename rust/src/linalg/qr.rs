@@ -1,0 +1,244 @@
+//! QR and LQ factorizations built from Householder reflectors.
+//!
+//! `geqr2` is the unblocked LAPACK-style in-place factorization; `QrFactor`
+//! wraps the factored storage with τ's and can hand out the compact-WY
+//! representation used everywhere in stage 1 (panel QR of the `p·n_b × n_b`
+//! blocks) and for the opposite-reflector LQ factorizations.
+
+use super::householder::{larf_left, larfg};
+use super::matrix::{MatMut, Matrix};
+use super::wy::{Side, WyRep};
+use crate::linalg::gemm::Trans;
+
+/// Unblocked QR factorization in place (LAPACK `dgeqr2`).
+///
+/// On exit, the upper triangle of `a` holds `R` and the columns below the
+/// diagonal hold the reflector tails (`v[0] = 1` implicit). Returns the τ's.
+pub fn geqr2(mut a: MatMut<'_>) -> Vec<f64> {
+    let m = a.rows();
+    let n = a.cols();
+    let k = m.min(n);
+    let mut taus = vec![0.0; k];
+    let mut vbuf = vec![0.0; m];
+    for i in 0..k {
+        // Generate reflector for column i, rows i..m.
+        let (beta, tau) = {
+            let col = a.col_mut(i);
+            let (head, tail) = col[i..].split_at_mut(1);
+            larfg(head[0], tail)
+        };
+        taus[i] = tau;
+        if i + 1 < n && tau != 0.0 {
+            // Materialize v (leading 1) and apply to trailing columns.
+            let len = m - i;
+            vbuf[0] = 1.0;
+            vbuf[1..len].copy_from_slice(&a.rb().col(i)[i + 1..m]);
+            let trailing = a.rb_mut().sub(i..m, i + 1..n);
+            larf_left(&vbuf[..len], tau, trailing);
+        }
+        *a.at_mut(i, i) = beta;
+    }
+    taus
+}
+
+/// A QR factorization: factored storage + τ's.
+#[derive(Clone, Debug)]
+pub struct QrFactor {
+    /// `m×n` factored matrix (R above, reflectors below).
+    pub factored: Matrix,
+    /// Reflector scalars, length `min(m,n)`.
+    pub taus: Vec<f64>,
+}
+
+impl QrFactor {
+    /// Factor a copy of `a`.
+    pub fn compute(a: &Matrix) -> QrFactor {
+        let mut f = a.clone();
+        let taus = geqr2(f.as_mut());
+        QrFactor { factored: f, taus }
+    }
+
+    /// Factor in place, consuming `a`.
+    pub fn compute_inplace(mut a: Matrix) -> QrFactor {
+        let taus = geqr2(a.as_mut());
+        QrFactor { factored: a, taus }
+    }
+
+    /// Number of reflectors.
+    pub fn k(&self) -> usize {
+        self.taus.len()
+    }
+
+    /// The `R` factor (upper triangular `k×n`).
+    pub fn r(&self) -> Matrix {
+        let k = self.k();
+        let n = self.factored.cols();
+        Matrix::from_fn(k, n, |i, j| if j >= i { self.factored[(i, j)] } else { 0.0 })
+    }
+
+    /// Explicit `V` (`m×k`, unit diagonal, zeros above).
+    pub fn v_matrix(&self) -> Matrix {
+        let m = self.factored.rows();
+        let k = self.k();
+        Matrix::from_fn(m, k, |i, j| {
+            if i == j {
+                1.0
+            } else if i > j {
+                self.factored[(i, j)]
+            } else {
+                0.0
+            }
+        })
+    }
+
+    /// Compact-WY representation of `Q = H_1 ⋯ H_k`.
+    pub fn wy(&self) -> WyRep {
+        WyRep::from_reflectors(self.v_matrix(), &self.taus)
+    }
+
+    /// Materialize `Q` (`m×m`).
+    pub fn form_q(&self) -> Matrix {
+        self.wy().form_q()
+    }
+
+    /// Apply `Qᵀ` from the left: `C := Qᵀ C` (the usual "reduce" direction).
+    pub fn apply_qt_left(&self, c: MatMut<'_>) {
+        self.wy().apply(Side::Left, Trans::Yes, c);
+    }
+
+    /// Apply `Q` from the right: `C := C Q`.
+    pub fn apply_q_right(&self, c: MatMut<'_>) {
+        self.wy().apply(Side::Right, Trans::No, c);
+    }
+
+    /// Columns `cols` of the explicit `Q` (`m×|cols|`), formed by applying
+    /// the reflectors to unit vectors — `O(k·m·|cols|)` instead of `O(m³)`.
+    pub fn q_columns(&self, cols: std::ops::Range<usize>) -> Matrix {
+        let m = self.factored.rows();
+        let mut e = Matrix::zeros(m, cols.end - cols.start);
+        for (jj, j) in cols.clone().enumerate() {
+            e[(j, jj)] = 1.0;
+        }
+        // Q e = H_1 ... H_k e: apply H_k first.
+        let wy = self.wy();
+        wy.apply(Side::Left, Trans::No, e.as_mut());
+        e
+    }
+}
+
+/// LQ factorization of `a` (`m×n`): `A = L Q̂` with `L` lower triangular and
+/// `Q̂` orthogonal (rows). Computed via QR of `Aᵀ`: `Aᵀ = Q R ⇒ A = Rᵀ Qᵀ`,
+/// so `L = Rᵀ` and `Q̂ = Qᵀ`. Returns `(L, WY of Q)` — note the WY is for
+/// `Q` (of the transposed problem); apply `Q̂ = Qᵀ` with `Trans::Yes`.
+pub fn lq(a: &Matrix) -> (Matrix, WyRep) {
+    let at = a.transposed();
+    let f = QrFactor::compute_inplace(at);
+    let l = f.r().transposed();
+    (l, f.wy())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{matmul, matmul_t};
+    use crate::util::proptest::{check_rel, for_each_case};
+    use crate::util::rng::Rng;
+
+    fn rel(x: &Matrix, y: &Matrix) -> f64 {
+        let mut d = 0.0;
+        for j in 0..x.cols() {
+            for i in 0..x.rows() {
+                d += (x[(i, j)] - y[(i, j)]).powi(2);
+            }
+        }
+        d.sqrt() / y.norm_fro().max(1e-300)
+    }
+
+    #[test]
+    fn qr_reconstructs() {
+        let mut rng = Rng::new(42);
+        for &(m, n) in &[(8usize, 5usize), (5, 5), (12, 12), (40, 16), (3, 7)] {
+            let a = Matrix::randn(m, n, &mut rng);
+            let f = QrFactor::compute(&a);
+            let q = f.form_q();
+            let r = f.r();
+            // A ≈ Q(:, :k) R
+            let k = f.k();
+            let qk = Matrix::from_fn(m, k, |i, j| q[(i, j)]);
+            let qr = matmul(&qk, &r);
+            assert!(rel(&qr, &a) < 1e-13, "m={m} n={n}");
+            // Q orthogonal
+            let qtq = matmul_t(&q, Trans::Yes, &q, Trans::No);
+            assert!(rel(&qtq, &Matrix::identity(m)) < 1e-13);
+        }
+    }
+
+    #[test]
+    fn apply_qt_reduces_to_r() {
+        let mut rng = Rng::new(43);
+        let a = Matrix::randn(10, 4, &mut rng);
+        let f = QrFactor::compute(&a);
+        let mut c = a.clone();
+        f.apply_qt_left(c.as_mut());
+        // Qᵀ A = R (upper trapezoidal): below-diagonal ~ 0.
+        for j in 0..4 {
+            for i in j + 1..10 {
+                assert!(c[(i, j)].abs() < 1e-12, "({i},{j}) = {}", c[(i, j)]);
+            }
+        }
+    }
+
+    #[test]
+    fn q_columns_match_full_q() {
+        let mut rng = Rng::new(44);
+        let a = Matrix::randn(9, 9, &mut rng);
+        let f = QrFactor::compute(&a);
+        let q = f.form_q();
+        let qc = f.q_columns(6..9);
+        for i in 0..9 {
+            for (jj, j) in (6..9).enumerate() {
+                assert!((qc[(i, jj)] - q[(i, j)]).abs() < 1e-13);
+            }
+        }
+    }
+
+    #[test]
+    fn lq_reconstructs() {
+        let mut rng = Rng::new(45);
+        for &(m, n) in &[(4usize, 10usize), (6, 6), (16, 40)] {
+            let a = Matrix::randn(m, n, &mut rng);
+            let (l, wy) = lq(&a);
+            // A = L Q̂ with Q̂ = Qᵀ; L is m×k so use the first k columns of Q.
+            let q = wy.form_q(); // n×n
+            let k = m.min(n);
+            let qk = Matrix::from_fn(n, k, |i, j| q[(i, j)]);
+            let want = matmul_t(&l, Trans::No, &qk, Trans::Yes);
+            assert!(rel(&want, &a) < 1e-13, "m={m} n={n}");
+            // L lower triangular
+            for i in 0..m {
+                for j in i + 1..k {
+                    assert!(l[(i, j)].abs() < 1e-13);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn property_qr_random_shapes() {
+        for_each_case(20, 0xABCD, |rng| {
+            let m = 1 + rng.below(30);
+            let n = 1 + rng.below(30);
+            let a = Matrix::randn(m, n, rng);
+            let f = QrFactor::compute(&a);
+            let q = f.form_q();
+            let r = f.r();
+            let k = f.k();
+            let qk = Matrix::from_fn(m, k, |i, j| q[(i, j)]);
+            let qr = matmul(&qk, &r);
+            check_rel("A-QR", rel(&qr, &a), 1e-12)?;
+            let qtq = matmul_t(&q, Trans::Yes, &q, Trans::No);
+            check_rel("QtQ-I", rel(&qtq, &Matrix::identity(m)), 1e-12)?;
+            Ok(())
+        });
+    }
+}

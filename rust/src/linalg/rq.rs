@@ -1,0 +1,128 @@
+//! RQ factorization of square blocks, plus the "selected rows of Q"
+//! extraction that powers the *opposite Householder reflector* trick
+//! (Watkins; §2.2 and §3.1 of the paper).
+//!
+//! For a square `s×s` block `A` we need `A = R Q̃` with `R` upper triangular
+//! and `Q̃` orthogonal — and then only the **first rows** of `Q̃`: stage 1
+//! LQ-factors the first `n_b` rows, stage 2 needs just the first row.
+//!
+//! Implementation: with `P` the exchange (anti-identity) matrix,
+//! `M = P Aᵀ P = Q' R'` (ordinary QR) gives `A = (P R'ᵀ P)(P Q'ᵀ P)`,
+//! an RQ factorization. Rows `0..t` of `Q̃ = P Q'ᵀ P` are the *last* `t`
+//! columns of `Q'`, index-reversed — and selected columns of `Q'` cost only
+//! `O(s·k·t)` via reflector application to unit vectors, never `O(s³)`.
+
+use super::matrix::Matrix;
+use super::qr::QrFactor;
+
+/// RQ factorization `A = R·Q̃` of a square matrix.
+#[derive(Clone, Debug)]
+pub struct RqFactor {
+    qr: QrFactor,
+    s: usize,
+}
+
+impl RqFactor {
+    /// Factor the square matrix `a`.
+    pub fn compute(a: &Matrix) -> RqFactor {
+        let s = a.rows();
+        assert_eq!(a.cols(), s, "RQ: square blocks only (got {}x{})", s, a.cols());
+        // M = P Aᵀ P : M[i,j] = A[s-1-j, s-1-i]
+        let m = Matrix::from_fn(s, s, |i, j| a[(s - 1 - j, s - 1 - i)]);
+        RqFactor { qr: QrFactor::compute_inplace(m), s }
+    }
+
+    /// Block order `s`.
+    pub fn order(&self) -> usize {
+        self.s
+    }
+
+    /// The upper-triangular `R` factor.
+    pub fn r(&self) -> Matrix {
+        let s = self.s;
+        let rp = self.qr.r(); // R' (s×s upper)
+        Matrix::from_fn(s, s, |i, j| if j >= i { rp[(s - 1 - j, s - 1 - i)] } else { 0.0 })
+    }
+
+    /// Rows `0..t` of `Q̃` as a `t×s` matrix (`G[i, j] = Q'[s-1-j, s-1-i]`).
+    pub fn q_top_rows(&self, t: usize) -> Matrix {
+        let s = self.s;
+        assert!(t <= s);
+        let qc = self.qr.q_columns(s - t..s); // s×t: columns s-t..s of Q'
+        // Row i of Q̃ = column (s-1-i) of Q' reversed: G[i,j] = qc[s-1-j, t-1-i].
+        Matrix::from_fn(t, s, |i, j| qc[(s - 1 - j, t - 1 - i)])
+    }
+
+    /// Materialize the full `Q̃` (tests / small blocks).
+    pub fn form_q(&self) -> Matrix {
+        self.q_top_rows(self.s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{matmul, matmul_t, Trans};
+    use crate::util::proptest::{check_rel, for_each_case};
+    use crate::util::rng::Rng;
+
+    fn rel(x: &Matrix, y: &Matrix) -> f64 {
+        let mut d = 0.0;
+        for j in 0..x.cols() {
+            for i in 0..x.rows() {
+                d += (x[(i, j)] - y[(i, j)]).powi(2);
+            }
+        }
+        d.sqrt() / y.norm_fro().max(1e-300)
+    }
+
+    #[test]
+    fn rq_reconstructs() {
+        let mut rng = Rng::new(50);
+        for &s in &[1usize, 2, 5, 16, 40] {
+            let a = Matrix::randn(s, s, &mut rng);
+            let f = RqFactor::compute(&a);
+            let r = f.r();
+            let q = f.form_q();
+            let rq = matmul(&r, &q);
+            assert!(rel(&rq, &a) < 1e-12, "s={s}");
+            // R upper triangular
+            for i in 0..s {
+                for j in 0..i {
+                    assert_eq!(r[(i, j)], 0.0);
+                }
+            }
+            // Q orthogonal
+            let qtq = matmul_t(&q, Trans::Yes, &q, Trans::No);
+            assert!(rel(&qtq, &Matrix::identity(s)) < 1e-12);
+        }
+    }
+
+    #[test]
+    fn top_rows_match_full_q() {
+        let mut rng = Rng::new(51);
+        let s = 12;
+        let a = Matrix::randn(s, s, &mut rng);
+        let f = RqFactor::compute(&a);
+        let q = f.form_q();
+        for t in [1usize, 3, 12] {
+            let g = f.q_top_rows(t);
+            for i in 0..t {
+                for j in 0..s {
+                    assert!((g[(i, j)] - q[(i, j)]).abs() < 1e-13, "t={t} ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn property_rq_random_sizes() {
+        for_each_case(20, 0xBEEF, |rng| {
+            let s = 1 + rng.below(25);
+            let a = Matrix::randn(s, s, rng);
+            let f = RqFactor::compute(&a);
+            let rq = matmul(&f.r(), &f.form_q());
+            check_rel("A-RQ", rel(&rq, &a), 1e-12)
+        });
+    }
+}

@@ -1,0 +1,164 @@
+//! Form checks and backward-error verification.
+//!
+//! The paper (§4) reports that every tested algorithm attains relative
+//! backward errors on the order of machine precision; our integration tests
+//! assert exactly that through these helpers.
+
+use super::gemm::{matmul_t, Trans};
+use super::matrix::Matrix;
+
+/// Largest `|A[i,j]|` with `i > j + band` (so `band = 1` checks Hessenberg
+/// form, `band = 0` checks upper-triangular form, `band = r` checks
+/// r-Hessenberg form).
+pub fn max_below_band(a: &Matrix, band: usize) -> f64 {
+    let mut m = 0.0f64;
+    for j in 0..a.cols() {
+        for i in (j + band + 1)..a.rows() {
+            m = m.max(a[(i, j)].abs());
+        }
+    }
+    m
+}
+
+/// Whether `a` is in r-Hessenberg form to tolerance `tol·‖A‖_F`.
+pub fn is_banded_hessenberg(a: &Matrix, r: usize, tol: f64) -> bool {
+    max_below_band(a, r) <= tol * a.norm_fro().max(1e-300)
+}
+
+/// Orthogonality residual `‖QᵀQ − I‖_F`.
+pub fn orth_error(q: &Matrix) -> f64 {
+    let n = q.cols();
+    let mut qtq = matmul_t(q, Trans::Yes, q, Trans::No);
+    for i in 0..n {
+        qtq[(i, i)] -= 1.0;
+    }
+    qtq.norm_fro()
+}
+
+/// Relative reconstruction error `‖M − Q X Zᵀ‖_F / ‖M‖_F`.
+pub fn reconstruction_error(m: &Matrix, q: &Matrix, x: &Matrix, z: &Matrix) -> f64 {
+    let qx = matmul_t(q, Trans::No, x, Trans::No);
+    let qxzt = matmul_t(&qx, Trans::No, z, Trans::Yes);
+    let mut d = 0.0;
+    for j in 0..m.cols() {
+        for i in 0..m.rows() {
+            d += (m[(i, j)] - qxzt[(i, j)]).powi(2);
+        }
+    }
+    d.sqrt() / m.norm_fro().max(1e-300)
+}
+
+/// Full verification of a Hessenberg-triangular (or r-HT) decomposition
+/// `(A₀, B₀) = Q (H, T) Zᵀ`.
+#[derive(Clone, Copy, Debug)]
+pub struct HtVerification {
+    /// `‖A₀ − Q H Zᵀ‖/‖A₀‖`.
+    pub err_a: f64,
+    /// `‖B₀ − Q T Zᵀ‖/‖B₀‖`.
+    pub err_b: f64,
+    /// `‖QᵀQ − I‖_F`.
+    pub orth_q: f64,
+    /// `‖ZᵀZ − I‖_F`.
+    pub orth_z: f64,
+    /// Largest below-band entry of `H` relative to `‖H‖`.
+    pub hess_residual: f64,
+    /// Largest below-diagonal entry of `T` relative to `‖T‖`.
+    pub tri_residual: f64,
+}
+
+impl HtVerification {
+    /// Compute all residuals for a claimed decomposition with bandwidth `r`
+    /// (`r = 1` for true Hessenberg form).
+    #[allow(clippy::too_many_arguments)]
+    pub fn compute(
+        a0: &Matrix,
+        b0: &Matrix,
+        q: &Matrix,
+        z: &Matrix,
+        h: &Matrix,
+        t: &Matrix,
+        r: usize,
+    ) -> HtVerification {
+        HtVerification {
+            err_a: reconstruction_error(a0, q, h, z),
+            err_b: reconstruction_error(b0, q, t, z),
+            orth_q: orth_error(q),
+            orth_z: orth_error(z),
+            hess_residual: max_below_band(h, r) / h.norm_fro().max(1e-300),
+            tri_residual: max_below_band(t, 0) / t.norm_fro().max(1e-300),
+        }
+    }
+
+    /// Assert everything is at the `tol` level (test helper).
+    pub fn assert_ok(&self, tol: f64) {
+        assert!(self.err_a < tol, "backward error A {:.3e} >= {tol:.1e}", self.err_a);
+        assert!(self.err_b < tol, "backward error B {:.3e} >= {tol:.1e}", self.err_b);
+        assert!(self.orth_q < tol, "Q orthogonality {:.3e}", self.orth_q);
+        assert!(self.orth_z < tol, "Z orthogonality {:.3e}", self.orth_z);
+        assert!(self.hess_residual < tol, "H below-band {:.3e}", self.hess_residual);
+        assert!(self.tri_residual < tol, "T below-diag {:.3e}", self.tri_residual);
+    }
+
+    /// The worst of all residuals.
+    pub fn worst(&self) -> f64 {
+        self.err_a
+            .max(self.err_b)
+            .max(self.orth_q)
+            .max(self.orth_z)
+            .max(self.hess_residual)
+            .max(self.tri_residual)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn band_checks() {
+        let mut a = Matrix::zeros(5, 5);
+        a[(3, 0)] = 2.0;
+        assert_eq!(max_below_band(&a, 0), 2.0);
+        assert_eq!(max_below_band(&a, 2), 2.0);
+        assert_eq!(max_below_band(&a, 3), 0.0);
+        assert!(is_banded_hessenberg(&a, 3, 1e-14));
+        assert!(!is_banded_hessenberg(&a, 2, 1e-14));
+    }
+
+    #[test]
+    fn orth_error_identity() {
+        assert!(orth_error(&Matrix::identity(6)) < 1e-15);
+        let mut m = Matrix::identity(3);
+        m[(0, 1)] = 0.5;
+        assert!(orth_error(&m) > 0.4);
+    }
+
+    #[test]
+    fn reconstruction_trivial() {
+        let mut rng = Rng::new(70);
+        let a = Matrix::randn(5, 5, &mut rng);
+        let i = Matrix::identity(5);
+        assert!(reconstruction_error(&a, &i, &a, &i) < 1e-15);
+    }
+
+    #[test]
+    fn verification_accepts_identity_decomposition() {
+        let mut rng = Rng::new(71);
+        let n = 6;
+        // Build an exactly-HT pencil and verify with Q=Z=I.
+        let mut h = Matrix::randn(n, n, &mut rng);
+        let mut t = Matrix::randn(n, n, &mut rng);
+        for j in 0..n {
+            for i in j + 2..n {
+                h[(i, j)] = 0.0;
+            }
+            for i in j + 1..n {
+                t[(i, j)] = 0.0;
+            }
+        }
+        let i = Matrix::identity(n);
+        let v = HtVerification::compute(&h, &t, &i, &i, &h, &t, 1);
+        v.assert_ok(1e-13);
+    }
+}

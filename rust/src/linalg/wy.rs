@@ -1,0 +1,324 @@
+//! Compact-WY representation of a product of Householder reflectors
+//! (LAPACK `dlarft`/`dlarfb` analogues).
+//!
+//! For reflectors `H_1 … H_k` (forward, columnwise), `Q = H_1 H_2 ⋯ H_k =
+//! I − V T Vᵀ` with `V` an `m×k` matrix whose `i`-th column is the `i`-th
+//! Householder vector (unit diagonal materialized) and `T` a `k×k` upper
+//! triangular factor. Applying `Q` costs two GEMMs instead of `k` rank-1
+//! updates — this is the §2.1 WY mechanism the whole paper builds on, and
+//! it is also the computation offloaded to the L1 Pallas kernel via PJRT.
+
+use super::gemm::{gemm, Trans};
+use super::matrix::{MatMut, MatRef, Matrix};
+use crate::util::flops;
+
+/// Side selector for applying a block reflector.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Side {
+    /// `C := op(Q) C`.
+    Left,
+    /// `C := C op(Q)`.
+    Right,
+}
+
+/// Compact-WY representation `Q = I − V T Vᵀ`.
+#[derive(Clone, Debug)]
+pub struct WyRep {
+    /// `m×k` reflector matrix (unit diagonals materialized, zeros above).
+    pub v: Matrix,
+    /// `k×k` upper-triangular factor.
+    pub t: Matrix,
+}
+
+impl WyRep {
+    /// Build the `T` factor from explicit reflector columns and their τ's
+    /// (LAPACK `dlarft`, forward columnwise):
+    ///
+    /// `T(0:i, i) = −τᵢ · T(0:i,0:i) · (Vᵀ vᵢ)`, `T(i,i) = τᵢ`.
+    pub fn from_reflectors(v: Matrix, taus: &[f64]) -> WyRep {
+        let k = taus.len();
+        assert_eq!(v.cols(), k);
+        let m = v.rows();
+        let mut t = Matrix::zeros(k, k);
+        for i in 0..k {
+            let tau = taus[i];
+            t[(i, i)] = tau;
+            if i > 0 && tau != 0.0 {
+                // w = V(:,0:i)ᵀ v_i
+                let mut w = vec![0.0; i];
+                for (jj, wj) in w.iter_mut().enumerate() {
+                    *wj = super::blas1::dot(v.as_ref().col(jj), v.as_ref().col(i));
+                }
+                flops::add(2 * (m as u64) * (i as u64));
+                // T(0:i, i) = -tau * T(0:i,0:i) * w   (T upper triangular)
+                for row in 0..i {
+                    let mut s = 0.0;
+                    for (l, wl) in w.iter().enumerate().take(i).skip(row) {
+                        s += t[(row, l)] * wl;
+                    }
+                    t[(row, i)] = -tau * s;
+                }
+            }
+        }
+        WyRep { v, t }
+    }
+
+    /// Number of reflectors `k`.
+    pub fn k(&self) -> usize {
+        self.t.rows()
+    }
+
+    /// Order `m` (length of the reflector vectors).
+    pub fn m(&self) -> usize {
+        self.v.rows()
+    }
+
+    /// Apply the block reflector: `C := op(Q)·C` (Left) or `C := C·op(Q)`
+    /// (Right), where `Q = I − V T Vᵀ` and `op` is `Q` or `Qᵀ`
+    /// (`trans = Trans::Yes` selects `Qᵀ = I − V Tᵀ Vᵀ`).
+    pub fn apply(&self, side: Side, trans: Trans, mut c: MatMut<'_>) {
+        let k = self.k();
+        if k == 0 {
+            return;
+        }
+        let v = self.v.as_ref();
+        let topt = match trans {
+            Trans::No => Trans::No,
+            Trans::Yes => Trans::Yes,
+        };
+        match side {
+            Side::Left => {
+                assert_eq!(c.rows(), self.m(), "WY apply left: dim mismatch");
+                // X = Vᵀ C (k×n); X = op(T)·X; C -= V X.
+                let n = c.cols();
+                let mut x = Matrix::zeros(k, n);
+                gemm(1.0, v, Trans::Yes, c.rb(), Trans::No, 0.0, x.as_mut());
+                trmm_upper(topt, self.t.as_ref(), x.as_mut());
+                gemm(-1.0, v, Trans::No, x.as_ref(), Trans::No, 1.0, c.rb_mut());
+            }
+            Side::Right => {
+                assert_eq!(c.cols(), self.m(), "WY apply right: dim mismatch");
+                // X = C V (m×k); X = X·op(T); C -= X Vᵀ.
+                let m = c.rows();
+                let mut x = Matrix::zeros(m, k);
+                gemm(1.0, c.rb(), Trans::No, v, Trans::No, 0.0, x.as_mut());
+                trmm_upper_right(topt, self.t.as_ref(), x.as_mut());
+                gemm(-1.0, x.as_ref(), Trans::No, v, Trans::Yes, 1.0, c.rb_mut());
+            }
+        }
+    }
+
+    /// Materialize `Q = I − V T Vᵀ` as a dense `m×m` matrix (tests/small use).
+    pub fn form_q(&self) -> Matrix {
+        let m = self.m();
+        let mut q = Matrix::identity(m);
+        self.apply(Side::Left, Trans::No, q.as_mut());
+        q
+    }
+}
+
+/// `X := op(T)·X` for `T` `k×k` upper triangular (small `k`; in-place).
+pub fn trmm_upper(trans: Trans, t: MatRef<'_>, mut x: MatMut<'_>) {
+    let k = t.rows();
+    debug_assert_eq!(t.cols(), k);
+    debug_assert_eq!(x.rows(), k);
+    let n = x.cols();
+    flops::add((k as u64) * (k as u64) * (n as u64));
+    for j in 0..n {
+        let xj = x.col_mut(j);
+        match trans {
+            Trans::No => {
+                // x_i = sum_{l >= i} T[i,l] x_l : forward order safe.
+                for i in 0..k {
+                    let mut s = t.at(i, i) * xj[i];
+                    for l in i + 1..k {
+                        s += t.at(i, l) * xj[l];
+                    }
+                    xj[i] = s;
+                }
+            }
+            Trans::Yes => {
+                // x_i = sum_{l <= i} T[l,i] x_l : backward order safe.
+                for i in (0..k).rev() {
+                    let mut s = t.at(i, i) * xj[i];
+                    for l in 0..i {
+                        s += t.at(l, i) * xj[l];
+                    }
+                    xj[i] = s;
+                }
+            }
+        }
+    }
+}
+
+/// `X := X·op(T)` for `T` `k×k` upper triangular (small `k`; in-place).
+pub fn trmm_upper_right(trans: Trans, t: MatRef<'_>, mut x: MatMut<'_>) {
+    let k = t.rows();
+    debug_assert_eq!(t.cols(), k);
+    debug_assert_eq!(x.cols(), k);
+    let m = x.rows();
+    flops::add((k as u64) * (k as u64) * (m as u64));
+    match trans {
+        Trans::No => {
+            // (X T)_col j = Σ_{l ≤ j} X_l T[l,j] : process j backward so
+            // untouched columns still hold the original X.
+            for j in (0..k).rev() {
+                let tjj = t.at(j, j);
+                // x_j ← x_j·t_jj + Σ_{l<j} x_l·t_lj, reading x_l in place.
+                unsafe {
+                    let base = x.ptr();
+                    let ld = x.ld();
+                    let xj = std::slice::from_raw_parts_mut(base.add(j * ld), m);
+                    super::blas1::scal(tjj, xj);
+                    for l in 0..j {
+                        let tlj = t.at(l, j);
+                        if tlj != 0.0 {
+                            let xl = std::slice::from_raw_parts(base.add(l * ld) as *const f64, m);
+                            super::blas1::axpy(tlj, xl, xj);
+                        }
+                    }
+                }
+            }
+        }
+        Trans::Yes => {
+            // (X Tᵀ)_col j = Σ_{l ≥ j} X_l T[j,l] : process j forward.
+            for j in 0..k {
+                let tjj = t.at(j, j);
+                unsafe {
+                    let base = x.ptr();
+                    let ld = x.ld();
+                    let xj = std::slice::from_raw_parts_mut(base.add(j * ld), m);
+                    super::blas1::scal(tjj, xj);
+                    for l in j + 1..k {
+                        let tjl = t.at(j, l);
+                        if tjl != 0.0 {
+                            let xl = std::slice::from_raw_parts(base.add(l * ld) as *const f64, m);
+                            super::blas1::axpy(tjl, xl, xj);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::householder::Reflector;
+    use crate::util::rng::Rng;
+
+    /// Build k random reflectors with the unit-lower-trapezoidal structure
+    /// of a QR factorization and return (V, taus, explicit Q product).
+    fn random_reflectors(m: usize, k: usize, rng: &mut Rng) -> (Matrix, Vec<f64>, Matrix) {
+        let mut v = Matrix::zeros(m, k);
+        let mut taus = vec![0.0; k];
+        let mut q = Matrix::identity(m);
+        for i in 0..k {
+            // Column i: zeros above i, 1 at i, random below.
+            let x: Vec<f64> = (0..m - i).map(|_| rng.normal()).collect();
+            let (refl, _) = Reflector::reducing(&x);
+            for (l, &vl) in refl.v.iter().enumerate() {
+                v[(i + l, i)] = vl;
+            }
+            taus[i] = refl.tau;
+            // Accumulate Q := Q * H_i  (so Q = H_1 H_2 ... H_k).
+            let mut vfull = vec![0.0; m];
+            vfull[i..].copy_from_slice(&refl.v);
+            crate::linalg::householder::larf_right(&vfull, refl.tau, q.as_mut());
+        }
+        (v, taus, q)
+    }
+
+    fn rel(x: &Matrix, y: &Matrix) -> f64 {
+        let mut d = 0.0;
+        for j in 0..x.cols() {
+            for i in 0..x.rows() {
+                d += (x[(i, j)] - y[(i, j)]).powi(2);
+            }
+        }
+        d.sqrt() / y.norm_fro().max(1e-300)
+    }
+
+    #[test]
+    fn wy_matches_reflector_product() {
+        let mut rng = Rng::new(5);
+        for &(m, k) in &[(6usize, 3usize), (20, 8), (33, 16), (5, 5)] {
+            let (v, taus, q_explicit) = random_reflectors(m, k, &mut rng);
+            let wy = WyRep::from_reflectors(v, &taus);
+            let q_wy = wy.form_q();
+            assert!(rel(&q_wy, &q_explicit) < 1e-13, "m={m} k={k}");
+        }
+    }
+
+    #[test]
+    fn apply_sides_and_trans_consistent() {
+        let mut rng = Rng::new(6);
+        let (m, k) = (12usize, 5usize);
+        let (v, taus, q) = random_reflectors(m, k, &mut rng);
+        let wy = WyRep::from_reflectors(v, &taus);
+        let c = Matrix::randn(m, 7, &mut rng);
+
+        // Left, no trans: Q C
+        let mut got = c.clone();
+        wy.apply(Side::Left, Trans::No, got.as_mut());
+        let want = crate::linalg::gemm::matmul(&q, &c);
+        assert!(rel(&got, &want) < 1e-13);
+
+        // Left, trans: Qᵀ C
+        let mut got = c.clone();
+        wy.apply(Side::Left, Trans::Yes, got.as_mut());
+        let want = crate::linalg::gemm::matmul_t(&q, Trans::Yes, &c, Trans::No);
+        assert!(rel(&got, &want) < 1e-13);
+
+        let d = Matrix::randn(7, m, &mut rng);
+        // Right, no trans: D Q
+        let mut got = d.clone();
+        wy.apply(Side::Right, Trans::No, got.as_mut());
+        let want = crate::linalg::gemm::matmul(&d, &q);
+        assert!(rel(&got, &want) < 1e-13);
+
+        // Right, trans: D Qᵀ
+        let mut got = d.clone();
+        wy.apply(Side::Right, Trans::Yes, got.as_mut());
+        let want = crate::linalg::gemm::matmul_t(&d, Trans::No, &q, Trans::Yes);
+        assert!(rel(&got, &want) < 1e-13);
+    }
+
+    #[test]
+    fn trmm_matches_dense() {
+        let mut rng = Rng::new(7);
+        let k = 6;
+        let mut t = Matrix::randn(k, k, &mut rng);
+        for j in 0..k {
+            for i in j + 1..k {
+                t[(i, j)] = 0.0;
+            }
+        }
+        let x0 = Matrix::randn(k, 4, &mut rng);
+        for &tr in &[Trans::No, Trans::Yes] {
+            let mut x = x0.clone();
+            trmm_upper(tr, t.as_ref(), x.as_mut());
+            let want = crate::linalg::gemm::matmul_t(&t, tr, &x0, Trans::No);
+            assert!(rel(&x, &want) < 1e-13);
+        }
+        let y0 = Matrix::randn(4, k, &mut rng);
+        for &tr in &[Trans::No, Trans::Yes] {
+            let mut y = y0.clone();
+            trmm_upper_right(tr, t.as_ref(), y.as_mut());
+            let want = crate::linalg::gemm::matmul_t(&y0, Trans::No, &t, tr);
+            assert!(rel(&y, &want) < 1e-13, "right trmm {tr:?}");
+        }
+    }
+
+    #[test]
+    fn wy_q_is_orthogonal() {
+        let mut rng = Rng::new(8);
+        let (v, taus, _) = random_reflectors(15, 6, &mut rng);
+        let wy = WyRep::from_reflectors(v, &taus);
+        let q = wy.form_q();
+        let qtq = crate::linalg::gemm::matmul_t(&q, Trans::Yes, &q, Trans::No);
+        let eye = Matrix::identity(15);
+        assert!(rel(&qtq, &eye) < 1e-13);
+    }
+}

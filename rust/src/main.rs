@@ -1,0 +1,314 @@
+//! `paraht` — CLI launcher for the parallel two-stage Hessenberg-triangular
+//! reduction.
+//!
+//! ```text
+//! paraht reduce     --n 512 [--saddle] [--r 16 --p 8 --q 8] [--threads T]
+//!                   [--mode seq|par|sim] [--check]
+//! paraht experiment fig9a|fig9b|fig10|fig11|flops|ablations [--n N]
+//!                   [--sizes a,b,c] [--threads T]
+//! paraht validate   [--pjrt]
+//! paraht info
+//! ```
+
+use paraht::config::Config;
+use paraht::coordinator::driver::{paraht_curve, run_paraht};
+use paraht::coordinator::stage1_par::ExecMode;
+use paraht::experiments::{ablations, common, figures, flops_table};
+use paraht::pencil::random::random_pencil;
+use paraht::pencil::saddle::saddle_pencil;
+use paraht::util::cli::Args;
+use paraht::util::rng::Rng;
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(raw);
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    let code = match cmd {
+        "reduce" => cmd_reduce(&args),
+        "experiment" => cmd_experiment(&args),
+        "validate" => cmd_validate(&args),
+        "info" => cmd_info(),
+        _ => {
+            print_help();
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+fn config_from(args: &Args) -> Config {
+    Config {
+        r: args.get("r", 16),
+        p: args.get("p", 8),
+        q: args.get("q", 8),
+        threads: args.get("threads", 4),
+        slices: args.get("slices", 0),
+        ..Config::default()
+    }
+}
+
+fn cmd_reduce(args: &Args) -> i32 {
+    let n = args.get("n", 512usize);
+    let seed = args.get("seed", 0x5EEDu64);
+    let cfg = config_from(args);
+    let mode = args.get_str("mode", "par");
+    let mut rng = Rng::new(seed);
+    let pencil = if args.has_flag("saddle") {
+        saddle_pencil(n, 0.25, &mut rng)
+    } else {
+        random_pencil(n, &mut rng)
+    };
+    println!(
+        "reducing {} pencil n={n} (r={}, p={}, q={}, threads={}, mode={mode})",
+        if args.has_flag("saddle") { "saddle-point" } else { "random" },
+        cfg.r,
+        cfg.p,
+        cfg.q,
+        cfg.threads
+    );
+
+    let exec = match mode.as_str() {
+        "seq" => ExecMode::Threads(1),
+        "par" => ExecMode::Threads(cfg.threads),
+        "sim" => ExecMode::Trace,
+        other => {
+            eprintln!("unknown --mode {other}");
+            return 2;
+        }
+    };
+    let run = match run_paraht(&pencil.a, &pencil.b, &cfg, exec) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "stage 1: {:.3}s   stage 2: {:.3}s   total: {:.3}s",
+        run.stage_secs.0,
+        run.stage_secs.1,
+        run.stage_secs.0 + run.stage_secs.1
+    );
+    if let Some(traces) = &run.traces {
+        let ps = common::PAPER_THREADS;
+        let curve = paraht_curve(traces, ps);
+        println!("simulated speedups (vs own 1-core):");
+        for (p, t) in &curve.points {
+            println!("  P={p:<3} makespan {:.3}s  speedup {:.2}x", t, curve.t1 / t);
+        }
+    }
+    if args.has_flag("check") {
+        let v = run.verify(&pencil.a, &pencil.b);
+        println!(
+            "verification: err_A {:.2e}  err_B {:.2e}  orth(Q) {:.2e}  orth(Z) {:.2e}",
+            v.err_a, v.err_b, v.orth_q, v.orth_z
+        );
+        if v.worst() > 1e-10 {
+            eprintln!("FAILED verification");
+            return 1;
+        }
+        println!("verification OK (machine-precision backward error)");
+    }
+    0
+}
+
+fn cmd_experiment(args: &Args) -> i32 {
+    let which = args.positional.get(1).map(String::as_str).unwrap_or("");
+    let seed = args.get("seed", 42u64);
+    match which {
+        "fig9a" => {
+            let n = args.get("n", 384usize);
+            let series = figures::fig9a(n, seed);
+            let header: Vec<String> =
+                common::PAPER_THREADS.iter().map(|p| format!("P={p}")).collect();
+            let rows = series
+                .iter()
+                .map(|s| (s.name.to_string(), s.points.iter().map(|&(_, v)| v).collect()))
+                .collect::<Vec<_>>();
+            common::print_table(
+                &format!("Fig 9a — speedup over sequential LAPACK, random pencil n={n}"),
+                &header,
+                &rows,
+            );
+        }
+        "fig9b" | "fig11" => {
+            let sizes = args.get_list("sizes", &[128usize, 256, 384, 512]);
+            let threads = args.get("threads", 28usize);
+            let rows = if which == "fig9b" {
+                figures::fig9b(&sizes, threads, seed)
+            } else {
+                figures::fig11(&sizes, threads, seed)
+            };
+            let header = vec!["/LAPACK".into(), "/HouseHT".into(), "/IterHT".into()];
+            let trows = rows
+                .iter()
+                .map(|r| {
+                    (format!("n={}", r.n), vec![r.over_lapack, r.over_househt, r.over_iterht])
+                })
+                .collect::<Vec<_>>();
+            common::print_table(
+                &format!(
+                    "Fig {} — ParaHT speedup over comparators ({} pencils, P={threads})",
+                    if which == "fig9b" { "9b" } else { "11" },
+                    if which == "fig9b" { "random" } else { "saddle-point" }
+                ),
+                &header,
+                &trows,
+            );
+        }
+        "fig10" => {
+            let sizes = args.get_list("sizes", &[192usize, 384]);
+            let data = figures::fig10(&sizes, seed);
+            for d in &data {
+                let header: Vec<String> =
+                    common::PAPER_THREADS.iter().map(|p| format!("P={p}")).collect();
+                let rows = vec![
+                    ("stage 1 speedup".to_string(), d.speedups.iter().map(|x| x.1).collect()),
+                    ("stage 2 speedup".to_string(), d.speedups.iter().map(|x| x.2).collect()),
+                    ("total speedup".to_string(), d.speedups.iter().map(|x| x.3).collect()),
+                ];
+                common::print_table(&format!("Fig 10 — phase speedups, n={}", d.n), &header, &rows);
+                println!(
+                    "relative runtime: stage1 {:.1}%  stage2 {:.1}%",
+                    100.0 * d.stage1_fraction,
+                    100.0 * d.stage2_fraction
+                );
+            }
+        }
+        "flops" => {
+            let sizes = args.get_list("sizes", &[192usize, 320, 448]);
+            let (r, p, q) = (args.get("r", 8), args.get("p", 4), args.get("q", 4));
+            let rows = flops_table::measure(&sizes, r, p, q, seed);
+            println!("\n== Flop-count table (measured / n^3; p={p}) ==");
+            println!(
+                "{:<8}{:>10}{:>10}{:>12}{:>12}",
+                "n", "stage1", "stage2", "two-stage", "one-stage"
+            );
+            for row in &rows {
+                println!(
+                    "{:<8}{:>10.2}{:>10.2}{:>12.2}{:>12.2}",
+                    row.n,
+                    row.stage1,
+                    row.stage2,
+                    row.stage1 + row.stage2,
+                    row.one_stage
+                );
+            }
+            println!(
+                "paper:  {:>8.2}{:>10.2}{:>12.2}{:>12.2}  (formulas at p={p})",
+                flops_table::stage1_coeff(p),
+                10.0,
+                flops_table::stage1_coeff(p) + 10.0,
+                14.0
+            );
+        }
+        "ablations" => {
+            let n = args.get("n", 256usize);
+            println!("\n== p sweep (stage 1, n={n}) ==");
+            for (p, secs, coeff) in ablations::p_sweep(n, 8, &[2, 4, 8, 12], seed) {
+                println!("  p={p:<3} {secs:.3}s   flops/n^3 = {coeff:.2}");
+            }
+            println!("\n== q sweep (stage 2, n={n}; q=0 is unblocked Alg 2) ==");
+            for (q, secs) in ablations::q_sweep(n, 8, &[2, 4, 8, 16], seed) {
+                println!("  q={q:<3} {secs:.3}s");
+            }
+            let cfg = Config { r: 8, q: 4, ..Config::default() };
+            let (with_look, without) = ablations::lookahead_ablation(n, &cfg, 14, seed);
+            println!("\n== lookahead (stage 2, n={n}, P=14) ==");
+            println!("  with lookahead:    {with_look:.4}s");
+            println!("  without lookahead: {without:.4}s");
+        }
+        other => {
+            eprintln!("unknown experiment '{other}' (fig9a|fig9b|fig10|fig11|flops|ablations)");
+            return 2;
+        }
+    }
+    0
+}
+
+fn cmd_validate(args: &Args) -> i32 {
+    let n = args.get("n", 200usize);
+    let mut rng = Rng::new(7);
+    let pencil = random_pencil(n, &mut rng);
+    let cfg = Config { r: 16, p: 8, q: 8, threads: 4, ..Config::default() };
+    println!("validating ParaHT on random pencil n={n}...");
+    let run = run_paraht(&pencil.a, &pencil.b, &cfg, ExecMode::Threads(4)).unwrap();
+    let v = run.verify(&pencil.a, &pencil.b);
+    println!(
+        "  err_A {:.2e}  err_B {:.2e}  orth(Q) {:.2e}  orth(Z) {:.2e}  H-band {:.2e}  T-band {:.2e}",
+        v.err_a, v.err_b, v.orth_q, v.orth_z, v.hess_residual, v.tri_residual
+    );
+    if v.worst() > 1e-10 {
+        eprintln!("FAILED");
+        return 1;
+    }
+    if args.has_flag("pjrt") {
+        println!("validating PJRT offload parity...");
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        match paraht::runtime::PjrtRuntime::load(&dir) {
+            Ok(rt) => {
+                let off = paraht::runtime::WyOffload::new(&rt);
+                let a = paraht::Matrix::randn(128, 16, &mut rng);
+                let wy = paraht::linalg::qr::QrFactor::compute_inplace(a).wy();
+                let c0 = paraht::Matrix::randn(128, 200, &mut rng);
+                let mut native = c0.clone();
+                wy.apply(
+                    paraht::linalg::Side::Left,
+                    paraht::linalg::Trans::Yes,
+                    native.as_mut(),
+                );
+                let mut offl = c0.clone();
+                off.apply_left_t(&wy, offl.as_mut()).unwrap();
+                let mut d = 0.0f64;
+                for j in 0..200 {
+                    for i in 0..128 {
+                        d = d.max((native[(i, j)] - offl[(i, j)]).abs());
+                    }
+                }
+                println!("  native vs PJRT max deviation: {d:.2e}");
+                if d > 1e-12 {
+                    eprintln!("PJRT parity FAILED");
+                    return 1;
+                }
+            }
+            Err(e) => {
+                eprintln!("  could not load artifacts ({e}); run `make artifacts`");
+                return 1;
+            }
+        }
+    }
+    println!("validation OK");
+    0
+}
+
+fn cmd_info() -> i32 {
+    println!(
+        "paraht {} — parallel two-stage Hessenberg-triangular reduction",
+        env!("CARGO_PKG_VERSION")
+    );
+    println!("paper: Steel & Vandebril, 2023");
+    println!("defaults: r=16 p=8 q=8 (paper §4 tuning)");
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match paraht::runtime::manifest::load_manifest(&dir) {
+        Ok(specs) => {
+            println!("artifacts ({}):", specs.len());
+            for s in specs {
+                println!("  {:<24} {:?} C={}x{} k={}", s.name, s.kind, s.m, s.n, s.k);
+            }
+        }
+        Err(_) => println!("artifacts: not built (run `make artifacts`)"),
+    }
+    0
+}
+
+fn print_help() {
+    println!(
+        "paraht — parallel two-stage Hessenberg-triangular reduction\n\
+         \n\
+         USAGE:\n\
+           paraht reduce     --n 512 [--saddle] [--r 16 --p 8 --q 8] [--threads T] [--mode seq|par|sim] [--check]\n\
+           paraht experiment fig9a|fig9b|fig10|fig11|flops|ablations [--n N] [--sizes a,b,c] [--threads T]\n\
+           paraht validate   [--pjrt] [--n N]\n\
+           paraht info"
+    );
+}

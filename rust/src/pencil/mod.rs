@@ -1,0 +1,8 @@
+//! Workload generators: random pencils and saddle-point pencils with a
+//! controlled fraction of infinite eigenvalues (§4 of the paper).
+
+pub mod random;
+pub mod saddle;
+
+pub use random::{pre_triangularize, random_pencil, random_pencil_general, Pencil};
+pub use saddle::saddle_pencil;

@@ -1,0 +1,105 @@
+//! Random test pencils (§4 "Tests on random pencils").
+//!
+//! The paper generates random `(A, B)` and then QR-factors `B` so the input
+//! satisfies Algorithm 1's precondition (upper-triangular `B`). A random
+//! matrix is well conditioned with overwhelming probability, which matters
+//! for the iterative baselines (`IterHT`, `HouseHT`).
+
+use crate::linalg::matrix::Matrix;
+use crate::linalg::qr::QrFactor;
+use crate::util::rng::Rng;
+
+/// A matrix pencil `(A, B)`.
+#[derive(Clone, Debug)]
+pub struct Pencil {
+    /// The `A` matrix.
+    pub a: Matrix,
+    /// The `B` matrix.
+    pub b: Matrix,
+    /// Number of eigenvalues that are infinite by construction (0 for
+    /// random pencils; `2k` for saddle-point pencils).
+    pub infinite_eigenvalues: usize,
+}
+
+impl Pencil {
+    /// Problem size.
+    pub fn n(&self) -> usize {
+        self.a.rows()
+    }
+}
+
+/// Random dense pencil with `B` already upper triangular (via QR of a random
+/// matrix, keeping `R`).
+pub fn random_pencil(n: usize, rng: &mut Rng) -> Pencil {
+    let a = Matrix::randn(n, n, rng);
+    let braw = Matrix::randn(n, n, rng);
+    let f = QrFactor::compute_inplace(braw);
+    let mut b = Matrix::zeros(n, n);
+    let r = f.r();
+    for j in 0..n {
+        for i in 0..=j {
+            b[(i, j)] = r[(i, j)];
+        }
+    }
+    Pencil { a, b, infinite_eigenvalues: 0 }
+}
+
+/// Random dense pencil with a *general* (not yet triangular) `B` — exercises
+/// the pre-triangularization path of the public API.
+pub fn random_pencil_general(n: usize, rng: &mut Rng) -> Pencil {
+    Pencil {
+        a: Matrix::randn(n, n, rng),
+        b: Matrix::randn(n, n, rng),
+        infinite_eigenvalues: 0,
+    }
+}
+
+/// Make `B` upper triangular by an orthogonal left transformation shared
+/// with `A`: `B = Q₀ R ⇒ (A, B) ← (Q₀ᵀ A, R)`, accumulating `Q₀` into `q`.
+/// This is the standard preprocessing when the input `B` is dense.
+pub fn pre_triangularize(a: &mut Matrix, b: &mut Matrix, q: &mut Matrix) {
+    let n = b.rows();
+    let f = QrFactor::compute(b);
+    // A ← Q₀ᵀ A
+    f.apply_qt_left(a.as_mut());
+    // Q ← Q Q₀
+    f.apply_q_right(q.as_mut());
+    // B ← R (exact zeros below the diagonal)
+    let r = f.r();
+    for j in 0..n {
+        for i in 0..n {
+            b[(i, j)] = if i <= j { r[(i, j)] } else { 0.0 };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::verify::{max_below_band, reconstruction_error};
+
+    #[test]
+    fn random_pencil_b_triangular() {
+        let mut rng = Rng::new(1);
+        let p = random_pencil(20, &mut rng);
+        assert_eq!(max_below_band(&p.b, 0), 0.0);
+        assert_eq!(p.n(), 20);
+        assert!(p.a.norm_fro() > 0.0);
+    }
+
+    #[test]
+    fn pre_triangularize_is_equivalence() {
+        let mut rng = Rng::new(2);
+        let p = random_pencil_general(15, &mut rng);
+        let (a0, b0) = (p.a.clone(), p.b.clone());
+        let mut a = p.a;
+        let mut b = p.b;
+        let mut q = Matrix::identity(15);
+        pre_triangularize(&mut a, &mut b, &mut q);
+        assert_eq!(max_below_band(&b, 0), 0.0);
+        let z = Matrix::identity(15);
+        // A0 = Q A, B0 = Q B
+        assert!(reconstruction_error(&a0, &q, &a, &z) < 1e-13);
+        assert!(reconstruction_error(&b0, &q, &b, &z) < 1e-13);
+    }
+}

@@ -1,0 +1,120 @@
+//! Saddle-point pencils (§4 "Tests on saddle point problems").
+//!
+//! ```text
+//! (A, B) = ( [X  Y ]   [I  0] )
+//!          ( [Yᵀ 0 ] , [0  0] )
+//! ```
+//!
+//! with `X` symmetric positive definite (`m×m`), `Y` random (`m×k`). The
+//! pencil has `2k` infinite eigenvalues (the determinant `det(A − λB)` has
+//! degree `m − k`), so choosing `k = n·frac/2` puts `frac` of the spectrum
+//! at infinity. The paper uses 25% (`k = n/8`). Such pencils break the
+//! iterative comparators: `HouseHT` needs extra refinement and `IterHT`
+//! fails to converge, while ParaHT and LAPACK are oblivious.
+
+use super::random::Pencil;
+use crate::linalg::gemm::{matmul_t, Trans};
+use crate::linalg::matrix::Matrix;
+use crate::util::rng::Rng;
+
+/// Build a saddle-point pencil of order `n` with (approximately) the given
+/// fraction of infinite eigenvalues.
+pub fn saddle_pencil(n: usize, infinite_fraction: f64, rng: &mut Rng) -> Pencil {
+    assert!((0.0..1.0).contains(&infinite_fraction));
+    let k = ((infinite_fraction * n as f64) / 2.0).round() as usize;
+    let k = k.min(n / 2);
+    let m = n - k;
+
+    // X = G Gᵀ/m + I : symmetric positive definite, eigenvalues in [1, ~5].
+    let g = Matrix::randn(m, m, rng);
+    let ggt = matmul_t(&g, Trans::No, &g, Trans::Yes);
+    let mut x = Matrix::zeros(m, m);
+    for j in 0..m {
+        for i in 0..m {
+            x[(i, j)] = ggt[(i, j)] / m as f64 + if i == j { 1.0 } else { 0.0 };
+        }
+    }
+    let y = Matrix::randn(m, k, rng);
+
+    let mut a = Matrix::zeros(n, n);
+    for j in 0..m {
+        for i in 0..m {
+            a[(i, j)] = x[(i, j)];
+        }
+    }
+    for j in 0..k {
+        for i in 0..m {
+            a[(i, m + j)] = y[(i, j)]; // Y block
+            a[(m + j, i)] = y[(i, j)]; // Yᵀ block
+        }
+    }
+    // A(m.., m..) = 0 by construction.
+
+    let mut b = Matrix::zeros(n, n);
+    for i in 0..m {
+        b[(i, i)] = 1.0;
+    }
+
+    Pencil { a, b, infinite_eigenvalues: 2 * k }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::verify::max_below_band;
+
+    #[test]
+    fn structure_is_correct() {
+        let mut rng = Rng::new(3);
+        let n = 16;
+        let p = saddle_pencil(n, 0.25, &mut rng);
+        // 25% infinite: k = 2, m = 14.
+        assert_eq!(p.infinite_eigenvalues, 4);
+        let m = n - 2;
+        // B = diag(I_m, 0)
+        assert_eq!(max_below_band(&p.b, 0), 0.0);
+        for i in 0..n {
+            assert_eq!(p.b[(i, i)], if i < m { 1.0 } else { 0.0 });
+        }
+        // A symmetric with zero lower-right block
+        for i in 0..n {
+            for j in 0..n {
+                assert!((p.a[(i, j)] - p.a[(j, i)]).abs() < 1e-15);
+            }
+        }
+        for i in m..n {
+            for j in m..n {
+                assert_eq!(p.a[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn x_block_positive_definite() {
+        let mut rng = Rng::new(4);
+        let p = saddle_pencil(24, 0.25, &mut rng);
+        let m = 24 - 3;
+        // Positive definiteness via Cholesky-ish check: all leading quadratic
+        // forms vᵀXv > 0 for a few random v.
+        for _ in 0..10 {
+            let v: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+            let mut q = 0.0;
+            for i in 0..m {
+                for j in 0..m {
+                    q += v[i] * p.a[(i, j)] * v[j];
+                }
+            }
+            assert!(q > 0.0);
+        }
+    }
+
+    #[test]
+    fn fraction_zero_gives_regular_b() {
+        let mut rng = Rng::new(5);
+        let p = saddle_pencil(10, 0.0, &mut rng);
+        assert_eq!(p.infinite_eigenvalues, 0);
+        for i in 0..10 {
+            assert_eq!(p.b[(i, i)], 1.0);
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! Shape-bucketed WY offload: route compact-WY block-reflector
+//! applications through the AOT-compiled PJRT executables.
+//!
+//! The PJRT executables are fixed-shape; panels are padded to the smallest
+//! fitting bucket (zero-padding is exact for WY applies: padded `V` rows /
+//! `T` columns contribute nothing) and the long dimension of `C` is
+//! processed in bucket-sized chunks. Parity with the native
+//! `linalg::wy::WyRep::apply` path is asserted by tests and by the
+//! `paraht validate --pjrt` CLI command.
+
+use super::client::{pack_row_major, unpack_row_major, PjrtRuntime};
+use super::manifest::BucketKind;
+use crate::error::{Error, Result};
+use crate::linalg::matrix::MatMut;
+use crate::linalg::wy::WyRep;
+
+/// WY offload executor over a loaded runtime.
+pub struct WyOffload<'r> {
+    rt: &'r PjrtRuntime,
+}
+
+impl<'r> WyOffload<'r> {
+    /// Wrap a runtime.
+    pub fn new(rt: &'r PjrtRuntime) -> WyOffload<'r> {
+        WyOffload { rt }
+    }
+
+    /// `C ← QᵀC` through the bucketed executables. `C.rows()` must equal
+    /// the reflector order `wy.m()`.
+    pub fn apply_left_t(&self, wy: &WyRep, mut c: MatMut<'_>) -> Result<()> {
+        let m = wy.m();
+        let k = wy.k();
+        assert_eq!(c.rows(), m, "offload left: C rows != wy order");
+        let ncols = c.cols();
+        // Chunk the column dimension by the widest fitting bucket.
+        let mut j = 0;
+        while j < ncols {
+            let want = ncols - j;
+            let bucket = self
+                .rt
+                .fitting_bucket(BucketKind::Left, m, want.min(128), k)
+                .or_else(|| self.rt.fitting_bucket(BucketKind::Left, m, 128, k))
+                .ok_or_else(|| {
+                    Error::runtime(format!("no left bucket fits m={m} k={k}"))
+                })?;
+            let (pm, pn, pk) = (bucket.spec.m, bucket.spec.n, bucket.spec.k);
+            let take = want.min(pn);
+            let name = bucket.spec.name.clone();
+
+            let cbuf = pack_row_major(c.rb().sub(0..m, j..j + take), pm, pn);
+            let vbuf = pack_row_major(wy.v.as_ref(), pm, pk);
+            let tbuf = pack_row_major(wy.t.as_ref(), pk, pk);
+            let out = self.rt.execute(
+                &name,
+                &[(&cbuf, [pm, pn]), (&vbuf, [pm, pk]), (&tbuf, [pk, pk])],
+            )?;
+            unpack_row_major(&out, pn, c.rb_mut().sub(0..m, j..j + take));
+            j += take;
+        }
+        Ok(())
+    }
+
+    /// `C ← C·Q` through the bucketed executables. `C.cols()` must equal
+    /// the reflector order `wy.m()`.
+    pub fn apply_right(&self, wy: &WyRep, mut c: MatMut<'_>) -> Result<()> {
+        let m = wy.m();
+        let k = wy.k();
+        assert_eq!(c.cols(), m, "offload right: C cols != wy order");
+        let nrows = c.rows();
+        let mut i = 0;
+        while i < nrows {
+            let want = nrows - i;
+            let bucket = self
+                .rt
+                .fitting_bucket(BucketKind::Right, want.min(128), m, k)
+                .or_else(|| self.rt.fitting_bucket(BucketKind::Right, 128, m, k))
+                .ok_or_else(|| {
+                    Error::runtime(format!("no right bucket fits m={m} k={k}"))
+                })?;
+            let (pm, pn, pk) = (bucket.spec.m, bucket.spec.n, bucket.spec.k);
+            let take = want.min(pm);
+            let name = bucket.spec.name.clone();
+
+            let cbuf = pack_row_major(c.rb().sub(i..i + take, 0..m), pm, pn);
+            let vbuf = pack_row_major(wy.v.as_ref(), pn, pk);
+            let tbuf = pack_row_major(wy.t.as_ref(), pk, pk);
+            let out = self.rt.execute(
+                &name,
+                &[(&cbuf, [pm, pn]), (&vbuf, [pn, pk]), (&tbuf, [pk, pk])],
+            )?;
+            unpack_row_major(&out, pn, c.rb_mut().sub(i..i + take, 0..m));
+            i += take;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matrix::Matrix;
+    use crate::linalg::qr::QrFactor;
+    use crate::linalg::wy::Side;
+    use crate::linalg::Trans;
+    use crate::util::rng::Rng;
+    use std::path::Path;
+
+    fn runtime() -> Option<PjrtRuntime> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.txt").exists() {
+            eprintln!("skipping PJRT test: run `make artifacts` first");
+            return None;
+        }
+        Some(PjrtRuntime::load(&dir).expect("runtime loads"))
+    }
+
+    fn random_wy(m: usize, k: usize, seed: u64) -> WyRep {
+        let mut rng = Rng::new(seed);
+        let a = Matrix::randn(m, k, &mut rng);
+        QrFactor::compute_inplace(a).wy()
+    }
+
+    #[test]
+    fn pjrt_left_matches_native() {
+        let Some(rt) = runtime() else { return };
+        let off = WyOffload::new(&rt);
+        let mut rng = Rng::new(200);
+        for (m, k, nc) in [(128usize, 16usize, 128usize), (128, 16, 300), (100, 16, 70)] {
+            let wy = random_wy(m, k, 201);
+            let c0 = Matrix::randn(m, nc, &mut rng);
+            let mut native = c0.clone();
+            wy.apply(Side::Left, Trans::Yes, native.as_mut());
+            let mut offl = c0.clone();
+            off.apply_left_t(&wy, offl.as_mut()).unwrap();
+            let mut d = 0.0f64;
+            for j in 0..nc {
+                for i in 0..m {
+                    d = d.max((native[(i, j)] - offl[(i, j)]).abs());
+                }
+            }
+            assert!(d < 1e-12, "left parity m={m} nc={nc}: {d:.3e}");
+        }
+    }
+
+    #[test]
+    fn pjrt_right_matches_native() {
+        let Some(rt) = runtime() else { return };
+        let off = WyOffload::new(&rt);
+        let mut rng = Rng::new(202);
+        for (m, k, nr) in [(128usize, 16usize, 128usize), (128, 16, 300), (96, 16, 50)] {
+            let wy = random_wy(m, k, 203);
+            let c0 = Matrix::randn(nr, m, &mut rng);
+            let mut native = c0.clone();
+            wy.apply(Side::Right, Trans::No, native.as_mut());
+            let mut offl = c0.clone();
+            off.apply_right(&wy, offl.as_mut()).unwrap();
+            let mut d = 0.0f64;
+            for j in 0..m {
+                for i in 0..nr {
+                    d = d.max((native[(i, j)] - offl[(i, j)]).abs());
+                }
+            }
+            assert!(d < 1e-12, "right parity m={m} nr={nr}: {d:.3e}");
+        }
+    }
+}

@@ -1,0 +1,150 @@
+//! PJRT runtime: load the AOT HLO-text artifacts, compile them once on the
+//! CPU PJRT client, and execute them from the rust hot path.
+//!
+//! Python never runs here — the interchange is the HLO text produced by
+//! `python/compile/aot.py` at build time (see /opt/xla-example/load_hlo).
+
+use super::manifest::{load_manifest, ArtifactSpec, BucketKind};
+use crate::error::{Error, Result};
+use crate::linalg::matrix::{MatMut, MatRef};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+/// A compiled artifact.
+pub struct Compiled {
+    /// Its manifest entry.
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT runtime: client + compiled executable per artifact.
+///
+/// Executions are serialized through a mutex: the CPU PJRT client is
+/// thread-safe, but serializing keeps buffer lifetimes simple and the
+/// offload path is not the default hot path on this substrate (DESIGN.md
+/// §Perf discusses when offload pays off).
+pub struct PjrtRuntime {
+    _client: xla::PjRtClient,
+    compiled: HashMap<String, Compiled>,
+    lock: Mutex<()>,
+}
+
+impl PjrtRuntime {
+    /// Load every artifact in `dir` (must contain `manifest.txt`).
+    pub fn load(dir: &Path) -> Result<PjrtRuntime> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::runtime(format!("PjRtClient::cpu: {e:?}")))?;
+        let specs = load_manifest(dir)?;
+        let mut compiled = HashMap::new();
+        for spec in specs {
+            let proto = xla::HloModuleProto::from_text_file(
+                spec.path
+                    .to_str()
+                    .ok_or_else(|| Error::runtime("non-utf8 artifact path"))?,
+            )
+            .map_err(|e| Error::runtime(format!("parse {}: {e:?}", spec.name)))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| Error::runtime(format!("compile {}: {e:?}", spec.name)))?;
+            compiled.insert(spec.name.clone(), Compiled { spec, exe });
+        }
+        Ok(PjrtRuntime { _client: client, compiled, lock: Mutex::new(()) })
+    }
+
+    /// Names of the loaded artifacts.
+    pub fn names(&self) -> Vec<&str> {
+        self.compiled.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Find a bucket of the given kind with `m × n` C-shape and width `k`.
+    pub fn find_bucket(&self, kind: BucketKind, m: usize, n: usize, k: usize) -> Option<&Compiled> {
+        self.compiled
+            .values()
+            .find(|c| c.spec.kind == kind && c.spec.m == m && c.spec.n == n && c.spec.k == k)
+    }
+
+    /// Smallest bucket of `kind` that fits `(m, n, k)` (for padding).
+    pub fn fitting_bucket(
+        &self,
+        kind: BucketKind,
+        m: usize,
+        n: usize,
+        k: usize,
+    ) -> Option<&Compiled> {
+        self.compiled
+            .values()
+            .filter(|c| c.spec.kind == kind && c.spec.m >= m && c.spec.n >= n && c.spec.k >= k)
+            .min_by_key(|c| c.spec.m * c.spec.n)
+    }
+
+    /// Execute an artifact on row-major f64 input buffers with the given
+    /// shapes; returns the first tuple element as a flat row-major vec.
+    pub fn execute(&self, name: &str, inputs: &[(&[f64], [usize; 2])]) -> Result<Vec<f64>> {
+        let c = self
+            .compiled
+            .get(name)
+            .ok_or_else(|| Error::runtime(format!("unknown artifact {name}")))?;
+        let _guard = self.lock.lock().unwrap();
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (buf, shape) in inputs {
+            let lit = xla::Literal::vec1(buf)
+                .reshape(&[shape[0] as i64, shape[1] as i64])
+                .map_err(|e| Error::runtime(format!("reshape: {e:?}")))?;
+            literals.push(lit);
+        }
+        let result = c
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| Error::runtime(format!("execute {name}: {e:?}")))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::runtime(format!("to_literal: {e:?}")))?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let first = out
+            .to_tuple1()
+            .map_err(|e| Error::runtime(format!("to_tuple1: {e:?}")))?;
+        first
+            .to_vec::<f64>()
+            .map_err(|e| Error::runtime(format!("to_vec: {e:?}")))
+    }
+}
+
+/// Copy a col-major view into a row-major buffer padded to `pm × pn`.
+pub fn pack_row_major(c: MatRef<'_>, pm: usize, pn: usize) -> Vec<f64> {
+    let mut buf = vec![0.0; pm * pn];
+    for i in 0..c.rows() {
+        for j in 0..c.cols() {
+            buf[i * pn + j] = c.at(i, j);
+        }
+    }
+    buf
+}
+
+/// Copy the top-left of a row-major `pm × pn` buffer back into a view.
+pub fn unpack_row_major(buf: &[f64], pn: usize, mut c: MatMut<'_>) {
+    for i in 0..c.rows() {
+        for j in 0..c.cols() {
+            c.set(i, j, buf[i * pn + j]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matrix::Matrix;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let m = Matrix::from_fn(3, 4, |i, j| (i * 10 + j) as f64);
+        let buf = pack_row_major(m.as_ref(), 5, 6);
+        assert_eq!(buf[0 * 6 + 1], 1.0);
+        assert_eq!(buf[2 * 6 + 3], 23.0);
+        assert_eq!(buf[4 * 6 + 5], 0.0); // padding
+        let mut back = Matrix::zeros(3, 4);
+        unpack_row_major(&buf, 6, back.as_mut());
+        assert_eq!(back, m);
+    }
+}

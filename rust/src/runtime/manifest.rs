@@ -1,0 +1,123 @@
+//! Artifact manifest parsing.
+//!
+//! `make artifacts` (the build-time python step) writes
+//! `artifacts/manifest.txt` with one line per AOT-lowered HLO module:
+//!
+//! ```text
+//! name kind m n k relative-path
+//! ```
+//!
+//! where `kind ∈ {left, right, panel}` and `(m, n, k)` are the bucket's
+//! `C` dimensions and reflector count. No JSON parser ships in the offline
+//! crate set, so the format is deliberately line-oriented.
+
+use crate::error::{Error, Result};
+use std::path::{Path, PathBuf};
+
+/// Bucket kind.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum BucketKind {
+    /// `C ← QᵀC` (C is m×n, reflectors span the m side).
+    Left,
+    /// `C ← C·Q` (C is m×n, reflectors span the n side).
+    Right,
+    /// Fused stage-1 panel step.
+    Panel,
+}
+
+/// One AOT artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    /// Bucket name (`wy_left_128x16_n128`, …).
+    pub name: String,
+    /// Kind of computation.
+    pub kind: BucketKind,
+    /// Rows of the C bucket.
+    pub m: usize,
+    /// Columns of the C bucket.
+    pub n: usize,
+    /// Reflector count (WY width).
+    pub k: usize,
+    /// Absolute path to the HLO text file.
+    pub path: PathBuf,
+}
+
+/// Parse `manifest.txt` in `dir`.
+pub fn load_manifest(dir: &Path) -> Result<Vec<ArtifactSpec>> {
+    let text = std::fs::read_to_string(dir.join("manifest.txt"))?;
+    let mut specs = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let parts: Vec<&str> = line.split_whitespace().collect();
+        if parts.len() != 6 {
+            return Err(Error::runtime(format!(
+                "manifest line {}: expected 6 fields, got {}",
+                lineno + 1,
+                parts.len()
+            )));
+        }
+        let kind = match parts[1] {
+            "left" => BucketKind::Left,
+            "right" => BucketKind::Right,
+            "panel" => BucketKind::Panel,
+            other => return Err(Error::runtime(format!("manifest: unknown kind {other}"))),
+        };
+        let parse = |s: &str| -> Result<usize> {
+            s.parse().map_err(|_| Error::runtime(format!("manifest: bad integer {s}")))
+        };
+        specs.push(ArtifactSpec {
+            name: parts[0].to_string(),
+            kind,
+            m: parse(parts[2])?,
+            n: parse(parts[3])?,
+            k: parse(parts[4])?,
+            path: dir.join(parts[5]),
+        });
+    }
+    Ok(specs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_wellformed() {
+        let dir = std::env::temp_dir().join("paraht_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "# comment\nfoo left 128 128 16 foo.hlo.txt\nbar right 256 128 16 bar.hlo.txt\n",
+        )
+        .unwrap();
+        let specs = load_manifest(&dir).unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].kind, BucketKind::Left);
+        assert_eq!(specs[1].m, 256);
+        assert!(specs[1].path.ends_with("bar.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        let dir = std::env::temp_dir().join("paraht_manifest_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), "foo left 128\n").unwrap();
+        assert!(load_manifest(&dir).is_err());
+        std::fs::write(dir.join("manifest.txt"), "foo sideways 1 2 3 x.txt\n").unwrap();
+        assert!(load_manifest(&dir).is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // When `make artifacts` has run, the real manifest must parse.
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.txt").exists() {
+            let specs = load_manifest(&dir).unwrap();
+            assert!(specs.len() >= 5);
+            assert!(specs.iter().any(|s| s.kind == BucketKind::Panel));
+        }
+    }
+}

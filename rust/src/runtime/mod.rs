@@ -1,0 +1,12 @@
+//! PJRT runtime (L3 ↔ L1/L2 bridge): load the AOT HLO-text artifacts
+//! produced by `python/compile/aot.py`, compile them once on the PJRT CPU
+//! client, and execute block-reflector updates from the rust hot path
+//! through shape buckets. Python never runs at request time.
+
+pub mod bucket;
+pub mod client;
+pub mod manifest;
+
+pub use bucket::WyOffload;
+pub use client::PjrtRuntime;
+pub use manifest::{ArtifactSpec, BucketKind};

@@ -1,0 +1,131 @@
+//! A tiny argument parser (clap is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments. Subcommand dispatch is done by the caller (`main.rs`).
+
+use std::collections::HashMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// Positional arguments, in order.
+    pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options.
+    pub options: HashMap<String, String>,
+    /// Bare `--flag` switches.
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse an iterator of raw arguments (excluding argv[0] and the
+    /// subcommand name).
+    pub fn parse(raw: impl IntoIterator<Item = String>) -> Self {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some(eq) = rest.find('=') {
+                    args.options
+                        .insert(rest[..eq].to_string(), rest[eq + 1..].to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.options.insert(rest.to_string(), v);
+                } else {
+                    args.flags.push(rest.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    /// Get an option parsed as `T`, or `default` if absent.
+    pub fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.options
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    /// Get a required option parsed as `T`.
+    pub fn require<T: std::str::FromStr>(&self, key: &str) -> crate::Result<T> {
+        self.options
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .ok_or_else(|| crate::Error::config(format!("missing/invalid --{key}")))
+    }
+
+    /// Get a string option.
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.options
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    /// Whether a boolean flag is present.
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Parse a comma-separated list option, e.g. `--sizes 250,500,1000`.
+    pub fn get_list<T: std::str::FromStr>(&self, key: &str, default: &[T]) -> Vec<T>
+    where
+        T: Clone,
+    {
+        match self.options.get(key) {
+            None => default.to_vec(),
+            Some(s) => s
+                .split(',')
+                .filter_map(|p| p.trim().parse().ok())
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_kv_and_flags() {
+        // NOTE: a bare `--flag` followed by a non-dashed token is parsed as
+        // an option with that value; put flags last or use `--k=v` forms.
+        let a = parse("reduce file.txt --n 500 --r=16 --verbose");
+        assert_eq!(a.positional, vec!["reduce", "file.txt"]);
+        assert_eq!(a.get::<usize>("n", 0), 500);
+        assert_eq!(a.get::<usize>("r", 0), 16);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("");
+        assert_eq!(a.get::<usize>("n", 42), 42);
+        assert_eq!(a.get_str("mode", "native"), "native");
+        assert!(!a.has_flag("x"));
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse("--sizes 1,2,3");
+        assert_eq!(a.get_list::<usize>("sizes", &[9]), vec![1, 2, 3]);
+        assert_eq!(a.get_list::<usize>("other", &[9]), vec![9]);
+    }
+
+    #[test]
+    fn flag_before_value_option() {
+        let a = parse("--check --n 10");
+        assert!(a.has_flag("check"));
+        assert_eq!(a.get::<usize>("n", 0), 10);
+    }
+}

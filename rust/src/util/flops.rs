@@ -1,0 +1,57 @@
+//! Global flop accounting.
+//!
+//! The paper's cost analysis (§2.2: `(28p+14)/(3(p-1)) n³` for stage 1,
+//! §3.1: `10 n³` for stage 2, `14 n³` for one-stage Moler-Stewart) is
+//! reproduced by `benches/table_flops.rs` from *measured* counts. The
+//! counters are cheap (one relaxed atomic add per block operation, never per
+//! scalar) and enabled by default; `set_enabled(false)` removes even that.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+static FLOPS: AtomicU64 = AtomicU64::new(0);
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// Add `n` flops to the global counter (no-op when disabled).
+#[inline]
+pub fn add(n: u64) {
+    if ENABLED.load(Ordering::Relaxed) {
+        FLOPS.fetch_add(n, Ordering::Relaxed);
+    }
+}
+
+/// Read the current counter.
+pub fn get() -> u64 {
+    FLOPS.load(Ordering::Relaxed)
+}
+
+/// Reset the counter to zero.
+pub fn reset() {
+    FLOPS.store(0, Ordering::Relaxed);
+}
+
+/// Enable/disable accounting.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Count flops of a closure: resets, runs, returns (result, flops).
+pub fn count<R>(f: impl FnOnce() -> R) -> (R, u64) {
+    let before = get();
+    let r = f();
+    (r, get() - before)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_and_count() {
+        set_enabled(true);
+        let (_, n) = count(|| {
+            add(123);
+            add(7);
+        });
+        assert_eq!(n, 130);
+    }
+}

@@ -1,0 +1,8 @@
+//! Small utilities shared across the crate: deterministic RNG, timers,
+//! flop accounting, a tiny CLI argument parser and a property-test helper.
+
+pub mod cli;
+pub mod flops;
+pub mod proptest;
+pub mod rng;
+pub mod timer;

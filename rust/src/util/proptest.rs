@@ -1,0 +1,64 @@
+//! Minimal property-testing helper (proptest is unavailable offline).
+//!
+//! `for_each_case` runs a property over `cases` deterministic seeds; on
+//! failure it reports the seed so the case can be replayed exactly. Tests
+//! over matrix shapes draw dimensions from the provided RNG.
+
+use super::rng::Rng;
+
+/// Run `prop` for `cases` seeded cases. `prop` returns `Err(msg)` to fail.
+/// Panics with the failing seed + message.
+pub fn for_each_case(cases: usize, base_seed: u64, prop: impl Fn(&mut Rng) -> Result<(), String>) {
+    for i in 0..cases {
+        let seed = base_seed.wrapping_add(i as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property failed (case {i}, seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Assert helper: check a relative error against a tolerance, with context.
+pub fn check_rel(what: &str, err: f64, tol: f64) -> Result<(), String> {
+    if !(err <= tol) {
+        return Err(format!("{what}: rel err {err:.3e} > tol {tol:.1e}"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let mut count = 0;
+        // Property must be Fn, so count via cell.
+        let counter = std::cell::Cell::new(0);
+        for_each_case(10, 1, |_| {
+            counter.set(counter.get() + 1);
+            Ok(())
+        });
+        count += counter.get();
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failure() {
+        for_each_case(3, 2, |r| {
+            if r.uniform() >= 0.0 {
+                Err("always".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn check_rel_works() {
+        assert!(check_rel("x", 1e-14, 1e-12).is_ok());
+        assert!(check_rel("x", 1e-10, 1e-12).is_err());
+        assert!(check_rel("x", f64::NAN, 1e-12).is_err());
+    }
+}

@@ -1,0 +1,78 @@
+//! Wall-clock timing helpers used by the bench harness and the scheduler's
+//! task-cost replay calibration.
+
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    /// Start a new timer.
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    /// Elapsed seconds since start.
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Elapsed duration since start.
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn time<R>(f: impl FnOnce() -> R) -> (R, f64) {
+    let t = Timer::start();
+    let r = f();
+    (r, t.secs())
+}
+
+/// Run `f` repeatedly until `min_time` seconds have elapsed (at least
+/// `min_reps` repetitions) and report the *minimum* per-rep time — the
+/// standard low-noise estimator for micro/mesobenchmarks.
+pub fn bench_min<R>(min_reps: usize, min_time: f64, mut f: impl FnMut() -> R) -> f64 {
+    let mut best = f64::INFINITY;
+    let mut total = 0.0;
+    let mut reps = 0;
+    loop {
+        let t = Timer::start();
+        std::hint::black_box(f());
+        let dt = t.secs();
+        best = best.min(dt);
+        total += dt;
+        reps += 1;
+        if reps >= min_reps && total >= min_time {
+            break;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        let a = t.secs();
+        let b = t.secs();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn bench_min_runs() {
+        let mut n = 0u64;
+        let best = bench_min(3, 0.0, || {
+            n += 1;
+            n
+        });
+        assert!(n >= 3);
+        assert!(best >= 0.0);
+    }
+}

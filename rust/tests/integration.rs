@@ -1,0 +1,178 @@
+//! Integration tests: the full system across module boundaries.
+//!
+//! Unit tests live next to each module; these exercise whole pipelines —
+//! the §4 accuracy claim ("relative backward errors on the order of the
+//! machine precision") for every algorithm, equivalence between execution
+//! modes, and the simulator's contracts on real traces.
+
+use paraht::baselines::one_stage::{OneStageOpts, OppositeMethod};
+use paraht::baselines::{dgghd3, iterht, moler_stewart, one_stage};
+use paraht::config::Config;
+use paraht::coordinator::driver::{iterht_recorded, run_paraht};
+use paraht::coordinator::sim::simulate_makespan;
+use paraht::coordinator::stage1_par::ExecMode;
+use paraht::ht::reduce_to_hessenberg_triangular;
+use paraht::linalg::matrix::Matrix;
+use paraht::linalg::verify::{max_below_band, HtVerification};
+use paraht::pencil::random::{random_pencil, random_pencil_general};
+use paraht::pencil::saddle::saddle_pencil;
+use paraht::util::proptest::for_each_case;
+use paraht::util::rng::Rng;
+
+/// §4 accuracy claim, for every algorithm on random pencils.
+#[test]
+fn all_algorithms_reach_machine_precision() {
+    let n = 96;
+    let mut rng = Rng::new(900);
+    let p = random_pencil(n, &mut rng);
+
+    // ParaHT (sequential driver).
+    let cfg = Config { r: 8, p: 4, q: 4, ..Config::default() };
+    let d = reduce_to_hessenberg_triangular(&p.a, &p.b, &cfg).unwrap();
+    assert!(d.verify(&p.a, &p.b).worst() < 1e-11, "ParaHT");
+
+    // Moler–Stewart.
+    let (mut a, mut b) = (p.a.clone(), p.b.clone());
+    let (mut q, mut z) = (Matrix::identity(n), Matrix::identity(n));
+    moler_stewart::reduce(&mut a, &mut b, &mut q, &mut z);
+    assert!(HtVerification::compute(&p.a, &p.b, &q, &z, &a, &b, 1).worst() < 1e-11, "MolerStewart");
+
+    // DGGHD3.
+    let (mut a, mut b) = (p.a.clone(), p.b.clone());
+    let (mut q, mut z) = (Matrix::identity(n), Matrix::identity(n));
+    dgghd3::reduce(&mut a, &mut b, &mut q, &mut z);
+    assert!(HtVerification::compute(&p.a, &p.b, &q, &z, &a, &b, 1).worst() < 1e-11, "DGGHD3");
+
+    // HouseHT-style (one-stage with fallback).
+    let (mut a, mut b) = (p.a.clone(), p.b.clone());
+    let (mut q, mut z) = (Matrix::identity(n), Matrix::identity(n));
+    let opts = OneStageOpts { method: OppositeMethod::SolveWithFallback, ..Default::default() };
+    one_stage::reduce(&mut a, &mut b, &mut q, &mut z, &opts).unwrap();
+    assert!(HtVerification::compute(&p.a, &p.b, &q, &z, &a, &b, 1).worst() < 1e-10, "HouseHT");
+
+    // IterHT-style.
+    let (mut a, mut b) = (p.a.clone(), p.b.clone());
+    let (mut q, mut z) = (Matrix::identity(n), Matrix::identity(n));
+    iterht::reduce(&mut a, &mut b, &mut q, &mut z, &Default::default()).unwrap();
+    assert!(HtVerification::compute(&p.a, &p.b, &q, &z, &a, &b, 1).worst() < 1e-10, "IterHT");
+}
+
+/// The three ParaHT execution paths agree: sequential two-stage,
+/// coordinator with real threads, coordinator in trace mode.
+#[test]
+fn execution_modes_agree() {
+    let n = 72;
+    let mut rng = Rng::new(901);
+    let p = random_pencil(n, &mut rng);
+    let cfg = Config { r: 6, p: 3, q: 3, threads: 3, ..Config::default() };
+
+    let d_seq = reduce_to_hessenberg_triangular(&p.a, &p.b, &cfg).unwrap();
+    let d_par = run_paraht(&p.a, &p.b, &cfg, ExecMode::Threads(3)).unwrap();
+    let d_tr = run_paraht(&p.a, &p.b, &cfg, ExecMode::Trace).unwrap();
+
+    let mut dmax = 0.0f64;
+    for j in 0..n {
+        for i in 0..n {
+            dmax = dmax.max((d_seq.h[(i, j)] - d_par.h[(i, j)]).abs());
+            dmax = dmax.max((d_par.h[(i, j)] - d_tr.h[(i, j)]).abs());
+            dmax = dmax.max((d_par.t[(i, j)] - d_tr.t[(i, j)]).abs());
+        }
+    }
+    // Threads vs Trace run identical task bodies: bitwise equal. The
+    // sequential driver uses the same kernels in the same order.
+    assert_eq!(dmax, 0.0, "execution modes diverge: {dmax:.3e}");
+}
+
+/// Saddle-point behaviour matrix (Fig. 11 claims).
+#[test]
+fn saddle_point_behaviour() {
+    let n = 64;
+    let mut rng = Rng::new(902);
+    let p = saddle_pencil(n, 0.25, &mut rng);
+
+    // ParaHT succeeds at machine precision.
+    let cfg = Config { r: 8, p: 4, q: 4, ..Config::default() };
+    let d = reduce_to_hessenberg_triangular(&p.a, &p.b, &cfg).unwrap();
+    assert!(d.verify(&p.a, &p.b).worst() < 1e-11);
+
+    // IterHT fails to converge.
+    assert!(iterht_recorded(&p.a, &p.b).is_err());
+}
+
+/// General (non-triangular B) input goes through pre-triangularization.
+#[test]
+fn general_b_api() {
+    let mut rng = Rng::new(903);
+    let p = random_pencil_general(60, &mut rng);
+    let cfg = Config { r: 6, p: 3, q: 3, ..Config::default() };
+    let d = reduce_to_hessenberg_triangular(&p.a, &p.b, &cfg).unwrap();
+    d.verify(&p.a, &p.b).assert_ok(1e-11);
+    assert!(max_below_band(&d.h, 1) < 1e-12 * d.h.norm_fro());
+    assert_eq!(max_below_band(&d.t, 0), 0.0);
+}
+
+/// Property sweep: random shapes/tunings, ParaHT always verifies.
+#[test]
+fn property_random_tunings() {
+    for_each_case(6, 0xF00D, |rng| {
+        let n = 24 + rng.below(60);
+        let r = 2 + rng.below(8);
+        let p = 2 + rng.below(4);
+        let q = 1 + rng.below(6);
+        let pencil = random_pencil(n, rng);
+        let cfg = Config { r, p, q, ..Config::default() };
+        let d = reduce_to_hessenberg_triangular(&pencil.a, &pencil.b, &cfg)
+            .map_err(|e| format!("reduce failed (n={n} r={r} p={p} q={q}): {e}"))?;
+        let v = d.verify(&pencil.a, &pencil.b);
+        if v.worst() > 1e-10 {
+            return Err(format!(
+                "verification n={n} r={r} p={p} q={q}: worst {:.3e}",
+                v.worst()
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Simulator contracts on a *real* ParaHT trace.
+#[test]
+fn simulator_contracts_on_real_trace() {
+    let mut rng = Rng::new(904);
+    let p = random_pencil(80, &mut rng);
+    let cfg = Config { r: 8, p: 4, q: 4, slices: 16, ..Config::default() };
+    let run = run_paraht(&p.a, &p.b, &cfg, ExecMode::Trace).unwrap();
+    let (t1, t2) = run.traces.unwrap();
+    for tr in [&t1, &t2] {
+        let s1 = simulate_makespan(tr, 1);
+        assert!((s1.makespan - tr.total().as_secs_f64()).abs() < 1e-9);
+        let mut last = f64::INFINITY;
+        for p in [1usize, 2, 4, 8, 16, 32] {
+            let s = simulate_makespan(tr, p);
+            assert!(s.makespan <= last + 1e-12, "monotone violated at P={p}");
+            assert!(s.makespan + 1e-12 >= s.critical_path);
+            assert!(s.makespan + 1e-12 >= s.total_work / p as f64);
+            last = s.makespan;
+        }
+    }
+}
+
+/// Scheduler stress: many runs with different thread counts all agree.
+#[test]
+fn scheduler_stress_determinism() {
+    let n = 48;
+    let mut rng = Rng::new(905);
+    let p = random_pencil(n, &mut rng);
+    let cfg = Config { r: 4, p: 3, q: 2, slices: 8, ..Config::default() };
+    let reference = run_paraht(&p.a, &p.b, &cfg, ExecMode::Threads(1)).unwrap();
+    for threads in [2usize, 3, 5, 8] {
+        let run = run_paraht(&p.a, &p.b, &cfg, ExecMode::Threads(threads)).unwrap();
+        let mut dmax = 0.0f64;
+        for j in 0..n {
+            for i in 0..n {
+                dmax = dmax.max((reference.h[(i, j)] - run.h[(i, j)]).abs());
+                dmax = dmax.max((reference.q[(i, j)] - run.q[(i, j)]).abs());
+            }
+        }
+        assert_eq!(dmax, 0.0, "threads={threads} diverged");
+    }
+}
