@@ -188,6 +188,7 @@ pub fn reduce_recorded(
                 stats.blocks += 1;
                 let blk = b.sub(i1..i2e, i1..i2e).to_owned();
 
+                let mut redone_robustly = false;
                 let mut zk = match opts.method {
                     OppositeMethod::Rq => opposite_rq(&blk),
                     OppositeMethod::Solve => match opposite_solve(&blk, opts.rcond_tol) {
@@ -202,12 +203,12 @@ pub fn reduce_recorded(
                             Ok(r) => r,
                             Err(_) => {
                                 stats.fallbacks += 1;
+                                redone_robustly = true;
                                 opposite_rq(&blk)
                             }
                         }
                     }
                 };
-
                 loop {
                     // Tentatively check the produced column on a copy.
                     let mut test = blk.clone();
@@ -230,8 +231,16 @@ pub fn reduce_recorded(
                             return;
                         }
                         OppositeMethod::SolveWithFallback => {
+                            // The RQ redo is the robust endpoint; if even it
+                            // misses the tolerance the residual is as good
+                            // as this block gets — retrying the identical
+                            // construction would loop forever.
+                            if redone_robustly {
+                                break;
+                            }
                             stats.fallbacks += 1;
                             zk = opposite_rq(&blk);
+                            redone_robustly = true;
                         }
                     }
                 }

@@ -42,20 +42,82 @@ impl Default for Config {
     }
 }
 
+/// Hard cap on worker threads / virtual cores — a thread budget guarding
+/// against typo'd configs spawning thousands of OS threads.
+pub const MAX_THREADS: usize = 4096;
+
+/// Hard cap on `p·q` (stage-1 block multiplier × stage-2 group size): the
+/// coordinator allocates per-group reflector arenas and task fan-out
+/// proportional to these, so a pathological product is a config error, not
+/// something to discover as an OOM mid-run.
+pub const MAX_BLOCK_PRODUCT: usize = 65_536;
+
+/// Hard cap on explicit slice counts.
+pub const MAX_SLICES: usize = 65_536;
+
 impl Config {
-    /// Validate parameter consistency.
+    /// Validate parameter consistency (problem-size-independent checks).
+    /// Every driver entry point calls this (and [`Config::validate_for`])
+    /// before touching a matrix, so inconsistent blocking parameters
+    /// surface as [`Error::Config`] instead of panics or silent nonsense.
     pub fn validate(&self) -> Result<()> {
         if self.r < 2 {
-            return Err(Error::config("r must be >= 2"));
+            return Err(Error::config(format!("r must be >= 2 (got {})", self.r)));
         }
         if self.p < 2 {
-            return Err(Error::config("p must be >= 2 (blocks are p*nb x nb)"));
+            return Err(Error::config(format!(
+                "p must be >= 2 (blocks are p*nb x nb; got {})",
+                self.p
+            )));
         }
         if self.q < 1 {
             return Err(Error::config("q must be >= 1"));
         }
         if self.threads < 1 {
             return Err(Error::config("threads must be >= 1"));
+        }
+        if self.threads > MAX_THREADS {
+            return Err(Error::config(format!(
+                "threads = {} exceeds the thread budget ({MAX_THREADS})",
+                self.threads
+            )));
+        }
+        match self.p.checked_mul(self.q) {
+            None => {
+                return Err(Error::config(format!(
+                    "p*q overflows (p = {}, q = {})",
+                    self.p, self.q
+                )))
+            }
+            Some(pq) if pq > MAX_BLOCK_PRODUCT => {
+                return Err(Error::config(format!(
+                    "p*q = {pq} exceeds the scheduler task budget ({MAX_BLOCK_PRODUCT}); \
+                     the coordinator's arenas and fan-out scale with p·q"
+                )));
+            }
+            Some(_) => {}
+        }
+        if self.slices > MAX_SLICES {
+            return Err(Error::config(format!(
+                "slices = {} exceeds {MAX_SLICES}",
+                self.slices
+            )));
+        }
+        Ok(())
+    }
+
+    /// Validate against a concrete problem size `n`: everything in
+    /// [`Config::validate`] plus the blocking-vs-size consistency checks.
+    /// `r >= n` would make stage 1 a silent no-op (no bandwidth to reduce
+    /// to) — reject it instead. Blocks larger than the matrix
+    /// (`p·r > n`) are legal: the panel plans clip them at the edge.
+    pub fn validate_for(&self, n: usize) -> Result<()> {
+        self.validate()?;
+        if n >= 3 && self.r >= n {
+            return Err(Error::config(format!(
+                "stage-1 bandwidth r = {} must be smaller than the problem size n = {n}",
+                self.r
+            )));
         }
         Ok(())
     }
@@ -89,6 +151,56 @@ mod tests {
         let mut c = Config::default();
         c.r = 0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_r_zero_and_one() {
+        for r in [0usize, 1] {
+            let c = Config { r, ..Config::default() };
+            let e = c.validate().unwrap_err();
+            assert!(matches!(e, crate::Error::Config(_)), "r={r}: {e}");
+        }
+    }
+
+    #[test]
+    fn rejects_thread_budget_violations() {
+        // threads over the hard budget.
+        let c = Config { threads: MAX_THREADS + 1, ..Config::default() };
+        assert!(c.validate().is_err());
+        // p*q exceeding the scheduler task budget.
+        let c = Config { p: 1024, q: 1024, ..Config::default() };
+        let e = c.validate().unwrap_err();
+        assert!(format!("{e}").contains("task budget"), "{e}");
+        // p*q overflow does not panic — it errors.
+        let c = Config { p: usize::MAX, q: 2, ..Config::default() };
+        assert!(c.validate().is_err());
+        // slices cap.
+        let c = Config { slices: MAX_SLICES + 1, ..Config::default() };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_block_size_exceeding_n() {
+        // r >= n: no bandwidth left to reduce to.
+        let c = Config { r: 16, ..Config::default() };
+        assert!(c.validate_for(16).is_err());
+        assert!(c.validate_for(10).is_err());
+        assert!(c.validate_for(17).is_ok());
+        // Oversized p·r blocks are clipped, not rejected.
+        let c = Config { r: 4, p: 8, ..Config::default() };
+        assert!(c.validate_for(12).is_ok());
+        // Tiny problems (n < 3) are no-ops for every algorithm: accept.
+        let c = Config::default();
+        assert!(c.validate_for(2).is_ok());
+        assert!(c.validate_for(0).is_ok());
+    }
+
+    #[test]
+    fn validate_errors_are_config_variant() {
+        let c = Config { q: 0, ..Config::default() };
+        assert!(matches!(c.validate().unwrap_err(), crate::Error::Config(_)));
+        let c = Config { threads: 0, ..Config::default() };
+        assert!(matches!(c.validate().unwrap_err(), crate::Error::Config(_)));
     }
 
     #[test]

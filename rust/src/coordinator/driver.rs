@@ -43,8 +43,17 @@ impl ParaHtRun {
 /// `B` must be upper triangular (use
 /// [`crate::pencil::random::pre_triangularize`] otherwise).
 pub fn run_paraht(a: &Matrix, b: &Matrix, cfg: &Config, mode: ExecMode) -> Result<ParaHtRun> {
-    cfg.validate()?;
     let n = a.rows();
+    if a.cols() != n || b.rows() != n || b.cols() != n {
+        return Err(crate::Error::shape(format!(
+            "pencil must be square and consistent: A {}x{}, B {}x{}",
+            a.rows(),
+            a.cols(),
+            b.rows(),
+            b.cols()
+        )));
+    }
+    cfg.validate_for(n)?;
     let mut h = a.clone();
     let mut t = b.clone();
     let mut q = Matrix::identity(n);

@@ -91,6 +91,15 @@ pub fn run_parallel(mut graph: TaskGraph<'_>, threads: usize) {
                         drop(q);
                         state.cv.notify_all();
                     } else if left == 0 {
+                        // Wake-for-exit must synchronize with waiters through
+                        // the queue mutex: a worker that observed
+                        // `remaining != 0` and an empty queue may be between
+                        // that check and `cv.wait`. Taking (and releasing)
+                        // the lock orders this notification after its check,
+                        // so either it re-checks and sees 0, or it is already
+                        // waiting and receives the notification. A bare
+                        // `notify_all` here loses that race and deadlocks.
+                        drop(state.ready.lock().unwrap());
                         state.cv.notify_all();
                     }
                 }

@@ -1,27 +1,51 @@
-//! Crate-wide error type.
+//! Crate-wide error type (pure std — no external dependencies).
+
+use std::fmt;
 
 /// Errors produced by the paraht library.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Dimension mismatch or otherwise invalid matrix arguments.
-    #[error("shape error: {0}")]
     Shape(String),
 
     /// Invalid configuration parameter.
-    #[error("config error: {0}")]
     Config(String),
 
     /// Numerical failure (e.g. non-convergence of an iterative baseline).
-    #[error("numerical error: {0}")]
     Numerical(String),
 
     /// PJRT runtime failure (artifact loading / compilation / execution).
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// I/O failure.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Shape(msg) => write!(f, "shape error: {msg}"),
+            Error::Config(msg) => write!(f, "config error: {msg}"),
+            Error::Numerical(msg) => write!(f, "numerical error: {msg}"),
+            Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 /// Crate-wide result alias.

@@ -47,7 +47,6 @@ pub fn reduce_to_hessenberg_triangular(
     b: &Matrix,
     cfg: &Config,
 ) -> Result<HtDecomposition> {
-    cfg.validate()?;
     let n = a.rows();
     if a.cols() != n || b.rows() != n || b.cols() != n {
         return Err(crate::Error::shape(format!(
@@ -58,6 +57,7 @@ pub fn reduce_to_hessenberg_triangular(
             b.cols()
         )));
     }
+    cfg.validate_for(n)?;
     let mut h = a.clone();
     let mut t = b.clone();
     let mut q = Matrix::identity(n);

@@ -2,7 +2,16 @@
 //! CPU PJRT client, and execute them from the rust hot path.
 //!
 //! Python never runs here — the interchange is the HLO text produced by
-//! `python/compile/aot.py` at build time (see /opt/xla-example/load_hlo).
+//! `python/compile/aot.py` at build time.
+//!
+//! This crate is pure-std; no XLA FFI is linked. The [`backend`] module is
+//! the single swap-in point for a real PJRT binding: everything above it
+//! (manifest parsing, shape buckets, padding/packing, the offload routing
+//! in [`super::bucket`]) is backend-agnostic and fully tested. The stub
+//! backend parses artifacts but reports `Error::Runtime` on compile, so
+//! `PjrtRuntime::load` fails cleanly when no real backend is present —
+//! callers (`paraht validate --pjrt`, the offload tests) treat that as
+//! "artifacts not usable in this build" and skip.
 
 use super::manifest::{load_manifest, ArtifactSpec, BucketKind};
 use crate::error::{Error, Result};
@@ -11,46 +20,71 @@ use std::collections::HashMap;
 use std::path::Path;
 use std::sync::Mutex;
 
+/// The swap-in point for a real PJRT FFI binding.
+///
+/// A real implementation compiles the HLO text at `spec.path` and returns
+/// an executable whose `run` consumes row-major `f64` buffers. The stub
+/// shipped here refuses to compile, keeping the crate dependency-free.
+mod backend {
+    use super::ArtifactSpec;
+    use crate::error::{Error, Result};
+
+    /// A compiled executable handle. The stub variant can never be
+    /// constructed (`compile` always errors), so `run` is unreachable in
+    /// practice; both stay defined to fix the interface a real backend
+    /// must provide.
+    pub struct Executable(());
+
+    impl Executable {
+        /// Execute on row-major f64 inputs; returns the flat row-major output.
+        #[allow(dead_code)] // reachable only with a real backend linked
+        pub fn run(&self, _inputs: &[(&[f64], [usize; 2])]) -> Result<Vec<f64>> {
+            Err(Error::runtime("PJRT stub backend cannot execute"))
+        }
+    }
+
+    /// Compile one artifact. The stub always fails with a runtime error.
+    pub fn compile(spec: &ArtifactSpec) -> Result<Executable> {
+        Err(Error::runtime(format!(
+            "PJRT backend not linked in this build; cannot compile artifact '{}' ({}). \
+             The pure-std crate ships with a stub backend — see runtime/client.rs.",
+            spec.name,
+            spec.path.display()
+        )))
+    }
+}
+
 /// A compiled artifact.
 pub struct Compiled {
     /// Its manifest entry.
     pub spec: ArtifactSpec,
-    exe: xla::PjRtLoadedExecutable,
+    exe: backend::Executable,
 }
 
 /// The PJRT runtime: client + compiled executable per artifact.
 ///
-/// Executions are serialized through a mutex: the CPU PJRT client is
+/// Executions are serialized through a mutex: a CPU PJRT client is
 /// thread-safe, but serializing keeps buffer lifetimes simple and the
-/// offload path is not the default hot path on this substrate (DESIGN.md
-/// §Perf discusses when offload pays off).
+/// offload path is not the default hot path on this substrate.
 pub struct PjrtRuntime {
-    _client: xla::PjRtClient,
     compiled: HashMap<String, Compiled>,
     lock: Mutex<()>,
 }
 
 impl PjrtRuntime {
     /// Load every artifact in `dir` (must contain `manifest.txt`).
+    ///
+    /// Fails with `Error::Runtime` when no real PJRT backend is linked (the
+    /// default pure-std build) — callers should treat that as "offload
+    /// unavailable" and use the native WY kernels.
     pub fn load(dir: &Path) -> Result<PjrtRuntime> {
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| Error::runtime(format!("PjRtClient::cpu: {e:?}")))?;
         let specs = load_manifest(dir)?;
         let mut compiled = HashMap::new();
         for spec in specs {
-            let proto = xla::HloModuleProto::from_text_file(
-                spec.path
-                    .to_str()
-                    .ok_or_else(|| Error::runtime("non-utf8 artifact path"))?,
-            )
-            .map_err(|e| Error::runtime(format!("parse {}: {e:?}", spec.name)))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .map_err(|e| Error::runtime(format!("compile {}: {e:?}", spec.name)))?;
+            let exe = backend::compile(&spec)?;
             compiled.insert(spec.name.clone(), Compiled { spec, exe });
         }
-        Ok(PjrtRuntime { _client: client, compiled, lock: Mutex::new(()) })
+        Ok(PjrtRuntime { compiled, lock: Mutex::new(()) })
     }
 
     /// Names of the loaded artifacts.
@@ -80,34 +114,14 @@ impl PjrtRuntime {
     }
 
     /// Execute an artifact on row-major f64 input buffers with the given
-    /// shapes; returns the first tuple element as a flat row-major vec.
+    /// shapes; returns the output as a flat row-major vec.
     pub fn execute(&self, name: &str, inputs: &[(&[f64], [usize; 2])]) -> Result<Vec<f64>> {
         let c = self
             .compiled
             .get(name)
             .ok_or_else(|| Error::runtime(format!("unknown artifact {name}")))?;
         let _guard = self.lock.lock().unwrap();
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (buf, shape) in inputs {
-            let lit = xla::Literal::vec1(buf)
-                .reshape(&[shape[0] as i64, shape[1] as i64])
-                .map_err(|e| Error::runtime(format!("reshape: {e:?}")))?;
-            literals.push(lit);
-        }
-        let result = c
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| Error::runtime(format!("execute {name}: {e:?}")))?;
-        let out = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| Error::runtime(format!("to_literal: {e:?}")))?;
-        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
-        let first = out
-            .to_tuple1()
-            .map_err(|e| Error::runtime(format!("to_tuple1: {e:?}")))?;
-        first
-            .to_vec::<f64>()
-            .map_err(|e| Error::runtime(format!("to_vec: {e:?}")))
+        c.exe.run(inputs)
     }
 }
 
@@ -140,11 +154,21 @@ mod tests {
     fn pack_unpack_roundtrip() {
         let m = Matrix::from_fn(3, 4, |i, j| (i * 10 + j) as f64);
         let buf = pack_row_major(m.as_ref(), 5, 6);
-        assert_eq!(buf[0 * 6 + 1], 1.0);
+        assert_eq!(buf[6 + 1], 11.0);
         assert_eq!(buf[2 * 6 + 3], 23.0);
         assert_eq!(buf[4 * 6 + 5], 0.0); // padding
         let mut back = Matrix::zeros(3, 4);
         unpack_row_major(&buf, 6, back.as_mut());
         assert_eq!(back, m);
+    }
+
+    #[test]
+    fn stub_backend_fails_to_load_cleanly() {
+        let dir = std::env::temp_dir().join("paraht_stub_backend_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), "foo left 128 128 16 foo.hlo.txt\n").unwrap();
+        let err = PjrtRuntime::load(&dir).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("PJRT backend not linked"), "{msg}");
     }
 }

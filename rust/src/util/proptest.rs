@@ -1,10 +1,15 @@
-//! Minimal property-testing helper (proptest is unavailable offline).
+//! Seeded case-sweep property-testing harness (proptest is unavailable
+//! offline).
 //!
 //! `for_each_case` runs a property over `cases` deterministic seeds; on
-//! failure it reports the seed so the case can be replayed exactly. Tests
-//! over matrix shapes draw dimensions from the provided RNG.
+//! failure it reports the case index and seed so the case can be replayed
+//! exactly. The shape generators draw matrix dimensions from the case RNG
+//! with a deliberate bias toward the adversarial end of the space:
+//! degenerate 1×k / k×1 shapes, tall/wide aspect ratios, and sizes around
+//! blocking boundaries.
 
 use super::rng::Rng;
+use crate::linalg::matrix::Matrix;
 
 /// Run `prop` for `cases` seeded cases. `prop` returns `Err(msg)` to fail.
 /// Panics with the failing seed + message.
@@ -26,21 +31,119 @@ pub fn check_rel(what: &str, err: f64, tol: f64) -> Result<(), String> {
     Ok(())
 }
 
+/// Assert helper: check an absolute error against a tolerance, with context.
+pub fn check_abs(what: &str, err: f64, tol: f64) -> Result<(), String> {
+    if !(err.abs() <= tol) {
+        return Err(format!("{what}: abs err {err:.3e} > tol {tol:.1e}"));
+    }
+    Ok(())
+}
+
+/// Assert helper: check a boolean condition, with context.
+pub fn check_that(what: &str, ok: bool) -> Result<(), String> {
+    if ok {
+        Ok(())
+    } else {
+        Err(format!("{what}: condition violated"))
+    }
+}
+
+/// Draw a square dimension in `[1, max]`.
+pub fn gen_square_dim(rng: &mut Rng, max: usize) -> usize {
+    1 + rng.below(max.max(1))
+}
+
+/// Draw a rectangular `(rows, cols)` pair, each in `[1, max]`, with a bias
+/// toward tall and wide aspect ratios (one dimension re-drawn small 2/3 of
+/// the time: 1/3 wide-ish, 1/3 tall-ish, 1/3 unconstrained).
+pub fn gen_rect_dims(rng: &mut Rng, max: usize) -> (usize, usize) {
+    let m = 1 + rng.below(max.max(1));
+    let n = 1 + rng.below(max.max(1));
+    match rng.below(3) {
+        0 => (m, 1 + rng.below(4.min(max.max(1)))), // wide-ish: few columns
+        1 => (1 + rng.below(4.min(max.max(1))), n), // tall-ish: few rows
+        _ => (m, n),
+    }
+}
+
+/// Draw a degenerate shape: single row, single column, 1×1, or tiny square.
+pub fn gen_degenerate_dims(rng: &mut Rng, max: usize) -> (usize, usize) {
+    match rng.below(4) {
+        0 => (1, 1 + rng.below(max.max(1))),
+        1 => (1 + rng.below(max.max(1)), 1),
+        2 => (1, 1),
+        _ => {
+            let s = 1 + rng.below(3);
+            (s, s)
+        }
+    }
+}
+
+/// Draw a shape for a sweep: mostly rectangular, 1-in-4 degenerate.
+pub fn gen_shape(rng: &mut Rng, max: usize) -> (usize, usize) {
+    if rng.below(4) == 0 {
+        gen_degenerate_dims(rng, max)
+    } else {
+        gen_rect_dims(rng, max)
+    }
+}
+
+/// Random standard-normal matrix of a drawn shape.
+pub fn gen_matrix(rng: &mut Rng, max: usize) -> Matrix {
+    let (m, n) = gen_shape(rng, max);
+    Matrix::randn(m, n, rng)
+}
+
+/// Random standard-normal square matrix with drawn order in `[1, max]`.
+pub fn gen_square_matrix(rng: &mut Rng, max: usize) -> Matrix {
+    let s = gen_square_dim(rng, max);
+    Matrix::randn(s, s, rng)
+}
+
+/// Relative Frobenius difference `‖X − Y‖_F / max(‖Y‖_F, tiny)` — the
+/// residual every factor-reconstruct property checks.
+pub fn rel_diff(x: &Matrix, y: &Matrix) -> f64 {
+    assert_eq!(x.rows(), y.rows());
+    assert_eq!(x.cols(), y.cols());
+    let mut d = 0.0;
+    for j in 0..x.cols() {
+        for i in 0..x.rows() {
+            d += (x[(i, j)] - y[(i, j)]).powi(2);
+        }
+    }
+    d.sqrt() / y.norm_fro().max(1e-300)
+}
+
+/// Largest absolute entrywise difference. NaN-propagating: if any pair
+/// differs by NaN (e.g. one side diverged to NaN), the result is NaN —
+/// `f64::max` would silently discard it and report spurious equality.
+pub fn max_abs_diff(x: &Matrix, y: &Matrix) -> f64 {
+    assert_eq!(x.rows(), y.rows());
+    assert_eq!(x.cols(), y.cols());
+    let mut d = 0.0f64;
+    for j in 0..x.cols() {
+        for i in 0..x.rows() {
+            let e = (x[(i, j)] - y[(i, j)]).abs();
+            if e > d || e.is_nan() {
+                d = e; // NaN is sticky: e > NaN is false for finite e
+            }
+        }
+    }
+    d
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
     fn runs_all_cases() {
-        let mut count = 0;
-        // Property must be Fn, so count via cell.
         let counter = std::cell::Cell::new(0);
         for_each_case(10, 1, |_| {
             counter.set(counter.get() + 1);
             Ok(())
         });
-        count += counter.get();
-        assert_eq!(count, 10);
+        assert_eq!(counter.get(), 10);
     }
 
     #[test]
@@ -60,5 +163,62 @@ mod tests {
         assert!(check_rel("x", 1e-14, 1e-12).is_ok());
         assert!(check_rel("x", 1e-10, 1e-12).is_err());
         assert!(check_rel("x", f64::NAN, 1e-12).is_err());
+    }
+
+    #[test]
+    fn check_abs_and_that() {
+        assert!(check_abs("x", -1e-14, 1e-12).is_ok());
+        assert!(check_abs("x", 1e-3, 1e-12).is_err());
+        assert!(check_abs("x", f64::NAN, 1e-12).is_err());
+        assert!(check_that("x", true).is_ok());
+        assert!(check_that("x", false).is_err());
+    }
+
+    #[test]
+    fn shape_generators_in_bounds() {
+        let mut rng = crate::util::rng::Rng::new(9);
+        for _ in 0..500 {
+            let s = gen_square_dim(&mut rng, 30);
+            assert!((1..=30).contains(&s));
+            let (m, n) = gen_rect_dims(&mut rng, 30);
+            assert!((1..=30).contains(&m) && (1..=30).contains(&n));
+            let (m, n) = gen_degenerate_dims(&mut rng, 30);
+            assert!(m >= 1 && n >= 1 && (m == 1 || n == 1 || (m == n && m <= 3)));
+            let (m, n) = gen_shape(&mut rng, 30);
+            assert!((1..=30).contains(&m) && (1..=30).contains(&n));
+        }
+    }
+
+    #[test]
+    fn generators_hit_degenerate_shapes() {
+        // The sweep must actually produce 1-row and 1-column cases.
+        let mut rng = crate::util::rng::Rng::new(10);
+        let (mut saw_row, mut saw_col) = (false, false);
+        for _ in 0..300 {
+            let (m, n) = gen_shape(&mut rng, 20);
+            saw_row |= m == 1 && n > 1;
+            saw_col |= n == 1 && m > 1;
+        }
+        assert!(saw_row && saw_col, "degenerate shapes never drawn");
+    }
+
+    #[test]
+    fn diff_helpers() {
+        let a = Matrix::from_rows(2, 2, &[1., 2., 3., 4.]);
+        let mut b = a.clone();
+        assert_eq!(rel_diff(&a, &b), 0.0);
+        assert_eq!(max_abs_diff(&a, &b), 0.0);
+        b[(1, 1)] = 5.0;
+        assert!((max_abs_diff(&a, &b) - 1.0).abs() < 1e-15);
+        assert!(rel_diff(&a, &b) > 0.0);
+    }
+
+    #[test]
+    fn matrix_generators() {
+        let mut rng = crate::util::rng::Rng::new(11);
+        let m = gen_matrix(&mut rng, 12);
+        assert!(m.rows() >= 1 && m.cols() >= 1);
+        let s = gen_square_matrix(&mut rng, 12);
+        assert_eq!(s.rows(), s.cols());
     }
 }

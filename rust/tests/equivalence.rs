@@ -1,0 +1,127 @@
+//! Equivalence tests pinning the parallel coordinator paths to the
+//! sequential oracle: `coordinator::{stage1_par, stage2_par}` (driven
+//! through `run_paraht`) must produce the same `(H, T, Q, Z)` as
+//! `ht::two_stage::reduce_to_hessenberg_triangular` under every execution
+//! mode — including block sizes that do not divide the problem size.
+//!
+//! The task bodies are the same kernels executed in a valid topological
+//! order, and every slice kernel is bitwise independent of the slicing
+//! (see the per-column/per-row notes in `linalg::gemm`), so the comparison
+//! is exact equality, not a tolerance.
+
+use paraht::config::Config;
+use paraht::coordinator::driver::run_paraht;
+use paraht::coordinator::stage1_par::ExecMode;
+use paraht::ht::reduce_to_hessenberg_triangular;
+use paraht::linalg::verify::max_below_band;
+use paraht::pencil::random::{random_pencil, Pencil};
+use paraht::pencil::saddle::saddle_pencil;
+use paraht::util::proptest::max_abs_diff;
+use paraht::util::rng::Rng;
+
+/// Every execution mode exercised by the equivalence sweep.
+fn exec_modes() -> Vec<ExecMode> {
+    vec![
+        ExecMode::Threads(1),
+        ExecMode::Threads(2),
+        ExecMode::Threads(4),
+        ExecMode::Threads(7),
+        ExecMode::Trace,
+    ]
+}
+
+fn assert_modes_match_oracle(pencil: &Pencil, cfg: &Config, label: &str) {
+    let oracle = reduce_to_hessenberg_triangular(&pencil.a, &pencil.b, cfg)
+        .unwrap_or_else(|e| panic!("{label}: oracle failed: {e}"));
+    // The oracle output itself is a valid HT decomposition.
+    oracle.verify(&pencil.a, &pencil.b).assert_ok(1e-10);
+    assert!(max_below_band(&oracle.h, 1) < 1e-12 * oracle.h.norm_fro().max(1.0));
+    assert_eq!(max_below_band(&oracle.t, 0), 0.0, "{label}: T not exactly triangular");
+
+    for mode in exec_modes() {
+        let run = run_paraht(&pencil.a, &pencil.b, cfg, mode)
+            .unwrap_or_else(|e| panic!("{label}: {mode:?} failed: {e}"));
+        assert_eq!(
+            max_abs_diff(&oracle.h, &run.h),
+            0.0,
+            "{label}: H diverges under {mode:?}"
+        );
+        assert_eq!(
+            max_abs_diff(&oracle.t, &run.t),
+            0.0,
+            "{label}: T diverges under {mode:?}"
+        );
+        assert_eq!(
+            max_abs_diff(&oracle.q, &run.q),
+            0.0,
+            "{label}: Q diverges under {mode:?}"
+        );
+        assert_eq!(
+            max_abs_diff(&oracle.z, &run.z),
+            0.0,
+            "{label}: Z diverges under {mode:?}"
+        );
+    }
+}
+
+#[test]
+fn random_pencil_all_modes_divisible_blocking() {
+    // n a multiple of r·p: the uniform-block fast case.
+    let mut rng = Rng::new(0xE0_01);
+    let pencil = random_pencil(48, &mut rng);
+    let cfg = Config { r: 4, p: 3, q: 3, slices: 8, ..Config::default() };
+    assert_modes_match_oracle(&pencil, &cfg, "random n=48 r=4 p=3");
+}
+
+#[test]
+fn random_pencil_all_modes_non_divisible_blocking() {
+    // n NOT a multiple of r·p (45 % 12 != 0): clipped edge blocks on every
+    // panel, partial last sweep group.
+    let mut rng = Rng::new(0xE0_02);
+    let pencil = random_pencil(45, &mut rng);
+    let cfg = Config { r: 4, p: 3, q: 4, slices: 8, ..Config::default() };
+    assert_modes_match_oracle(&pencil, &cfg, "random n=45 r=4 p=3");
+}
+
+#[test]
+fn random_pencil_block_larger_than_matrix() {
+    // p·r = 128 > n = 40: every block is clipped; the paper tuning on a
+    // problem too small for it must still agree with the oracle.
+    let mut rng = Rng::new(0xE0_03);
+    let pencil = random_pencil(40, &mut rng);
+    let cfg = Config { r: 16, p: 8, q: 8, slices: 8, ..Config::default() };
+    assert_modes_match_oracle(&pencil, &cfg, "random n=40 r=16 p=8");
+}
+
+#[test]
+fn saddle_pencil_all_modes() {
+    // Singular B (25% infinite eigenvalues) through every execution mode,
+    // with non-divisible blocking (58 % 18 != 0).
+    let mut rng = Rng::new(0xE0_04);
+    let pencil = saddle_pencil(58, 0.25, &mut rng);
+    let cfg = Config { r: 6, p: 3, q: 3, slices: 8, ..Config::default() };
+    assert_modes_match_oracle(&pencil, &cfg, "saddle n=58 r=6 p=3");
+}
+
+#[test]
+fn saddle_pencil_odd_tuning() {
+    let mut rng = Rng::new(0xE0_05);
+    let pencil = saddle_pencil(37, 0.25, &mut rng);
+    let cfg = Config { r: 5, p: 4, q: 2, slices: 5, ..Config::default() };
+    assert_modes_match_oracle(&pencil, &cfg, "saddle n=37 r=5 p=4");
+}
+
+#[test]
+fn repeated_parallel_runs_are_deterministic() {
+    // The same threaded configuration run twice must be bitwise identical
+    // (schedule nondeterminism must never leak into the numbers).
+    let mut rng = Rng::new(0xE0_06);
+    let pencil = random_pencil(41, &mut rng);
+    let cfg = Config { r: 4, p: 3, q: 3, slices: 8, ..Config::default() };
+    let r1 = run_paraht(&pencil.a, &pencil.b, &cfg, ExecMode::Threads(5)).unwrap();
+    let r2 = run_paraht(&pencil.a, &pencil.b, &cfg, ExecMode::Threads(5)).unwrap();
+    assert_eq!(max_abs_diff(&r1.h, &r2.h), 0.0);
+    assert_eq!(max_abs_diff(&r1.t, &r2.t), 0.0);
+    assert_eq!(max_abs_diff(&r1.q, &r2.q), 0.0);
+    assert_eq!(max_abs_diff(&r1.z, &r2.z), 0.0);
+}

@@ -1,0 +1,231 @@
+//! Seeded property tests for the linalg substrate, driven by the
+//! `util::proptest` case-sweep harness: factor-reconstruct round-trips,
+//! orthogonality at machine precision, and WY-vs-naive reflector
+//! application equivalence, over randomized square / rectangular /
+//! degenerate shapes.
+
+use paraht::linalg::gemm::{matmul, matmul_t, Trans};
+use paraht::linalg::householder::{larf_left, Reflector};
+use paraht::linalg::lu::LuFactor;
+use paraht::linalg::matrix::Matrix;
+use paraht::linalg::qr::{lq, QrFactor};
+use paraht::linalg::rq::RqFactor;
+use paraht::linalg::wy::Side;
+use paraht::util::proptest::{
+    check_rel, check_that, for_each_case, gen_shape, gen_square_dim, max_abs_diff, rel_diff,
+};
+use paraht::util::rng::Rng;
+
+/// Orthogonality residual `‖QᵀQ − I‖_F` scaled by the order.
+fn orth_residual(q: &Matrix) -> f64 {
+    let n = q.cols();
+    let qtq = matmul_t(q, Trans::Yes, q, Trans::No);
+    rel_diff(&qtq, &Matrix::identity(n)) / (n as f64).max(1.0).sqrt()
+}
+
+#[test]
+fn property_qr_roundtrip_and_orthogonality() {
+    for_each_case(40, 0x9121, |rng| {
+        let (m, n) = gen_shape(rng, 36);
+        let a = Matrix::randn(m, n, rng);
+        let f = QrFactor::compute(&a);
+        let q = f.form_q();
+        let r = f.r();
+        let k = f.k();
+        // A = Q(:, :k) R
+        let qk = Matrix::from_fn(m, k, |i, j| q[(i, j)]);
+        check_rel(&format!("A-QR ({m}x{n})"), rel_diff(&matmul(&qk, &r), &a), 1e-12)?;
+        // Q orthogonal at machine precision.
+        check_rel(&format!("QtQ-I ({m}x{n})"), orth_residual(&q), 1e-13)?;
+        // R upper triangular by construction (exact zeros).
+        for j in 0..r.cols() {
+            for i in j + 1..r.rows() {
+                check_that("R strictly upper", r[(i, j)] == 0.0)?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn property_lq_roundtrip() {
+    for_each_case(25, 0x9122, |rng| {
+        let (m, n) = gen_shape(rng, 30);
+        let a = Matrix::randn(m, n, rng);
+        let (l, wy) = lq(&a);
+        let q = wy.form_q(); // n×n, A = L · Q̂ with Q̂ = Qᵀ
+        let k = m.min(n);
+        let qk = Matrix::from_fn(n, k, |i, j| q[(i, j)]);
+        let back = matmul_t(&l, Trans::No, &qk, Trans::Yes);
+        check_rel(&format!("A-LQ ({m}x{n})"), rel_diff(&back, &a), 1e-12)?;
+        check_rel("LQ Q orth", orth_residual(&q), 1e-13)?;
+        Ok(())
+    });
+}
+
+#[test]
+fn property_rq_roundtrip_and_orthogonality() {
+    for_each_case(40, 0x9123, |rng| {
+        let s = gen_square_dim(rng, 30);
+        let a = Matrix::randn(s, s, rng);
+        let f = RqFactor::compute(&a);
+        let r = f.r();
+        let q = f.form_q();
+        check_rel(&format!("A-RQ (s={s})"), rel_diff(&matmul(&r, &q), &a), 1e-12)?;
+        check_rel(&format!("RQ Q orth (s={s})"), orth_residual(&q), 1e-13)?;
+        for j in 0..s {
+            for i in j + 1..s {
+                check_that("R strictly upper", r[(i, j)] == 0.0)?;
+            }
+        }
+        // Top rows of Q̃ match the materialized Q for every prefix height.
+        let t = 1 + rng.below(s);
+        let g = f.q_top_rows(t);
+        let qt = Matrix::from_fn(t, s, |i, j| q[(i, j)]);
+        check_rel("RQ top rows", max_abs_diff(&g, &qt), 1e-13)?;
+        Ok(())
+    });
+}
+
+#[test]
+fn property_lu_reconstruct_and_solve() {
+    for_each_case(40, 0x9124, |rng| {
+        let s = gen_square_dim(rng, 30);
+        let a = Matrix::randn(s, s, rng);
+        let f = match LuFactor::compute(&a) {
+            Ok(f) => f,
+            Err(e) => return Err(format!("LU failed on random matrix (s={s}): {e}")),
+        };
+        // Reconstruct: P A = L U with the recorded row swaps.
+        let mut pa = a.clone();
+        for (k, &p) in f.piv.iter().enumerate() {
+            if p != k {
+                for j in 0..s {
+                    let t = pa[(k, j)];
+                    pa[(k, j)] = pa[(p, j)];
+                    pa[(p, j)] = t;
+                }
+            }
+        }
+        let l = Matrix::from_fn(s, s, |i, j| {
+            if i == j {
+                1.0
+            } else if i > j {
+                f.lu[(i, j)]
+            } else {
+                0.0
+            }
+        });
+        let u = Matrix::from_fn(s, s, |i, j| if j >= i { f.lu[(i, j)] } else { 0.0 });
+        check_rel(&format!("PA-LU (s={s})"), rel_diff(&matmul(&l, &u), &pa), 1e-12)?;
+
+        // Solve round-trip, tolerance scaled by the conditioning.
+        let xt = Matrix::randn(s, 1, rng);
+        let b = matmul(&a, &xt);
+        let mut x: Vec<f64> = (0..s).map(|i| b[(i, 0)]).collect();
+        f.solve_vec(&mut x);
+        let err = (0..s).map(|i| (x[i] - xt[(i, 0)]).abs()).fold(0.0f64, f64::max);
+        let tol = 1e-9 / f.rcond_estimate().max(1e-6);
+        check_that(
+            &format!("LU solve (s={s}): err {err:.2e} tol {tol:.2e}"),
+            err <= tol,
+        )?;
+        Ok(())
+    });
+}
+
+#[test]
+fn property_householder_annihilation_and_orthogonality() {
+    for_each_case(60, 0x9125, |rng| {
+        let len = 1 + rng.below(40);
+        let x: Vec<f64> = (0..len).map(|_| rng.normal()).collect();
+        let (refl, beta) = Reflector::reducing(&x);
+        // H x = beta e1.
+        let mut m = Matrix::from_fn(len, 1, |i, _| x[i]);
+        refl.apply_left(m.as_mut());
+        let scale = beta.abs().max(1.0);
+        check_rel("Hx head", (m[(0, 0)] - beta).abs() / scale, 1e-13)?;
+        for i in 1..len {
+            check_rel("Hx tail", m[(i, 0)].abs() / scale, 1e-13)?;
+        }
+        // |beta| = ‖x‖.
+        let nx = x.iter().map(|v| v * v).sum::<f64>().sqrt();
+        check_rel("norm preserved", (beta.abs() - nx).abs() / nx.max(1e-300), 1e-12)?;
+        // H = I − τ v vᵀ is orthogonal and symmetric.
+        let h = Matrix::from_fn(len, len, |i, j| {
+            (if i == j { 1.0 } else { 0.0 }) - refl.tau * refl.v[i] * refl.v[j]
+        });
+        check_rel("H orth", orth_residual(&h), 1e-13)?;
+        Ok(())
+    });
+}
+
+/// Build `k` reflectors with QR (unit-lower-trapezoidal) structure and
+/// return their full-length vectors + τ's and the compact-WY form.
+fn qr_reflectors(m: usize, k: usize, rng: &mut Rng) -> (Vec<Reflector>, paraht::linalg::wy::WyRep) {
+    let a = Matrix::randn(m, k, rng);
+    let f = QrFactor::compute_inplace(a);
+    let v = f.v_matrix();
+    let refls = (0..f.k())
+        .map(|i| Reflector {
+            v: (0..m).map(|r| v[(r, i)]).collect(),
+            tau: f.taus[i],
+        })
+        .collect();
+    (refls, f.wy())
+}
+
+#[test]
+fn property_wy_equals_naive_reflector_application() {
+    for_each_case(30, 0x9126, |rng| {
+        let m = 2 + rng.below(30);
+        let k = 1 + rng.below(m.min(12));
+        let nc = 1 + rng.below(20);
+        let (refls, wy) = qr_reflectors(m, k, rng);
+        let c = Matrix::randn(m, nc, rng);
+
+        // Left, no transpose: Q C = H_1 ⋯ H_k C (apply H_k first).
+        let mut got = c.clone();
+        wy.apply(Side::Left, Trans::No, got.as_mut());
+        let mut naive = c.clone();
+        for h in refls.iter().rev() {
+            larf_left(&h.v, h.tau, naive.as_mut());
+        }
+        check_rel(
+            &format!("WY left (m={m} k={k})"),
+            rel_diff(&got, &naive),
+            1e-12,
+        )?;
+
+        // Left, transpose: Qᵀ C = H_k ⋯ H_1 C (apply H_1 first).
+        let mut got = c.clone();
+        wy.apply(Side::Left, Trans::Yes, got.as_mut());
+        let mut naive = c.clone();
+        for h in refls.iter() {
+            larf_left(&h.v, h.tau, naive.as_mut());
+        }
+        check_rel(
+            &format!("WY left^T (m={m} k={k})"),
+            rel_diff(&got, &naive),
+            1e-12,
+        )?;
+
+        // Right: D Q = ((Qᵀ Dᵀ))ᵀ — check against the transposed naive path.
+        let d = Matrix::randn(nc, m, rng);
+        let mut got = d.clone();
+        wy.apply(Side::Right, Trans::No, got.as_mut());
+        let mut naive_t = d.transposed();
+        for h in refls.iter() {
+            larf_left(&h.v, h.tau, naive_t.as_mut());
+        }
+        check_rel(
+            &format!("WY right (m={m} k={k})"),
+            rel_diff(&got, &naive_t.transposed()),
+            1e-12,
+        )?;
+
+        // The materialized Q is orthogonal at machine precision.
+        check_rel("WY Q orth", orth_residual(&wy.form_q()), 1e-13)?;
+        Ok(())
+    });
+}
