@@ -9,7 +9,7 @@
 
 use paraht::coordinator::driver::{lapack_seq_time, paraht_curve, run_paraht};
 use paraht::coordinator::graph::TaskClass;
-use paraht::coordinator::sim::simulate_makespan;
+use paraht::coordinator::sim::Simulator;
 use paraht::coordinator::stage1_par::ExecMode;
 use paraht::experiments::common::{scaled_config, PAPER_THREADS};
 use paraht::pencil::random::random_pencil;
@@ -55,9 +55,12 @@ fn main() {
         "\n{:<6}{:>12}{:>14}{:>16}{:>14}",
         "P", "makespan", "self-speedup", "vs LAPACK(seq)", "utilization"
     );
+    // Memoized simulators: the whole P sweep costs max(P) greedy replays.
+    let mut sim1 = Simulator::new(&traces.0);
+    let mut sim2 = Simulator::new(&traces.1);
     for &(p, t) in &curve.points {
-        let u1 = simulate_makespan(&traces.0, p);
-        let u2 = simulate_makespan(&traces.1, p);
+        let u1 = sim1.result(p);
+        let u2 = sim2.result(p);
         let util = (u1.total_work + u2.total_work) / ((u1.makespan + u2.makespan) * p as f64);
         println!(
             "{p:<6}{t:>12.3}{:>14.2}{:>16.2}{util:>14.2}",

@@ -4,6 +4,7 @@
 
 use paraht::config::Config;
 use paraht::experiments::ablations::{lookahead_ablation, p_sweep, q_sweep};
+use paraht::experiments::common;
 
 fn main() {
     let n: usize = std::env::var("PARAHT_BENCH_N")
@@ -31,11 +32,13 @@ fn main() {
         println!("{q:<6}{secs:>10.3}");
     }
     // Blocked with a reasonable q must beat the unblocked algorithm.
+    // Wall-clock comparison — soft mode / PALLAS_BENCH_TOL relax it.
+    let tol = common::bench_tol();
     let unblocked = rows[0].1;
     let best_blocked = rows[1..].iter().map(|r| r.1).fold(f64::INFINITY, f64::min);
-    assert!(
-        best_blocked < unblocked,
-        "blocked stage 2 must beat unblocked: {best_blocked:.3}s vs {unblocked:.3}s"
+    let mut ok = common::bench_check(
+        best_blocked < unblocked * tol,
+        &format!("blocked stage 2 must beat unblocked: {best_blocked:.3}s vs {unblocked:.3}s"),
     );
 
     println!("\n== lookahead (stage 2, P=14) ==");
@@ -46,7 +49,12 @@ fn main() {
         "without lookahead: {without:.4}s   ({:.1}% slower)",
         100.0 * (without / with_look - 1.0)
     );
-    assert!(with_look <= without * 1.02, "lookahead must not hurt");
+    ok &= common::bench_check(
+        with_look <= without * 1.02 * tol,
+        &format!("lookahead must not hurt: {with_look:.4}s vs {without:.4}s"),
+    );
 
-    println!("\nshape checks OK (blocked beats unblocked; lookahead helps)");
+    if ok {
+        println!("\nshape checks OK (blocked beats unblocked; lookahead helps)");
+    }
 }

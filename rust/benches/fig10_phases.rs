@@ -30,15 +30,19 @@ fn main() {
         );
     }
 
-    // Shape: scaling improves (or at least holds) with n.
+    // Shape: scaling improves (or at least holds) with n. Timing-sensitive:
+    // soft mode / PALLAS_BENCH_TOL relax it on noisy hardware.
     let total_last = |d: &figures::PhaseData| d.speedups.last().unwrap().3;
+    let mut ok = true;
     if data.len() >= 2 {
         let s_small = total_last(&data[0]);
         let s_big = total_last(data.last().unwrap());
-        assert!(
-            s_big >= s_small * 0.9,
-            "larger n should scale at least as well: {s_small:.2} vs {s_big:.2}"
+        ok = common::bench_check(
+            s_big >= s_small * 0.9 / common::bench_tol(),
+            &format!("larger n should scale at least as well: {s_small:.2} vs {s_big:.2}"),
         );
     }
-    println!("\nshape checks OK");
+    if ok {
+        println!("\nshape checks OK");
+    }
 }

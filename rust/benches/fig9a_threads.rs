@@ -29,7 +29,9 @@ fn main() {
         &rows,
     );
 
-    // Shape assertions (the paper's qualitative claims).
+    // Shape assertions (the paper's qualitative claims). Timing-sensitive:
+    // soft mode / PALLAS_BENCH_TOL relax them on slow or noisy hardware.
+    let tol = common::bench_tol();
     let para = &series[0];
     let p1 = para.points.first().unwrap().1;
     let plast = para.points.last().unwrap().1;
@@ -39,7 +41,12 @@ fn main() {
     if p1 >= 1.0 {
         println!("note: 1-core ParaHT at {p1:.2}x LAPACK (per-flop kernel advantage offsets the extra flops at this n)");
     }
-    assert!(p1 < 1.6, "1-core ParaHT implausibly fast: {p1:.2}");
-    assert!(plast > p1 * 1.5, "ParaHT must scale with P: {p1:.2} -> {plast:.2}");
-    println!("\nshape checks OK (ParaHT scales with P; comparators saturate)");
+    let mut ok = common::bench_check(p1 < 1.6 * tol, &format!("1-core ParaHT implausibly fast: {p1:.2}"));
+    ok &= common::bench_check(
+        plast > p1 * 1.5 / tol,
+        &format!("ParaHT must scale with P: {p1:.2} -> {plast:.2}"),
+    );
+    if ok {
+        println!("\nshape checks OK (ParaHT scales with P; comparators saturate)");
+    }
 }

@@ -1,0 +1,175 @@
+//! Bench: throughput of the packed register-tiled GEMM layer — the
+//! substrate every trailing update funnels through — by shape, `Trans`
+//! combination and thread count, written to `BENCH_gemm.json` so future
+//! changes have a perf trajectory to regress against (EXPERIMENTS.md §Perf
+//! documents the schema).
+//!
+//! Env knobs:
+//! * `PARAHT_GEMM_SIZES=128,256,512` — square sizes to sweep (default).
+//! * `PARAHT_BENCH_OUT=path` — JSON output path (default `BENCH_gemm.json`
+//!   in the working directory, i.e. `rust/` under `cargo bench`).
+//! * `PALLAS_BENCH_SOFT=1` / `PALLAS_BENCH_TOL` — soften / relax the
+//!   parallel-speedup floor (see `experiments::common`).
+
+use paraht::experiments::common;
+use paraht::linalg::gemm::{gemm, gemm_par, Trans};
+use paraht::linalg::matrix::Matrix;
+use paraht::util::flops;
+use paraht::util::rng::Rng;
+use std::fmt::Write as _;
+use std::time::Instant;
+
+/// Thread counts recorded for the parallel sweep (subset of the paper's
+/// Fig. 9a axis that fits CI runners).
+const THREADS: &[usize] = &[1, 2, 4, 7];
+
+struct Case {
+    m: usize,
+    n: usize,
+    k: usize,
+    trans: &'static str,
+    threads: usize,
+    secs: f64,
+    gflops: f64,
+}
+
+/// Best-of-3 wall-clock of one multiply (result kept alive via the output
+/// matrix norm so the kernel cannot be optimized away).
+fn time_gemm(
+    a: &Matrix,
+    ta: Trans,
+    b: &Matrix,
+    tb: Trans,
+    m: usize,
+    n: usize,
+    threads: usize,
+) -> f64 {
+    let mut c = Matrix::zeros(m, n);
+    let mut best = f64::INFINITY;
+    // One warmup + 3 timed reps.
+    for rep in 0..4 {
+        let t = Instant::now();
+        if threads <= 1 {
+            gemm(1.0, a.as_ref(), ta, b.as_ref(), tb, 0.0, c.as_mut());
+        } else {
+            gemm_par(1.0, a.as_ref(), ta, b.as_ref(), tb, 0.0, c.as_mut(), threads);
+        }
+        let secs = t.elapsed().as_secs_f64();
+        if rep > 0 {
+            best = best.min(secs);
+        }
+    }
+    assert!(c.norm_fro().is_finite(), "gemm produced non-finite output");
+    best
+}
+
+fn run_case(
+    cases: &mut Vec<Case>,
+    rng: &mut Rng,
+    (m, n, k): (usize, usize, usize),
+    ta: Trans,
+    tb: Trans,
+    threads: usize,
+) -> f64 {
+    let a = if ta == Trans::No { Matrix::randn(m, k, rng) } else { Matrix::randn(k, m, rng) };
+    let b = if tb == Trans::No { Matrix::randn(k, n, rng) } else { Matrix::randn(n, k, rng) };
+    let secs = time_gemm(&a, ta, &b, tb, m, n, threads);
+    let gflops = 2.0 * (m as f64) * (n as f64) * (k as f64) / secs / 1e9;
+    let trans = match (ta, tb) {
+        (Trans::No, Trans::No) => "NN",
+        (Trans::Yes, Trans::No) => "TN",
+        (Trans::No, Trans::Yes) => "NT",
+        (Trans::Yes, Trans::Yes) => "TT",
+    };
+    println!("{m:>5} x {n:<5} k={k:<5} {trans}  threads={threads}  {secs:>9.4}s  {gflops:>7.2} GFLOP/s");
+    cases.push(Case { m, n, k, trans, threads, secs, gflops });
+    secs
+}
+
+fn main() {
+    flops::set_enabled(false); // measure the kernel, not the counter
+    let mut sizes: Vec<usize> = std::env::var("PARAHT_GEMM_SIZES")
+        .ok()
+        .map(|s| s.split(',').filter_map(|p| p.parse().ok()).collect())
+        .unwrap_or_default();
+    if sizes.is_empty() {
+        sizes = vec![128, 256, 512];
+    }
+    eprintln!("gemm kernels: square sizes {sizes:?} (set PARAHT_GEMM_SIZES to change)");
+    let mut rng = Rng::new(4242);
+    let mut cases: Vec<Case> = Vec::new();
+
+    // Sequential sweep: square NN at every size, all four Trans combos at
+    // the middle size, plus the WY-apply shapes (inner dim = r = 16) and a
+    // tall-skinny panel-update shape.
+    for &s in &sizes {
+        run_case(&mut cases, &mut rng, (s, s, s), Trans::No, Trans::No, 1);
+    }
+    let mid = sizes[sizes.len() / 2];
+    for &(ta, tb) in &[(Trans::Yes, Trans::No), (Trans::No, Trans::Yes), (Trans::Yes, Trans::Yes)] {
+        run_case(&mut cases, &mut rng, (mid, mid, mid), ta, tb, 1);
+    }
+    let wy = sizes.last().copied().unwrap_or(512);
+    run_case(&mut cases, &mut rng, (16, wy, wy), Trans::Yes, Trans::No, 1); // X = Vᵀ C
+    run_case(&mut cases, &mut rng, (wy, wy, 16), Trans::No, Trans::No, 1); // C -= V X
+    run_case(&mut cases, &mut rng, (2048.min(4 * wy), 64, 64), Trans::No, Trans::No, 1);
+
+    // Parallel sweep at the largest size.
+    let big = sizes.last().copied().unwrap_or(512);
+    let mut t1 = f64::NAN;
+    let mut speedups: Vec<(usize, f64)> = Vec::new();
+    for &th in THREADS {
+        let secs = run_case(&mut cases, &mut rng, (big, big, big), Trans::No, Trans::No, th);
+        if th == 1 {
+            t1 = secs;
+        } else {
+            speedups.push((th, t1 / secs));
+        }
+    }
+    for &(th, s) in &speedups {
+        println!("gemm_par n={big}: {th} threads -> {s:.2}x over 1 thread");
+    }
+
+    // Acceptance floor: ≥ 2× at 4 threads for the n=512-class multiply.
+    // Timing-sensitive — soft mode / PALLAS_BENCH_TOL apply (CI runners
+    // may have fewer than 4 physical cores). Evaluated here but asserted
+    // only AFTER the JSON is written, so a hard-mode failure never
+    // discards the measurement run.
+    let s4 = speedups.iter().find(|&&(th, _)| th == 4).map(|&(_, s)| s).unwrap_or(f64::NAN);
+    let ok = s4 >= 2.0 / common::bench_tol();
+
+    // ---- Emit BENCH_gemm.json (schema in EXPERIMENTS.md §Perf). ----
+    let out_path =
+        std::env::var("PARAHT_BENCH_OUT").unwrap_or_else(|_| "BENCH_gemm.json".to_string());
+    let mut j = String::new();
+    j.push_str("{\n  \"schema_version\": 1,\n  \"bench\": \"gemm_kernels\",\n");
+    let _ = writeln!(j, "  \"soft_mode\": {},", common::bench_soft());
+    let _ = writeln!(j, "  \"tolerance\": {},", common::bench_tol());
+    j.push_str("  \"cases\": [\n");
+    for (i, c) in cases.iter().enumerate() {
+        let _ = write!(
+            j,
+            "    {{\"m\": {}, \"n\": {}, \"k\": {}, \"trans\": \"{}\", \"threads\": {}, \"secs\": {:.6}, \"gflops\": {:.3}}}",
+            c.m, c.n, c.k, c.trans, c.threads, c.secs, c.gflops
+        );
+        j.push_str(if i + 1 < cases.len() { ",\n" } else { "\n" });
+    }
+    j.push_str("  ],\n");
+    let _ = write!(j, "  \"par_speedup_n{big}\": {{");
+    for (i, &(th, s)) in speedups.iter().enumerate() {
+        let _ = write!(j, "{}\"x{th}\": {s:.3}", if i > 0 { ", " } else { "" });
+    }
+    j.push_str("},\n");
+    let _ = writeln!(j, "  \"speedup_floor_held\": {ok}");
+    j.push_str("}\n");
+    std::fs::write(&out_path, &j).expect("write BENCH_gemm.json");
+    println!("\nwrote {out_path} ({} cases)", cases.len());
+
+    common::bench_check(
+        ok,
+        &format!("gemm_par at 4 threads must be >= 2x single-thread for n={big}: got {s4:.2}x"),
+    );
+    if ok {
+        println!("shape checks OK (gemm_par 4-thread speedup {s4:.2}x >= 2x)");
+    }
+}

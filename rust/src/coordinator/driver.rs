@@ -5,7 +5,7 @@
 
 use super::graph::TaskTrace;
 use super::recorder::PhaseRecorder;
-use super::sim::simulate_makespan;
+use super::sim::Simulator;
 use super::stage1_par::{reduce_to_banded_par, ExecMode};
 use super::stage2_par::reduce_blocked_par;
 use crate::baselines::one_stage::{OneStageOpts, OppositeMethod};
@@ -95,21 +95,25 @@ impl SpeedupCurve {
     }
 }
 
-/// Simulate a ParaHT trace pair over the worker counts.
+/// Simulate a ParaHT trace pair over the worker counts. One memoized
+/// [`Simulator`] per stage: the whole sweep costs at most `max(ps)` greedy
+/// replays per stage instead of `Σ ps` (the quadratic blow-up the ROADMAP
+/// flagged for large experiment sweeps).
 pub fn paraht_curve(traces: &(TaskTrace, TaskTrace), ps: &[usize]) -> SpeedupCurve {
     let t1 = traces.0.total().as_secs_f64() + traces.1.total().as_secs_f64();
+    let mut sim1 = Simulator::new(&traces.0);
+    let mut sim2 = Simulator::new(&traces.1);
     let points = ps
         .iter()
-        .map(|&p| {
-            let m1 = simulate_makespan(&traces.0, p).makespan;
-            let m2 = simulate_makespan(&traces.1, p).makespan;
-            (p, m1 + m2)
-        })
+        .map(|&p| (p, sim1.result(p).makespan + sim2.result(p).makespan))
         .collect();
     SpeedupCurve { name: "ParaHT", t1, points }
 }
 
 /// Simulate a barrier-structured comparator trace over the worker counts.
+/// The recorder trace depends only on the slice count `slices.max(p)`, so
+/// one memoized [`Simulator`] is kept per distinct slice count (a single
+/// one for the common `max(ps) <= slices` case).
 pub fn recorder_curve(
     name: &'static str,
     rec: &PhaseRecorder,
@@ -117,11 +121,19 @@ pub fn recorder_curve(
     slices: usize,
 ) -> SpeedupCurve {
     let t1 = rec.total_secs();
+    let mut sims: Vec<(usize, Simulator)> = Vec::new();
     let points = ps
         .iter()
         .map(|&p| {
-            let tr = rec.to_trace(slices.max(p));
-            (p, simulate_makespan(&tr, p).makespan)
+            let sc = slices.max(p);
+            let idx = match sims.iter().position(|(c, _)| *c == sc) {
+                Some(i) => i,
+                None => {
+                    sims.push((sc, Simulator::new(&rec.to_trace(sc))));
+                    sims.len() - 1
+                }
+            };
+            (p, sims[idx].1.result(p).makespan)
         })
         .collect();
     SpeedupCurve { name, t1, points }

@@ -42,6 +42,9 @@ pub enum TaskClass {
     BaseSeq,
     /// Baseline: parallel-BLAS-like batched update slice.
     BaseBlas,
+    /// Data-parallel kernel slice (one `C` panel of a `gemm_par` /
+    /// `WyRep::apply_par` call) — no dependencies, pure throughput.
+    Gemm,
 }
 
 /// A node in the task graph.

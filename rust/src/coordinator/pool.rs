@@ -8,7 +8,7 @@
 //! queue — "we chose to let the dynamic scheduler handle these load
 //! imbalances."
 
-use super::graph::TaskGraph;
+use super::graph::{TaskClass, TaskGraph};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
@@ -108,6 +108,33 @@ pub fn run_parallel(mut graph: TaskGraph<'_>, threads: usize) {
     });
 }
 
+/// Execute independent closures on the worker pool — the data-parallel
+/// entry used by `linalg::gemm::gemm_par` and `WyRep::apply_par` to
+/// saturate cores when the dataflow graph itself yields too few slices.
+///
+/// Semantically a degenerate task graph (no accesses → no edges → every
+/// task immediately ready); sharing [`run_parallel`] keeps one scheduler
+/// implementation for both dataflow and data-parallel work. `threads <= 1`
+/// (or a single task) runs inline on the caller with no graph overhead.
+pub fn run_data_parallel<'a>(tasks: Vec<Box<dyn FnOnce() + Send + 'a>>, threads: usize) {
+    if tasks.is_empty() {
+        return;
+    }
+    if threads <= 1 || tasks.len() == 1 {
+        for t in tasks {
+            t();
+        }
+        return;
+    }
+    let workers = threads.min(tasks.len());
+    let mut g = TaskGraph::new();
+    for t in tasks {
+        g.add(TaskClass::Gemm, Vec::new(), t);
+    }
+    g.finalize();
+    run_parallel(g, workers);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -182,5 +209,21 @@ mod tests {
     fn empty_graph_ok() {
         let g = TaskGraph::new();
         run_parallel(g, 4);
+    }
+
+    #[test]
+    fn data_parallel_runs_every_task() {
+        for threads in [1usize, 2, 4, 9] {
+            let cells: Vec<AtomicUsize> = (0..17).map(|_| AtomicUsize::new(0)).collect();
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = cells
+                .iter()
+                .map(|c| Box::new(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                }) as Box<dyn FnOnce() + Send + '_>)
+                .collect();
+            run_data_parallel(tasks, threads);
+            assert!(cells.iter().all(|c| c.load(Ordering::SeqCst) == 1), "threads={threads}");
+        }
+        run_data_parallel(Vec::new(), 4); // empty is a no-op
     }
 }

@@ -29,7 +29,9 @@ pub struct SimResult {
     pub utilization: f64,
 }
 
-/// Simulate greedy FIFO list scheduling of the traced DAG on `p` workers.
+/// Reusable makespan simulator for one trace: the DAG structure, critical
+/// path and — crucially — the per-worker-count greedy replays are computed
+/// once and memoized across queries.
 ///
 /// Monotonicity: plain greedy list scheduling is subject to Graham's
 /// scheduling anomalies — adding workers can *increase* the makespan on
@@ -42,52 +44,118 @@ pub struct SimResult {
 /// a feasible `p`-worker schedule. For `p ≥ #tasks` greedy is exact (every
 /// task starts the moment its dependencies finish), so the makespan is the
 /// critical path and no sweep is needed.
-pub fn simulate_makespan(trace: &TaskTrace, p: usize) -> SimResult {
-    assert!(p >= 1);
-    let n = trace.durations.len();
-    let dur: Vec<f64> = trace.durations.iter().map(Duration::as_secs_f64).collect();
-    let total_work: f64 = dur.iter().sum();
-    if n == 0 {
-        return SimResult { makespan: 0.0, total_work: 0.0, critical_path: 0.0, utilization: 1.0 };
-    }
+///
+/// The one-shot [`simulate_makespan`] needs up to `p` greedy replays for
+/// the best-over-`1..=p` sweep; a P-sweep of one-shot calls is therefore
+/// quadratic in the largest P. `Simulator` keeps the prefix minima, so a
+/// whole sweep costs at most `max(P)` replays total — and stops replaying
+/// entirely once the critical-path lower bound is reached.
+pub struct Simulator {
+    dur: Vec<f64>,
+    indeg0: Vec<usize>,
+    succs: Vec<Vec<usize>>,
+    total_work: f64,
+    critical_path: f64,
+    /// `best[w-1]` = min greedy makespan over effective worker counts
+    /// `1..=w` (prefix minima, grown lazily).
+    best: Vec<f64>,
+    /// Set once the prefix minimum hits the critical path: no further
+    /// replay can improve, so larger counts are filled without simulating.
+    saturated: bool,
+}
 
-    // Successor lists + indegrees.
-    let mut indeg0 = vec![0usize; n];
-    let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n];
-    for (id, deps) in trace.deps.iter().enumerate() {
-        indeg0[id] = deps.len();
-        for &d in deps {
-            succs[d].push(id);
-        }
-    }
-
-    // Critical path (longest path; submission order is topological).
-    let mut cp = vec![0.0f64; n];
-    for id in 0..n {
-        let start: f64 = trace.deps[id].iter().map(|&d| cp[d]).fold(0.0, f64::max);
-        cp[id] = start + dur[id];
-    }
-    let critical_path = cp.iter().cloned().fold(0.0, f64::max);
-
-    let makespan = if p >= n {
-        critical_path
-    } else {
-        let mut best = f64::INFINITY;
-        for workers in (1..=p).rev() {
-            best = best.min(greedy_fifo_makespan(&dur, &indeg0, &succs, workers));
-            if best <= critical_path {
-                break; // lower bound reached; smaller p' cannot improve
+impl Simulator {
+    /// Build the simulator for a trace (copies the structure out, so the
+    /// trace may be dropped).
+    pub fn new(trace: &TaskTrace) -> Simulator {
+        let n = trace.durations.len();
+        let dur: Vec<f64> = trace.durations.iter().map(Duration::as_secs_f64).collect();
+        let total_work: f64 = dur.iter().sum();
+        let mut indeg0 = vec![0usize; n];
+        let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (id, deps) in trace.deps.iter().enumerate() {
+            indeg0[id] = deps.len();
+            for &d in deps {
+                succs[d].push(id);
             }
         }
-        best
-    };
-
-    SimResult {
-        makespan,
-        total_work,
-        critical_path,
-        utilization: if makespan > 0.0 { total_work / (makespan * p as f64) } else { 1.0 },
+        // Critical path (longest path; submission order is topological).
+        let mut cp = vec![0.0f64; n];
+        for id in 0..n {
+            let start: f64 = trace.deps[id].iter().map(|&d| cp[d]).fold(0.0, f64::max);
+            cp[id] = start + dur[id];
+        }
+        let critical_path = cp.iter().cloned().fold(0.0, f64::max);
+        Simulator {
+            dur,
+            indeg0,
+            succs,
+            total_work,
+            critical_path,
+            best: Vec::new(),
+            saturated: false,
+        }
     }
+
+    /// Critical-path length (the `P = ∞` bound).
+    pub fn critical_path(&self) -> f64 {
+        self.critical_path
+    }
+
+    /// Total work (the `P = 1` time).
+    pub fn total_work(&self) -> f64 {
+        self.total_work
+    }
+
+    /// Grow the memoized prefix minima up to worker count `p`.
+    fn ensure(&mut self, p: usize) {
+        while self.best.len() < p {
+            let w = self.best.len() + 1;
+            let prev = self.best.last().copied().unwrap_or(f64::INFINITY);
+            let val = if self.saturated {
+                prev
+            } else {
+                prev.min(greedy_fifo_makespan(&self.dur, &self.indeg0, &self.succs, w))
+            };
+            if val <= self.critical_path {
+                self.saturated = true;
+            }
+            self.best.push(val);
+        }
+    }
+
+    /// Simulate `p` workers (memoized; same value as [`simulate_makespan`]).
+    pub fn result(&mut self, p: usize) -> SimResult {
+        assert!(p >= 1);
+        let n = self.dur.len();
+        if n == 0 {
+            return SimResult { makespan: 0.0, total_work: 0.0, critical_path: 0.0, utilization: 1.0 };
+        }
+        let makespan = if p >= n {
+            self.critical_path
+        } else {
+            self.ensure(p);
+            self.best[p - 1]
+        };
+        SimResult {
+            makespan,
+            total_work: self.total_work,
+            critical_path: self.critical_path,
+            utilization: if makespan > 0.0 {
+                self.total_work / (makespan * p as f64)
+            } else {
+                1.0
+            },
+        }
+    }
+}
+
+/// One-shot convenience wrapper around [`Simulator`]. Sweeping many `p`
+/// over the same trace should construct one `Simulator` and query it
+/// instead (each one-shot call rebuilds the structure and replays up to
+/// `p` greedy schedules).
+pub fn simulate_makespan(trace: &TaskTrace, p: usize) -> SimResult {
+    Simulator::new(trace).result(p)
 }
 
 /// One greedy FIFO list-scheduling replay on exactly `workers` workers:
@@ -199,5 +267,36 @@ mod tests {
         let tr = mk_trace(&[3, 3, 3], vec![vec![], vec![], vec![]]);
         let r = simulate_makespan(&tr, 2);
         assert!((r.makespan - 0.006).abs() < 1e-9);
+    }
+
+    #[test]
+    fn memoized_sweep_matches_one_shot() {
+        // A shared Simulator must return exactly the one-shot values, in
+        // any query order, including repeats and the p >= n shortcut.
+        let mut deps = vec![vec![]];
+        for i in 1..30usize {
+            deps.push(vec![i / 3]);
+        }
+        let durs: Vec<u64> = (1..=30).map(|i| (i * 5 % 11 + 1) as u64).collect();
+        let tr = mk_trace(&durs, deps);
+        let mut sim = Simulator::new(&tr);
+        for p in [16usize, 2, 8, 2, 1, 64, 4] {
+            let memo = sim.result(p);
+            let fresh = simulate_makespan(&tr, p);
+            assert_eq!(memo.makespan, fresh.makespan, "p={p}");
+            assert_eq!(memo.critical_path, fresh.critical_path);
+            assert_eq!(memo.total_work, fresh.total_work);
+        }
+        assert!((sim.total_work() - tr.total().as_secs_f64()).abs() < 1e-12);
+        assert!(sim.critical_path() <= sim.total_work() + 1e-12);
+    }
+
+    #[test]
+    fn empty_trace_simulator() {
+        let tr = mk_trace(&[], vec![]);
+        let mut sim = Simulator::new(&tr);
+        let r = sim.result(3);
+        assert_eq!(r.makespan, 0.0);
+        assert_eq!(r.utilization, 1.0);
     }
 }

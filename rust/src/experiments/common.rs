@@ -55,13 +55,12 @@ pub fn paraht_stage_makespans(
 ) -> (Vec<(usize, f64, f64)>, f64, f64) {
     let run = run_paraht(&pencil.a, &pencil.b, cfg, ExecMode::Trace).expect("paraht run");
     let traces = run.traces.expect("trace mode");
+    // One memoized simulator per stage across the whole P sweep.
+    let mut sim1 = crate::coordinator::sim::Simulator::new(&traces.0);
+    let mut sim2 = crate::coordinator::sim::Simulator::new(&traces.1);
     let pts = ps
         .iter()
-        .map(|&p| {
-            let m1 = crate::coordinator::sim::simulate_makespan(&traces.0, p).makespan;
-            let m2 = crate::coordinator::sim::simulate_makespan(&traces.1, p).makespan;
-            (p, m1, m2)
-        })
+        .map(|&p| (p, sim1.result(p).makespan, sim2.result(p).makespan))
         .collect();
     (
         pts,
@@ -96,7 +95,74 @@ pub fn monotone_nonincreasing(xs: &[f64], slack: f64) -> bool {
     xs.windows(2).all(|w| w[1] <= w[0] * (1.0 + slack))
 }
 
+/// First set value among the given env names.
+fn env_first(names: &[&str]) -> Option<String> {
+    names.iter().find_map(|n| std::env::var(n).ok())
+}
+
+/// Whether the benches run in *soft* mode (`PALLAS_BENCH_SOFT=1`; the
+/// crate-prefixed `PARAHT_BENCH_SOFT` is accepted as an alias): the
+/// timing-sensitive shape assertions (blocked-beats-unblocked,
+/// scaling-grows-with-n, parallel-speedup floors) print a `SOFT-FAIL`
+/// warning instead of aborting. For CI and slow/noisy hardware, where
+/// wall-clock ratios are not trustworthy; structural assertions (flop
+/// counts, IterHT divergence, finiteness) stay hard in either mode.
+pub fn bench_soft() -> bool {
+    env_first(&["PALLAS_BENCH_SOFT", "PARAHT_BENCH_SOFT"])
+        .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+        .unwrap_or(false)
+}
+
+/// Tolerance multiplier for timing thresholds (`PALLAS_BENCH_TOL`, alias
+/// `PARAHT_BENCH_TOL`; default 1.0). A value of `t > 1` relaxes every
+/// timing-sensitive bench threshold by that factor (e.g.
+/// `PALLAS_BENCH_TOL=1.5` accepts a 1.5× miss) without disabling the check
+/// outright the way soft mode does.
+pub fn bench_tol() -> f64 {
+    env_first(&["PALLAS_BENCH_TOL", "PARAHT_BENCH_TOL"])
+        .and_then(|s| s.parse::<f64>().ok())
+        .filter(|t| t.is_finite() && *t >= 1.0)
+        .unwrap_or(1.0)
+}
+
+/// Check a timing-sensitive bench claim: panics like `assert!` by default,
+/// warns in soft mode (see [`bench_soft`]). Returns whether it held.
+pub fn bench_check(cond: bool, msg: &str) -> bool {
+    if cond {
+        true
+    } else if bench_soft() {
+        eprintln!("SOFT-FAIL (PALLAS_BENCH_SOFT=1, not aborting): {msg}");
+        false
+    } else {
+        panic!("{msg} (set PALLAS_BENCH_SOFT=1 to warn instead, or raise PALLAS_BENCH_TOL)");
+    }
+}
+
 /// Identity matrix shorthand used by example drivers.
 pub fn eye(n: usize) -> Matrix {
     Matrix::identity(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_check_passes_silently() {
+        // A holding condition never consults the env (safe under parallel
+        // test execution, which must not set PALLAS_BENCH_* globally).
+        assert!(bench_check(true, "never shown"));
+    }
+
+    #[test]
+    fn bench_tol_is_at_least_one() {
+        assert!(bench_tol() >= 1.0);
+    }
+
+    #[test]
+    fn monotone_helper() {
+        assert!(monotone_nonincreasing(&[3.0, 2.0, 2.0, 1.0], 0.0));
+        assert!(!monotone_nonincreasing(&[1.0, 2.0], 0.0));
+        assert!(monotone_nonincreasing(&[1.0, 1.05], 0.1));
+    }
 }

@@ -144,17 +144,22 @@ pub fn reduce_to_banded(
         let (j, je) = (plan.j, plan.je);
 
         // ---- Left pass: QR blocks bottom-up (paper lines 7–15). ----
+        // The trailing updates go through `apply_par`, which splits the
+        // free dimension over `cfg.threads` pool workers and is bitwise
+        // identical to the sequential apply (slicing-invariant kernels) —
+        // so this driver stays the exact oracle for the coordinator's task
+        // graph while saturating cores when the graph itself is not used.
         for &(i1, i2e) in plan.blocks.iter().rev() {
             if i2e <= i1 {
                 continue;
             }
             let q_wy = factor_panel_block(a.sub_mut(i1..i2e, j..je));
             // paper l.12: A(i1:i2, j2+1:n) = Q̂ᵀ A(i1:i2, j2+1:n)
-            q_wy.apply(Side::Left, Trans::Yes, a.sub_mut(i1..i2e, je..n));
+            q_wy.apply_par(Side::Left, Trans::Yes, a.sub_mut(i1..i2e, je..n), cfg.threads);
             // paper l.13: B(i1:i2, i1:n) = Q̂ᵀ B(i1:i2, i1:n)
-            q_wy.apply(Side::Left, Trans::Yes, b.sub_mut(i1..i2e, i1..n));
+            q_wy.apply_par(Side::Left, Trans::Yes, b.sub_mut(i1..i2e, i1..n), cfg.threads);
             // paper l.14: Q(1:n, i1:i2) = Q(1:n, i1:i2) Q̂
-            q_wy.apply(Side::Right, Trans::No, q.sub_mut(0..n, i1..i2e));
+            q_wy.apply_par(Side::Right, Trans::No, q.sub_mut(0..n, i1..i2e), cfg.threads);
         }
 
         // ---- Right pass: opposite reflectors bottom-up (lines 16–24). ----
@@ -166,11 +171,11 @@ pub fn reduce_to_banded(
             let t = nb.min(s);
             let z_wy = opposite_reflector(b.sub(i1..i2e, i1..i2e), nb);
             // paper l.21: A(1:n, i1:i2) = A(1:n, i1:i2) Ẑ
-            z_wy.apply(Side::Right, Trans::No, a.sub_mut(0..n, i1..i2e));
+            z_wy.apply_par(Side::Right, Trans::No, a.sub_mut(0..n, i1..i2e), cfg.threads);
             // paper l.22: B(1:i2, i1:i2) = B(1:i2, i1:i2) Ẑ
-            z_wy.apply(Side::Right, Trans::No, b.sub_mut(0..i2e, i1..i2e));
+            z_wy.apply_par(Side::Right, Trans::No, b.sub_mut(0..i2e, i1..i2e), cfg.threads);
             // paper l.23: Z(1:n, i1:i2) = Z(1:n, i1:i2) Ẑ
-            z_wy.apply(Side::Right, Trans::No, z.sub_mut(0..n, i1..i2e));
+            z_wy.apply_par(Side::Right, Trans::No, z.sub_mut(0..n, i1..i2e), cfg.threads);
             flush_b_subdiagonal(b.sub_mut(i1..i2e, i1..i2e), t);
         }
     }

@@ -4,8 +4,9 @@
 //! and orthogonal. `larfg` generates a reflector that maps a vector onto
 //! `±‖x‖ e₁`; `larf_left`/`larf_right` apply one reflector to a matrix view.
 
-use super::blas1::{axpy, dot, nrm2};
-use super::matrix::MatMut;
+use super::blas1::nrm2;
+use super::gemm::{gemm, Trans};
+use super::matrix::{MatMut, MatRef};
 use crate::util::flops;
 
 /// Generate a Householder reflector for the vector `[alpha, x...]`.
@@ -30,41 +31,57 @@ pub fn larfg(alpha: f64, x: &mut [f64]) -> (f64, f64) {
     (beta, tau)
 }
 
+/// View a slice as an `n×1` column (the GEMV/GER shapes below).
+#[inline]
+fn as_col(v: &[f64]) -> MatRef<'_> {
+    // SAFETY: a slice borrow is exactly the contract from_raw_parts wants
+    // (n contiguous elements, immutable for the view's lifetime).
+    unsafe { MatRef::from_raw_parts(v.as_ptr(), v.len(), 1, v.len().max(1)) }
+}
+
 /// Apply `H = I − τ v vᵀ` from the left: `C := H C`.
 ///
 /// `v` has length `C.rows()` with `v[0]` stored explicitly (callers pass the
-/// materialized vector including the leading 1).
-pub fn larf_left(v: &[f64], tau: f64, mut c: MatMut<'_>) {
+/// materialized vector including the leading 1). Routed through `gemm` as
+/// a GEMV + rank-1 update pair (`w = Cᵀv`, `C −= τ·v·wᵀ`); gemm dispatches
+/// these `n == 1` / `k == 1` shapes to pack-free fast paths, and the calls
+/// count the same `4·len·cols` flops the old scalar loop did.
+pub fn larf_left(v: &[f64], tau: f64, c: MatMut<'_>) {
     debug_assert_eq!(v.len(), c.rows());
     if tau == 0.0 || c.rows() == 0 || c.cols() == 0 {
         return;
     }
-    flops::add(4 * (v.len() as u64) * (c.cols() as u64));
-    for j in 0..c.cols() {
-        let cj = c.col_mut(j);
-        let w = dot(v, cj); // vᵀ C[:,j]
-        axpy(-tau * w, v, cj); // C[:,j] -= τ (vᵀC_j) v
+    let n = c.cols();
+    let mut w = vec![0.0; n];
+    let vm = as_col(v);
+    // w = Cᵀ v (n×1)
+    {
+        let wm = unsafe { MatMut::from_raw_parts(w.as_mut_ptr(), n, 1, n) };
+        gemm(1.0, c.rb(), Trans::Yes, vm, Trans::No, 0.0, wm);
     }
+    // C -= τ v wᵀ
+    gemm(-tau, vm, Trans::No, as_col(&w), Trans::Yes, 1.0, c);
 }
 
 /// Apply `H = I − τ v vᵀ` from the right: `C := C H`.
 ///
-/// `v` has length `C.cols()`.
-pub fn larf_right(v: &[f64], tau: f64, mut c: MatMut<'_>) {
+/// `v` has length `C.cols()`. Same GEMM routing as [`larf_left`]:
+/// `w = C·v`, then `C −= τ·w·vᵀ`.
+pub fn larf_right(v: &[f64], tau: f64, c: MatMut<'_>) {
     debug_assert_eq!(v.len(), c.cols());
     if tau == 0.0 || c.rows() == 0 || c.cols() == 0 {
         return;
     }
     let m = c.rows();
-    flops::add(4 * (v.len() as u64) * (m as u64));
-    // w = C v  (m-vector), then C -= τ w vᵀ.
     let mut w = vec![0.0; m];
-    for j in 0..c.cols() {
-        axpy(v[j], c.rb().col(j), &mut w);
+    let vm = as_col(v);
+    // w = C v (m×1)
+    {
+        let wm = unsafe { MatMut::from_raw_parts(w.as_mut_ptr(), m, 1, m) };
+        gemm(1.0, c.rb(), Trans::No, vm, Trans::No, 0.0, wm);
     }
-    for j in 0..c.cols() {
-        axpy(-tau * v[j], &w, c.col_mut(j));
-    }
+    // C -= τ w vᵀ
+    gemm(-tau, as_col(&w), Trans::No, vm, Trans::Yes, 1.0, c);
 }
 
 /// A stored reflector: the full `v` (leading 1 materialized) and `τ`.

@@ -16,6 +16,6 @@ pub mod rq;
 pub mod verify;
 pub mod wy;
 
-pub use gemm::{gemm, matmul, matmul_t, Trans};
+pub use gemm::{gemm, gemm_par, matmul, matmul_t, Trans};
 pub use matrix::{MatMut, MatRef, Matrix};
 pub use wy::{Side, WyRep};

@@ -115,6 +115,52 @@ impl WyRep {
         self.apply(Side::Left, Trans::No, q.as_mut());
         q
     }
+
+    /// Parallel block-reflector application: identical results to
+    /// [`WyRep::apply`] **bitwise** — the free dimension of `C` (columns for
+    /// `Left`, rows for `Right`) is split into panels and each panel runs
+    /// the full apply pipeline (GEMM → `trmm_upper*` → GEMM) as an
+    /// independent task on the coordinator's worker pool. All three kernels
+    /// are slicing-invariant (each output element's accumulation order does
+    /// not depend on the panel it is computed in — see the determinism
+    /// contract in [`crate::linalg::gemm`]), so any panel count, including
+    /// 1, produces the same bits. Falls back to the sequential apply when
+    /// `threads <= 1` or the update is too small to amortize thread
+    /// startup.
+    pub fn apply_par(&self, side: Side, trans: Trans, c: MatMut<'_>, threads: usize) {
+        let k = self.k();
+        if k == 0 {
+            return;
+        }
+        // ~4mnk flops in the two GEMMs; below the shared gemm_par threshold
+        // the scoped-thread startup costs more than it saves.
+        let work = 4usize
+            .saturating_mul(c.rows())
+            .saturating_mul(c.cols())
+            .saturating_mul(k);
+        let free = match side {
+            Side::Left => c.cols(),
+            Side::Right => c.rows(),
+        };
+        if threads <= 1 || free < 2 || work < super::gemm::PAR_MIN_FLOPS {
+            self.apply(side, trans, c);
+            return;
+        }
+        let panels = crate::coordinator::slices::partition(0..free, threads);
+        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(panels.len());
+        let mut rest = c;
+        let mut consumed = 0;
+        for r in panels {
+            let (panel, right) = match side {
+                Side::Left => rest.split_at_col(r.end - consumed),
+                Side::Right => rest.split_at_row(r.end - consumed),
+            };
+            consumed = r.end;
+            rest = right;
+            tasks.push(Box::new(move || self.apply(side, trans, panel)));
+        }
+        crate::coordinator::pool::run_data_parallel(tasks, threads);
+    }
 }
 
 /// `X := op(T)·X` for `T` `k×k` upper triangular (small `k`; in-place).
@@ -308,6 +354,42 @@ mod tests {
             trmm_upper_right(tr, t.as_ref(), y.as_mut());
             let want = crate::linalg::gemm::matmul_t(&y0, Trans::No, &t, tr);
             assert!(rel(&y, &want) < 1e-13, "right trmm {tr:?}");
+        }
+    }
+
+    #[test]
+    fn apply_par_bitwise_equals_apply() {
+        let mut rng = Rng::new(9);
+        // Big enough that the parallel path actually engages
+        // (4·m·n·k ≥ 2·10⁶ for the left case below).
+        let (m, k) = (130usize, 16usize);
+        let (v, taus, _) = random_reflectors(m, k, &mut rng);
+        let wy = WyRep::from_reflectors(v, &taus);
+        let c = Matrix::randn(m, 260, &mut rng);
+        let d = Matrix::randn(260, m, &mut rng);
+        for &tr in &[Trans::No, Trans::Yes] {
+            let mut want = c.clone();
+            wy.apply(Side::Left, tr, want.as_mut());
+            for threads in [2usize, 3, 7] {
+                let mut got = c.clone();
+                wy.apply_par(Side::Left, tr, got.as_mut(), threads);
+                assert_eq!(
+                    crate::util::proptest::max_abs_diff(&got, &want),
+                    0.0,
+                    "left {tr:?} threads={threads}"
+                );
+            }
+            let mut want = d.clone();
+            wy.apply(Side::Right, tr, want.as_mut());
+            for threads in [2usize, 5] {
+                let mut got = d.clone();
+                wy.apply_par(Side::Right, tr, got.as_mut(), threads);
+                assert_eq!(
+                    crate::util::proptest::max_abs_diff(&got, &want),
+                    0.0,
+                    "right {tr:?} threads={threads}"
+                );
+            }
         }
     }
 

@@ -55,13 +55,13 @@ pub fn gen_square_dim(rng: &mut Rng, max: usize) -> usize {
 
 /// Draw a rectangular `(rows, cols)` pair, each in `[1, max]`, with a bias
 /// toward tall and wide aspect ratios (one dimension re-drawn small 2/3 of
-/// the time: 1/3 wide-ish, 1/3 tall-ish, 1/3 unconstrained).
+/// the time: 1/3 tall-ish, 1/3 wide-ish, 1/3 unconstrained).
 pub fn gen_rect_dims(rng: &mut Rng, max: usize) -> (usize, usize) {
     let m = 1 + rng.below(max.max(1));
     let n = 1 + rng.below(max.max(1));
     match rng.below(3) {
-        0 => (m, 1 + rng.below(4.min(max.max(1)))), // wide-ish: few columns
-        1 => (1 + rng.below(4.min(max.max(1))), n), // tall-ish: few rows
+        0 => (m, 1 + rng.below(4.min(max.max(1)))), // tall-ish: few columns
+        1 => (1 + rng.below(4.min(max.max(1))), n), // wide-ish: few rows
         _ => (m, n),
     }
 }

@@ -4,7 +4,7 @@
 //! application equivalence, over randomized square / rectangular /
 //! degenerate shapes.
 
-use paraht::linalg::gemm::{matmul, matmul_t, Trans};
+use paraht::linalg::gemm::{gemm, gemm_par, matmul, matmul_t, Trans};
 use paraht::linalg::householder::{larf_left, Reflector};
 use paraht::linalg::lu::LuFactor;
 use paraht::linalg::matrix::Matrix;
@@ -21,6 +21,126 @@ fn orth_residual(q: &Matrix) -> f64 {
     let n = q.cols();
     let qtq = matmul_t(q, Trans::Yes, q, Trans::No);
     rel_diff(&qtq, &Matrix::identity(n)) / (n as f64).max(1.0).sqrt()
+}
+
+/// Naive triple-loop reference: `alpha·op(A)·op(B) + beta·C0`.
+fn gemm_reference(
+    alpha: f64,
+    a: &Matrix,
+    ta: Trans,
+    b: &Matrix,
+    tb: Trans,
+    beta: f64,
+    c0: &Matrix,
+) -> Matrix {
+    let (m, k) = if ta == Trans::No { (a.rows(), a.cols()) } else { (a.cols(), a.rows()) };
+    let n = if tb == Trans::No { b.cols() } else { b.rows() };
+    Matrix::from_fn(m, n, |i, j| {
+        let mut s = 0.0;
+        for l in 0..k {
+            let av = if ta == Trans::No { a[(i, l)] } else { a[(l, i)] };
+            let bv = if tb == Trans::No { b[(l, j)] } else { b[(j, l)] };
+            s += av * bv;
+        }
+        alpha * s + beta * c0[(i, j)]
+    })
+}
+
+#[test]
+fn property_gemm_matches_naive_reference() {
+    // All four Trans combos × alpha/beta corner cases over randomized
+    // shapes biased toward tile boundaries and degenerate (1×1, odd,
+    // tall-skinny) cases. Tolerance: the packed kernel and the naive loop
+    // differ only by summation-order rounding, O(k·eps) relative.
+    for_each_case(60, 0x9a01, |rng| {
+        let (m, n) = gen_shape(rng, 40);
+        // Inner dim: 1-in-3 degenerate/small, else up to a KC-crossing 300.
+        let k = match rng.below(3) {
+            0 => 1 + rng.below(3),
+            1 => 1 + rng.below(40),
+            _ => 250 + rng.below(60),
+        };
+        let alphas = [1.0, -1.0, 0.0, 2.5];
+        let betas = [0.0, 1.0, -0.5];
+        let alpha = alphas[rng.below(alphas.len())];
+        let beta = betas[rng.below(betas.len())];
+        let ta = if rng.below(2) == 0 { Trans::No } else { Trans::Yes };
+        let tb = if rng.below(2) == 0 { Trans::No } else { Trans::Yes };
+        let a = if ta == Trans::No { Matrix::randn(m, k, rng) } else { Matrix::randn(k, m, rng) };
+        let b = if tb == Trans::No { Matrix::randn(k, n, rng) } else { Matrix::randn(n, k, rng) };
+        let c0 = Matrix::randn(m, n, rng);
+        let want = gemm_reference(alpha, &a, ta, &b, tb, beta, &c0);
+        let mut got = c0.clone();
+        gemm(alpha, a.as_ref(), ta, b.as_ref(), tb, beta, got.as_mut());
+        // ~ulp-scale with √k rounding growth; floor at 1e-13.
+        let tol = (1e-14 * (k as f64 + 1.0).sqrt()).max(1e-13);
+        check_rel(
+            &format!("gemm {m}x{n}x{k} {ta:?}{tb:?} a={alpha} b={beta}"),
+            rel_diff(&got, &want),
+            tol,
+        )?;
+        Ok(())
+    });
+}
+
+#[test]
+fn property_gemm_par_bitwise_equals_gemm() {
+    // The determinism contract: any thread count gives exactly the bits of
+    // the sequential kernel (this is what lets the coordinator slice the
+    // trailing updates freely).
+    for_each_case(20, 0x9a02, |rng| {
+        let m = 40 + rng.below(120);
+        let n = 40 + rng.below(120);
+        let k = 30 + rng.below(260);
+        let a = Matrix::randn(m, k, rng);
+        let b = Matrix::randn(k, n, rng);
+        let c0 = Matrix::randn(m, n, rng);
+        let mut want = c0.clone();
+        gemm(1.0, a.as_ref(), Trans::No, b.as_ref(), Trans::No, 1.0, want.as_mut());
+        let threads = 2 + rng.below(6);
+        let mut got = c0.clone();
+        gemm_par(1.0, a.as_ref(), Trans::No, b.as_ref(), Trans::No, 1.0, got.as_mut(), threads);
+        check_that(
+            &format!("gemm_par {m}x{n}x{k} threads={threads} bitwise"),
+            max_abs_diff(&got, &want) == 0.0,
+        )?;
+        Ok(())
+    });
+}
+
+#[test]
+fn property_gemm_column_slicing_invariance() {
+    // Computing C in arbitrary column panels reproduces the full-call bits
+    // — the exact property the parallel apply tasks rely on.
+    for_each_case(20, 0x9a03, |rng| {
+        let m = 10 + rng.below(60);
+        let n = 10 + rng.below(60);
+        let k = 1 + rng.below(280);
+        let a = Matrix::randn(m, k, rng);
+        let b = Matrix::randn(k, n, rng);
+        let full = matmul(&a, &b);
+        let split = 1 + rng.below(n);
+        let mut c = Matrix::zeros(m, n);
+        let mut j = 0;
+        while j < n {
+            let je = (j + split).min(n);
+            gemm(
+                1.0,
+                a.as_ref(),
+                Trans::No,
+                b.sub(0..k, j..je),
+                Trans::No,
+                0.0,
+                c.sub_mut(0..m, j..je),
+            );
+            j = je;
+        }
+        check_that(
+            &format!("column slicing {m}x{n}x{k} split={split}"),
+            max_abs_diff(&c, &full) == 0.0,
+        )?;
+        Ok(())
+    });
 }
 
 #[test]
