@@ -5,8 +5,14 @@
 //! Paper shape: ~2x over HouseHT; slightly slower than LAPACK for small
 //! matrices growing to ~4x for large ones; IterHT ahead except when it
 //! needs a second iteration.
+//!
+//! Writes `BENCH_fig9b.json` (override: `PARAHT_BENCH_OUT`) for the CI
+//! perf trajectory — before the shape assertion, so a hard-mode failure
+//! never discards the data. Non-finite ratios (IterHT divergence) are
+//! recorded as `null`.
 
 use paraht::experiments::{common, figures};
+use std::fmt::Write as _;
 
 fn main() {
     let sizes: Vec<usize> = std::env::var("PARAHT_BENCH_SIZES")
@@ -28,8 +34,28 @@ fn main() {
     // envs relax it on noisy hardware.
     let first = rows.first().unwrap().over_lapack;
     let last = rows.last().unwrap().over_lapack;
+    let cond_grows = last > first / common::bench_tol();
+
+    // ---- Emit BENCH_fig9b.json. ----
+    let mut body = String::new();
+    body.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let _ = write!(
+            body,
+            "    {{\"n\": {}, \"over_lapack\": {}, \"over_househt\": {}, \"over_iterht\": {}}}",
+            r.n,
+            common::json_num(r.over_lapack),
+            common::json_num(r.over_househt),
+            common::json_num(r.over_iterht)
+        );
+        body.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    body.push_str("  ],\n");
+    let _ = write!(body, "  \"checks_held\": {cond_grows}");
+    common::write_bench_json("BENCH_fig9b.json", "fig9b_sizes", &body);
+
     if common::bench_check(
-        last > first / common::bench_tol(),
+        cond_grows,
         &format!("speedup over LAPACK should grow with n: {first:.2} -> {last:.2}"),
     ) {
         println!("\nshape checks OK (advantage over LAPACK grows with n)");

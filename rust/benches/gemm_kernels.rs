@@ -4,13 +4,22 @@
 //! changes have a perf trajectory to regress against (EXPERIMENTS.md §Perf
 //! documents the schema).
 //!
+//! Since the persistent worker pool landed, the parallel entries run on
+//! the process-global team (`coordinator::pool`), and a dedicated sweep
+//! pits pooled `gemm_par` against the retired scoped-spawn execution model
+//! (fresh threads per call, identical panel split) on every benched shape —
+//! the pool must never lose.
+//!
 //! Env knobs:
 //! * `PARAHT_GEMM_SIZES=128,256,512` — square sizes to sweep (default).
 //! * `PARAHT_BENCH_OUT=path` — JSON output path (default `BENCH_gemm.json`
 //!   in the working directory, i.e. `rust/` under `cargo bench`).
+//! * `PALLAS_POOL_THREADS` — worker-team size (see `coordinator::pool`).
 //! * `PALLAS_BENCH_SOFT=1` / `PALLAS_BENCH_TOL` — soften / relax the
-//!   parallel-speedup floor (see `experiments::common`).
+//!   parallel-speedup floor and the pooled-vs-scoped comparison (see
+//!   `experiments::common`).
 
+use paraht::coordinator::slices::partition;
 use paraht::experiments::common;
 use paraht::linalg::gemm::{gemm, gemm_par, Trans};
 use paraht::linalg::matrix::Matrix;
@@ -23,6 +32,9 @@ use std::time::Instant;
 /// Fig. 9a axis that fits CI runners).
 const THREADS: &[usize] = &[1, 2, 4, 7];
 
+/// Thread count for the pooled-vs-scoped acceptance sweep.
+const VS_THREADS: usize = 4;
+
 struct Case {
     m: usize,
     n: usize,
@@ -31,6 +43,50 @@ struct Case {
     threads: usize,
     secs: f64,
     gflops: f64,
+}
+
+fn trans_label(ta: Trans, tb: Trans) -> &'static str {
+    match (ta, tb) {
+        (Trans::No, Trans::No) => "NN",
+        (Trans::Yes, Trans::No) => "TN",
+        (Trans::No, Trans::Yes) => "NT",
+        (Trans::Yes, Trans::Yes) => "TT",
+    }
+}
+
+/// The retired pre-pool execution model, kept as the perf baseline: the
+/// exact column-panel split of `gemm_par`, executed by freshly spawned
+/// scoped threads — per-call thread startup, cold per-thread pack buffers.
+fn gemm_scoped_baseline(
+    a: &Matrix,
+    ta: Trans,
+    b: &Matrix,
+    tb: Trans,
+    c: &mut Matrix,
+    threads: usize,
+) {
+    let n = c.cols();
+    let k = if ta == Trans::No { a.cols() } else { a.rows() };
+    let panels = partition(0..n, threads);
+    let mut work = Vec::with_capacity(panels.len());
+    let mut rest = c.as_mut();
+    let mut consumed = 0;
+    for r in panels {
+        let (panel, right) = rest.split_at_col(r.end - consumed);
+        consumed = r.end;
+        rest = right;
+        let bp = match tb {
+            Trans::No => b.as_ref().sub(0..k, r),
+            Trans::Yes => b.as_ref().sub(r, 0..k),
+        };
+        work.push((panel, bp));
+    }
+    std::thread::scope(|s| {
+        for (panel, bp) in work {
+            let av = a.as_ref();
+            s.spawn(move || gemm(1.0, av, ta, bp, tb, 0.0, panel));
+        }
+    });
 }
 
 /// Best-of-3 wall-clock of one multiply (result kept alive via the output
@@ -63,6 +119,30 @@ fn time_gemm(
     best
 }
 
+/// Best-of-3 wall-clock of the scoped-spawn baseline on the same multiply.
+fn time_scoped(
+    a: &Matrix,
+    ta: Trans,
+    b: &Matrix,
+    tb: Trans,
+    m: usize,
+    n: usize,
+    threads: usize,
+) -> f64 {
+    let mut c = Matrix::zeros(m, n);
+    let mut best = f64::INFINITY;
+    for rep in 0..4 {
+        let t = Instant::now();
+        gemm_scoped_baseline(a, ta, b, tb, &mut c, threads);
+        let secs = t.elapsed().as_secs_f64();
+        if rep > 0 {
+            best = best.min(secs);
+        }
+    }
+    assert!(c.norm_fro().is_finite(), "scoped gemm produced non-finite output");
+    best
+}
+
 fn run_case(
     cases: &mut Vec<Case>,
     rng: &mut Rng,
@@ -75,15 +155,19 @@ fn run_case(
     let b = if tb == Trans::No { Matrix::randn(k, n, rng) } else { Matrix::randn(n, k, rng) };
     let secs = time_gemm(&a, ta, &b, tb, m, n, threads);
     let gflops = 2.0 * (m as f64) * (n as f64) * (k as f64) / secs / 1e9;
-    let trans = match (ta, tb) {
-        (Trans::No, Trans::No) => "NN",
-        (Trans::Yes, Trans::No) => "TN",
-        (Trans::No, Trans::Yes) => "NT",
-        (Trans::Yes, Trans::Yes) => "TT",
-    };
+    let trans = trans_label(ta, tb);
     println!("{m:>5} x {n:<5} k={k:<5} {trans}  threads={threads}  {secs:>9.4}s  {gflops:>7.2} GFLOP/s");
     cases.push(Case { m, n, k, trans, threads, secs, gflops });
     secs
+}
+
+struct VsCase {
+    m: usize,
+    n: usize,
+    k: usize,
+    trans: &'static str,
+    pooled_secs: f64,
+    scoped_secs: f64,
 }
 
 fn main() {
@@ -130,6 +214,49 @@ fn main() {
         println!("gemm_par n={big}: {th} threads -> {s:.2}x over 1 thread");
     }
 
+    // ---- Pooled vs scoped-spawn baseline, every benched shape. ----
+    // The persistent pool replaced per-call scoped spawning; it must be no
+    // slower on any shape at 4 threads (modest 10% noise slack ×
+    // PALLAS_BENCH_TOL; soft mode warns instead of aborting).
+    let vs_shapes: Vec<(usize, usize, usize, Trans, Trans)> = {
+        let mut v: Vec<_> = sizes.iter().map(|&s| (s, s, s, Trans::No, Trans::No)).collect();
+        v.push((16, wy, wy, Trans::Yes, Trans::No));
+        v.push((wy, wy, 16, Trans::No, Trans::No));
+        v.push((2048.min(4 * wy), 64, 64, Trans::No, Trans::No));
+        v
+    };
+    let mut vs_cases: Vec<VsCase> = Vec::new();
+    let mut vs_fail: Vec<String> = Vec::new();
+    let vs_slack = 1.10 * common::bench_tol();
+    println!("\npooled gemm_par vs scoped-spawn baseline ({VS_THREADS} threads):");
+    for &(m, n, k, ta, tb) in &vs_shapes {
+        let a = if ta == Trans::No {
+            Matrix::randn(m, k, &mut rng)
+        } else {
+            Matrix::randn(k, m, &mut rng)
+        };
+        let b = if tb == Trans::No {
+            Matrix::randn(k, n, &mut rng)
+        } else {
+            Matrix::randn(n, k, &mut rng)
+        };
+        let pooled = time_gemm(&a, ta, &b, tb, m, n, VS_THREADS);
+        let scoped = time_scoped(&a, ta, &b, tb, m, n, VS_THREADS);
+        let trans = trans_label(ta, tb);
+        let ratio = pooled / scoped;
+        println!(
+            "{m:>5} x {n:<5} k={k:<5} {trans}  pooled {pooled:>9.4}s  scoped {scoped:>9.4}s  ratio {ratio:>5.2}"
+        );
+        if pooled > scoped * vs_slack {
+            vs_fail.push(format!(
+                "pooled gemm_par slower than scoped spawn on {m}x{n}x{k} {trans}: \
+                 {pooled:.4}s vs {scoped:.4}s (ratio {ratio:.2} > {vs_slack:.2})"
+            ));
+        }
+        vs_cases.push(VsCase { m, n, k, trans, pooled_secs: pooled, scoped_secs: scoped });
+    }
+    let pooled_ok = vs_fail.is_empty();
+
     // Acceptance floor: ≥ 2× at 4 threads for the n=512-class multiply.
     // Timing-sensitive — soft mode / PALLAS_BENCH_TOL apply (CI runners
     // may have fewer than 4 physical cores). Evaluated here but asserted
@@ -138,13 +265,9 @@ fn main() {
     let s4 = speedups.iter().find(|&&(th, _)| th == 4).map(|&(_, s)| s).unwrap_or(f64::NAN);
     let ok = s4 >= 2.0 / common::bench_tol();
 
-    // ---- Emit BENCH_gemm.json (schema in EXPERIMENTS.md §Perf). ----
-    let out_path =
-        std::env::var("PARAHT_BENCH_OUT").unwrap_or_else(|_| "BENCH_gemm.json".to_string());
+    // ---- Emit BENCH_gemm.json (schema in EXPERIMENTS.md §Perf; shared
+    // envelope via common::write_bench_json like the fig artifacts). ----
     let mut j = String::new();
-    j.push_str("{\n  \"schema_version\": 1,\n  \"bench\": \"gemm_kernels\",\n");
-    let _ = writeln!(j, "  \"soft_mode\": {},", common::bench_soft());
-    let _ = writeln!(j, "  \"tolerance\": {},", common::bench_tol());
     j.push_str("  \"cases\": [\n");
     for (i, c) in cases.iter().enumerate() {
         let _ = write!(
@@ -155,21 +278,37 @@ fn main() {
         j.push_str(if i + 1 < cases.len() { ",\n" } else { "\n" });
     }
     j.push_str("  ],\n");
+    let _ = write!(j, "  \"pooled_vs_scoped_{VS_THREADS}t\": [\n");
+    for (i, c) in vs_cases.iter().enumerate() {
+        let _ = write!(
+            j,
+            "    {{\"m\": {}, \"n\": {}, \"k\": {}, \"trans\": \"{}\", \"pooled_secs\": {:.6}, \"scoped_secs\": {:.6}, \"ratio\": {:.4}}}",
+            c.m, c.n, c.k, c.trans, c.pooled_secs, c.scoped_secs, c.pooled_secs / c.scoped_secs
+        );
+        j.push_str(if i + 1 < vs_cases.len() { ",\n" } else { "\n" });
+    }
+    j.push_str("  ],\n");
+    let _ = writeln!(j, "  \"pooled_no_slower_held\": {pooled_ok},");
     let _ = write!(j, "  \"par_speedup_n{big}\": {{");
     for (i, &(th, s)) in speedups.iter().enumerate() {
         let _ = write!(j, "{}\"x{th}\": {s:.3}", if i > 0 { ", " } else { "" });
     }
     j.push_str("},\n");
-    let _ = writeln!(j, "  \"speedup_floor_held\": {ok}");
-    j.push_str("}\n");
-    std::fs::write(&out_path, &j).expect("write BENCH_gemm.json");
-    println!("\nwrote {out_path} ({} cases)", cases.len());
+    let _ = write!(j, "  \"speedup_floor_held\": {ok}");
+    common::write_bench_json("BENCH_gemm.json", "gemm_kernels", &j);
+    println!("({} cases)", cases.len());
 
     common::bench_check(
         ok,
         &format!("gemm_par at 4 threads must be >= 2x single-thread for n={big}: got {s4:.2}x"),
     );
+    for msg in &vs_fail {
+        common::bench_check(false, msg);
+    }
     if ok {
         println!("shape checks OK (gemm_par 4-thread speedup {s4:.2}x >= 2x)");
+    }
+    if pooled_ok {
+        println!("pooled-vs-scoped OK (pool no slower on all {} shapes)", vs_cases.len());
     }
 }

@@ -2,7 +2,10 @@
 //!
 //! * [`access`]/[`graph`] — dataflow task graph (tasks declare read/write
 //!   regions; edges derived from conflicts) generalizing Figs. 2 and 7.
-//! * [`pool`] — dependency-counting dynamic scheduler on worker threads.
+//! * [`pool`] — persistent worker team (threads spawned once, parked on a
+//!   condvar, fed by a batch job queue) running the dependency-counting
+//!   dynamic scheduler; shared by the task graphs and the data-parallel
+//!   kernel panels.
 //! * [`sim`] — discrete-event makespan simulator: replays a measured task
 //!   trace on P virtual workers (the substitution for the paper's 28-core
 //!   machine; DESIGN.md §5).

@@ -1,138 +1,451 @@
-//! Dynamic scheduler: execute a [`TaskGraph`] on a pool of worker threads.
+//! Persistent worker pool + dynamic scheduler: execute [`TaskGraph`]s and
+//! data-parallel task lists on a long-lived team of worker threads.
 //!
-//! Classic dependency-counting design (the "dynamic scheduler" the paper
-//! relies on, §2.3): every task carries a pending-predecessor count; workers
-//! pull ready tasks from a shared FIFO, run them, and decrement their
-//! successors, enqueueing those that become ready. Load imbalance between
-//! slices (e.g. the triangular `L_B` slices) is absorbed by the shared
-//! queue — "we chose to let the dynamic scheduler handle these load
-//! imbalances."
+//! Two layers:
+//!
+//! * **The pool** ([`WorkerPool`]): OS threads spawned once, parked on a
+//!   condvar, fed by a queue of *batches*, joined on drop. Keeping the team
+//!   alive across calls is what lets the thread-local GEMM pack buffers
+//!   (`linalg::gemm`) amortize over a whole reduction, and removes the
+//!   per-call thread-startup cost the scoped-spawn model paid on every
+//!   `gemm_par` / `apply_par` (the ROADMAP item this replaces; cf. the
+//!   long-lived worker teams assumed by arXiv:1710.08538 / 1709.00302).
+//! * **The batch scheduler** ([`Batch`], classic dependency counting — the
+//!   paper's dynamic scheduler, §2.3): every task carries a
+//!   pending-predecessor count; executors pull ready tasks from a shared
+//!   FIFO, run them, decrement successors, and enqueue those that become
+//!   ready. Load imbalance between slices (e.g. the triangular `L_B`
+//!   slices) is absorbed by the shared queue.
+//!
+//! **Caller participation.** The thread that submits a batch executes it
+//! too: [`WorkerPool::run_graph`] enqueues the batch for up to
+//! `threads - 1` pool workers ("helpers") and then drains it itself, so a
+//! `threads = t` run has up to `t` executors and *always* makes progress
+//! even when every pool worker is busy or the pool has zero workers.
+//! Submitting from inside a job (nested parallelism) therefore cannot
+//! deadlock: the inner submitter drains its own batch alone in the worst
+//! case. Unlike the old scoped-spawn model (which really spawned `t` OS
+//! threads per call, oversubscribing cores when `t` exceeded them),
+//! effective concurrency is additionally capped at `1 + worker_count` —
+//! raise `PALLAS_POOL_THREADS` if a larger team than
+//! `available_parallelism()` is genuinely wanted. Results are unaffected
+//! either way (see Determinism below); only scheduling changes.
+//!
+//! **Determinism.** The pool changes only *where* tasks run, never *what*
+//! they compute: dependency edges still force a valid topological order,
+//! and the data-parallel entry points keep the exact panel split of the
+//! scoped-spawn implementation, so `tests/equivalence.rs` continues to pin
+//! every parallel run bitwise to the sequential oracle.
+//!
+//! **Panics.** A panicking job poisons its batch: the first payload is
+//! captured, the remaining tasks are drained *without running* (their
+//! closures are dropped), every executor detaches cleanly, and the payload
+//! is re-raised on the submitting thread by `resume_unwind`. Pool workers
+//! never die to a job panic — the pool stays usable.
+//!
+//! **Shutdown protocol** (documented order; see also EXPERIMENTS.md §Perf):
+//!
+//! 1. `Drop` (or an explicit [`WorkerPool::shutdown`]) takes the pool by
+//!    exclusive access, so no `run_graph`/`run_tasks` call can be in
+//!    flight — every queued batch is already drained (`remaining == 0`).
+//! 2. The `shutdown` flag is set *under the pool mutex* and `notify_all`
+//!    is issued: a parked worker is either already waiting (woken, sees the
+//!    flag) or between its queue check and `wait` (the flag write is
+//!    ordered before its re-check by the mutex) — no lost wakeup.
+//! 3. Workers finishing a batch re-acquire the pool mutex, observe the
+//!    flag, and exit their loop.
+//! 4. Every `JoinHandle` is joined; after `shutdown`/`drop` returns, no
+//!    pool thread survives (asserted by `drop_joins_all_workers`).
 
 use super::graph::{TaskClass, TaskGraph};
+use std::any::Any;
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
 
-struct SchedState {
-    ready: Mutex<VecDeque<usize>>,
-    cv: Condvar,
-    remaining: AtomicUsize,
-}
+/// A lifetime-erased job. See [`erase`] for the soundness argument.
+type Job = Box<dyn FnOnce() + Send + 'static>;
 
-/// Execute the (finalized) graph on `threads` workers. Blocks until every
-/// task has run.
-pub fn run_parallel(mut graph: TaskGraph<'_>, threads: usize) {
-    let n = graph.len();
-    if n == 0 {
-        return;
-    }
-    if threads <= 1 {
-        // Degenerate case: run in submission order on the caller.
-        for t in &mut graph.tasks {
-            (t.run.take().unwrap())();
-        }
-        return;
-    }
-
-    // Pending-predecessor counts + take closures and successor lists out.
-    let mut pending: Vec<AtomicUsize> = Vec::with_capacity(n);
-    let mut runs: Vec<Mutex<Option<Box<dyn FnOnce() + Send + '_>>>> = Vec::with_capacity(n);
-    let mut succs: Vec<Vec<usize>> = Vec::with_capacity(n);
-    let mut initial: Vec<usize> = Vec::new();
-    for (id, t) in graph.tasks.iter_mut().enumerate() {
-        pending.push(AtomicUsize::new(t.deps.len()));
-        runs.push(Mutex::new(t.run.take()));
-        succs.push(std::mem::take(&mut t.succs));
-        if t.deps.is_empty() {
-            initial.push(id);
-        }
-    }
-
-    let state = SchedState {
-        ready: Mutex::new(initial.into_iter().collect()),
-        cv: Condvar::new(),
-        remaining: AtomicUsize::new(n),
-    };
-
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| {
-                loop {
-                    // Pull a ready task or wait; exit when all tasks done.
-                    let task = {
-                        let mut q = state.ready.lock().unwrap();
-                        loop {
-                            if state.remaining.load(Ordering::Acquire) == 0 {
-                                return;
-                            }
-                            if let Some(t) = q.pop_front() {
-                                break t;
-                            }
-                            q = state.cv.wait(q).unwrap();
-                        }
-                    };
-
-                    let f = runs[task].lock().unwrap().take().expect("task run twice");
-                    f();
-
-                    // Mark done, wake successors.
-                    let mut newly_ready = Vec::new();
-                    for &s in &succs[task] {
-                        if pending[s].fetch_sub(1, Ordering::AcqRel) == 1 {
-                            newly_ready.push(s);
-                        }
-                    }
-                    let left = state.remaining.fetch_sub(1, Ordering::AcqRel) - 1;
-                    if !newly_ready.is_empty() {
-                        let mut q = state.ready.lock().unwrap();
-                        for t in newly_ready {
-                            q.push_back(t);
-                        }
-                        drop(q);
-                        state.cv.notify_all();
-                    } else if left == 0 {
-                        // Wake-for-exit must synchronize with waiters through
-                        // the queue mutex: a worker that observed
-                        // `remaining != 0` and an empty queue may be between
-                        // that check and `cv.wait`. Taking (and releasing)
-                        // the lock orders this notification after its check,
-                        // so either it re-checks and sees 0, or it is already
-                        // waiting and receives the notification. A bare
-                        // `notify_all` here loses that race and deadlocks.
-                        drop(state.ready.lock().unwrap());
-                        state.cv.notify_all();
-                    }
-                }
-            });
-        }
-    });
-}
-
-/// Execute independent closures on the worker pool — the data-parallel
-/// entry used by `linalg::gemm::gemm_par` and `WyRep::apply_par` to
-/// saturate cores when the dataflow graph itself yields too few slices.
+/// Erase a job's borrow lifetime so it can sit in a batch shared with the
+/// `'static` pool workers.
 ///
-/// Semantically a degenerate task graph (no accesses → no edges → every
-/// task immediately ready); sharing [`run_parallel`] keeps one scheduler
-/// implementation for both dataflow and data-parallel work. `threads <= 1`
-/// (or a single task) runs inline on the caller with no graph overhead.
-pub fn run_data_parallel<'a>(tasks: Vec<Box<dyn FnOnce() + Send + 'a>>, threads: usize) {
-    if tasks.is_empty() {
-        return;
+/// # Safety
+/// Sound because [`WorkerPool::run_graph`] does not return until
+/// `remaining == 0`, i.e. until every closure in the batch has been taken
+/// and either run or dropped. Helpers that still hold the batch `Arc`
+/// afterwards only touch its owned fields (queue, counters, condvar),
+/// never the (by then empty) closure slots — so no erased borrow is ever
+/// dereferenced after the true lifetime ends.
+fn erase<'a>(f: Box<dyn FnOnce() + Send + 'a>) -> Job {
+    unsafe {
+        std::mem::transmute::<Box<dyn FnOnce() + Send + 'a>, Box<dyn FnOnce() + Send + 'static>>(f)
     }
-    if threads <= 1 || tasks.len() == 1 {
-        for t in tasks {
-            t();
+}
+
+/// One submitted task graph, in execution form: the dependency-counting
+/// scheduler state shared by the submitting thread and its helpers.
+struct Batch {
+    /// Ready-task FIFO.
+    ready: Mutex<VecDeque<usize>>,
+    /// Wakes executors blocked on an empty FIFO.
+    cv: Condvar,
+    /// Tasks not yet completed; `0` means the batch is done.
+    remaining: AtomicUsize,
+    /// Pending-predecessor count per task.
+    pending: Vec<AtomicUsize>,
+    /// Task closures (`take`n exactly once each).
+    runs: Vec<Mutex<Option<Job>>>,
+    /// Successor lists.
+    succs: Vec<Vec<usize>>,
+    /// Set on the first job panic: remaining tasks are drained unrun.
+    poisoned: AtomicBool,
+    /// First panic payload, re-raised on the submitting thread.
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
+    /// Pool workers currently attached to this batch.
+    helpers: AtomicUsize,
+    /// Cap on attached pool workers (`threads - 1`; the submitter is the
+    /// extra executor).
+    max_helpers: usize,
+}
+
+/// Abort bomb for scheduler-internal panics. Job panics are caught and
+/// poisoned inside [`Batch::work`]; anything else unwinding out of that
+/// frame is a scheduler bug (an invariant `expect`, a poisoned-mutex
+/// `unwrap`) for which unwinding is *unsound*, not just wrong: on a helper
+/// it would skip the `remaining` decrement and hang the submitter forever,
+/// and on the submitter it would free stack frames that the lifetime-erased
+/// closures still held by `'static` workers borrow (see [`erase`]).
+/// Aborting the process is the only safe response.
+struct AbortOnUnwind;
+
+impl Drop for AbortOnUnwind {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            eprintln!(
+                "paraht worker pool: internal scheduler panic; aborting to preserve \
+                 soundness (coordinator::pool::Batch::work)"
+            );
+            std::process::abort();
         }
-        return;
     }
-    let workers = threads.min(tasks.len());
-    let mut g = TaskGraph::new();
-    for t in tasks {
-        g.add(TaskClass::Gemm, Vec::new(), t);
+}
+
+impl Batch {
+    /// Execute tasks until the batch is drained. Runs on the submitting
+    /// thread and on every helper; returns when `remaining == 0`.
+    fn work(&self) {
+        // Disarmed by the normal return (drop without an active panic);
+        // see `AbortOnUnwind` for why internal panics must not escape.
+        let _guard = AbortOnUnwind;
+        loop {
+            // Pull a ready task or wait; exit when all tasks are done.
+            let task = {
+                let mut q = self.ready.lock().unwrap();
+                loop {
+                    if self.remaining.load(Ordering::Acquire) == 0 {
+                        return;
+                    }
+                    if let Some(t) = q.pop_front() {
+                        break t;
+                    }
+                    q = self.cv.wait(q).unwrap();
+                }
+            };
+
+            let f = self.runs[task].lock().unwrap().take().expect("task run twice");
+            let result = if self.poisoned.load(Ordering::Acquire) {
+                // Batch already failing: cancel (drop) instead of running.
+                // The drop itself is guarded too — a closure owning a value
+                // with a panicking `Drop` must not kill the worker mid-drain
+                // (that would leak the task's `remaining` decrement and hang
+                // the submitter).
+                catch_unwind(AssertUnwindSafe(move || drop(f)))
+            } else {
+                catch_unwind(AssertUnwindSafe(f))
+            };
+            if let Err(payload) = result {
+                self.poisoned.store(true, Ordering::Release);
+                let mut slot = self.panic.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(payload);
+                }
+            }
+
+            // Mark done, wake successors. This block must run even for
+            // cancelled tasks or the drain deadlocks.
+            let mut newly_ready = Vec::new();
+            for &s in &self.succs[task] {
+                if self.pending[s].fetch_sub(1, Ordering::AcqRel) == 1 {
+                    newly_ready.push(s);
+                }
+            }
+            let left = self.remaining.fetch_sub(1, Ordering::AcqRel) - 1;
+            if !newly_ready.is_empty() {
+                let mut q = self.ready.lock().unwrap();
+                for t in newly_ready {
+                    q.push_back(t);
+                }
+                drop(q);
+                self.cv.notify_all();
+            } else if left == 0 {
+                // Wake-for-exit must synchronize with waiters through the
+                // queue mutex: an executor that observed `remaining != 0`
+                // and an empty queue may be between that check and
+                // `cv.wait`. Taking (and releasing) the lock orders this
+                // notification after its check, so either it re-checks and
+                // sees 0, or it is already waiting and receives the
+                // notification. A bare `notify_all` here loses that race
+                // and deadlocks.
+                drop(self.ready.lock().unwrap());
+                self.cv.notify_all();
+            }
+        }
     }
-    g.finalize();
-    run_parallel(g, workers);
+}
+
+/// Pool state shared between the owner and the parked workers.
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Parks idle workers; notified on batch submission and on shutdown.
+    cv: Condvar,
+}
+
+struct PoolState {
+    /// Active batches helpers can attach to (the job queue).
+    queue: VecDeque<Arc<Batch>>,
+    /// Set once by [`WorkerPool::shutdown`]/drop; workers exit when idle.
+    shutdown: bool,
+}
+
+/// A persistent team of worker threads (see the module docs for the
+/// execution model, panic semantics and shutdown protocol).
+///
+/// Most code uses the lazily-initialized process-global team ([`global`])
+/// via [`run_parallel`] / [`run_data_parallel`]; explicit pools exist for
+/// tests and for embedders that need their own team lifetime.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+/// Body of one pool worker: park on the condvar until a batch needs help
+/// (or shutdown), drain it, detach, repeat.
+fn worker_loop(shared: Arc<PoolShared>) {
+    loop {
+        let batch = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if let Some(b) = claim_batch(&mut st.queue) {
+                    break b;
+                }
+                st = shared.cv.wait(st).unwrap();
+            }
+        };
+        batch.work();
+        batch.helpers.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// Find a queued batch with unfinished work and a free helper slot,
+/// garbage-collecting finished batches in passing. Called under the pool
+/// mutex.
+fn claim_batch(queue: &mut VecDeque<Arc<Batch>>) -> Option<Arc<Batch>> {
+    let mut i = 0;
+    while i < queue.len() {
+        if queue[i].remaining.load(Ordering::Acquire) == 0 {
+            let _ = queue.remove(i);
+            continue;
+        }
+        let b = &queue[i];
+        let mut h = b.helpers.load(Ordering::Relaxed);
+        while h < b.max_helpers {
+            match b.helpers.compare_exchange_weak(h, h + 1, Ordering::AcqRel, Ordering::Relaxed) {
+                Ok(_) => return Some(b.clone()),
+                Err(cur) => h = cur,
+            }
+        }
+        i += 1;
+    }
+    None
+}
+
+impl WorkerPool {
+    /// Spawn a pool with `workers` parked threads. `workers == 0` is valid:
+    /// every batch is then drained entirely by its submitting thread.
+    pub fn new(workers: usize) -> WorkerPool {
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState { queue: VecDeque::new(), shutdown: false }),
+            cv: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let sh = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("paraht-pool-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool { shared, handles }
+    }
+
+    /// Number of pool worker threads (excluding submitting callers).
+    pub fn worker_count(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Execute the (finalized) graph with `threads` total executors: this
+    /// caller plus up to `threads - 1` pool helpers. Blocks until every
+    /// task has run; re-raises the first job panic, if any.
+    pub fn run_graph(&self, mut graph: TaskGraph<'_>, threads: usize) {
+        let n = graph.len();
+        if n == 0 {
+            return;
+        }
+        if threads <= 1 {
+            // Degenerate case: run in submission order on the caller.
+            for t in &mut graph.tasks {
+                (t.run.take().unwrap())();
+            }
+            return;
+        }
+
+        // Pending-predecessor counts + take closures and successor lists
+        // out of the graph (lifetime-erased; see `erase`).
+        let mut pending: Vec<AtomicUsize> = Vec::with_capacity(n);
+        let mut runs: Vec<Mutex<Option<Job>>> = Vec::with_capacity(n);
+        let mut succs: Vec<Vec<usize>> = Vec::with_capacity(n);
+        let mut initial: Vec<usize> = Vec::new();
+        for (id, t) in graph.tasks.iter_mut().enumerate() {
+            pending.push(AtomicUsize::new(t.deps.len()));
+            runs.push(Mutex::new(t.run.take().map(erase)));
+            succs.push(std::mem::take(&mut t.succs));
+            if t.deps.is_empty() {
+                initial.push(id);
+            }
+        }
+        let batch = Arc::new(Batch {
+            ready: Mutex::new(initial.into_iter().collect()),
+            cv: Condvar::new(),
+            remaining: AtomicUsize::new(n),
+            pending,
+            runs,
+            succs,
+            poisoned: AtomicBool::new(false),
+            panic: Mutex::new(None),
+            helpers: AtomicUsize::new(0),
+            max_helpers: threads - 1,
+        });
+
+        // Publish to the parked workers, then participate. Helpers drain
+        // the batch concurrently with us; `work` returns for everyone once
+        // `remaining == 0`. Never-published batches (no workers, or a
+        // 1-helper cap with an empty pool) skip the global mutex entirely —
+        // both here and in the cleanup below.
+        let published = batch.max_helpers > 0 && !self.handles.is_empty();
+        if published {
+            self.shared.state.lock().unwrap().queue.push_back(batch.clone());
+            self.shared.cv.notify_all();
+        }
+        batch.work();
+
+        // Drained: remove our queue entry (a helper's GC may have beaten
+        // us to it), then surface any job panic on this thread.
+        if published {
+            let mut st = self.shared.state.lock().unwrap();
+            if let Some(pos) = st.queue.iter().position(|b| Arc::ptr_eq(b, &batch)) {
+                let _ = st.queue.remove(pos);
+            }
+        }
+        if let Some(p) = batch.panic.lock().unwrap().take() {
+            std::panic::resume_unwind(p);
+        }
+    }
+
+    /// Execute independent closures — the data-parallel entry used by
+    /// `linalg::gemm::gemm_par` and `WyRep::apply_par`. Semantically a
+    /// degenerate task graph (no accesses → no edges → every task
+    /// immediately ready); sharing [`WorkerPool::run_graph`] keeps one
+    /// scheduler for dataflow and data-parallel work. `threads <= 1` (or a
+    /// single task) runs inline on the caller with no graph overhead.
+    pub fn run_tasks<'a>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 'a>>, threads: usize) {
+        if tasks.is_empty() {
+            return;
+        }
+        if threads <= 1 || tasks.len() == 1 {
+            for t in tasks {
+                t();
+            }
+            return;
+        }
+        let workers = threads.min(tasks.len());
+        let mut g = TaskGraph::new();
+        for t in tasks {
+            g.add(TaskClass::Gemm, Vec::new(), t);
+        }
+        g.finalize();
+        self.run_graph(g, workers);
+    }
+
+    /// Explicit shutdown: park → set flag → wake → join (the documented
+    /// protocol; `Drop` runs the same sequence). Consuming `self` makes the
+    /// "no batch in flight" precondition a compile-time fact.
+    pub fn shutdown(self) {
+        drop(self);
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.state.lock().unwrap().shutdown = true;
+        self.shared.cv.notify_all();
+        for h in self.handles.drain(..) {
+            // Workers catch job panics, so join failure is unreachable;
+            // don't double-panic during drop if it somehow happens.
+            let _ = h.join();
+        }
+    }
+}
+
+static GLOBAL_POOL: OnceLock<WorkerPool> = OnceLock::new();
+
+/// The process-global worker team, spawned on first use and kept for the
+/// process lifetime (never dropped, so its thread-local GEMM pack buffers
+/// survive across every reduction in the process).
+///
+/// Sizing: `PALLAS_POOL_THREADS` (total team size *including* the
+/// submitting caller) when set, otherwise `available_parallelism()`; the
+/// pool spawns one fewer OS thread than the team size because every run's
+/// caller is an executor. `PALLAS_POOL_THREADS=1` therefore means "no pool
+/// threads, run everything inline".
+pub fn global() -> &'static WorkerPool {
+    GLOBAL_POOL.get_or_init(|| {
+        let team = std::env::var("PALLAS_POOL_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .map(|t| t.clamp(1, crate::config::MAX_THREADS))
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+            });
+        WorkerPool::new(team.saturating_sub(1))
+    })
+}
+
+/// Execute the (finalized) graph on the process-global pool with `threads`
+/// executors (caller + helpers). Blocks until every task has run.
+pub fn run_parallel(graph: TaskGraph<'_>, threads: usize) {
+    global().run_graph(graph, threads);
+}
+
+/// Execute independent closures on the process-global pool — see
+/// [`WorkerPool::run_tasks`].
+pub fn run_data_parallel<'a>(tasks: Vec<Box<dyn FnOnce() + Send + 'a>>, threads: usize) {
+    global().run_tasks(tasks, threads);
 }
 
 #[cfg(test)]
@@ -225,5 +538,131 @@ mod tests {
             assert!(cells.iter().all(|c| c.load(Ordering::SeqCst) == 1), "threads={threads}");
         }
         run_data_parallel(Vec::new(), 4); // empty is a no-op
+    }
+
+    #[test]
+    fn drop_joins_all_workers() {
+        let pool = WorkerPool::new(3);
+        assert_eq!(pool.worker_count(), 3);
+        // 1 local clone + 1 in the pool struct + 3 moved into workers.
+        let shared = pool.shared.clone();
+        assert_eq!(Arc::strong_count(&shared), 5);
+        // Run real work through it first.
+        let c = AtomicUsize::new(0);
+        let mut g = TaskGraph::new();
+        for _ in 0..16 {
+            g.add(TaskClass::Gemm, vec![], || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        g.finalize();
+        pool.run_graph(g, 4);
+        assert_eq!(c.load(Ordering::SeqCst), 16);
+        pool.shutdown();
+        // Every worker joined ⇒ every worker's Arc clone dropped.
+        assert_eq!(Arc::strong_count(&shared), 1, "shutdown must join every worker");
+    }
+
+    #[test]
+    fn zero_worker_pool_drains_on_caller() {
+        let pool = WorkerPool::new(0);
+        let c = AtomicUsize::new(0);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..9)
+            .map(|_| {
+                Box::new(|| {
+                    c.fetch_add(1, Ordering::SeqCst);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_tasks(tasks, 4);
+        assert_eq!(c.load(Ordering::SeqCst), 9);
+    }
+
+    #[test]
+    fn panic_in_one_job_fails_batch_without_deadlock() {
+        let pool = WorkerPool::new(2);
+        let done = AtomicUsize::new(0);
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let mut g = TaskGraph::new();
+            for i in 0..32usize {
+                let done = &done;
+                g.add(TaskClass::Gemm, vec![], move || {
+                    if i == 5 {
+                        panic!("boom in job 5");
+                    }
+                    done.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            g.finalize();
+            pool.run_graph(g, 3);
+        }));
+        assert!(result.is_err(), "job panic must propagate to the submitter");
+        // The batch drained (no deadlock above) and the pool survives.
+        let c = AtomicUsize::new(0);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..10)
+            .map(|_| {
+                Box::new(|| {
+                    c.fetch_add(1, Ordering::SeqCst);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_tasks(tasks, 3);
+        assert_eq!(c.load(Ordering::SeqCst), 10, "pool must stay usable after a job panic");
+    }
+
+    #[test]
+    fn nested_submission_makes_progress() {
+        // A job that submits to the same pool: caller participation
+        // guarantees the inner batch drains even with every worker busy.
+        let pool = WorkerPool::new(1);
+        let c = AtomicUsize::new(0);
+        let mut g = TaskGraph::new();
+        {
+            let pool = &pool;
+            let c = &c;
+            g.add(TaskClass::Gemm, vec![], move || {
+                let inner: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+                    .map(|_| {
+                        Box::new(|| {
+                            c.fetch_add(1, Ordering::SeqCst);
+                        }) as Box<dyn FnOnce() + Send + '_>
+                    })
+                    .collect();
+                pool.run_tasks(inner, 2);
+            });
+        }
+        g.finalize();
+        pool.run_graph(g, 2);
+        assert_eq!(c.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn pool_reused_across_batches_by_same_team() {
+        // Consecutive batches on one pool complete and see consistent
+        // results (the pack-buffer-amortization scenario in miniature).
+        let pool = WorkerPool::new(2);
+        for round in 0..8usize {
+            let cells: Vec<AtomicUsize> = (0..24).map(|_| AtomicUsize::new(0)).collect();
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = cells
+                .iter()
+                .map(|cell| {
+                    Box::new(move || {
+                        cell.fetch_add(round + 1, Ordering::SeqCst);
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run_tasks(tasks, 3);
+            assert!(
+                cells.iter().all(|c| c.load(Ordering::SeqCst) == round + 1),
+                "round {round}"
+            );
+        }
+    }
+
+    #[test]
+    fn global_pool_is_a_singleton() {
+        let a = global() as *const WorkerPool;
+        let b = global() as *const WorkerPool;
+        assert_eq!(a, b);
     }
 }

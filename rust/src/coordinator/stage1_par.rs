@@ -15,7 +15,7 @@
 
 use super::access::{Access, MatId};
 use super::graph::{TaskClass, TaskGraph, TaskTrace};
-use super::pool::run_parallel;
+use super::pool;
 use super::slices::{partition_capped, SharedMat};
 use crate::config::Config;
 use crate::ht::stage1::{factor_panel_block, flush_b_subdiagonal, opposite_reflector, panel_plans};
@@ -284,7 +284,12 @@ pub fn reduce_to_banded_par(
     let graph = build_graph(&sa, &sb, &sq, &sz, &arena, &plans, cfg);
     match mode {
         ExecMode::Threads(t) => {
-            run_parallel(graph, t);
+            // Execute on the persistent process-global team (this caller
+            // + up to t-1 pool helpers): the same workers serve every
+            // panel of this stage, stage 2, and the data-parallel trailing
+            // updates, so their thread-local GEMM pack buffers stay hot
+            // for the whole reduction.
+            pool::global().run_graph(graph, t);
             None
         }
         ExecMode::Trace => Some(graph.run_sequential()),

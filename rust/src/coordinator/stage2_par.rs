@@ -13,7 +13,7 @@
 
 use super::access::{Access, MatId};
 use super::graph::{TaskClass, TaskGraph, TaskTrace};
-use super::pool::run_parallel;
+use super::pool;
 use super::slices::{partition_capped, SharedMat};
 use super::stage1_par::ExecMode;
 use crate::config::Config;
@@ -345,7 +345,10 @@ pub fn reduce_blocked_par(
     let graph = build_graph(&sa, &sb, &sq, &sz, &arena, &groups, cfg);
     match mode {
         ExecMode::Threads(t) => {
-            run_parallel(graph, t);
+            // Same persistent team as stage 1 (`pool::global`): group
+            // after group reuses workers whose pack buffers were warmed by
+            // the stage-1 panels.
+            pool::global().run_graph(graph, t);
             None
         }
         ExecMode::Trace => Some(graph.run_sequential()),

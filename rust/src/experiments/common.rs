@@ -125,6 +125,41 @@ pub fn bench_tol() -> f64 {
         .unwrap_or(1.0)
 }
 
+/// Format a float for the `BENCH_*.json` artifacts: JSON has no NaN/Inf
+/// literal, so non-finite values (e.g. IterHT divergence ratios) become
+/// `null`.
+pub fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.6}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Write a `BENCH_*.json` perf artifact: shared envelope (schema version,
+/// bench name, soft/tolerance mode — so a trajectory reader can discount
+/// soft-mode runs) plus the bench-specific `body`. `body` must be a
+/// comma-separated JSON field list indented two spaces, *without* a
+/// trailing comma. The default path is overridden by `PARAHT_BENCH_OUT`.
+/// Returns the path written.
+pub fn write_bench_json(default_name: &str, bench: &str, body: &str) -> String {
+    use std::fmt::Write as _;
+    let path = std::env::var("PARAHT_BENCH_OUT").unwrap_or_else(|_| default_name.to_string());
+    let mut j = String::new();
+    j.push_str("{\n  \"schema_version\": 1,\n");
+    let _ = writeln!(j, "  \"bench\": \"{bench}\",");
+    let _ = writeln!(j, "  \"soft_mode\": {},", bench_soft());
+    let _ = writeln!(j, "  \"tolerance\": {},", bench_tol());
+    j.push_str(body);
+    if !body.ends_with('\n') {
+        j.push('\n');
+    }
+    j.push_str("}\n");
+    std::fs::write(&path, &j).unwrap_or_else(|e| panic!("write {path}: {e}"));
+    println!("wrote {path}");
+    path
+}
+
 /// Check a timing-sensitive bench claim: panics like `assert!` by default,
 /// warns in soft mode (see [`bench_soft`]). Returns whether it held.
 pub fn bench_check(cond: bool, msg: &str) -> bool {
@@ -157,6 +192,13 @@ mod tests {
     #[test]
     fn bench_tol_is_at_least_one() {
         assert!(bench_tol() >= 1.0);
+    }
+
+    #[test]
+    fn json_num_handles_non_finite() {
+        assert_eq!(json_num(1.5), "1.500000");
+        assert_eq!(json_num(f64::NAN), "null");
+        assert_eq!(json_num(f64::INFINITY), "null");
     }
 
     #[test]

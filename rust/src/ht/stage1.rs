@@ -145,10 +145,14 @@ pub fn reduce_to_banded(
 
         // ---- Left pass: QR blocks bottom-up (paper lines 7–15). ----
         // The trailing updates go through `apply_par`, which splits the
-        // free dimension over `cfg.threads` pool workers and is bitwise
-        // identical to the sequential apply (slicing-invariant kernels) —
-        // so this driver stays the exact oracle for the coordinator's task
-        // graph while saturating cores when the graph itself is not used.
+        // free dimension over the persistent process-global worker team
+        // (`coordinator::pool::global`, `cfg.threads` executors) and is
+        // bitwise identical to the sequential apply (slicing-invariant
+        // kernels) — so this driver stays the exact oracle for the
+        // coordinator's task graph while saturating cores when the graph
+        // itself is not used. Because the team outlives the call, the many
+        // small per-block applies reuse hot worker pack buffers instead of
+        // paying thread startup per apply as the old scoped model did.
         for &(i1, i2e) in plan.blocks.iter().rev() {
             if i2e <= i1 {
                 continue;

@@ -54,16 +54,18 @@ const NC: usize = 512;
 
 /// Minimum `2mnk` flop count before [`gemm_par`] (and `WyRep::apply_par`,
 /// which shares this constant) fans out to the pool; below this the
-/// scoped-thread startup dominates the multiply itself.
+/// submit/wake/drain round trip through the persistent pool (cheap, but
+/// not free) dominates the multiply itself.
 pub(crate) const PAR_MIN_FLOPS: usize = 2_000_000;
 
 thread_local! {
     /// Per-thread packing buffers (A panel, B panel), grown on demand and
-    /// reused across calls on long-lived threads. Note the reuse pays off
-    /// on the *calling* thread (the sequential drivers' many small GEMMs);
-    /// pool workers are fresh scoped threads per `run_parallel` call, so
-    /// their buffers live only for that call (see the ROADMAP item on a
-    /// persistent worker pool).
+    /// reused across calls on long-lived threads. The reuse pays off both
+    /// on the *calling* thread (the sequential drivers' many small GEMMs)
+    /// and on the persistent pool workers (`coordinator::pool`): workers
+    /// live for the whole process, so their buffers are packed hot across
+    /// every `gemm_par`/`apply_par` panel of a reduction instead of being
+    /// reallocated per call as under the old scoped-spawn model.
     static PACK: RefCell<(Vec<f64>, Vec<f64>)> = const { RefCell::new((Vec::new(), Vec::new())) };
 }
 
@@ -385,8 +387,13 @@ fn pack_b(b: MatRef<'_>, tb: Trans, l0: usize, kb: usize, jc: usize, nb: usize, 
 
 /// Parallel GEMM: identical (bitwise — see the module determinism contract)
 /// to [`gemm`], with `C` split into column panels executed on the
-/// coordinator's worker pool. Falls back to the sequential kernel when the
-/// problem is too small to amortize thread startup or `threads <= 1`.
+/// process-global persistent worker pool ([`pool::global`]; the caller
+/// participates, so `threads` is the total executor count). The panel
+/// split is a pure function of `(n, threads)` — unchanged from the
+/// scoped-spawn implementation — though by the slicing-invariance contract
+/// the results are bitwise identical under *any* split. Falls back to the
+/// sequential kernel when the problem is too small to amortize the pool
+/// round trip or `threads <= 1`.
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_par(
     alpha: f64,
@@ -425,7 +432,7 @@ pub fn gemm_par(
         };
         tasks.push(Box::new(move || gemm(alpha, a, ta, bp, tb, beta, panel)));
     }
-    pool::run_data_parallel(tasks, threads);
+    pool::global().run_tasks(tasks, threads);
 }
 
 /// Convenience: allocate and return `A·B`.

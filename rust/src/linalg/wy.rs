@@ -120,20 +120,23 @@ impl WyRep {
     /// [`WyRep::apply`] **bitwise** — the free dimension of `C` (columns for
     /// `Left`, rows for `Right`) is split into panels and each panel runs
     /// the full apply pipeline (GEMM → `trmm_upper*` → GEMM) as an
-    /// independent task on the coordinator's worker pool. All three kernels
-    /// are slicing-invariant (each output element's accumulation order does
-    /// not depend on the panel it is computed in — see the determinism
-    /// contract in [`crate::linalg::gemm`]), so any panel count, including
-    /// 1, produces the same bits. Falls back to the sequential apply when
-    /// `threads <= 1` or the update is too small to amortize thread
-    /// startup.
+    /// independent task on the process-global persistent worker pool
+    /// (`coordinator::pool::global`; the caller participates, so `threads`
+    /// is the total executor count and the panel split is unchanged from
+    /// the scoped-spawn model). All three kernels are slicing-invariant
+    /// (each output element's accumulation order does not depend on the
+    /// panel it is computed in — see the determinism contract in
+    /// [`crate::linalg::gemm`]), so any panel count, including 1, produces
+    /// the same bits. Falls back to the sequential apply when
+    /// `threads <= 1` or the update is too small to amortize the pool
+    /// round trip.
     pub fn apply_par(&self, side: Side, trans: Trans, c: MatMut<'_>, threads: usize) {
         let k = self.k();
         if k == 0 {
             return;
         }
         // ~4mnk flops in the two GEMMs; below the shared gemm_par threshold
-        // the scoped-thread startup costs more than it saves.
+        // the pool submit/drain round trip costs more than it saves.
         let work = 4usize
             .saturating_mul(c.rows())
             .saturating_mul(c.cols())
@@ -159,7 +162,7 @@ impl WyRep {
             rest = right;
             tasks.push(Box::new(move || self.apply(side, trans, panel)));
         }
-        crate::coordinator::pool::run_data_parallel(tasks, threads);
+        crate::coordinator::pool::global().run_tasks(tasks, threads);
     }
 }
 

@@ -125,3 +125,25 @@ fn repeated_parallel_runs_are_deterministic() {
     assert_eq!(max_abs_diff(&r1.q, &r2.q), 0.0);
     assert_eq!(max_abs_diff(&r1.z, &r2.z), 0.0);
 }
+
+#[test]
+fn pool_reuse_across_consecutive_runs_matches_oracle() {
+    // Two back-to-back threaded reductions reuse the same persistent
+    // worker team (`coordinator::pool::global`); the second run — executed
+    // by workers whose pack buffers and parked threads survived the first —
+    // must still be bitwise the oracle. Guards the pool's drain/reuse
+    // path: a leaked task, stale batch entry, or lost wakeup from run 1
+    // would corrupt or hang run 2.
+    let mut rng = Rng::new(0xE0_07);
+    let pencil = random_pencil(48, &mut rng);
+    let cfg = Config { r: 4, p: 3, q: 3, slices: 8, ..Config::default() };
+    let oracle = reduce_to_hessenberg_triangular(&pencil.a, &pencil.b, &cfg).unwrap();
+    for pass in 0..2 {
+        let run = run_paraht(&pencil.a, &pencil.b, &cfg, ExecMode::Threads(4))
+            .unwrap_or_else(|e| panic!("pass {pass}: {e}"));
+        assert_eq!(max_abs_diff(&oracle.h, &run.h), 0.0, "H diverges on pass {pass}");
+        assert_eq!(max_abs_diff(&oracle.t, &run.t), 0.0, "T diverges on pass {pass}");
+        assert_eq!(max_abs_diff(&oracle.q, &run.q), 0.0, "Q diverges on pass {pass}");
+        assert_eq!(max_abs_diff(&oracle.z, &run.z), 0.0, "Z diverges on pass {pass}");
+    }
+}

@@ -206,3 +206,140 @@ fn saddle_fraction_sweep() {
         );
     }
 }
+
+/// Submit/drain/shutdown hammer for the persistent worker pool
+/// (`coordinator::pool::WorkerPool`): rapid pool lifecycles, batches of
+/// varied shapes (empty, single-task, dependency chains, wide fan-outs),
+/// concurrent submitters sharing one team, nested submission from inside a
+/// job, and panicking batches — the lost-wakeup and shutdown-race surface.
+///
+/// Ignored by default (it is a hammer, not a unit test); CI runs it in the
+/// non-blocking pool-stress job with a high `PALLAS_STRESS_ITERS`.
+/// Locally: `cargo test --release pool_stress -- --ignored`.
+#[test]
+#[ignore = "stress hammer; run explicitly or via the CI pool-stress job"]
+fn pool_stress() {
+    use paraht::coordinator::pool::WorkerPool;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    let iters: usize = std::env::var("PALLAS_STRESS_ITERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(40);
+    let mut rng = Rng::new(0x500_57);
+    for iter in 0..iters {
+        // Fresh pool per iteration: spawn → submit → drain → shutdown.
+        let pool = WorkerPool::new(rng.below(5));
+        let batches = 1 + rng.below(4);
+        for _ in 0..batches {
+            let n = rng.below(65); // includes the empty batch
+            let threads = 1 + rng.below(8);
+            let counter = AtomicU64::new(0);
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..n)
+                .map(|_| {
+                    Box::new(|| {
+                        counter.fetch_add(1, Ordering::SeqCst);
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run_tasks(tasks, threads);
+            assert_eq!(counter.load(Ordering::SeqCst), n as u64, "lost task (iter {iter})");
+        }
+
+        // A dependency chain: order must hold under any worker count.
+        {
+            let chain = 2 + rng.below(24);
+            let last = AtomicU64::new(0);
+            let mut g = TaskGraph::new();
+            for i in 0..chain {
+                let last = &last;
+                g.add(
+                    TaskClass::Upd2,
+                    vec![Access::write(MatId::A, 0..1, 0..1)],
+                    move || {
+                        let prev = last.swap(i as u64 + 1, Ordering::SeqCst);
+                        assert_eq!(prev, i as u64, "chain order violated");
+                    },
+                );
+            }
+            g.finalize();
+            pool.run_graph(g, 1 + rng.below(6));
+            assert_eq!(last.load(Ordering::SeqCst), chain as u64);
+        }
+
+        // Concurrent submitters sharing the team (every 4th iteration).
+        if iter % 4 == 0 {
+            std::thread::scope(|s| {
+                for _ in 0..3 {
+                    let pool = &pool;
+                    s.spawn(move || {
+                        let c = AtomicU64::new(0);
+                        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..32)
+                            .map(|_| {
+                                Box::new(|| {
+                                    c.fetch_add(1, Ordering::SeqCst);
+                                }) as Box<dyn FnOnce() + Send + '_>
+                            })
+                            .collect();
+                        pool.run_tasks(tasks, 4);
+                        assert_eq!(c.load(Ordering::SeqCst), 32);
+                    });
+                }
+            });
+        }
+
+        // Nested submission from inside a job (every 5th iteration).
+        if iter % 5 == 0 {
+            let c = AtomicU64::new(0);
+            let mut g = TaskGraph::new();
+            {
+                let pool = &pool;
+                let c = &c;
+                g.add(TaskClass::Gemm, vec![], move || {
+                    let inner: Vec<Box<dyn FnOnce() + Send + '_>> = (0..8)
+                        .map(|_| {
+                            Box::new(|| {
+                                c.fetch_add(1, Ordering::SeqCst);
+                            }) as Box<dyn FnOnce() + Send + '_>
+                        })
+                        .collect();
+                    pool.run_tasks(inner, 3);
+                });
+            }
+            g.finalize();
+            pool.run_graph(g, 2);
+            assert_eq!(c.load(Ordering::SeqCst), 8);
+        }
+
+        // A panicking batch must fail fast, not deadlock, and must leave
+        // the pool reusable (every 8th iteration; kept sparse to limit
+        // panic-hook stderr noise in CI logs).
+        if iter % 8 == 0 {
+            let r = catch_unwind(AssertUnwindSafe(|| {
+                let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..16)
+                    .map(|i| {
+                        Box::new(move || {
+                            if i == 3 {
+                                panic!("stress panic");
+                            }
+                        }) as Box<dyn FnOnce() + Send + '_>
+                    })
+                    .collect();
+                pool.run_tasks(tasks, 4);
+            }));
+            assert!(r.is_err(), "panic must propagate (iter {iter})");
+            let c = AtomicU64::new(0);
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..8)
+                .map(|_| {
+                    Box::new(|| {
+                        c.fetch_add(1, Ordering::SeqCst);
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run_tasks(tasks, 4);
+            assert_eq!(c.load(Ordering::SeqCst), 8, "pool unusable after panic");
+        }
+
+        pool.shutdown(); // joins every worker; a hang here is a shutdown race
+    }
+}
