@@ -1,12 +1,12 @@
-//! Quickstart: reduce a random pencil to Hessenberg-triangular form and
-//! verify the decomposition.
+//! Quickstart: open a reduction session, reduce a random pencil to
+//! Hessenberg-triangular form, verify the decomposition — and reduce a
+//! second pencil on the *same* session to show the setup being reused.
 //!
 //! ```text
 //! cargo run --release --example quickstart [n]
 //! ```
 
-use paraht::config::Config;
-use paraht::ht::reduce_to_hessenberg_triangular;
+use paraht::api::HtSession;
 use paraht::pencil::random::random_pencil;
 use paraht::util::rng::Rng;
 
@@ -18,11 +18,13 @@ fn main() {
     let mut rng = Rng::new(1234);
     let pencil = random_pencil(n, &mut rng);
 
-    // 2. Reduce with the paper's tuning (r=16, p=8, q=8).
-    let cfg = Config::default();
-    let d = reduce_to_hessenberg_triangular(&pencil.a, &pencil.b, &cfg)
-        .expect("reduction succeeds");
-    println!("stage 1 (to {}-Hessenberg-triangular): {:.3}s", cfg.r, d.stage1_secs);
+    // 2. A session with the paper's tuning (r=16, p=8, q=8): the config is
+    //    validated once, the worker team resolved once, and the per-size
+    //    workspaces built on first use.
+    let mut session = HtSession::builder().threads(4).build().expect("valid config");
+    let d = session.reduce(&pencil.a, &pencil.b).expect("reduction succeeds");
+    let r = session.config().r;
+    println!("stage 1 (to {r}-Hessenberg-triangular): {:.3}s", d.stage1_secs);
     println!("stage 2 (bulge chasing to HT form):    {:.3}s", d.stage2_secs);
 
     // 3. Verify: A = Q H Zᵀ, B = Q T Zᵀ to machine precision.
@@ -32,5 +34,16 @@ fn main() {
         v.err_a, v.err_b, v.orth_q, v.orth_z
     );
     assert!(v.worst() < 1e-11, "verification failed");
+
+    // 4. A second pencil through the same session: workspaces (panel
+    //    plans, sweep groups, reflector arenas) and the warm worker pool
+    //    are reused — only the numerical work is paid again.
+    let pencil2 = random_pencil(n, &mut rng);
+    let d2 = session.reduce(&pencil2.a, &pencil2.b).expect("second reduction");
+    assert!(d2.verify(&pencil2.a, &pencil2.b).worst() < 1e-11);
+    println!(
+        "second reduction on the warm session: stage 1 {:.3}s, stage 2 {:.3}s",
+        d2.stage1_secs, d2.stage2_secs
+    );
     println!("OK — H is Hessenberg, T is triangular, factors orthogonal.");
 }

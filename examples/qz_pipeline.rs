@@ -9,9 +9,8 @@
 //! cargo run --release --example qz_pipeline [n]
 //! ```
 
-use paraht::config::Config;
+use paraht::api::HtSession;
 use paraht::ht::qz::{pencil_with_spectrum, qz};
-use paraht::ht::reduce_to_hessenberg_triangular;
 use paraht::util::rng::Rng;
 use paraht::util::timer::Timer;
 
@@ -29,10 +28,11 @@ fn main() {
         want[n - 1]
     );
 
-    // Phase 1+2: two-stage Hessenberg-triangular reduction.
-    let cfg = Config { r: 8, p: 4, q: 4, ..Config::default() };
+    // Phase 1+2: two-stage Hessenberg-triangular reduction through the
+    // session front door.
+    let mut session = HtSession::builder().band(8).block(4).group(4).build().unwrap();
     let t = Timer::start();
-    let d = reduce_to_hessenberg_triangular(&a, &b, &cfg).unwrap();
+    let d = session.reduce(&a, &b).unwrap();
     println!(
         "HT reduction: {:.3}s (stage1 {:.3}s, stage2 {:.3}s)",
         t.secs(),

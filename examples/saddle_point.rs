@@ -8,10 +8,9 @@
 //! cargo run --release --example saddle_point [n]
 //! ```
 
+use paraht::api::HtSession;
 use paraht::baselines::househt::{self, HouseHtOpts};
 use paraht::baselines::iterht::{self, IterHtOpts};
-use paraht::config::Config;
-use paraht::ht::reduce_to_hessenberg_triangular;
 use paraht::linalg::matrix::Matrix;
 use paraht::pencil::saddle::saddle_pencil;
 use paraht::util::rng::Rng;
@@ -28,9 +27,9 @@ fn main() {
     );
 
     // ParaHT: unaffected by the singular B.
-    let cfg = Config { r: 8, p: 4, q: 4, ..Config::default() };
+    let mut session = HtSession::builder().band(8).block(4).group(4).build().unwrap();
     let t = Timer::start();
-    let d = reduce_to_hessenberg_triangular(&pencil.a, &pencil.b, &cfg).unwrap();
+    let d = session.reduce(&pencil.a, &pencil.b).unwrap();
     let v = d.verify(&pencil.a, &pencil.b);
     println!("ParaHT : {:.3}s  backward error {:.2e}  — OK", t.secs(), v.err_a.max(v.err_b));
 

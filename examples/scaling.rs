@@ -7,10 +7,10 @@
 //! cargo run --release --example scaling [n]
 //! ```
 
-use paraht::coordinator::driver::{lapack_seq_time, paraht_curve, run_paraht};
+use paraht::api::HtSession;
+use paraht::coordinator::driver::{lapack_seq_time, paraht_curve};
 use paraht::coordinator::graph::TaskClass;
 use paraht::coordinator::sim::Simulator;
-use paraht::coordinator::stage1_par::ExecMode;
 use paraht::experiments::common::{scaled_config, PAPER_THREADS};
 use paraht::pencil::random::random_pencil;
 use paraht::util::rng::Rng;
@@ -29,8 +29,11 @@ fn main() {
     let t_lapack = lapack_seq_time(&pencil.a, &pencil.b);
     println!("sequential LAPACK (Moler–Stewart): {t_lapack:.3}s");
 
-    // ParaHT in trace mode: real execution + task trace for simulation.
-    let run = run_paraht(&pencil.a, &pencil.b, &cfg, ExecMode::Trace).unwrap();
+    // ParaHT through a trace-capturing session: real execution + task
+    // trace for simulation.
+    let mut session =
+        HtSession::builder().config(cfg).capture_traces(true).build().unwrap();
+    let run = session.reduce(&pencil.a, &pencil.b).unwrap();
     let v = run.verify(&pencil.a, &pencil.b);
     println!(
         "ParaHT backward error: A {:.2e}, B {:.2e} (machine precision)",
@@ -38,7 +41,7 @@ fn main() {
     );
     assert!(v.worst() < 1e-10);
 
-    let traces = run.traces.unwrap();
+    let traces = session.take_traces().unwrap();
     println!(
         "task graph: stage1 {} tasks, stage2 {} tasks ({} lookahead)",
         traces.0.durations.len(),

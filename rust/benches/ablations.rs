@@ -5,12 +5,10 @@
 use paraht::config::Config;
 use paraht::experiments::ablations::{lookahead_ablation, p_sweep, q_sweep};
 use paraht::experiments::common;
+use paraht::util::env;
 
 fn main() {
-    let n: usize = std::env::var("PARAHT_BENCH_N")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(320);
+    let n: usize = env::bench_n(320);
     eprintln!("ablations at n={n}");
 
     println!("\n== p sweep (stage 1): flops/n^3 and time ==");

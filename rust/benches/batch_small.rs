@@ -1,0 +1,141 @@
+//! Bench: batch throughput of the session front door —
+//! `HtSession::reduce_batch` on batches of small pencils, the regime where
+//! per-pencil setup (and per-pencil task graphs) would drown the actual
+//! reduction work. One pencil runs as one indivisible sequential job on
+//! one worker; the measurement is pencils/second by batch size and thread
+//! count.
+//!
+//! Writes `BENCH_batch.json` (override: `PALLAS_BENCH_OUT`) so the CI perf
+//! job accumulates a throughput trajectory per commit — always *before*
+//! the shape assertion runs, so a hard-mode failure never discards the
+//! data.
+//!
+//! Env knobs (canonical `PALLAS_` names; legacy `PARAHT_` aliases accepted
+//! — see `util::env`):
+//! * `PALLAS_BATCH_N=24` — pencil size.
+//! * `PALLAS_BATCH_SIZES=64,128,256` — batch sizes to sweep.
+//! * `PALLAS_BENCH_SOFT` / `PALLAS_BENCH_TOL` — soften / relax the
+//!   threaded-no-slower assertion (see `experiments::common`).
+
+use paraht::api::{reduce_seq, HtSession};
+use paraht::config::Config;
+use paraht::experiments::common;
+use paraht::pencil::random::{random_pencil, Pencil};
+use paraht::util::env;
+use paraht::util::proptest::max_abs_diff;
+use paraht::util::rng::Rng;
+use std::fmt::Write as _;
+use std::time::Instant;
+
+/// Thread counts recorded for the sweep (subset of the paper's Fig. 9a
+/// axis that fits CI runners).
+const THREADS: &[usize] = &[1, 4, 7];
+
+struct Row {
+    batch: usize,
+    threads: usize,
+    secs: f64,
+    pencils_per_sec: f64,
+}
+
+/// Best-of-2 wall-clock of one full batch reduction (plus one warmup).
+fn time_batch(session: &mut HtSession, pencils: &[Pencil]) -> f64 {
+    let mut best = f64::INFINITY;
+    for rep in 0..3 {
+        let t = Instant::now();
+        let out = session.reduce_batch(pencils).expect("batch reduces");
+        let secs = t.elapsed().as_secs_f64();
+        assert_eq!(out.len(), pencils.len());
+        if rep > 0 {
+            best = best.min(secs);
+        }
+    }
+    best
+}
+
+fn main() {
+    // Floor of 8 keeps the fixed r=4 band valid (r < n) no matter what
+    // PALLAS_BATCH_N is set to.
+    let n = env::batch_n(24).max(8);
+    let batches = env::batch_sizes(&[64, 128, 256]);
+    // Small-pencil tuning: the band must fit the pencils (r < n).
+    let cfg = Config { r: 4, p: 2, q: 4, ..Config::default() };
+    eprintln!(
+        "batch_small: n={n}, batches {batches:?} (set PALLAS_BATCH_N / PALLAS_BATCH_SIZES to change)"
+    );
+
+    let mut rng = Rng::new(2424);
+    let largest = batches.iter().copied().max().unwrap_or(0);
+    let pool: Vec<Pencil> = (0..largest).map(|_| random_pencil(n, &mut rng)).collect();
+
+    // Structural parity spot check: the batch path must be bitwise the
+    // sequential oracle on every pencil (hard assert — not timing).
+    {
+        let mut s = HtSession::builder().config(cfg.clone()).threads(4).build().unwrap();
+        let out = s.reduce_batch(&pool[..4.min(pool.len())]).unwrap();
+        for (p, d) in pool.iter().zip(&out) {
+            let oracle = reduce_seq(&p.a, &p.b, &cfg).unwrap();
+            assert_eq!(max_abs_diff(&d.h, &oracle.h), 0.0, "batch H diverges from oracle");
+            assert_eq!(max_abs_diff(&d.t, &oracle.t), 0.0, "batch T diverges from oracle");
+            assert_eq!(max_abs_diff(&d.q, &oracle.q), 0.0, "batch Q diverges from oracle");
+            assert_eq!(max_abs_diff(&d.z, &oracle.z), 0.0, "batch Z diverges from oracle");
+        }
+    }
+
+    println!("{:<8}{:>9}{:>12}{:>16}", "batch", "threads", "secs", "pencils/sec");
+    let mut rows: Vec<Row> = Vec::new();
+    for &bs in &batches {
+        let pencils = &pool[..bs.min(pool.len())];
+        for &t in THREADS {
+            let mut session =
+                HtSession::builder().config(cfg.clone()).threads(t).build().unwrap();
+            let secs = time_batch(&mut session, pencils);
+            let pps = pencils.len() as f64 / secs;
+            println!("{bs:<8}{t:>9}{secs:>12.4}{pps:>16.1}");
+            rows.push(Row { batch: bs, threads: t, secs, pencils_per_sec: pps });
+        }
+    }
+
+    // Shape condition: threaded batching must not be slower than the
+    // 1-thread loop on the largest batch. Timing-sensitive — soft mode /
+    // PALLAS_BENCH_TOL relax it on noisy hardware. Evaluated here, but
+    // asserted only after the JSON artifact is written.
+    let pps_at = |bs: usize, t: usize| {
+        rows.iter()
+            .find(|r| r.batch == bs && r.threads == t)
+            .map(|r| r.pencils_per_sec)
+            .unwrap_or(f64::NAN)
+    };
+    let (t1, t4) = (pps_at(largest, 1), pps_at(largest, 4));
+    let speedup_4t = t4 / t1;
+    let cond_par = largest == 0 || speedup_4t >= 1.0 / common::bench_tol();
+
+    // ---- Emit BENCH_batch.json. ----
+    let mut body = String::new();
+    let _ = writeln!(body, "  \"n\": {n},");
+    body.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let _ = write!(
+            body,
+            "    {{\"batch\": {}, \"threads\": {}, \"secs\": {:.6}, \"pencils_per_sec\": {}}}",
+            r.batch,
+            r.threads,
+            r.secs,
+            common::json_num(r.pencils_per_sec)
+        );
+        body.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    body.push_str("  ],\n");
+    let _ = writeln!(body, "  \"speedup_4t\": {},", common::json_num(speedup_4t));
+    let _ = write!(body, "  \"checks_held\": {cond_par}");
+    common::write_bench_json("BENCH_batch.json", "batch_small", &body);
+
+    if common::bench_check(
+        cond_par,
+        &format!(
+            "4-thread batch throughput must not trail 1-thread: {t4:.1} vs {t1:.1} pencils/sec"
+        ),
+    ) {
+        println!("\nshape checks OK (batch parity exact; threaded batching no slower)");
+    }
+}

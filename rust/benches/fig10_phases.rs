@@ -10,13 +10,11 @@
 //! never discards the data.
 
 use paraht::experiments::{common, figures};
+use paraht::util::env;
 use std::fmt::Write as _;
 
 fn main() {
-    let sizes: Vec<usize> = std::env::var("PARAHT_BENCH_SIZES")
-        .ok()
-        .map(|s| s.split(',').filter_map(|p| p.parse().ok()).collect())
-        .unwrap_or_else(|| vec![192, 384, 576]);
+    let sizes = env::bench_sizes(&[192, 384, 576]);
     eprintln!("fig10: sizes {sizes:?}");
     let data = figures::fig10(&sizes, 42);
 

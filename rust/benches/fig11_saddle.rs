@@ -7,12 +7,10 @@
 //! converge within 10 refinement iterations.
 
 use paraht::experiments::{common, figures};
+use paraht::util::env;
 
 fn main() {
-    let sizes: Vec<usize> = std::env::var("PARAHT_BENCH_SIZES")
-        .ok()
-        .map(|s| s.split(',').filter_map(|p| p.parse().ok()).collect())
-        .unwrap_or_else(|| vec![128, 256, 384]);
+    let sizes = env::bench_sizes(&[128, 256, 384]);
     eprintln!("fig11: saddle-point pencils, sizes {sizes:?}");
     let saddle = figures::fig11(&sizes, 28, 42);
     let random = figures::fig9b(&sizes, 28, 42);

@@ -13,14 +13,12 @@
 //! shape assertions run, so a hard-mode failure never discards the data.
 
 use paraht::experiments::{common, figures};
+use paraht::util::env;
 use std::fmt::Write as _;
 
 fn main() {
-    let n: usize = std::env::var("PARAHT_BENCH_N")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(384);
-    eprintln!("fig9a: random pencil n={n} (set PARAHT_BENCH_N to change)");
+    let n: usize = env::bench_n(384);
+    eprintln!("fig9a: random pencil n={n} (set PALLAS_BENCH_N to change)");
     let series = figures::fig9a(n, 42);
 
     let header: Vec<String> = common::PAPER_THREADS.iter().map(|p| format!("P={p}")).collect();
@@ -49,9 +47,32 @@ fn main() {
     let cond_plausible = p1 < 1.6 * tol;
     let cond_scales = plast > p1 * 1.5 / tol;
 
+    // Kernel-speed-normalized one-core comparison (ROADMAP fig9a item):
+    // dividing out the measured per-flop throughputs reduces the wall
+    // ratio to the pure algorithmic flop ratio, which is deterministic —
+    // the paper predicts ~21.33/14 at the §4 tuning (~24/14 scaled).
+    let norm = figures::fig9a_one_core_normalized(n, 42);
+    println!(
+        "one-core normalized: flop ratio {:.3} (wall {:.3}; ParaHT {:.2} GFLOP/s, LAPACK {:.2} GFLOP/s)",
+        norm.flop_ratio, norm.wall_ratio, norm.paraht_gflops, norm.lapack_gflops
+    );
+    let cond_norm = norm.flop_ratio > 1.15 && norm.flop_ratio < 2.8;
+    // The band is calibrated for n >= 128 only; below that it neither
+    // gates checks_held nor is asserted.
+    let cond_norm_applies = n >= 128;
+    let cond_norm_held = !cond_norm_applies || cond_norm;
+
     // ---- Emit BENCH_fig9a.json. ----
     let mut body = String::new();
     let _ = writeln!(body, "  \"n\": {n},");
+    let _ = writeln!(
+        body,
+        "  \"one_core\": {{\"flop_ratio\": {}, \"wall_ratio\": {}, \"paraht_gflops\": {}, \"lapack_gflops\": {}}},",
+        common::json_num(norm.flop_ratio),
+        common::json_num(norm.wall_ratio),
+        common::json_num(norm.paraht_gflops),
+        common::json_num(norm.lapack_gflops)
+    );
     body.push_str("  \"series\": [\n");
     for (i, s) in series.iter().enumerate() {
         let _ = write!(body, "    {{\"name\": \"{}\", \"points\": [", s.name);
@@ -61,7 +82,11 @@ fn main() {
         body.push_str(if i + 1 < series.len() { "]},\n" } else { "]}\n" });
     }
     body.push_str("  ],\n");
-    let _ = write!(body, "  \"checks_held\": {}", cond_plausible && cond_scales);
+    let _ = write!(
+        body,
+        "  \"checks_held\": {}",
+        cond_plausible && cond_scales && cond_norm_held
+    );
     common::write_bench_json("BENCH_fig9a.json", "fig9a_threads", &body);
 
     let mut ok =
@@ -70,7 +95,29 @@ fn main() {
         cond_scales,
         &format!("ParaHT must scale with P: {p1:.2} -> {plast:.2}"),
     );
+    // Structural, not timing: flop counts are deterministic (this bench
+    // runs the measured reductions single-threaded), so like table_flops
+    // this stays a hard assert even in soft mode — but only at sizes the
+    // (1.15, 2.8) band is calibrated for; at tiny PALLAS_BENCH_N the
+    // lower-order terms dominate and the band is meaningless, so a
+    // record-only run must not abort on it.
+    if cond_norm_applies {
+        assert!(
+            cond_norm,
+            "flop-normalized one-core ratio outside (1.15, 2.8): {:.3}",
+            norm.flop_ratio
+        );
+    } else if !cond_norm {
+        println!(
+            "note: flop ratio {:.3} outside the n>=128 calibration band (n={n}; not asserted)",
+            norm.flop_ratio
+        );
+    }
     if ok {
-        println!("\nshape checks OK (ParaHT scales with P; comparators saturate)");
+        if cond_norm_applies {
+            println!("\nshape checks OK (ParaHT scales with P; comparators saturate; flop-normalized one-core ratio plausible)");
+        } else {
+            println!("\nshape checks OK (ParaHT scales with P; comparators saturate)");
+        }
     }
 }

@@ -12,14 +12,12 @@
 //! recorded as `null`.
 
 use paraht::experiments::{common, figures};
+use paraht::util::env;
 use std::fmt::Write as _;
 
 fn main() {
-    let sizes: Vec<usize> = std::env::var("PARAHT_BENCH_SIZES")
-        .ok()
-        .map(|s| s.split(',').filter_map(|p| p.parse().ok()).collect())
-        .unwrap_or_else(|| vec![128, 256, 384, 512]);
-    eprintln!("fig9b: sizes {sizes:?} (set PARAHT_BENCH_SIZES to change)");
+    let sizes = env::bench_sizes(&[128, 256, 384, 512]);
+    eprintln!("fig9b: sizes {sizes:?} (set PALLAS_BENCH_SIZES to change)");
     let rows = figures::fig9b(&sizes, 28, 42);
 
     let header = vec!["/LAPACK".to_string(), "/HouseHT".to_string(), "/IterHT".to_string()];

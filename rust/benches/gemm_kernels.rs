@@ -10,9 +10,10 @@
 //! (fresh threads per call, identical panel split) on every benched shape —
 //! the pool must never lose.
 //!
-//! Env knobs:
-//! * `PARAHT_GEMM_SIZES=128,256,512` — square sizes to sweep (default).
-//! * `PARAHT_BENCH_OUT=path` — JSON output path (default `BENCH_gemm.json`
+//! Env knobs (canonical `PALLAS_` names; legacy `PARAHT_` aliases accepted
+//! — see `util::env`):
+//! * `PALLAS_GEMM_SIZES=128,256,512` — square sizes to sweep (default).
+//! * `PALLAS_BENCH_OUT=path` — JSON output path (default `BENCH_gemm.json`
 //!   in the working directory, i.e. `rust/` under `cargo bench`).
 //! * `PALLAS_POOL_THREADS` — worker-team size (see `coordinator::pool`).
 //! * `PALLAS_BENCH_SOFT=1` / `PALLAS_BENCH_TOL` — soften / relax the
@@ -172,14 +173,8 @@ struct VsCase {
 
 fn main() {
     flops::set_enabled(false); // measure the kernel, not the counter
-    let mut sizes: Vec<usize> = std::env::var("PARAHT_GEMM_SIZES")
-        .ok()
-        .map(|s| s.split(',').filter_map(|p| p.parse().ok()).collect())
-        .unwrap_or_default();
-    if sizes.is_empty() {
-        sizes = vec![128, 256, 512];
-    }
-    eprintln!("gemm kernels: square sizes {sizes:?} (set PARAHT_GEMM_SIZES to change)");
+    let sizes = paraht::util::env::gemm_sizes(&[128, 256, 512]);
+    eprintln!("gemm kernels: square sizes {sizes:?} (set PALLAS_GEMM_SIZES to change)");
     let mut rng = Rng::new(4242);
     let mut cases: Vec<Case> = Vec::new();
 

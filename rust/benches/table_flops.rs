@@ -3,12 +3,10 @@
 //! `14n³`, two-stage overhead "more than 40%".
 
 use paraht::experiments::flops_table::{measure, stage1_coeff};
+use paraht::util::env;
 
 fn main() {
-    let sizes: Vec<usize> = std::env::var("PARAHT_BENCH_SIZES")
-        .ok()
-        .map(|s| s.split(',').filter_map(|p| p.parse().ok()).collect())
-        .unwrap_or_else(|| vec![192, 320, 448]);
+    let sizes = env::bench_sizes(&[192, 320, 448]);
     let (r, p, q) = (8usize, 4usize, 4usize);
     eprintln!("flop table: sizes {sizes:?}, r={r} p={p} q={q}");
     let rows = measure(&sizes, r, p, q, 42);

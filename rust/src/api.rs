@@ -1,0 +1,745 @@
+//! The front-door API: [`HtSession`], a builder-configured, long-lived
+//! reduction session.
+//!
+//! The two-stage algorithm earns its parallel speed by amortizing setup —
+//! a persistent worker team, hot per-worker GEMM pack buffers, reusable
+//! reflector arenas. A session is the API-level expression of the same
+//! idea: configure once with [`HtSession::builder`], then call
+//! [`HtSession::reduce`] (one pencil, bitwise-identical to the sequential
+//! oracle) or [`HtSession::reduce_batch`] (many independent pencils, one
+//! per worker) as many times as needed. The session owns the resolved pool
+//! handle and the per-`n` workspaces (panel plans, sweep groups, reflector
+//! arenas), so repeat reductions skip every piece of setup that does not
+//! depend on the matrix *values*.
+//!
+//! Telemetry goes through the [`TraceSink`] trait instead of the old
+//! `ExecMode` enum-threading: the default [`NoopSink`] keeps threaded
+//! execution, while a [`TraceRecorder`] (or [`HtSessionBuilder::capture_traces`])
+//! switches the coordinator to sequential per-task-timed execution and
+//! records [`TaskTrace`]s for the makespan simulator — exactly what
+//! `ExecMode::Trace` used to do.
+//!
+//! ```no_run
+//! use paraht::api::HtSession;
+//! # use paraht::pencil::random::random_pencil;
+//! # use paraht::util::rng::Rng;
+//! let mut rng = Rng::new(1);
+//! let p1 = random_pencil(256, &mut rng);
+//! let p2 = random_pencil(256, &mut rng);
+//! let mut session = HtSession::builder().threads(4).build().unwrap();
+//! let d1 = session.reduce(&p1.a, &p1.b).unwrap(); // sets up workspaces
+//! let d2 = session.reduce(&p2.a, &p2.b).unwrap(); // reuses them
+//! assert!(d1.verify(&p1.a, &p1.b).worst() < 1e-10);
+//! assert!(d2.verify(&p2.a, &p2.b).worst() < 1e-10);
+//! ```
+#![warn(missing_docs)]
+
+use crate::config::Config;
+use crate::coordinator::graph::TaskTrace;
+use crate::coordinator::pool::{self, WorkerPool};
+use crate::coordinator::slices::SharedMat;
+use crate::coordinator::stage1_par::{self, Stage1Arena};
+use crate::coordinator::stage2_par::{self, sweep_groups, Stage2Arena};
+use crate::error::{Error, Result};
+use crate::ht::stage1::{panel_plans, PanelPlan};
+use crate::linalg::matrix::Matrix;
+use crate::linalg::verify::max_below_band;
+use crate::pencil::random::pre_triangularize;
+use crate::pencil::Pencil;
+use crate::util::timer::Timer;
+use std::sync::{Arc, Mutex};
+
+pub use crate::ht::two_stage::HtDecomposition;
+
+/// Reduce one pencil with the sequential two-stage oracle — the free-
+/// function form of [`HtSession::reduce`] at `threads = 1`.
+///
+/// `b` need not be triangular: a QR-based pre-triangularization is applied
+/// first (accumulated into `Q`). This is the bitwise reference every
+/// parallel execution path is pinned to by `tests/equivalence.rs`; the
+/// deprecated `ht::reduce_to_hessenberg_triangular` shim delegates here
+/// unchanged.
+pub fn reduce_seq(a: &Matrix, b: &Matrix, cfg: &Config) -> Result<HtDecomposition> {
+    let n = a.rows();
+    check_pencil_shape(a, b)?;
+    cfg.validate_for(n)?;
+    let (mut h, mut t, mut q, mut z) = prepare_pencil(a, b);
+
+    let t1 = Timer::start();
+    crate::ht::stage1::reduce_to_banded(&mut h, &mut t, &mut q, &mut z, cfg);
+    let stage1_secs = t1.secs();
+
+    let t2 = Timer::start();
+    crate::ht::stage2_blocked::reduce_blocked(&mut h, &mut t, &mut q, &mut z, cfg.r, cfg.q);
+    let stage2_secs = t2.secs();
+
+    Ok(HtDecomposition { h, t, q, z, stage1_secs, stage2_secs })
+}
+
+/// Shared reduction prologue: clone the pencil into working factors with
+/// fresh accumulators, pre-triangularizing `B` if needed (not counted as a
+/// stage; LAPACK users run dgeqrf+dormqr ahead of dgghd3 the same way).
+/// Keeping the trigger in exactly one place protects the bitwise
+/// oracle-equivalence contract between the sequential and graph paths.
+fn prepare_pencil(a: &Matrix, b: &Matrix) -> (Matrix, Matrix, Matrix, Matrix) {
+    let n = a.rows();
+    let mut h = a.clone();
+    let mut t = b.clone();
+    let mut q = Matrix::identity(n);
+    let z = Matrix::identity(n);
+    if max_below_band(&t, 0) != 0.0 {
+        pre_triangularize(&mut h, &mut t, &mut q);
+    }
+    (h, t, q, z)
+}
+
+fn check_pencil_shape(a: &Matrix, b: &Matrix) -> Result<()> {
+    let n = a.rows();
+    if a.cols() != n || b.rows() != n || b.cols() != n {
+        return Err(Error::shape(format!(
+            "pencil must be square and consistent: A {}x{}, B {}x{}",
+            a.rows(),
+            a.cols(),
+            b.rows(),
+            b.cols()
+        )));
+    }
+    Ok(())
+}
+
+/// One completed reduction, as reported to a [`TraceSink`].
+#[derive(Clone)]
+pub struct ReduceReport {
+    /// Problem size.
+    pub n: usize,
+    /// Wall-clock seconds spent in stage 1.
+    pub stage1_secs: f64,
+    /// Wall-clock seconds spent in stage 2.
+    pub stage2_secs: f64,
+    /// Per-task traces of (stage 1, stage 2) — present only when the
+    /// session captures traces (see [`TraceSink::wants_task_traces`]).
+    pub traces: Option<(TaskTrace, TaskTrace)>,
+    /// Whether this reduction ran as part of a [`HtSession::reduce_batch`]
+    /// call (batch jobs never carry task traces).
+    pub batched: bool,
+}
+
+/// Observer for per-reduction telemetry — the pluggable replacement for
+/// threading `ExecMode::Trace` through every entry point.
+///
+/// Implementations decide two things: whether the session should run the
+/// coordinator graphs *sequentially with per-task timing* so that
+/// [`TaskTrace`]s exist ([`TraceSink::wants_task_traces`]), and what to do
+/// with each completed reduction ([`TraceSink::on_reduce`]).
+pub trait TraceSink: Send {
+    /// Whether the session should capture per-task traces. Returning
+    /// `true` forces sequential (timed) graph execution — the semantics of
+    /// the old `ExecMode::Trace`. The default is `false`: threaded
+    /// execution, phase timings only.
+    fn wants_task_traces(&self) -> bool {
+        false
+    }
+
+    /// Called once per completed reduction (including once per pencil of a
+    /// batch).
+    fn on_reduce(&mut self, report: &ReduceReport);
+}
+
+/// The default sink: ignores every report, keeps threaded execution.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NoopSink;
+
+impl TraceSink for NoopSink {
+    fn on_reduce(&mut self, _report: &ReduceReport) {}
+}
+
+/// A recording sink with shared interior: clone it, hand one clone to
+/// [`HtSessionBuilder::trace`], and read [`TraceRecorder::reports`] from
+/// the other after reducing. Requests task traces, so sessions carrying a
+/// recorder run the coordinator sequentially with per-task timing (the
+/// simulator-calibration mode).
+#[derive(Clone, Default)]
+pub struct TraceRecorder {
+    inner: Arc<Mutex<Vec<ReduceReport>>>,
+}
+
+impl TraceRecorder {
+    /// New, empty recorder.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Snapshot of every report recorded so far.
+    pub fn reports(&self) -> Vec<ReduceReport> {
+        self.inner.lock().unwrap().clone()
+    }
+
+    /// Number of recorded reports.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    /// Whether nothing has been recorded yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl TraceSink for TraceRecorder {
+    fn wants_task_traces(&self) -> bool {
+        true
+    }
+
+    fn on_reduce(&mut self, report: &ReduceReport) {
+        self.inner.lock().unwrap().push(report.clone());
+    }
+}
+
+/// Stage wall-clock times of one reduction (the cheap always-on log behind
+/// [`HtSession::phases`]).
+#[derive(Clone, Copy, Debug)]
+pub struct PhaseTiming {
+    /// Problem size.
+    pub n: usize,
+    /// Wall-clock seconds spent in stage 1.
+    pub stage1_secs: f64,
+    /// Wall-clock seconds spent in stage 2.
+    pub stage2_secs: f64,
+}
+
+/// Per-`n` reusable workspace: everything a reduction sets up that depends
+/// only on the problem *geometry*, not the matrix values.
+struct Workspace {
+    n: usize,
+    /// Stage-1 panel plans (`panel_plans(n, r, p)`).
+    plans: Vec<PanelPlan>,
+    /// Stage-2 sweep groups (`sweep_groups(n, q)`).
+    groups: Vec<(usize, usize)>,
+    /// Stage-1 reflector slot arena (reset between runs).
+    arena1: Stage1Arena,
+    /// Stage-2 reflector-store + WY-cache arena (reset between runs).
+    arena2: Stage2Arena,
+}
+
+/// Builder for [`HtSession`] — consumes and validates the [`Config`] once.
+///
+/// Built with [`HtSession::builder`]; every method takes and returns the
+/// builder by value, so calls chain:
+///
+/// ```no_run
+/// # use paraht::api::HtSession;
+/// let session = HtSession::builder().threads(4).band(8).block(4).group(4).build().unwrap();
+/// ```
+pub struct HtSessionBuilder {
+    cfg: Config,
+    clip_band: bool,
+    capture: bool,
+    sink: Option<Box<dyn TraceSink>>,
+}
+
+impl HtSessionBuilder {
+    /// Replace the whole configuration (other setters refine it).
+    pub fn config(mut self, cfg: Config) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Number of worker threads (caller + pool helpers). `1` runs the
+    /// sequential oracle path.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.cfg.threads = threads;
+        self
+    }
+
+    /// Stage-1 target bandwidth / panel width `r` (= the paper's `n_b`).
+    pub fn band(mut self, r: usize) -> Self {
+        self.cfg.r = r;
+        self
+    }
+
+    /// Stage-1 block-height multiplier `p` (QR blocks are `p·r × r`).
+    pub fn block(mut self, p: usize) -> Self {
+        self.cfg.p = p;
+        self
+    }
+
+    /// Stage-2 sweep-group size `q`.
+    pub fn group(mut self, q: usize) -> Self {
+        self.cfg.q = q;
+        self
+    }
+
+    /// Number of row/column slices per apply task (0 = auto).
+    pub fn slices(mut self, slices: usize) -> Self {
+        self.cfg.slices = slices;
+        self
+    }
+
+    /// Enable/disable stage-2 lookahead tasks (ablation switch).
+    pub fn lookahead(mut self, on: bool) -> Self {
+        self.cfg.lookahead = on;
+        self
+    }
+
+    /// Clip the stage-1 bandwidth to `min(r, n - 1)` per pencil instead of
+    /// rejecting `r >= n` — the small-pencil throughput mode that lets one
+    /// session with the paper tuning serve [`HtSession::reduce_batch`]
+    /// batches of pencils smaller than the configured band. Off by
+    /// default: an unclipped session is bitwise the sequential oracle and
+    /// errors on `r >= n` exactly like it.
+    pub fn clip_band(mut self, on: bool) -> Self {
+        self.clip_band = on;
+        self
+    }
+
+    /// Capture per-task [`TaskTrace`]s on every [`HtSession::reduce`] call
+    /// (forces sequential, per-task-timed coordinator execution — the old
+    /// `ExecMode::Trace`). Implied by any sink whose
+    /// [`TraceSink::wants_task_traces`] returns `true`.
+    pub fn capture_traces(mut self, on: bool) -> Self {
+        self.capture = on;
+        self
+    }
+
+    /// Install a telemetry sink (default: [`NoopSink`]).
+    pub fn trace(mut self, sink: impl TraceSink + 'static) -> Self {
+        self.sink = Some(Box::new(sink));
+        self
+    }
+
+    /// Validate the configuration, resolve the worker-pool handle and
+    /// construct the session. Configuration errors (zero threads,
+    /// inconsistent blocking, budget violations) surface here as
+    /// [`Error::Config`] — `reduce` calls only re-check the
+    /// size-dependent constraint (`r < n`).
+    pub fn build(self) -> Result<HtSession> {
+        self.cfg.validate()?;
+        let sink = self.sink.unwrap_or_else(|| Box::new(NoopSink));
+        let capture = self.capture || sink.wants_task_traces();
+        // Resolve (and thereby warm) the persistent team up front so the
+        // one-time thread-startup cost lands in session construction, not
+        // in the first reduction's stage timers. Trace capture runs
+        // `reduce` sequentially and never touches the pool, so capture
+        // sessions deliberately skip the spawn (a trace-only process
+        // should not carry a parked worker team); if such a session later
+        // calls `reduce_batch` with threads > 1, the team is resolved
+        // lazily inside that first batch instead.
+        let pool = if self.cfg.threads > 1 && !capture { Some(pool::global()) } else { None };
+        Ok(HtSession {
+            cfg: self.cfg,
+            clip_band: self.clip_band,
+            capture,
+            pool,
+            sink,
+            ws: None,
+            phase_log: Vec::new(),
+            last_traces: None,
+        })
+    }
+}
+
+/// A long-lived Hessenberg-triangular reduction session (see the [module
+/// docs](self) for the design rationale).
+///
+/// Configured once via [`HtSession::builder`]; [`HtSession::reduce`] and
+/// [`HtSession::reduce_batch`] then reuse the resolved pool handle and the
+/// per-`n` workspaces across calls.
+pub struct HtSession {
+    cfg: Config,
+    clip_band: bool,
+    capture: bool,
+    pool: Option<&'static WorkerPool>,
+    sink: Box<dyn TraceSink>,
+    ws: Option<Workspace>,
+    phase_log: Vec<PhaseTiming>,
+    last_traces: Option<(TaskTrace, TaskTrace)>,
+}
+
+impl std::fmt::Debug for HtSession {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("HtSession")
+            .field("cfg", &self.cfg)
+            .field("clip_band", &self.clip_band)
+            .field("capture", &self.capture)
+            .field("pool_workers", &self.pool.map(|p| p.worker_count()))
+            .field("reductions", &self.phase_log.len())
+            .finish_non_exhaustive()
+    }
+}
+
+impl HtSession {
+    /// Start building a session from the paper-default [`Config`].
+    pub fn builder() -> HtSessionBuilder {
+        HtSessionBuilder { cfg: Config::default(), clip_band: false, capture: false, sink: None }
+    }
+
+    /// The session's (validated) configuration.
+    pub fn config(&self) -> &Config {
+        &self.cfg
+    }
+
+    /// Stage timings of every reduction this session has run, in order
+    /// (batch reductions appear once per pencil). The log grows with every
+    /// call — long-lived sessions should drain it periodically with
+    /// [`HtSession::clear_phases`].
+    pub fn phases(&self) -> &[PhaseTiming] {
+        &self.phase_log
+    }
+
+    /// Clear the phase log (see [`HtSession::phases`]).
+    pub fn clear_phases(&mut self) {
+        self.phase_log.clear();
+    }
+
+    /// Task traces of the most recent trace-captured [`HtSession::reduce`]
+    /// call (`None` unless the session captures traces).
+    pub fn trace(&self) -> Option<&(TaskTrace, TaskTrace)> {
+        self.last_traces.as_ref()
+    }
+
+    /// Take ownership of the most recent task traces (see
+    /// [`HtSession::trace`]), leaving `None` behind.
+    pub fn take_traces(&mut self) -> Option<(TaskTrace, TaskTrace)> {
+        self.last_traces.take()
+    }
+
+    /// The per-pencil effective configuration: the session config with the
+    /// bandwidth clipped to the problem size when
+    /// [`HtSessionBuilder::clip_band`] is on, validated for `n`.
+    fn effective_cfg(&self, n: usize) -> Result<Config> {
+        let mut cfg = self.cfg.clone();
+        if self.clip_band && n >= 3 && cfg.r >= n {
+            cfg.r = (n - 1).max(2);
+        }
+        cfg.validate_for(n)?;
+        Ok(cfg)
+    }
+
+    /// (Re)build the per-`n` workspace if the problem size changed.
+    fn ensure_workspace(&mut self, n: usize, cfg: &Config) {
+        let stale = self.ws.as_ref().map(|w| w.n != n).unwrap_or(true);
+        if stale {
+            let plans = panel_plans(n, cfg.r, cfg.p);
+            let groups = sweep_groups(n, cfg.q);
+            let arena1 = Stage1Arena::new(&plans);
+            let arena2 = Stage2Arena::new(n, cfg.r, &groups);
+            self.ws = Some(Workspace { n, plans, groups, arena1, arena2 });
+        }
+    }
+
+    /// Reduce one pencil to Hessenberg-triangular form: `A = Q H Zᵀ`,
+    /// `B = Q T Zᵀ`. `b` need not be triangular (pre-triangularization is
+    /// applied first, accumulated into `Q`).
+    ///
+    /// Every execution mode of the session — sequential (`threads = 1`),
+    /// threaded, trace-capturing — produces bitwise-identical factors
+    /// (pinned by `tests/equivalence.rs`).
+    pub fn reduce(&mut self, a: &Matrix, b: &Matrix) -> Result<HtDecomposition> {
+        check_pencil_shape(a, b)?;
+        let n = a.rows();
+        let cfg = self.effective_cfg(n)?;
+
+        let (dec, traces) = if self.capture || cfg.threads > 1 {
+            self.reduce_graph(a, b, &cfg)?
+        } else {
+            (reduce_seq(a, b, &cfg)?, None)
+        };
+
+        self.phase_log.push(PhaseTiming {
+            n,
+            stage1_secs: dec.stage1_secs,
+            stage2_secs: dec.stage2_secs,
+        });
+        let report = ReduceReport {
+            n,
+            stage1_secs: dec.stage1_secs,
+            stage2_secs: dec.stage2_secs,
+            traces,
+            batched: false,
+        };
+        self.sink.on_reduce(&report);
+        self.last_traces = report.traces;
+        Ok(dec)
+    }
+
+    /// Coordinator path: build the stage task graphs over the session
+    /// workspace and execute them on the pool (or sequentially with
+    /// per-task timing when capturing traces).
+    fn reduce_graph(
+        &mut self,
+        a: &Matrix,
+        b: &Matrix,
+        cfg: &Config,
+    ) -> Result<(HtDecomposition, Option<(TaskTrace, TaskTrace)>)> {
+        let n = a.rows();
+        self.ensure_workspace(n, cfg);
+        let capture = self.capture;
+        let pool = self.pool;
+        let ws = self.ws.as_ref().expect("workspace just ensured");
+        ws.arena1.reset();
+        ws.arena2.reset();
+
+        let (mut h, mut t, mut q, mut z) = prepare_pencil(a, b);
+
+        let t1 = Timer::start();
+        let tr1 = {
+            let sa = SharedMat::new(&mut h);
+            let sb = SharedMat::new(&mut t);
+            let sq = SharedMat::new(&mut q);
+            let sz = SharedMat::new(&mut z);
+            let graph = stage1_par::build_graph(&sa, &sb, &sq, &sz, &ws.arena1, &ws.plans, cfg);
+            if capture {
+                Some(graph.run_sequential())
+            } else {
+                pool.expect("threaded sessions resolve the pool at build")
+                    .run_graph(graph, cfg.threads);
+                None
+            }
+        };
+        let stage1_secs = t1.secs();
+
+        let t2 = Timer::start();
+        let tr2 = {
+            let sa = SharedMat::new(&mut h);
+            let sb = SharedMat::new(&mut t);
+            let sq = SharedMat::new(&mut q);
+            let sz = SharedMat::new(&mut z);
+            let graph = stage2_par::build_graph(&sa, &sb, &sq, &sz, &ws.arena2, &ws.groups, cfg);
+            if capture {
+                Some(graph.run_sequential())
+            } else {
+                pool.expect("threaded sessions resolve the pool at build")
+                    .run_graph(graph, cfg.threads);
+                None
+            }
+        };
+        let stage2_secs = t2.secs();
+
+        Ok((HtDecomposition { h, t, q, z, stage1_secs, stage2_secs }, tr1.zip(tr2)))
+    }
+
+    /// Reduce a batch of independent pencils — the throughput mode for
+    /// many small problems, where per-pencil task graphs would drown in
+    /// scheduling overhead. Each pencil runs the *sequential* oracle as
+    /// one indivisible job; jobs are dispatched across the session's
+    /// worker team (one pencil per worker), so results are bitwise
+    /// identical to calling [`HtSession::reduce`] (at `threads = 1`) on
+    /// each pencil in order, regardless of scheduling.
+    ///
+    /// All pencils are validated up front: a shape or configuration error
+    /// on any of them fails the whole call before any work starts. Batch
+    /// reductions never capture task traces.
+    pub fn reduce_batch(&mut self, pencils: &[Pencil]) -> Result<Vec<HtDecomposition>> {
+        // Typed errors before any work: shapes and per-n config. Each job
+        // runs strictly sequentially (threads = 1): the batch's
+        // parallelism is one-pencil-per-worker, and a job fanning its own
+        // trailing updates out on the same pool would only contend with
+        // its sibling jobs. (Thread count never changes the numbers —
+        // kernels are slicing-invariant — only the scheduling.)
+        let mut cfgs = Vec::with_capacity(pencils.len());
+        for p in pencils {
+            check_pencil_shape(&p.a, &p.b)?;
+            let mut cfg = self.effective_cfg(p.n())?;
+            cfg.threads = 1;
+            cfgs.push(cfg);
+        }
+
+        type Slot = Mutex<Option<Result<HtDecomposition>>>;
+        let slots: Vec<Slot> = pencils.iter().map(|_| Mutex::new(None)).collect();
+        let threads = self.cfg.threads.min(pencils.len().max(1));
+        if threads <= 1 {
+            for ((p, cfg), slot) in pencils.iter().zip(&cfgs).zip(&slots) {
+                *slot.lock().unwrap() = Some(reduce_seq(&p.a, &p.b, cfg));
+            }
+        } else {
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = pencils
+                .iter()
+                .zip(&cfgs)
+                .zip(&slots)
+                .map(|((p, cfg), slot)| {
+                    Box::new(move || {
+                        *slot.lock().unwrap() = Some(reduce_seq(&p.a, &p.b, cfg));
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            // Trace-capture sessions hold no pool handle (see `build`);
+            // batches still run threaded (they are plain data-parallel
+            // jobs), resolving the team lazily here on first use.
+            self.pool.unwrap_or_else(pool::global).run_tasks(tasks, threads);
+        }
+
+        let mut out = Vec::with_capacity(pencils.len());
+        for slot in slots {
+            let dec = slot
+                .into_inner()
+                .unwrap()
+                .expect("batch job completed (pool propagates panics)")?;
+            out.push(dec);
+        }
+        for dec in &out {
+            let report = ReduceReport {
+                n: dec.h.rows(),
+                stage1_secs: dec.stage1_secs,
+                stage2_secs: dec.stage2_secs,
+                traces: None,
+                batched: true,
+            };
+            self.phase_log.push(PhaseTiming {
+                n: report.n,
+                stage1_secs: report.stage1_secs,
+                stage2_secs: report.stage2_secs,
+            });
+            self.sink.on_reduce(&report);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pencil::random::{random_pencil, random_pencil_general};
+    use crate::util::proptest::max_abs_diff;
+    use crate::util::rng::Rng;
+
+    fn assert_same(x: &HtDecomposition, y: &HtDecomposition, label: &str) {
+        assert_eq!(max_abs_diff(&x.h, &y.h), 0.0, "{label}: H");
+        assert_eq!(max_abs_diff(&x.t, &y.t), 0.0, "{label}: T");
+        assert_eq!(max_abs_diff(&x.q, &y.q), 0.0, "{label}: Q");
+        assert_eq!(max_abs_diff(&x.z, &y.z), 0.0, "{label}: Z");
+    }
+
+    #[test]
+    fn builder_rejects_zero_threads_as_config_error() {
+        let e = HtSession::builder().threads(0).build().unwrap_err();
+        assert!(matches!(e, Error::Config(_)), "{e}");
+    }
+
+    #[test]
+    fn builder_rejects_inconsistent_blocking() {
+        let e = HtSession::builder().block(1).build().unwrap_err();
+        assert!(matches!(e, Error::Config(_)), "{e}");
+        let e = HtSession::builder().band(0).build().unwrap_err();
+        assert!(matches!(e, Error::Config(_)), "{e}");
+    }
+
+    #[test]
+    fn reduce_rejects_band_at_least_n_without_clip() {
+        let mut rng = Rng::new(0xA1_01);
+        let p = random_pencil(10, &mut rng);
+        let mut s = HtSession::builder().band(16).build().unwrap();
+        let e = s.reduce(&p.a, &p.b).unwrap_err();
+        assert!(matches!(e, Error::Config(_)), "{e}");
+        // Same surface for batches: typed error before any work.
+        let e = s.reduce_batch(std::slice::from_ref(&p)).unwrap_err();
+        assert!(matches!(e, Error::Config(_)), "{e}");
+    }
+
+    #[test]
+    fn reduce_rejects_bad_shapes() {
+        let a = Matrix::zeros(4, 5);
+        let b = Matrix::zeros(4, 4);
+        let mut s = HtSession::builder().build().unwrap();
+        assert!(matches!(s.reduce(&a, &b).unwrap_err(), Error::Shape(_)));
+    }
+
+    #[test]
+    fn clip_band_serves_pencils_below_the_band() {
+        // Paper tuning (r=16) on n=10: clip mode reduces with r_eff = 9 and
+        // matches the oracle run at that clipped bandwidth exactly.
+        let mut rng = Rng::new(0xA1_02);
+        let p = random_pencil(10, &mut rng);
+        let mut s = HtSession::builder().clip_band(true).build().unwrap();
+        let d = s.reduce(&p.a, &p.b).unwrap();
+        d.verify(&p.a, &p.b).assert_ok(1e-11);
+        let cfg = Config { r: 9, ..Config::default() };
+        let oracle = reduce_seq(&p.a, &p.b, &cfg).unwrap();
+        assert_same(&d, &oracle, "clip n=10");
+        // Tiny pencils (n < 3) are no-ops for every stage: accepted too.
+        let tiny = random_pencil(2, &mut rng);
+        let d = s.reduce(&tiny.a, &tiny.b).unwrap();
+        d.verify(&tiny.a, &tiny.b).assert_ok(1e-12);
+    }
+
+    #[test]
+    fn session_reduce_handles_general_b() {
+        let mut rng = Rng::new(0xA1_03);
+        let p = random_pencil_general(36, &mut rng);
+        let cfg = Config { r: 4, p: 3, q: 3, threads: 4, ..Config::default() };
+        let mut s = HtSession::builder().config(cfg.clone()).build().unwrap();
+        let d = s.reduce(&p.a, &p.b).unwrap();
+        d.verify(&p.a, &p.b).assert_ok(1e-11);
+        assert_same(&d, &reduce_seq(&p.a, &p.b, &cfg).unwrap(), "general B");
+    }
+
+    #[test]
+    fn phases_accumulate_and_trace_absent_by_default() {
+        let mut rng = Rng::new(0xA1_04);
+        let p = random_pencil(24, &mut rng);
+        let cfg = Config { r: 4, p: 2, q: 2, ..Config::default() };
+        let mut s = HtSession::builder().config(cfg).build().unwrap();
+        s.reduce(&p.a, &p.b).unwrap();
+        s.reduce(&p.a, &p.b).unwrap();
+        assert_eq!(s.phases().len(), 2);
+        assert!(s.phases().iter().all(|ph| ph.n == 24));
+        assert!(s.trace().is_none(), "no trace capture by default");
+    }
+
+    #[test]
+    fn trace_recorder_captures_reports_with_traces() {
+        let mut rng = Rng::new(0xA1_05);
+        let p = random_pencil(30, &mut rng);
+        let cfg = Config { r: 4, p: 2, q: 2, ..Config::default() };
+        let rec = TraceRecorder::new();
+        let mut s =
+            HtSession::builder().config(cfg.clone()).trace(rec.clone()).build().unwrap();
+        let d = s.reduce(&p.a, &p.b).unwrap();
+        // Trace capture never changes the numbers.
+        assert_same(&d, &reduce_seq(&p.a, &p.b, &cfg).unwrap(), "traced");
+        assert_eq!(rec.len(), 1);
+        assert!(!rec.is_empty());
+        let reports = rec.reports();
+        let traces = reports[0].traces.as_ref().expect("recorder requests task traces");
+        assert!(!traces.0.durations.is_empty());
+        assert!(!traces.1.durations.is_empty());
+        assert!(s.trace().is_some());
+        let owned = s.take_traces().expect("accessor hands the trace out once");
+        assert_eq!(owned.0.durations.len(), traces.0.durations.len());
+        assert!(s.trace().is_none());
+    }
+
+    #[test]
+    fn reduce_batch_empty_and_single() {
+        let mut s = HtSession::builder().threads(4).build().unwrap();
+        assert!(s.reduce_batch(&[]).unwrap().is_empty());
+        let mut rng = Rng::new(0xA1_06);
+        let p = random_pencil(20, &mut rng);
+        let cfg = Config { r: 4, p: 2, q: 2, threads: 4, ..Config::default() };
+        let mut s = HtSession::builder().config(cfg.clone()).build().unwrap();
+        let out = s.reduce_batch(std::slice::from_ref(&p)).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_same(&out[0], &reduce_seq(&p.a, &p.b, &cfg).unwrap(), "batch of one");
+    }
+
+    #[test]
+    fn reduce_batch_mixed_sizes_with_clip() {
+        // Mixed sizes including n below the configured band and a tiny
+        // no-op pencil; clip mode must serve all of them, identically to
+        // per-pencil sequential reduction.
+        let mut rng = Rng::new(0xA1_07);
+        let sizes = [2usize, 6, 10, 23, 40];
+        let pencils: Vec<Pencil> = sizes.iter().map(|&n| random_pencil(n, &mut rng)).collect();
+        let mut s =
+            HtSession::builder().band(16).threads(4).clip_band(true).build().unwrap();
+        let out = s.reduce_batch(&pencils).unwrap();
+        assert_eq!(out.len(), pencils.len());
+        let mut seq =
+            HtSession::builder().band(16).threads(1).clip_band(true).build().unwrap();
+        for (i, (p, d)) in pencils.iter().zip(&out).enumerate() {
+            d.verify(&p.a, &p.b).assert_ok(1e-10);
+            let oracle = seq.reduce(&p.a, &p.b).unwrap();
+            assert_same(d, &oracle, &format!("batch pencil {i} (n={})", p.n()));
+        }
+        assert_eq!(s.phases().len(), pencils.len());
+    }
+}

@@ -1,13 +1,13 @@
-//! The ParaHT driver: runs the full two-stage reduction through the
-//! coordinator — with real worker threads, or in trace mode for the
-//! makespan simulator — plus the comparator trace collection used by the
-//! figure benchmarks.
+//! The ParaHT driver layer: the speedup-curve helpers and comparator trace
+//! collection used by the figure benchmarks, plus the deprecated
+//! [`run_paraht`] shim (the reduction entry point itself moved to the
+//! session front door, [`crate::api::HtSession`]).
 
 use super::graph::TaskTrace;
 use super::recorder::PhaseRecorder;
 use super::sim::Simulator;
-use super::stage1_par::{reduce_to_banded_par, ExecMode};
-use super::stage2_par::reduce_blocked_par;
+use super::stage1_par::ExecMode;
+use crate::api::HtSession;
 use crate::baselines::one_stage::{OneStageOpts, OppositeMethod};
 use crate::baselines::{dgghd3, iterht, moler_stewart, one_stage};
 use crate::config::Config;
@@ -40,50 +40,43 @@ impl ParaHtRun {
 }
 
 /// Run the two-stage ParaHT reduction through the coordinator.
-/// `B` must be upper triangular (use
-/// [`crate::pencil::random::pre_triangularize`] otherwise).
+///
+/// Thin shim over the session front door: `ExecMode::Threads(t)` maps to a
+/// one-shot [`HtSession`] at `t` threads, `ExecMode::Trace` to a
+/// trace-capturing session — identical kernels in the same valid
+/// topological order, so results are unchanged bit for bit (additionally,
+/// a non-triangular `B` is now pre-triangularized like the sequential
+/// oracle instead of being a silent precondition violation).
+#[deprecated(
+    since = "0.2.0",
+    note = "use `paraht::api::HtSession` (builder front door); \
+            see EXPERIMENTS.md §API for the migration table"
+)]
 pub fn run_paraht(a: &Matrix, b: &Matrix, cfg: &Config, mode: ExecMode) -> Result<ParaHtRun> {
-    let n = a.rows();
-    if a.cols() != n || b.rows() != n || b.cols() != n {
-        return Err(crate::Error::shape(format!(
-            "pencil must be square and consistent: A {}x{}, B {}x{}",
-            a.rows(),
-            a.cols(),
-            b.rows(),
-            b.cols()
-        )));
-    }
-    cfg.validate_for(n)?;
-    // Materialize the persistent worker team before the stage timers start:
-    // first use spawns the process-global pool (`coordinator::pool`), and
-    // that one-time thread-startup cost belongs to process setup, not to
-    // this run's stage-1 wall clock. Subsequent runs reuse the same team
-    // (and its warmed per-worker GEMM pack buffers) at zero spawn cost.
-    // Trace mode is purely sequential — don't spawn a team it won't use.
-    if let ExecMode::Threads(t) = mode {
-        if t > 1 {
-            let _pool = super::pool::global();
-        }
-    }
-    let mut h = a.clone();
-    let mut t = b.clone();
-    let mut q = Matrix::identity(n);
-    let mut z = Matrix::identity(n);
-
-    let t1 = Timer::start();
-    let tr1 = reduce_to_banded_par(&mut h, &mut t, &mut q, &mut z, cfg, mode);
-    let s1 = t1.secs();
-    let t2 = Timer::start();
-    let tr2 = reduce_blocked_par(&mut h, &mut t, &mut q, &mut z, cfg, mode);
-    let s2 = t2.secs();
-
+    let builder = HtSession::builder().config(cfg.clone());
+    let builder = match mode {
+        // The old driver built the graph from cfg (cfg.threads feeds the
+        // auto slice count) but executed with the mode's thread count.
+        // Pinning the resolved slice count before overriding threads
+        // preserves the exact old task granularity; Threads(0) behaved
+        // like a degenerate sequential run, so keep that too.
+        ExecMode::Threads(t) => builder.slices(cfg.effective_slices()).threads(t.max(1)),
+        // Trace always executed sequentially on the cfg-built graph;
+        // capture_traces forces the sequential path on its own, so
+        // cfg.threads stays intact and the trace granularity matches the
+        // old mode exactly.
+        ExecMode::Trace => builder.capture_traces(true),
+    };
+    let mut session = builder.build()?;
+    let d = session.reduce(a, b)?;
+    let traces = session.take_traces();
     Ok(ParaHtRun {
-        h,
-        t,
-        q,
-        z,
-        stage_secs: (s1, s2),
-        traces: tr1.zip(tr2),
+        h: d.h,
+        t: d.t,
+        q: d.q,
+        z: d.z,
+        stage_secs: (d.stage1_secs, d.stage2_secs),
+        traces,
     })
 }
 
@@ -206,6 +199,7 @@ pub fn iterht_recorded(a: &Matrix, b: &Matrix) -> Result<(PhaseRecorder, usize)>
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the run_paraht tests double as shim coverage
 mod tests {
     use super::*;
     use crate::pencil::random::random_pencil;

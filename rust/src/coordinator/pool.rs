@@ -419,19 +419,17 @@ static GLOBAL_POOL: OnceLock<WorkerPool> = OnceLock::new();
 /// survive across every reduction in the process).
 ///
 /// Sizing: `PALLAS_POOL_THREADS` (total team size *including* the
-/// submitting caller) when set, otherwise `available_parallelism()`; the
-/// pool spawns one fewer OS thread than the team size because every run's
-/// caller is an executor. `PALLAS_POOL_THREADS=1` therefore means "no pool
-/// threads, run everything inline".
+/// submitting caller; parsed and clamped by [`crate::util::env`], which
+/// also honors the legacy `PARAHT_POOL_THREADS` alias) when set, otherwise
+/// `available_parallelism()`; the pool spawns one fewer OS thread than the
+/// team size because every run's caller is an executor.
+/// `PALLAS_POOL_THREADS=1` therefore means "no pool threads, run
+/// everything inline".
 pub fn global() -> &'static WorkerPool {
     GLOBAL_POOL.get_or_init(|| {
-        let team = std::env::var("PALLAS_POOL_THREADS")
-            .ok()
-            .and_then(|s| s.parse::<usize>().ok())
-            .map(|t| t.clamp(1, crate::config::MAX_THREADS))
-            .unwrap_or_else(|| {
-                std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
-            });
+        let team = crate::util::env::pool_threads().unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+        });
         WorkerPool::new(team.saturating_sub(1))
     })
 }

@@ -40,7 +40,10 @@ pub struct Stage1Arena {
 }
 
 impl Stage1Arena {
-    fn new(plans: &[crate::ht::stage1::PanelPlan]) -> Stage1Arena {
+    /// Allocate the slot arena for a panel-plan set. Geometry-only: the
+    /// session front door (`api::HtSession`) caches one arena per problem
+    /// size and [`Stage1Arena::reset`]s it between reductions.
+    pub fn new(plans: &[crate::ht::stage1::PanelPlan]) -> Stage1Arena {
         let mut slots = Vec::with_capacity(2 * plans.len());
         for plan in plans {
             let nb = plan.blocks.len();
@@ -48,6 +51,18 @@ impl Stage1Arena {
             slots.push((0..nb).map(|_| Mutex::new(None)).collect());
         }
         Stage1Arena { slots }
+    }
+
+    /// Clear every reflector slot (interior mutability — callable between
+    /// runs while the arena stays shared). Generate tasks refill the slots
+    /// their apply tasks read, but clearing keeps no stale `WyRep` alive
+    /// across reductions.
+    pub fn reset(&self) {
+        for row in &self.slots {
+            for slot in row {
+                *slot.lock().unwrap() = None;
+            }
+        }
     }
 }
 

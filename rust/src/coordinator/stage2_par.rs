@@ -36,7 +36,11 @@ pub struct Stage2Arena {
 }
 
 impl Stage2Arena {
-    fn new(n: usize, r: usize, groups: &[(usize, usize)]) -> Stage2Arena {
+    /// Allocate the reflector-store/WY-cache arena for a sweep-group set.
+    /// Geometry-only (`n`, `r` and the group list): the session front door
+    /// (`api::HtSession`) caches one arena per problem size and
+    /// [`Stage2Arena::reset`]s it between reductions.
+    pub fn new(n: usize, r: usize, groups: &[(usize, usize)]) -> Stage2Arena {
         fn mk<T>(count: usize) -> Vec<Mutex<Option<T>>> {
             (0..count).map(|_| Mutex::new(None)).collect()
         }
@@ -44,6 +48,27 @@ impl Stage2Arena {
             slots: groups.iter().map(|_| Mutex::new(None)).collect(),
             zcache: groups.iter().map(|&(j1, _)| mk(max_chase_steps(n, r, j1))).collect(),
             qcache: groups.iter().map(|&(j1, _)| mk(max_chase_steps(n, r, j1))).collect(),
+        }
+    }
+
+    /// Clear every store slot and cached WY application (interior
+    /// mutability — callable between runs while the arena stays shared).
+    /// The update/accumulation tasks consult the caches with `if let
+    /// Some(..)`, so a stale entry from a previous pencil must never
+    /// survive into the next run.
+    pub fn reset(&self) {
+        for slot in &self.slots {
+            *slot.lock().unwrap() = None;
+        }
+        for row in &self.zcache {
+            for slot in row {
+                *slot.lock().unwrap() = None;
+            }
+        }
+        for row in &self.qcache {
+            for slot in row {
+                *slot.lock().unwrap() = None;
+            }
         }
     }
 }

@@ -1,8 +1,9 @@
 //! Shared plumbing for the figure-regeneration experiments (§4).
 
+use crate::api::HtSession;
 use crate::config::Config;
-use crate::coordinator::driver::{paraht_curve, run_paraht, SpeedupCurve};
-use crate::coordinator::stage1_par::ExecMode;
+use crate::coordinator::driver::{paraht_curve, SpeedupCurve};
+use crate::coordinator::graph::TaskTrace;
 use crate::linalg::matrix::Matrix;
 use crate::pencil::random::Pencil;
 
@@ -32,29 +33,50 @@ pub fn scaled_config(n: usize) -> Config {
     }
 }
 
-/// Run ParaHT in trace mode and return its simulated speedup curve.
-pub fn paraht_speedup_curve(pencil: &Pencil, cfg: &Config, ps: &[usize]) -> (SpeedupCurve, f64, f64) {
-    let run = run_paraht(&pencil.a, &pencil.b, cfg, ExecMode::Trace).expect("paraht run");
-    let v = run.verify(&pencil.a, &pencil.b);
+/// Run one verified trace-capturing reduction through the session front
+/// door and return the per-stage task traces (what `ExecMode::Trace` used
+/// to produce).
+pub fn paraht_traces(pencil: &Pencil, cfg: &Config) -> (TaskTrace, TaskTrace) {
+    let mut session = HtSession::builder()
+        .config(cfg.clone())
+        .capture_traces(true)
+        .build()
+        .expect("valid experiment config");
+    let d = session.reduce(&pencil.a, &pencil.b).expect("paraht run");
+    let v = d.verify(&pencil.a, &pencil.b);
     assert!(
         v.worst() < 1e-9,
         "ParaHT verification failed: worst residual {:.3e}",
         v.worst()
     );
-    let traces = run.traces.expect("trace mode");
+    session.take_traces().expect("trace-capturing session records traces")
+}
+
+/// Run ParaHT in trace mode and return its simulated speedup curve.
+pub fn paraht_speedup_curve(pencil: &Pencil, cfg: &Config, ps: &[usize]) -> (SpeedupCurve, f64, f64) {
+    let traces = paraht_traces(pencil, cfg);
     let t1 = traces.0.total().as_secs_f64();
     let t2 = traces.1.total().as_secs_f64();
     (paraht_curve(&traces, ps), t1, t2)
 }
 
-/// Simulated per-stage makespans of a ParaHT trace.
+/// Simulated per-stage makespans of a ParaHT trace. Unlike
+/// [`paraht_speedup_curve`] this does *not* verify the reduction: fig10's
+/// bench contract is that its JSON artifact is written before any
+/// assertion can fire, so data collection here must not panic on a
+/// residual.
 pub fn paraht_stage_makespans(
     pencil: &Pencil,
     cfg: &Config,
     ps: &[usize],
 ) -> (Vec<(usize, f64, f64)>, f64, f64) {
-    let run = run_paraht(&pencil.a, &pencil.b, cfg, ExecMode::Trace).expect("paraht run");
-    let traces = run.traces.expect("trace mode");
+    let mut session = HtSession::builder()
+        .config(cfg.clone())
+        .capture_traces(true)
+        .build()
+        .expect("valid experiment config");
+    session.reduce(&pencil.a, &pencil.b).expect("paraht run");
+    let traces = session.take_traces().expect("trace-capturing session records traces");
     // One memoized simulator per stage across the whole P sweep.
     let mut sim1 = crate::coordinator::sim::Simulator::new(&traces.0);
     let mut sim2 = crate::coordinator::sim::Simulator::new(&traces.1);
@@ -95,34 +117,24 @@ pub fn monotone_nonincreasing(xs: &[f64], slack: f64) -> bool {
     xs.windows(2).all(|w| w[1] <= w[0] * (1.0 + slack))
 }
 
-/// First set value among the given env names.
-fn env_first(names: &[&str]) -> Option<String> {
-    names.iter().find_map(|n| std::env::var(n).ok())
-}
-
-/// Whether the benches run in *soft* mode (`PALLAS_BENCH_SOFT=1`; the
-/// crate-prefixed `PARAHT_BENCH_SOFT` is accepted as an alias): the
-/// timing-sensitive shape assertions (blocked-beats-unblocked,
+/// Whether the benches run in *soft* mode (`PALLAS_BENCH_SOFT=1`; parsing
+/// and the legacy `PARAHT_BENCH_SOFT` alias live in [`crate::util::env`]):
+/// the timing-sensitive shape assertions (blocked-beats-unblocked,
 /// scaling-grows-with-n, parallel-speedup floors) print a `SOFT-FAIL`
 /// warning instead of aborting. For CI and slow/noisy hardware, where
 /// wall-clock ratios are not trustworthy; structural assertions (flop
 /// counts, IterHT divergence, finiteness) stay hard in either mode.
 pub fn bench_soft() -> bool {
-    env_first(&["PALLAS_BENCH_SOFT", "PARAHT_BENCH_SOFT"])
-        .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
-        .unwrap_or(false)
+    crate::util::env::bench_soft()
 }
 
 /// Tolerance multiplier for timing thresholds (`PALLAS_BENCH_TOL`, alias
-/// `PARAHT_BENCH_TOL`; default 1.0). A value of `t > 1` relaxes every
-/// timing-sensitive bench threshold by that factor (e.g.
-/// `PALLAS_BENCH_TOL=1.5` accepts a 1.5× miss) without disabling the check
-/// outright the way soft mode does.
+/// `PARAHT_BENCH_TOL`; default 1.0 — see [`crate::util::env`]). A value of
+/// `t > 1` relaxes every timing-sensitive bench threshold by that factor
+/// (e.g. `PALLAS_BENCH_TOL=1.5` accepts a 1.5× miss) without disabling the
+/// check outright the way soft mode does.
 pub fn bench_tol() -> f64 {
-    env_first(&["PALLAS_BENCH_TOL", "PARAHT_BENCH_TOL"])
-        .and_then(|s| s.parse::<f64>().ok())
-        .filter(|t| t.is_finite() && *t >= 1.0)
-        .unwrap_or(1.0)
+    crate::util::env::bench_tol()
 }
 
 /// Format a float for the `BENCH_*.json` artifacts: JSON has no NaN/Inf
@@ -140,11 +152,11 @@ pub fn json_num(v: f64) -> String {
 /// bench name, soft/tolerance mode — so a trajectory reader can discount
 /// soft-mode runs) plus the bench-specific `body`. `body` must be a
 /// comma-separated JSON field list indented two spaces, *without* a
-/// trailing comma. The default path is overridden by `PARAHT_BENCH_OUT`.
-/// Returns the path written.
+/// trailing comma. The default path is overridden by `PALLAS_BENCH_OUT`
+/// (legacy alias `PARAHT_BENCH_OUT`). Returns the path written.
 pub fn write_bench_json(default_name: &str, bench: &str, body: &str) -> String {
     use std::fmt::Write as _;
-    let path = std::env::var("PARAHT_BENCH_OUT").unwrap_or_else(|_| default_name.to_string());
+    let path = crate::util::env::bench_out(default_name);
     let mut j = String::new();
     j.push_str("{\n  \"schema_version\": 1,\n");
     let _ = writeln!(j, "  \"bench\": \"{bench}\",");

@@ -10,9 +10,11 @@ use super::common::*;
 use crate::coordinator::driver::{
     dgghd3_recorded, househt_recorded, iterht_recorded, lapack_seq_time, recorder_curve,
 };
+use crate::linalg::matrix::Matrix;
 use crate::pencil::random::random_pencil;
 use crate::pencil::saddle::saddle_pencil;
 use crate::util::rng::Rng;
+use crate::util::timer::Timer;
 
 /// One algorithm's speedup-vs-threads series (Fig. 9a).
 #[derive(Clone, Debug)]
@@ -79,6 +81,93 @@ pub fn fig9a(n: usize, seed: u64) -> Vec<ThreadSeries> {
         }),
     }
     out
+}
+
+/// Kernel-speed-normalized one-core comparison of ParaHT vs sequential
+/// LAPACK (Moler–Stewart), from *measured* flop counts.
+///
+/// With `t = flops / throughput`, the wall-clock ratio decomposes as
+/// `t_ParaHT / t_LAPACK = (f_P / f_L) · (thr_L / thr_P)`: it conflates the
+/// algorithmic flop overhead with the per-flop speed of the kernels each
+/// algorithm runs on (our WY/GEMM kernels are per-flop faster than the
+/// rotation kernels, which is why the raw wall ratio can drop below the
+/// paper's 21.33/14). Dividing out the measured throughputs leaves the
+/// pure flop ratio `f_P / f_L` — the kernel-independent quantity the paper
+/// predicts (≈ 21.33/14 at the §4 tuning, ≈ 24/14 at the scaled
+/// `r=8, p=4, q=4` tuning used below `n = 768`).
+#[derive(Clone, Copy, Debug)]
+pub struct OneCoreNormalized {
+    /// Pencil size.
+    pub n: usize,
+    /// Measured ParaHT (sequential two-stage) flop count.
+    pub paraht_flops: u64,
+    /// Measured Moler–Stewart flop count.
+    pub lapack_flops: u64,
+    /// `paraht_flops / lapack_flops` — the kernel-independent one-core
+    /// cost ratio (always > 1: the two-stage algorithm trades extra flops
+    /// for parallelism).
+    pub flop_ratio: f64,
+    /// Raw wall-clock ratio `t_paraht / t_lapack` (kernel-dependent, noisy).
+    pub wall_ratio: f64,
+    /// Measured ParaHT per-flop throughput, GFLOP/s.
+    pub paraht_gflops: f64,
+    /// Measured Moler–Stewart per-flop throughput, GFLOP/s.
+    pub lapack_gflops: f64,
+}
+
+/// Measure the one-core ParaHT-vs-LAPACK comparison in flop-normalized
+/// form (closes the ROADMAP fig9a open item: the wall-clock ratio was
+/// kernel-speed-dependent and could only be bounded loosely).
+pub fn fig9a_one_core_normalized(n: usize, seed: u64) -> OneCoreNormalized {
+    let mut rng = Rng::new(seed);
+    let pencil = random_pencil(n, &mut rng);
+    let cfg = scaled_config(n);
+    // Counting must be on for the measurement, but the global toggle is
+    // not ours to keep: restore whatever the caller had (the GEMM bench
+    // deliberately disables counting for clean timings). The guard
+    // restores on unwind too — a failed verify assert must not leak the
+    // forced-on state into concurrently running tests.
+    struct RestoreFlops(bool);
+    impl Drop for RestoreFlops {
+        fn drop(&mut self) {
+            crate::util::flops::set_enabled(self.0);
+        }
+    }
+    let _restore = RestoreFlops(crate::util::flops::enabled());
+    crate::util::flops::set_enabled(true);
+
+    // ParaHT: the sequential two-stage oracle, counted.
+    let t = Timer::start();
+    let (d, fp) = crate::util::flops::count(|| {
+        crate::api::reduce_seq(&pencil.a, &pencil.b, &cfg).expect("paraht oracle")
+    });
+    let t_para = t.secs();
+    // Sanity side-check only — this helper runs before the benches write
+    // their JSON artifacts, so it must never panic on a residual; the
+    // reduction's validity is pinned hard by the test suites.
+    let worst = d.verify(&pencil.a, &pencil.b).worst();
+    if worst > 1e-9 {
+        eprintln!("warning: one-core normalized run residual {worst:.3e} (> 1e-9)");
+    }
+
+    // Sequential LAPACK (Moler–Stewart), counted.
+    let (mut a, mut b) = (pencil.a.clone(), pencil.b.clone());
+    let (mut q, mut z) = (Matrix::identity(n), Matrix::identity(n));
+    let t = Timer::start();
+    let ((), fl) = crate::util::flops::count(|| {
+        crate::baselines::moler_stewart::reduce(&mut a, &mut b, &mut q, &mut z)
+    });
+    let t_lapack = t.secs();
+
+    OneCoreNormalized {
+        n,
+        paraht_flops: fp,
+        lapack_flops: fl,
+        flop_ratio: fp as f64 / fl as f64,
+        wall_ratio: t_para / t_lapack,
+        paraht_gflops: fp as f64 / t_para / 1e9,
+        lapack_gflops: fl as f64 / t_lapack / 1e9,
+    }
 }
 
 /// One row of Fig. 9b / Fig. 11: ParaHT's speedup over each comparator at
@@ -198,10 +287,51 @@ mod tests {
         assert!(s_last > s1, "ParaHT must scale: {s1} -> {s_last}");
         // On one thread ParaHT pays the 21.33/14 extra-flop ratio vs
         // LAPACK (§4). On this substrate the WY kernels are per-flop
-        // faster than the rotation kernels, so the measured ratio can
-        // approach or slightly pass 1 (see benches/fig9a_threads.rs) —
-        // assert only that it is not implausibly fast.
+        // faster than the rotation kernels, so the measured wall-clock
+        // ratio can approach or slightly pass 1 (see
+        // benches/fig9a_threads.rs) — assert only that it is not
+        // implausibly fast. The kernel-independent (flop-normalized) bound
+        // lives in `fig9a_one_core_ratio_kernel_normalized` below.
         assert!(s1 < 1.6, "one-core ParaHT implausibly fast vs LAPACK: {s1}");
+    }
+
+    #[test]
+    fn fig9a_one_core_ratio_kernel_normalized() {
+        // Normalizing by measured per-flop kernel throughput reduces the
+        // one-core comparison to the flop ratio, which is deterministic in
+        // isolation — so unlike the wall-clock bound above this one is
+        // two-sided. The counter is process-global, though, and sibling
+        // lib tests add to it concurrently (steadily, not just in bursts),
+        // which drags a contaminated ratio toward 1. So: n = 160 keeps
+        // each window near 10⁸ flops (the exposure the flop-table test
+        // tolerates inside ±30% bands), and the measurement retries up to
+        // four times, passing on the first attempt whose ratio lands in
+        // band — late retries run against a quieter suite, while a real
+        // flop-accounting regression fails every attempt deterministically.
+        //
+        // Paper (scaled tuning r=8, p=4): stage 1 ≈ 14 n³ + stage 2 ≈
+        // 10 n³ vs one-stage ≈ 14 n³ → ratio ≈ 1.7, with lower-order
+        // terms still visible at n = 160 (the flop-table test at n ≥ 192
+        // pins the same measurement inside (1.3, 2.2)).
+        let mut last_ratio = f64::NAN;
+        let mut in_band = false;
+        for _attempt in 0..4 {
+            let m = fig9a_one_core_normalized(160, 300);
+            // Throughputs are well-defined and finite on every attempt.
+            assert!(m.paraht_gflops.is_finite() && m.paraht_gflops > 0.0);
+            assert!(m.lapack_gflops.is_finite() && m.lapack_gflops > 0.0);
+            assert!(m.wall_ratio.is_finite() && m.wall_ratio > 0.0);
+            last_ratio = m.flop_ratio;
+            if last_ratio > 1.1 && last_ratio < 2.8 {
+                in_band = true;
+                break;
+            }
+        }
+        assert!(
+            in_band,
+            "flop-normalized one-core ratio outside (1.1, 2.8) on every attempt: \
+             last {last_ratio:.3}"
+        );
     }
 
     #[test]

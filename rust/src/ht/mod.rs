@@ -10,4 +10,6 @@ pub mod stage2_blocked;
 pub mod stage2_unblocked;
 pub mod two_stage;
 
-pub use two_stage::{reduce_to_hessenberg_triangular, HtDecomposition};
+pub use two_stage::HtDecomposition;
+#[allow(deprecated)] // the shim stays re-exported until downstream code migrates
+pub use two_stage::reduce_to_hessenberg_triangular;

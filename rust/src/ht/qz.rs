@@ -205,8 +205,8 @@ pub fn pencil_with_spectrum(eigs: &[f64], rng: &mut crate::util::rng::Rng) -> (M
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::reduce_seq as reduce_to_hessenberg_triangular;
     use crate::config::Config;
-    use crate::ht::two_stage::reduce_to_hessenberg_triangular;
     use crate::util::rng::Rng;
 
     #[test]

@@ -2,16 +2,20 @@
 //! headline algorithm (ParaHT in §4) in its sequential form. The parallel
 //! form lives in `coordinator::{stage1_par, stage2_par}` and shares all the
 //! numerical kernels with this driver.
+//!
+//! The sequential driver itself now lives in [`crate::api::reduce_seq`]
+//! (it is the oracle path of the `HtSession` front door); this module
+//! keeps the [`HtDecomposition`] result type and a deprecated shim for the
+//! old entry point.
 
 use crate::config::Config;
 use crate::error::Result;
 use crate::linalg::matrix::Matrix;
 use crate::linalg::verify::HtVerification;
-use crate::pencil::random::pre_triangularize;
-use crate::util::timer::Timer;
 
 /// Result of a Hessenberg-triangular reduction:
 /// `A₀ = Q H Zᵀ`, `B₀ = Q T Zᵀ` with `H` Hessenberg, `T` upper triangular.
+#[derive(Clone, Debug)]
 pub struct HtDecomposition {
     /// Hessenberg factor `H`.
     pub h: Matrix,
@@ -42,47 +46,30 @@ impl HtDecomposition {
 /// Reduce the pencil `(a, b)` to Hessenberg-triangular form with the
 /// sequential two-stage algorithm. `b` need not be triangular: a QR-based
 /// pre-triangularization is applied first (accumulated into `Q`).
+///
+/// Thin shim: the implementation moved verbatim to
+/// [`crate::api::reduce_seq`] (the sequential oracle behind
+/// `HtSession::reduce` at `threads = 1`); this wrapper delegates with zero
+/// behavioral change.
+#[deprecated(
+    since = "0.2.0",
+    note = "use `paraht::api::HtSession` (builder front door) or `paraht::api::reduce_seq`; \
+            see EXPERIMENTS.md §API for the migration table"
+)]
 pub fn reduce_to_hessenberg_triangular(
     a: &Matrix,
     b: &Matrix,
     cfg: &Config,
 ) -> Result<HtDecomposition> {
-    let n = a.rows();
-    if a.cols() != n || b.rows() != n || b.cols() != n {
-        return Err(crate::Error::shape(format!(
-            "pencil must be square and consistent: A {}x{}, B {}x{}",
-            a.rows(),
-            a.cols(),
-            b.rows(),
-            b.cols()
-        )));
-    }
-    cfg.validate_for(n)?;
-    let mut h = a.clone();
-    let mut t = b.clone();
-    let mut q = Matrix::identity(n);
-    let mut z = Matrix::identity(n);
-
-    // Pre-triangularize B if needed (not counted as a stage; LAPACK users
-    // run dgeqrf+dormqr ahead of dgghd3 the same way).
-    if crate::linalg::verify::max_below_band(&t, 0) != 0.0 {
-        pre_triangularize(&mut h, &mut t, &mut q);
-    }
-
-    let t1 = Timer::start();
-    super::stage1::reduce_to_banded(&mut h, &mut t, &mut q, &mut z, cfg);
-    let stage1_secs = t1.secs();
-
-    let t2 = Timer::start();
-    super::stage2_blocked::reduce_blocked(&mut h, &mut t, &mut q, &mut z, cfg.r, cfg.q);
-    let stage2_secs = t2.secs();
-
-    Ok(HtDecomposition { h, t, q, z, stage1_secs, stage2_secs })
+    crate::api::reduce_seq(a, b, cfg)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    // The oracle implementation under its historical name — these tests
+    // exercise the sequential driver itself, not the deprecated shim.
+    use crate::api::reduce_seq as reduce_to_hessenberg_triangular;
     use crate::linalg::verify::max_below_band;
     use crate::pencil::random::{random_pencil, random_pencil_general};
     use crate::pencil::saddle::saddle_pencil;

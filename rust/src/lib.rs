@@ -8,6 +8,15 @@
 //! `A = Q H Zᵀ`, `B = Q T Zᵀ` — the standard preprocessing step for the QZ
 //! algorithm for generalized eigenvalue problems.
 //!
+//! The documented front door is [`api::HtSession`]: a builder-configured,
+//! long-lived session that validates the [`Config`] once, keeps the
+//! persistent worker team and per-size workspaces warm, and exposes
+//! [`api::HtSession::reduce`] (one pencil) and
+//! [`api::HtSession::reduce_batch`] (many small pencils, one per worker).
+//! The older free functions (`coordinator::driver::run_paraht`,
+//! `ht::reduce_to_hessenberg_triangular`) survive as thin deprecated
+//! shims over the session.
+//!
 //! The system is a three-layer stack:
 //! * **L3 (rust)** — this crate: the paper's parallel *coordinator* (task
 //!   graph, dynamic scheduler, slicing) plus the full dense-linear-algebra
@@ -17,6 +26,7 @@
 //! * **L1 (Pallas)** — `python/compile/kernels/`: tiled WY block-reflector
 //!   kernels, validated against a pure-jnp oracle.
 
+pub mod api;
 pub mod baselines;
 pub mod config;
 pub mod coordinator;
@@ -28,6 +38,8 @@ pub mod pencil;
 pub mod runtime;
 pub mod util;
 
+pub use api::{HtSession, HtSessionBuilder, TraceRecorder, TraceSink};
 pub use config::Config;
 pub use error::{Error, Result};
+pub use ht::two_stage::HtDecomposition;
 pub use linalg::matrix::Matrix;

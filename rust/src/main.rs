@@ -10,9 +10,9 @@
 //! paraht info
 //! ```
 
+use paraht::api::HtSession;
 use paraht::config::Config;
-use paraht::coordinator::driver::{paraht_curve, run_paraht};
-use paraht::coordinator::stage1_par::ExecMode;
+use paraht::coordinator::driver::paraht_curve;
 use paraht::experiments::{ablations, common, figures, flops_table};
 use paraht::pencil::random::random_pencil;
 use paraht::pencil::saddle::saddle_pencil;
@@ -67,16 +67,24 @@ fn cmd_reduce(args: &Args) -> i32 {
         cfg.threads
     );
 
-    let exec = match mode.as_str() {
-        "seq" => ExecMode::Threads(1),
-        "par" => ExecMode::Threads(cfg.threads),
-        "sim" => ExecMode::Trace,
+    let builder = HtSession::builder().config(cfg.clone());
+    let builder = match mode.as_str() {
+        "seq" => builder.threads(1),
+        "par" => builder,
+        "sim" => builder.capture_traces(true),
         other => {
             eprintln!("unknown --mode {other}");
             return 2;
         }
     };
-    let run = match run_paraht(&pencil.a, &pencil.b, &cfg, exec) {
+    let mut session = match builder.build() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    let run = match session.reduce(&pencil.a, &pencil.b) {
         Ok(r) => r,
         Err(e) => {
             eprintln!("error: {e}");
@@ -85,13 +93,13 @@ fn cmd_reduce(args: &Args) -> i32 {
     };
     println!(
         "stage 1: {:.3}s   stage 2: {:.3}s   total: {:.3}s",
-        run.stage_secs.0,
-        run.stage_secs.1,
-        run.stage_secs.0 + run.stage_secs.1
+        run.stage1_secs,
+        run.stage2_secs,
+        run.total_secs()
     );
-    if let Some(traces) = &run.traces {
+    if let Some(traces) = session.take_traces() {
         let ps = common::PAPER_THREADS;
-        let curve = paraht_curve(traces, ps);
+        let curve = paraht_curve(&traces, ps);
         println!("simulated speedups (vs own 1-core):");
         for (p, t) in &curve.points {
             println!("  P={p:<3} makespan {:.3}s  speedup {:.2}x", t, curve.t1 / t);
@@ -232,7 +240,8 @@ fn cmd_validate(args: &Args) -> i32 {
     let pencil = random_pencil(n, &mut rng);
     let cfg = Config { r: 16, p: 8, q: 8, threads: 4, ..Config::default() };
     println!("validating ParaHT on random pencil n={n}...");
-    let run = run_paraht(&pencil.a, &pencil.b, &cfg, ExecMode::Threads(4)).unwrap();
+    let mut session = HtSession::builder().config(cfg).build().unwrap();
+    let run = session.reduce(&pencil.a, &pencil.b).unwrap();
     let v = run.verify(&pencil.a, &pencil.b);
     println!(
         "  err_A {:.2e}  err_B {:.2e}  orth(Q) {:.2e}  orth(Z) {:.2e}  H-band {:.2e}  T-band {:.2e}",

@@ -1,0 +1,195 @@
+//! Centralized environment-variable handling.
+//!
+//! Every knob the crate reads from the process environment goes through
+//! this module — one place for names, legacy aliases, parsing and
+//! clamping, replacing the ad-hoc `std::env::var` parsing that used to be
+//! scattered across `coordinator::pool`, `experiments::common`, the bench
+//! targets and the stress tests.
+//!
+//! **Naming convention:** canonical names carry the `PALLAS_` prefix; the
+//! crate-prefixed `PARAHT_` spellings are accepted everywhere as legacy
+//! aliases, with the canonical name winning when both are set.
+//!
+//! | Variable (canonical)     | Meaning |
+//! |--------------------------|---------|
+//! | `PALLAS_POOL_THREADS`    | worker-team size *including* the caller ([`crate::coordinator::pool::global`]) |
+//! | `PALLAS_BENCH_SOFT`      | `1`/`true`: timing-sensitive bench asserts warn instead of aborting |
+//! | `PALLAS_BENCH_TOL`       | multiplier `≥ 1` relaxing timing-sensitive bench thresholds |
+//! | `PALLAS_STRESS_ITERS`    | iteration count for the pool stress hammer |
+//! | `PALLAS_BENCH_N`         | problem size for single-size benches |
+//! | `PALLAS_BENCH_SIZES`     | comma-separated size sweep for the fig benches |
+//! | `PALLAS_GEMM_SIZES`      | comma-separated square sizes for the GEMM kernel bench |
+//! | `PALLAS_BATCH_N`         | pencil size for the batch-throughput bench |
+//! | `PALLAS_BATCH_SIZES`     | comma-separated batch sizes for the batch-throughput bench |
+//! | `PALLAS_BENCH_OUT`       | output-path override for the `BENCH_*.json` artifacts |
+
+use crate::config::MAX_THREADS;
+
+/// Look a knob up by suffix: `PALLAS_<suffix>` first, then the legacy
+/// `PARAHT_<suffix>` alias.
+pub fn var(suffix: &str) -> Option<String> {
+    first_from(|name| std::env::var(name).ok(), suffix)
+}
+
+/// Alias-resolution core, with the lookup injected so unit tests never
+/// touch (or race on) the real process environment.
+fn first_from(get: impl Fn(&str) -> Option<String>, suffix: &str) -> Option<String> {
+    get(&format!("PALLAS_{suffix}")).or_else(|| get(&format!("PARAHT_{suffix}")))
+}
+
+/// Parse a boolean flag the way the bench knobs always have: `1` or
+/// (case-insensitive) `true`; everything else is false.
+pub fn parse_flag(s: &str) -> bool {
+    s == "1" || s.eq_ignore_ascii_case("true")
+}
+
+/// Parse a `usize`, tolerating surrounding whitespace.
+pub fn parse_usize(s: &str) -> Option<usize> {
+    s.trim().parse().ok()
+}
+
+/// Parse an `f64`, tolerating surrounding whitespace.
+pub fn parse_f64(s: &str) -> Option<f64> {
+    s.trim().parse().ok()
+}
+
+/// Parse a comma-separated `usize` list, skipping malformed entries
+/// (`"128, 256,junk,512"` → `[128, 256, 512]`).
+pub fn parse_usize_list(s: &str) -> Vec<usize> {
+    s.split(',').filter_map(parse_usize).collect()
+}
+
+/// Worker-team size for the process-global pool (`PALLAS_POOL_THREADS`,
+/// total size including the submitting caller), clamped into
+/// `[1, MAX_THREADS]`. `None` when unset/unparseable (callers fall back to
+/// `available_parallelism`).
+pub fn pool_threads() -> Option<usize> {
+    var("POOL_THREADS").and_then(|s| parse_usize(&s)).map(|t| t.clamp(1, MAX_THREADS))
+}
+
+/// Whether the benches run in *soft* mode (`PALLAS_BENCH_SOFT`): the
+/// timing-sensitive shape assertions warn instead of aborting.
+pub fn bench_soft() -> bool {
+    var("BENCH_SOFT").map(|v| parse_flag(&v)).unwrap_or(false)
+}
+
+/// Tolerance multiplier for timing thresholds (`PALLAS_BENCH_TOL`,
+/// default and floor `1.0`; non-finite or sub-1 values are ignored).
+pub fn bench_tol() -> f64 {
+    tol_from(var("BENCH_TOL"))
+}
+
+fn tol_from(v: Option<String>) -> f64 {
+    v.and_then(|s| parse_f64(&s)).filter(|t| t.is_finite() && *t >= 1.0).unwrap_or(1.0)
+}
+
+/// Iteration count for the pool stress hammer (`PALLAS_STRESS_ITERS`).
+pub fn stress_iters(default: usize) -> usize {
+    var("STRESS_ITERS").and_then(|s| parse_usize(&s)).unwrap_or(default)
+}
+
+/// Output path for a `BENCH_*.json` artifact (`PALLAS_BENCH_OUT`
+/// override, else the bench's default name).
+pub fn bench_out(default: &str) -> String {
+    var("BENCH_OUT").unwrap_or_else(|| default.to_string())
+}
+
+/// Problem size for single-size benches (`PALLAS_BENCH_N`).
+pub fn bench_n(default: usize) -> usize {
+    var("BENCH_N").and_then(|s| parse_usize(&s)).unwrap_or(default)
+}
+
+/// Size sweep for the fig benches (`PALLAS_BENCH_SIZES`); an unset or
+/// fully malformed list falls back to the default so a bench never runs on
+/// an empty sweep.
+pub fn bench_sizes(default: &[usize]) -> Vec<usize> {
+    sizes_or(var("BENCH_SIZES"), default)
+}
+
+/// Square sizes for the GEMM kernel bench (`PALLAS_GEMM_SIZES`).
+pub fn gemm_sizes(default: &[usize]) -> Vec<usize> {
+    sizes_or(var("GEMM_SIZES"), default)
+}
+
+/// Pencil size for the batch-throughput bench (`PALLAS_BATCH_N`).
+pub fn batch_n(default: usize) -> usize {
+    var("BATCH_N").and_then(|s| parse_usize(&s)).unwrap_or(default)
+}
+
+/// Batch sizes for the batch-throughput bench (`PALLAS_BATCH_SIZES`).
+pub fn batch_sizes(default: &[usize]) -> Vec<usize> {
+    sizes_or(var("BATCH_SIZES"), default)
+}
+
+fn sizes_or(v: Option<String>, default: &[usize]) -> Vec<usize> {
+    v.map(|s| parse_usize_list(&s))
+        .filter(|l| !l.is_empty())
+        .unwrap_or_else(|| default.to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    // All tests go through the injected-lookup core or the pure parsers —
+    // never the real process env, which other tests share.
+
+    fn env_of(pairs: &[(&str, &str)]) -> HashMap<String, String> {
+        pairs.iter().map(|&(k, v)| (k.to_string(), v.to_string())).collect()
+    }
+
+    #[test]
+    fn canonical_name_wins_over_legacy_alias() {
+        let env = env_of(&[("PALLAS_BENCH_TOL", "2.0"), ("PARAHT_BENCH_TOL", "9.0")]);
+        let got = first_from(|n| env.get(n).cloned(), "BENCH_TOL");
+        assert_eq!(got.as_deref(), Some("2.0"));
+    }
+
+    #[test]
+    fn legacy_alias_is_honored_when_canonical_unset() {
+        let env = env_of(&[("PARAHT_BENCH_N", "384")]);
+        let got = first_from(|n| env.get(n).cloned(), "BENCH_N");
+        assert_eq!(got.as_deref(), Some("384"));
+        assert_eq!(first_from(|n| env.get(n).cloned(), "BENCH_SIZES"), None);
+    }
+
+    #[test]
+    fn flag_parsing() {
+        assert!(parse_flag("1"));
+        assert!(parse_flag("true"));
+        assert!(parse_flag("TRUE"));
+        assert!(!parse_flag("0"));
+        assert!(!parse_flag(""));
+        assert!(!parse_flag("yes"));
+    }
+
+    #[test]
+    fn numeric_parsing_tolerates_whitespace_and_junk() {
+        assert_eq!(parse_usize(" 42 "), Some(42));
+        assert_eq!(parse_usize("x"), None);
+        assert_eq!(parse_f64(" 1.5 "), Some(1.5));
+        assert_eq!(parse_usize_list("128, 256,junk,512"), vec![128, 256, 512]);
+        assert!(parse_usize_list("nope").is_empty());
+    }
+
+    #[test]
+    fn tolerance_has_a_floor_of_one() {
+        assert_eq!(tol_from(None), 1.0);
+        assert_eq!(tol_from(Some("1.5".into())), 1.5);
+        assert_eq!(tol_from(Some("0.2".into())), 1.0, "sub-1 tolerances are ignored");
+        assert_eq!(tol_from(Some("inf".into())), 1.0, "non-finite tolerances are ignored");
+        assert_eq!(tol_from(Some("garbage".into())), 1.0);
+    }
+
+    #[test]
+    fn size_sweeps_never_come_back_empty() {
+        assert_eq!(sizes_or(None, &[128, 256]), vec![128, 256]);
+        assert_eq!(sizes_or(Some("64,96".into()), &[128, 256]), vec![64, 96]);
+        assert_eq!(
+            sizes_or(Some("all junk".into()), &[128, 256]),
+            vec![128, 256],
+            "a malformed sweep falls back to the default"
+        );
+    }
+}

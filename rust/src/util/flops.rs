@@ -34,6 +34,12 @@ pub fn set_enabled(on: bool) {
     ENABLED.store(on, Ordering::Relaxed);
 }
 
+/// Whether accounting is currently enabled (for save/restore around
+/// measurements that must not leak a global toggle).
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
 /// Count flops of a closure: resets, runs, returns (result, flops).
 pub fn count<R>(f: impl FnOnce() -> R) -> (R, u64) {
     let before = get();

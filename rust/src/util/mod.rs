@@ -1,7 +1,9 @@
 //! Small utilities shared across the crate: deterministic RNG, timers,
-//! flop accounting, a tiny CLI argument parser and a property-test helper.
+//! flop accounting, centralized env-var handling, a tiny CLI argument
+//! parser and a property-test helper.
 
 pub mod cli;
+pub mod env;
 pub mod flops;
 pub mod proptest;
 pub mod rng;

@@ -1,65 +1,117 @@
-//! Equivalence tests pinning the parallel coordinator paths to the
-//! sequential oracle: `coordinator::{stage1_par, stage2_par}` (driven
-//! through `run_paraht`) must produce the same `(H, T, Q, Z)` as
-//! `ht::two_stage::reduce_to_hessenberg_triangular` under every execution
-//! mode — including block sizes that do not divide the problem size.
+//! Equivalence tests pinning every execution path to the sequential
+//! oracle: the session front door (`api::HtSession::reduce` at 1/2/4/7
+//! threads, trace capture, and `reduce_batch`) and the deprecated
+//! `run_paraht` shim must all produce the same `(H, T, Q, Z)` as the
+//! sequential two-stage driver (`api::reduce_seq`) — including block sizes
+//! that do not divide the problem size.
 //!
 //! The task bodies are the same kernels executed in a valid topological
 //! order, and every slice kernel is bitwise independent of the slicing
 //! (see the per-column/per-row notes in `linalg::gemm`), so the comparison
 //! is exact equality, not a tolerance.
 
+use paraht::api::{reduce_seq, HtSession, TraceRecorder};
 use paraht::config::Config;
+#[allow(deprecated)] // shim coverage: the wrappers must delegate unchanged
 use paraht::coordinator::driver::run_paraht;
 use paraht::coordinator::stage1_par::ExecMode;
-use paraht::ht::reduce_to_hessenberg_triangular;
+use paraht::ht::HtDecomposition;
 use paraht::linalg::verify::max_below_band;
 use paraht::pencil::random::{random_pencil, Pencil};
 use paraht::pencil::saddle::saddle_pencil;
 use paraht::util::proptest::max_abs_diff;
 use paraht::util::rng::Rng;
 
-/// Every execution mode exercised by the equivalence sweep.
+/// Thread counts exercised by the session sweep.
+const SESSION_THREADS: &[usize] = &[1, 2, 4, 7];
+
+/// Representative legacy modes exercised through the deprecated shim in
+/// the per-pencil sweep. The shim is a pure delegation to the session
+/// paths already swept exhaustively above it, so one threaded mode and
+/// one trace mode per pencil suffice here; full-delegation pinning lives
+/// in `deprecated_shims_compile_and_delegate_unchanged`.
 fn exec_modes() -> Vec<ExecMode> {
-    vec![
-        ExecMode::Threads(1),
-        ExecMode::Threads(2),
-        ExecMode::Threads(4),
-        ExecMode::Threads(7),
-        ExecMode::Trace,
-    ]
+    vec![ExecMode::Threads(4), ExecMode::Trace]
 }
 
+fn assert_same(
+    (h, t, q, z): (
+        &paraht::Matrix,
+        &paraht::Matrix,
+        &paraht::Matrix,
+        &paraht::Matrix,
+    ),
+    oracle: &HtDecomposition,
+    label: &str,
+) {
+    assert_eq!(max_abs_diff(&oracle.h, h), 0.0, "{label}: H diverges");
+    assert_eq!(max_abs_diff(&oracle.t, t), 0.0, "{label}: T diverges");
+    assert_eq!(max_abs_diff(&oracle.q, q), 0.0, "{label}: Q diverges");
+    assert_eq!(max_abs_diff(&oracle.z, z), 0.0, "{label}: Z diverges");
+}
+
+#[allow(deprecated)] // the mode sweep doubles as run_paraht shim coverage
 fn assert_modes_match_oracle(pencil: &Pencil, cfg: &Config, label: &str) {
-    let oracle = reduce_to_hessenberg_triangular(&pencil.a, &pencil.b, cfg)
+    let oracle = reduce_seq(&pencil.a, &pencil.b, cfg)
         .unwrap_or_else(|e| panic!("{label}: oracle failed: {e}"));
     // The oracle output itself is a valid HT decomposition.
     oracle.verify(&pencil.a, &pencil.b).assert_ok(1e-10);
     assert!(max_below_band(&oracle.h, 1) < 1e-12 * oracle.h.norm_fro().max(1.0));
     assert_eq!(max_below_band(&oracle.t, 0), 0.0, "{label}: T not exactly triangular");
 
+    // The session front door, at every thread count.
+    for &threads in SESSION_THREADS {
+        let mut session = HtSession::builder()
+            .config(cfg.clone())
+            .threads(threads)
+            .build()
+            .unwrap_or_else(|e| panic!("{label}: build({threads}) failed: {e}"));
+        let run = session
+            .reduce(&pencil.a, &pencil.b)
+            .unwrap_or_else(|e| panic!("{label}: session({threads}) failed: {e}"));
+        assert_same(
+            (&run.h, &run.t, &run.q, &run.z),
+            &oracle,
+            &format!("{label}: session threads={threads}"),
+        );
+    }
+
+    // Trace capture (the old ExecMode::Trace) through the session.
+    {
+        let mut session = HtSession::builder()
+            .config(cfg.clone())
+            .capture_traces(true)
+            .build()
+            .unwrap();
+        let run = session.reduce(&pencil.a, &pencil.b).unwrap();
+        assert_same((&run.h, &run.t, &run.q, &run.z), &oracle, &format!("{label}: traced"));
+        assert!(session.trace().is_some(), "{label}: trace capture must record traces");
+    }
+
+    // The batch path: the whole pencil repeated must match element-wise.
+    {
+        let mut session =
+            HtSession::builder().config(cfg.clone()).threads(4).build().unwrap();
+        let batch = vec![pencil.clone(), pencil.clone(), pencil.clone()];
+        let out = session.reduce_batch(&batch).unwrap();
+        assert_eq!(out.len(), 3);
+        for (i, d) in out.iter().enumerate() {
+            assert_same(
+                (&d.h, &d.t, &d.q, &d.z),
+                &oracle,
+                &format!("{label}: batch item {i}"),
+            );
+        }
+    }
+
+    // The deprecated shim, under every legacy mode.
     for mode in exec_modes() {
         let run = run_paraht(&pencil.a, &pencil.b, cfg, mode)
             .unwrap_or_else(|e| panic!("{label}: {mode:?} failed: {e}"));
-        assert_eq!(
-            max_abs_diff(&oracle.h, &run.h),
-            0.0,
-            "{label}: H diverges under {mode:?}"
-        );
-        assert_eq!(
-            max_abs_diff(&oracle.t, &run.t),
-            0.0,
-            "{label}: T diverges under {mode:?}"
-        );
-        assert_eq!(
-            max_abs_diff(&oracle.q, &run.q),
-            0.0,
-            "{label}: Q diverges under {mode:?}"
-        );
-        assert_eq!(
-            max_abs_diff(&oracle.z, &run.z),
-            0.0,
-            "{label}: Z diverges under {mode:?}"
+        assert_same(
+            (&run.h, &run.t, &run.q, &run.z),
+            &oracle,
+            &format!("{label}: shim {mode:?}"),
         );
     }
 }
@@ -118,8 +170,10 @@ fn repeated_parallel_runs_are_deterministic() {
     let mut rng = Rng::new(0xE0_06);
     let pencil = random_pencil(41, &mut rng);
     let cfg = Config { r: 4, p: 3, q: 3, slices: 8, ..Config::default() };
-    let r1 = run_paraht(&pencil.a, &pencil.b, &cfg, ExecMode::Threads(5)).unwrap();
-    let r2 = run_paraht(&pencil.a, &pencil.b, &cfg, ExecMode::Threads(5)).unwrap();
+    let mut s1 = HtSession::builder().config(cfg.clone()).threads(5).build().unwrap();
+    let mut s2 = HtSession::builder().config(cfg).threads(5).build().unwrap();
+    let r1 = s1.reduce(&pencil.a, &pencil.b).unwrap();
+    let r2 = s2.reduce(&pencil.a, &pencil.b).unwrap();
     assert_eq!(max_abs_diff(&r1.h, &r2.h), 0.0);
     assert_eq!(max_abs_diff(&r1.t, &r2.t), 0.0);
     assert_eq!(max_abs_diff(&r1.q, &r2.q), 0.0);
@@ -127,23 +181,126 @@ fn repeated_parallel_runs_are_deterministic() {
 }
 
 #[test]
-fn pool_reuse_across_consecutive_runs_matches_oracle() {
-    // Two back-to-back threaded reductions reuse the same persistent
-    // worker team (`coordinator::pool::global`); the second run — executed
-    // by workers whose pack buffers and parked threads survived the first —
-    // must still be bitwise the oracle. Guards the pool's drain/reuse
-    // path: a leaked task, stale batch entry, or lost wakeup from run 1
-    // would corrupt or hang run 2.
+fn session_reuse_across_consecutive_reduces_matches_oracle() {
+    // Two back-to-back reductions on ONE session reuse the persistent
+    // worker team AND the session workspaces (panel plans, sweep groups,
+    // reflector arenas); both runs must be bitwise two fresh oracle runs.
+    // Guards the arena reset path: a stale reflector slot or cached WY
+    // application surviving run 1 would corrupt run 2.
     let mut rng = Rng::new(0xE0_07);
     let pencil = random_pencil(48, &mut rng);
     let cfg = Config { r: 4, p: 3, q: 3, slices: 8, ..Config::default() };
-    let oracle = reduce_to_hessenberg_triangular(&pencil.a, &pencil.b, &cfg).unwrap();
+    let oracle = reduce_seq(&pencil.a, &pencil.b, &cfg).unwrap();
+    let mut session = HtSession::builder().config(cfg).threads(4).build().unwrap();
     for pass in 0..2 {
-        let run = run_paraht(&pencil.a, &pencil.b, &cfg, ExecMode::Threads(4))
+        let run = session
+            .reduce(&pencil.a, &pencil.b)
             .unwrap_or_else(|e| panic!("pass {pass}: {e}"));
-        assert_eq!(max_abs_diff(&oracle.h, &run.h), 0.0, "H diverges on pass {pass}");
-        assert_eq!(max_abs_diff(&oracle.t, &run.t), 0.0, "T diverges on pass {pass}");
-        assert_eq!(max_abs_diff(&oracle.q, &run.q), 0.0, "Q diverges on pass {pass}");
-        assert_eq!(max_abs_diff(&oracle.z, &run.z), 0.0, "Z diverges on pass {pass}");
+        assert_same(
+            (&run.h, &run.t, &run.q, &run.z),
+            &oracle,
+            &format!("session reuse pass {pass}"),
+        );
     }
+    assert_eq!(session.phases().len(), 2, "both reductions logged");
+}
+
+#[test]
+fn session_reuse_across_different_sizes_matches_oracle() {
+    // A size change mid-session rebuilds the workspace; both pencils (and
+    // a return to the first size) must stay bitwise the oracle.
+    let mut rng = Rng::new(0xE0_08);
+    let p_small = random_pencil(33, &mut rng);
+    let p_large = random_pencil(52, &mut rng);
+    let cfg = Config { r: 4, p: 3, q: 3, slices: 6, ..Config::default() };
+    let o_small = reduce_seq(&p_small.a, &p_small.b, &cfg).unwrap();
+    let o_large = reduce_seq(&p_large.a, &p_large.b, &cfg).unwrap();
+    let mut session = HtSession::builder().config(cfg).threads(4).build().unwrap();
+    for (pencil, oracle, label) in [
+        (&p_small, &o_small, "small #1"),
+        (&p_large, &o_large, "large"),
+        (&p_small, &o_small, "small #2"),
+    ] {
+        let run = session.reduce(&pencil.a, &pencil.b).unwrap();
+        assert_same((&run.h, &run.t, &run.q, &run.z), oracle, label);
+    }
+}
+
+#[test]
+fn reduce_batch_matches_sequential_per_pencil_on_mixed_sizes() {
+    // Batch dispatch (one pencil per worker) vs a sequential per-pencil
+    // loop: bitwise identical on a mixed-size batch, including edge cases
+    // below the configured band (clip mode) and a tiny no-op pencil.
+    let mut rng = Rng::new(0xE0_09);
+    let sizes = [2usize, 7, 12, 19, 33, 46];
+    let pencils: Vec<Pencil> = sizes.iter().map(|&n| random_pencil(n, &mut rng)).collect();
+    let mut batch_session = HtSession::builder()
+        .band(16)
+        .threads(4)
+        .clip_band(true)
+        .build()
+        .unwrap();
+    let out = batch_session.reduce_batch(&pencils).unwrap();
+    assert_eq!(out.len(), pencils.len());
+    let mut seq_session =
+        HtSession::builder().band(16).threads(1).clip_band(true).build().unwrap();
+    for (pencil, d) in pencils.iter().zip(&out) {
+        if pencil.n() >= 3 {
+            d.verify(&pencil.a, &pencil.b).assert_ok(1e-10);
+        }
+        let oracle = seq_session.reduce(&pencil.a, &pencil.b).unwrap();
+        assert_same(
+            (&d.h, &d.t, &d.q, &d.z),
+            &oracle,
+            &format!("mixed batch n={}", pencil.n()),
+        );
+    }
+}
+
+#[test]
+#[allow(deprecated)]
+fn deprecated_shims_compile_and_delegate_unchanged() {
+    // Acceptance pin: both legacy entry points still compile and are
+    // bitwise the session paths they delegate to.
+    use paraht::ht::reduce_to_hessenberg_triangular;
+    let mut rng = Rng::new(0xE0_0A);
+    let pencil = random_pencil(40, &mut rng);
+    let cfg = Config { r: 4, p: 3, q: 3, slices: 8, ..Config::default() };
+
+    let oracle = reduce_seq(&pencil.a, &pencil.b, &cfg).unwrap();
+    let via_shim = reduce_to_hessenberg_triangular(&pencil.a, &pencil.b, &cfg).unwrap();
+    assert_same(
+        (&via_shim.h, &via_shim.t, &via_shim.q, &via_shim.z),
+        &oracle,
+        "reduce_to_hessenberg_triangular shim",
+    );
+
+    let run = run_paraht(&pencil.a, &pencil.b, &cfg, ExecMode::Threads(4)).unwrap();
+    assert_same((&run.h, &run.t, &run.q, &run.z), &oracle, "run_paraht shim");
+    assert!(run.traces.is_none());
+    let run = run_paraht(&pencil.a, &pencil.b, &cfg, ExecMode::Trace).unwrap();
+    assert_same((&run.h, &run.t, &run.q, &run.z), &oracle, "run_paraht trace shim");
+    assert!(run.traces.is_some(), "Trace mode still returns traces through the shim");
+}
+
+#[test]
+fn trace_recorder_sink_observes_identical_reduction() {
+    // The TraceSink replacement for ExecMode::Trace: a recorder-equipped
+    // session produces the oracle bits AND a usable task trace.
+    let mut rng = Rng::new(0xE0_0B);
+    let pencil = random_pencil(44, &mut rng);
+    let cfg = Config { r: 4, p: 3, q: 3, slices: 8, ..Config::default() };
+    let oracle = reduce_seq(&pencil.a, &pencil.b, &cfg).unwrap();
+    let recorder = TraceRecorder::new();
+    let mut session = HtSession::builder()
+        .config(cfg)
+        .trace(recorder.clone())
+        .build()
+        .unwrap();
+    let run = session.reduce(&pencil.a, &pencil.b).unwrap();
+    assert_same((&run.h, &run.t, &run.q, &run.z), &oracle, "recorded session");
+    let reports = recorder.reports();
+    assert_eq!(reports.len(), 1);
+    let (t1, t2) = reports[0].traces.as_ref().expect("recorder requests traces");
+    assert!(!t1.durations.is_empty() && !t2.durations.is_empty());
 }

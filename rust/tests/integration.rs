@@ -5,13 +5,12 @@
 //! machine precision") for every algorithm, equivalence between execution
 //! modes, and the simulator's contracts on real traces.
 
+use paraht::api::{reduce_seq as reduce_to_hessenberg_triangular, HtSession};
 use paraht::baselines::one_stage::{OneStageOpts, OppositeMethod};
 use paraht::baselines::{dgghd3, iterht, moler_stewart, one_stage};
 use paraht::config::Config;
-use paraht::coordinator::driver::{iterht_recorded, run_paraht};
+use paraht::coordinator::driver::iterht_recorded;
 use paraht::coordinator::sim::simulate_makespan;
-use paraht::coordinator::stage1_par::ExecMode;
-use paraht::ht::reduce_to_hessenberg_triangular;
 use paraht::linalg::matrix::Matrix;
 use paraht::linalg::verify::{max_below_band, HtVerification};
 use paraht::pencil::random::{random_pencil, random_pencil_general};
@@ -67,8 +66,20 @@ fn execution_modes_agree() {
     let cfg = Config { r: 6, p: 3, q: 3, threads: 3, ..Config::default() };
 
     let d_seq = reduce_to_hessenberg_triangular(&p.a, &p.b, &cfg).unwrap();
-    let d_par = run_paraht(&p.a, &p.b, &cfg, ExecMode::Threads(3)).unwrap();
-    let d_tr = run_paraht(&p.a, &p.b, &cfg, ExecMode::Trace).unwrap();
+    let d_par = HtSession::builder()
+        .config(cfg.clone())
+        .threads(3)
+        .build()
+        .unwrap()
+        .reduce(&p.a, &p.b)
+        .unwrap();
+    let d_tr = HtSession::builder()
+        .config(cfg)
+        .capture_traces(true)
+        .build()
+        .unwrap()
+        .reduce(&p.a, &p.b)
+        .unwrap();
 
     let mut dmax = 0.0f64;
     for j in 0..n {
@@ -140,8 +151,9 @@ fn simulator_contracts_on_real_trace() {
     let mut rng = Rng::new(904);
     let p = random_pencil(80, &mut rng);
     let cfg = Config { r: 8, p: 4, q: 4, slices: 16, ..Config::default() };
-    let run = run_paraht(&p.a, &p.b, &cfg, ExecMode::Trace).unwrap();
-    let (t1, t2) = run.traces.unwrap();
+    let mut session = HtSession::builder().config(cfg).capture_traces(true).build().unwrap();
+    session.reduce(&p.a, &p.b).unwrap();
+    let (t1, t2) = session.take_traces().unwrap();
     for tr in [&t1, &t2] {
         let s1 = simulate_makespan(tr, 1);
         assert!((s1.makespan - tr.total().as_secs_f64()).abs() < 1e-9);
@@ -163,9 +175,11 @@ fn scheduler_stress_determinism() {
     let mut rng = Rng::new(905);
     let p = random_pencil(n, &mut rng);
     let cfg = Config { r: 4, p: 3, q: 2, slices: 8, ..Config::default() };
-    let reference = run_paraht(&p.a, &p.b, &cfg, ExecMode::Threads(1)).unwrap();
+    let reference = reduce_to_hessenberg_triangular(&p.a, &p.b, &cfg).unwrap();
     for threads in [2usize, 3, 5, 8] {
-        let run = run_paraht(&p.a, &p.b, &cfg, ExecMode::Threads(threads)).unwrap();
+        let mut session =
+            HtSession::builder().config(cfg.clone()).threads(threads).build().unwrap();
+        let run = session.reduce(&p.a, &p.b).unwrap();
         let mut dmax = 0.0f64;
         for j in 0..n {
             for i in 0..n {

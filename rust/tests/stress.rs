@@ -191,8 +191,8 @@ fn gemm_shape_sweep() {
 /// Saddle pencils across the ∞-eigenvalue fraction range reduce correctly.
 #[test]
 fn saddle_fraction_sweep() {
+    use paraht::api::reduce_seq as reduce_to_hessenberg_triangular;
     use paraht::config::Config;
-    use paraht::ht::reduce_to_hessenberg_triangular;
     use paraht::pencil::saddle::saddle_pencil;
     for frac in [0.0, 0.1, 0.25, 0.5] {
         let mut rng = Rng::new(0xF4AC + (frac * 100.0) as u64);
@@ -222,10 +222,7 @@ fn pool_stress() {
     use paraht::coordinator::pool::WorkerPool;
     use std::panic::{catch_unwind, AssertUnwindSafe};
 
-    let iters: usize = std::env::var("PALLAS_STRESS_ITERS")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(40);
+    let iters: usize = paraht::util::env::stress_iters(40);
     let mut rng = Rng::new(0x500_57);
     for iter in 0..iters {
         // Fresh pool per iteration: spawn → submit → drain → shutdown.
