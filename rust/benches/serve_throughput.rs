@@ -1,0 +1,236 @@
+//! Bench: serving-tier throughput — mixed-size pencil floods through
+//! `serve::SubmitQueue` (shard router + async queue + result cache).
+//!
+//! Two sweeps:
+//! * **Geometry** — pencils/sec for several `shards × threads_per_shard`
+//!   configurations on an all-distinct flood (cache disabled, so the
+//!   numbers isolate shard scaling).
+//! * **Cache hit-rate** — a fixed geometry flooded with controlled
+//!   duplication (`unique` distinct pencils cycled through `jobs`
+//!   submissions); hit/miss counters are *structural* (hard-asserted:
+//!   misses = distinct pencils, hits = the rest — duplicates of a pencil
+//!   land on one shard's FIFO, so no racing double-miss exists), while
+//!   throughput ratios stay timing-sensitive (soft mode applies).
+//!
+//! Writes `BENCH_serve.json` (override: `PALLAS_BENCH_OUT`) before any
+//! timing-sensitive assertion, so a hard-mode failure never discards the
+//! data. Bitwise parity of served results against the sequential oracle
+//! is hard-asserted up front.
+//!
+//! Env knobs (canonical `PALLAS_` names; legacy `PARAHT_` aliases — see
+//! `util::env`):
+//! * `PALLAS_SERVE_JOBS=160` — flood length per sweep point.
+//! * `PALLAS_SERVE_SIZES=16,24,32` — pencil-size mix.
+//! * `PALLAS_BENCH_SOFT` / `PALLAS_BENCH_TOL` — soften / relax the
+//!   shard-scaling assertion.
+
+use paraht::api::reduce_seq;
+use paraht::config::Config;
+use paraht::experiments::common;
+use paraht::pencil::random::random_pencil;
+use paraht::pencil::Pencil;
+use paraht::serve::{ServeConfig, ShardRouter, SubmitQueue};
+use paraht::util::env;
+use paraht::util::proptest::max_abs_diff;
+use paraht::util::rng::Rng;
+use std::fmt::Write as _;
+use std::time::Instant;
+
+/// `(shards, threads_per_shard)` sweep points.
+const GEOMETRIES: &[(usize, usize)] = &[(1, 1), (2, 1), (4, 1), (2, 2)];
+
+/// Small-pencil serving tuning (band must fit the smallest size).
+fn base_cfg() -> Config {
+    Config { r: 4, p: 2, q: 4, ..Config::default() }
+}
+
+fn serve_cfg(shards: usize, threads: usize, cache_entries: usize) -> ServeConfig {
+    ServeConfig {
+        shards,
+        threads_per_shard: threads,
+        cache_entries,
+        base: base_cfg(),
+        ..ServeConfig::default()
+    }
+}
+
+/// Flood `jobs` submissions cycling through `pool`, wait for every
+/// ticket, return wall seconds (panics on any failed job — the bench only
+/// times healthy floods).
+fn flood(queue: &SubmitQueue, pool: &[Pencil], jobs: usize) -> f64 {
+    let handle = queue.handle();
+    let t = Instant::now();
+    let tickets: Vec<_> = (0..jobs)
+        .map(|i| {
+            let p = &pool[i % pool.len()];
+            handle.submit(p.a.clone(), p.b.clone()).expect("flood submission accepted")
+        })
+        .collect();
+    for ticket in tickets {
+        ticket.wait().expect("served reduction succeeds");
+    }
+    t.elapsed().as_secs_f64()
+}
+
+struct GeomRow {
+    shards: usize,
+    threads: usize,
+    jobs: usize,
+    secs: f64,
+    pencils_per_sec: f64,
+}
+
+struct CacheRow {
+    unique: usize,
+    jobs: usize,
+    hits: u64,
+    misses: u64,
+    hit_rate: f64,
+    secs: f64,
+    pencils_per_sec: f64,
+}
+
+fn main() {
+    let sizes = env::serve_sizes(&[16, 24, 32]);
+    let jobs = env::serve_jobs(160).max(8);
+    eprintln!(
+        "serve_throughput: {jobs} jobs, sizes {sizes:?} \
+         (set PALLAS_SERVE_JOBS / PALLAS_SERVE_SIZES to change)"
+    );
+
+    let mut rng = Rng::new(0x5E12E);
+    let distinct = jobs.min(48);
+    let pool: Vec<Pencil> =
+        (0..distinct).map(|i| random_pencil(sizes[i % sizes.len()], &mut rng)).collect();
+
+    // ---- Hard parity gate: served results are bitwise the oracle, both
+    // on the cold path and on the cache hit path. ----
+    {
+        let queue = SubmitQueue::new(ShardRouter::new(serve_cfg(3, 1, 64)).unwrap());
+        let handle = queue.handle();
+        for p in pool.iter().take(5) {
+            for round in 0..2 {
+                let d = handle.submit(p.a.clone(), p.b.clone()).unwrap().wait().unwrap();
+                let eff = base_cfg().clipped_for(p.n());
+                let oracle = reduce_seq(&p.a, &p.b, &eff).unwrap();
+                assert_eq!(max_abs_diff(&d.h, &oracle.h), 0.0, "serve H diverges (r{round})");
+                assert_eq!(max_abs_diff(&d.t, &oracle.t), 0.0, "serve T diverges (r{round})");
+                assert_eq!(max_abs_diff(&d.q, &oracle.q), 0.0, "serve Q diverges (r{round})");
+                assert_eq!(max_abs_diff(&d.z, &oracle.z), 0.0, "serve Z diverges (r{round})");
+            }
+        }
+        let c = queue.router().stats().cache.expect("cache configured");
+        assert_eq!(c.hits, 5, "second round must be served from the cache");
+        queue.shutdown();
+    }
+
+    // ---- Geometry sweep (cache off: isolate shard scaling). ----
+    println!("{:<8}{:>9}{:>8}{:>12}{:>16}", "shards", "threads", "jobs", "secs", "pencils/sec");
+    let mut geom_rows: Vec<GeomRow> = Vec::new();
+    for &(shards, threads) in GEOMETRIES {
+        let queue = SubmitQueue::new(ShardRouter::new(serve_cfg(shards, threads, 0)).unwrap());
+        flood(&queue, &pool, jobs.min(32)); // warmup
+        let secs = flood(&queue, &pool, jobs);
+        queue.shutdown();
+        let pps = jobs as f64 / secs;
+        println!("{shards:<8}{threads:>9}{jobs:>8}{secs:>12.4}{pps:>16.1}");
+        geom_rows.push(GeomRow { shards, threads, jobs, secs, pencils_per_sec: pps });
+    }
+
+    // ---- Cache hit-rate sweep (fixed 2×1 geometry, ample cache). ----
+    println!("\n{:<8}{:>8}{:>8}{:>8}{:>10}{:>12}{:>16}", "unique", "jobs", "hits", "miss", "hitrate", "secs", "pencils/sec");
+    let mut cache_rows: Vec<CacheRow> = Vec::new();
+    for divisor in [1usize, 4, 16] {
+        let unique = (distinct / divisor).max(1);
+        let queue = SubmitQueue::new(ShardRouter::new(serve_cfg(2, 1, 4096)).unwrap());
+        let secs = flood(&queue, &pool[..unique], jobs);
+        let stats = queue.router().stats().cache.expect("cache configured");
+        queue.shutdown();
+        // Structural counter contract (hard): every distinct pencil
+        // misses exactly once, every repeat hits.
+        assert_eq!(stats.misses, unique as u64, "one miss per distinct pencil");
+        assert_eq!(stats.hits, (jobs - unique) as u64, "every repeat hits");
+        assert_eq!(stats.evictions, 0, "ample cache must not evict");
+        let pps = jobs as f64 / secs;
+        let rate = stats.hit_rate();
+        println!(
+            "{unique:<8}{jobs:>8}{:>8}{:>8}{rate:>10.3}{secs:>12.4}{pps:>16.1}",
+            stats.hits, stats.misses
+        );
+        cache_rows.push(CacheRow {
+            unique,
+            jobs,
+            hits: stats.hits,
+            misses: stats.misses,
+            hit_rate: rate,
+            secs,
+            pencils_per_sec: pps,
+        });
+    }
+
+    // Shape condition (timing-sensitive): the best multi-shard geometry
+    // must not be slower than single-shard. Evaluated here, asserted
+    // after the JSON artifact is written.
+    let pps_single = geom_rows
+        .iter()
+        .find(|r| r.shards == 1 && r.threads == 1)
+        .map(|r| r.pencils_per_sec)
+        .unwrap_or(f64::NAN);
+    let pps_best_multi = geom_rows
+        .iter()
+        .filter(|r| r.shards > 1)
+        .map(|r| r.pencils_per_sec)
+        .fold(f64::NAN, f64::max);
+    let speedup_shards = pps_best_multi / pps_single;
+    let cond_shards = speedup_shards >= 1.0 / common::bench_tol();
+
+    // ---- Emit BENCH_serve.json. ----
+    let mut body = String::new();
+    let _ = writeln!(body, "  \"jobs\": {jobs},");
+    let _ = writeln!(body, "  \"sizes\": {sizes:?},");
+    body.push_str("  \"geometry\": [\n");
+    for (i, r) in geom_rows.iter().enumerate() {
+        let _ = write!(
+            body,
+            "    {{\"shards\": {}, \"threads\": {}, \"jobs\": {}, \"secs\": {:.6}, \
+             \"pencils_per_sec\": {}}}",
+            r.shards,
+            r.threads,
+            r.jobs,
+            r.secs,
+            common::json_num(r.pencils_per_sec)
+        );
+        body.push_str(if i + 1 < geom_rows.len() { ",\n" } else { "\n" });
+    }
+    body.push_str("  ],\n");
+    body.push_str("  \"cache_sweep\": [\n");
+    for (i, r) in cache_rows.iter().enumerate() {
+        let _ = write!(
+            body,
+            "    {{\"unique\": {}, \"jobs\": {}, \"hits\": {}, \"misses\": {}, \
+             \"hit_rate\": {}, \"secs\": {:.6}, \"pencils_per_sec\": {}}}",
+            r.unique,
+            r.jobs,
+            r.hits,
+            r.misses,
+            common::json_num(r.hit_rate),
+            r.secs,
+            common::json_num(r.pencils_per_sec)
+        );
+        body.push_str(if i + 1 < cache_rows.len() { ",\n" } else { "\n" });
+    }
+    body.push_str("  ],\n");
+    let _ = writeln!(body, "  \"speedup_shards\": {},", common::json_num(speedup_shards));
+    let _ = write!(body, "  \"checks_held\": {cond_shards}");
+    common::write_bench_json("BENCH_serve.json", "serve_throughput", &body);
+
+    if common::bench_check(
+        cond_shards,
+        &format!(
+            "multi-shard serving must not trail single-shard: best {pps_best_multi:.1} vs \
+             {pps_single:.1} pencils/sec"
+        ),
+    ) {
+        println!("\nshape checks OK (serve parity exact; cache counters exact; sharding no slower)");
+    }
+}

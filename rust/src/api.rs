@@ -19,20 +19,24 @@
 //! records [`TaskTrace`]s for the makespan simulator — exactly what
 //! `ExecMode::Trace` used to do.
 //!
-//! ```no_run
+//! The example below runs as a doctest (sequential session — a doctest
+//! process should not spawn a worker team); swap `.threads(1)` for
+//! `.threads(4)` to run the coordinator graphs on the persistent pool,
+//! with bitwise-identical results:
+//!
+//! ```
 //! use paraht::api::HtSession;
 //! # use paraht::pencil::random::random_pencil;
 //! # use paraht::util::rng::Rng;
 //! let mut rng = Rng::new(1);
-//! let p1 = random_pencil(256, &mut rng);
-//! let p2 = random_pencil(256, &mut rng);
-//! let mut session = HtSession::builder().threads(4).build().unwrap();
-//! let d1 = session.reduce(&p1.a, &p1.b).unwrap(); // sets up workspaces
-//! let d2 = session.reduce(&p2.a, &p2.b).unwrap(); // reuses them
+//! let p1 = random_pencil(64, &mut rng);
+//! let p2 = random_pencil(64, &mut rng);
+//! let mut session = HtSession::builder().threads(1).band(8).block(4).group(4).build().unwrap();
+//! let d1 = session.reduce(&p1.a, &p1.b).unwrap(); // the sequential oracle
+//! let d2 = session.reduce(&p2.a, &p2.b).unwrap(); // same warm session
 //! assert!(d1.verify(&p1.a, &p1.b).worst() < 1e-10);
 //! assert!(d2.verify(&p2.a, &p2.b).worst() < 1e-10);
 //! ```
-#![warn(missing_docs)]
 
 use crate::config::Config;
 use crate::coordinator::graph::TaskTrace;
@@ -224,11 +228,13 @@ struct Workspace {
 /// Builder for [`HtSession`] — consumes and validates the [`Config`] once.
 ///
 /// Built with [`HtSession::builder`]; every method takes and returns the
-/// builder by value, so calls chain:
+/// builder by value, so calls chain (runnable: a `threads(1)` build never
+/// touches the worker pool):
 ///
-/// ```no_run
+/// ```
 /// # use paraht::api::HtSession;
-/// let session = HtSession::builder().threads(4).band(8).block(4).group(4).build().unwrap();
+/// let session = HtSession::builder().threads(1).band(8).block(4).group(4).build().unwrap();
+/// assert_eq!(session.config().r, 8);
 /// ```
 pub struct HtSessionBuilder {
     cfg: Config,
@@ -404,13 +410,11 @@ impl HtSession {
     }
 
     /// The per-pencil effective configuration: the session config with the
-    /// bandwidth clipped to the problem size when
+    /// bandwidth clipped to the problem size (via [`Config::clipped_for`],
+    /// the rule shared with the serving layer's cache keys) when
     /// [`HtSessionBuilder::clip_band`] is on, validated for `n`.
     fn effective_cfg(&self, n: usize) -> Result<Config> {
-        let mut cfg = self.cfg.clone();
-        if self.clip_band && n >= 3 && cfg.r >= n {
-            cfg.r = (n - 1).max(2);
-        }
+        let cfg = if self.clip_band { self.cfg.clipped_for(n) } else { self.cfg.clone() };
         cfg.validate_for(n)?;
         Ok(cfg)
     }

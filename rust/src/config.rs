@@ -122,6 +122,23 @@ impl Config {
         Ok(())
     }
 
+    /// The band-clipped configuration for a concrete problem size: `r`
+    /// reduced to `min(r, n - 1)` (floor 2) when the configured band does
+    /// not fit the pencil. This is the one shared definition of the
+    /// small-pencil clipping rule — `api::HtSession` (via
+    /// `HtSessionBuilder::clip_band`) and the serving layer's
+    /// [`crate::serve::ShardRouter`] both route through it, so a cache key
+    /// computed from the clipped config always matches the config the
+    /// reduction actually ran with. Pencils with `n < 3` are no-ops for
+    /// every stage and come back unchanged.
+    pub fn clipped_for(&self, n: usize) -> Config {
+        let mut cfg = self.clone();
+        if n >= 3 && cfg.r >= n {
+            cfg.r = (n - 1).max(2);
+        }
+        cfg
+    }
+
     /// Effective slice count for apply tasks.
     pub fn effective_slices(&self) -> usize {
         if self.slices > 0 {
@@ -201,6 +218,19 @@ mod tests {
         assert!(matches!(c.validate().unwrap_err(), crate::Error::Config(_)));
         let c = Config { threads: 0, ..Config::default() };
         assert!(matches!(c.validate().unwrap_err(), crate::Error::Config(_)));
+    }
+
+    #[test]
+    fn clipped_for_matches_clip_band_rule() {
+        let c = Config { r: 16, ..Config::default() };
+        // Band does not fit: clipped to n - 1.
+        assert_eq!(c.clipped_for(10).r, 9);
+        assert!(c.clipped_for(10).validate_for(10).is_ok());
+        // Band fits: unchanged.
+        assert_eq!(c.clipped_for(40).r, 16);
+        // Tiny no-op pencils come back unchanged (floor at r = 2 for n = 3).
+        assert_eq!(c.clipped_for(2).r, 16);
+        assert_eq!(c.clipped_for(3).r, 2);
     }
 
     #[test]

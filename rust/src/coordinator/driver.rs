@@ -49,7 +49,7 @@ impl ParaHtRun {
 /// oracle instead of being a silent precondition violation).
 #[deprecated(
     since = "0.2.0",
-    note = "use `paraht::api::HtSession` (builder front door); \
+    note = "use `paraht::api::HtSession` (builder front door); removal target 0.3.0 — \
             see EXPERIMENTS.md §API for the migration table"
 )]
 pub fn run_paraht(a: &Matrix, b: &Matrix, cfg: &Config, mode: ExecMode) -> Result<ParaHtRun> {

@@ -54,7 +54,7 @@ impl HtDecomposition {
 #[deprecated(
     since = "0.2.0",
     note = "use `paraht::api::HtSession` (builder front door) or `paraht::api::reduce_seq`; \
-            see EXPERIMENTS.md §API for the migration table"
+            removal target 0.3.0 — see EXPERIMENTS.md §API for the migration table"
 )]
 pub fn reduce_to_hessenberg_triangular(
     a: &Matrix,

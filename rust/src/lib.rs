@@ -17,7 +17,14 @@
 //! `ht::reduce_to_hessenberg_triangular`) survive as thin deprecated
 //! shims over the session.
 //!
-//! The system is a three-layer stack:
+//! For *many* pencils, the serving layer ([`serve`]) stacks a shard
+//! router (N sessions, size-class routing), an async bounded submission
+//! queue (per-shard dispatcher threads, ticket futures) and a
+//! content-hash result cache on top of the session — same bitwise
+//! contract, sustained throughput.
+//!
+//! The system is a three-layer stack (see ARCHITECTURE.md for the full
+//! module tour):
 //! * **L3 (rust)** — this crate: the paper's parallel *coordinator* (task
 //!   graph, dynamic scheduler, slicing) plus the full dense-linear-algebra
 //!   substrate it needs (GEMM, Householder/WY, QR/RQ/LQ, Givens).
@@ -25,6 +32,7 @@
 //!   AOT-lowered to HLO text artifacts.
 //! * **L1 (Pallas)** — `python/compile/kernels/`: tiled WY block-reflector
 //!   kernels, validated against a pure-jnp oracle.
+#![warn(missing_docs)]
 
 pub mod api;
 pub mod baselines;
@@ -36,6 +44,7 @@ pub mod ht;
 pub mod linalg;
 pub mod pencil;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 
 pub use api::{HtSession, HtSessionBuilder, TraceRecorder, TraceSink};
@@ -43,3 +52,4 @@ pub use config::Config;
 pub use error::{Error, Result};
 pub use ht::two_stage::HtDecomposition;
 pub use linalg::matrix::Matrix;
+pub use serve::{ServeConfig, ShardRouter, SubmitQueue};

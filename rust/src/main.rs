@@ -2,11 +2,13 @@
 //! reduction.
 //!
 //! ```text
-//! paraht reduce     --n 512 [--saddle] [--r 16 --p 8 --q 8] [--threads T]
-//!                   [--mode seq|par|sim] [--check]
-//! paraht experiment fig9a|fig9b|fig10|fig11|flops|ablations [--n N]
-//!                   [--sizes a,b,c] [--threads T]
-//! paraht validate   [--pjrt]
+//! paraht reduce      --n 512 [--saddle] [--r 16 --p 8 --q 8] [--threads T]
+//!                    [--mode seq|par|sim] [--check]
+//! paraht experiment  fig9a|fig9b|fig10|fig11|flops|ablations [--n N]
+//!                    [--sizes a,b,c] [--threads T]
+//! paraht serve-bench [--jobs J] [--unique U] [--sizes a,b,c] [--shards N]
+//!                    [--shard-threads M] [--queue-cap C] [--cache-cap K]
+//! paraht validate    [--pjrt]
 //! paraht info
 //! ```
 
@@ -16,6 +18,8 @@ use paraht::coordinator::driver::paraht_curve;
 use paraht::experiments::{ablations, common, figures, flops_table};
 use paraht::pencil::random::random_pencil;
 use paraht::pencil::saddle::saddle_pencil;
+use paraht::pencil::Pencil;
+use paraht::serve::{ServeConfig, ShardRouter, SubmitQueue};
 use paraht::util::cli::Args;
 use paraht::util::rng::Rng;
 
@@ -26,6 +30,7 @@ fn main() {
     let code = match cmd {
         "reduce" => cmd_reduce(&args),
         "experiment" => cmd_experiment(&args),
+        "serve-bench" => cmd_serve_bench(&args),
         "validate" => cmd_validate(&args),
         "info" => cmd_info(),
         _ => {
@@ -234,6 +239,94 @@ fn cmd_experiment(args: &Args) -> i32 {
     0
 }
 
+/// Flood the serving tier (router → queue → cache) with a mixed-size
+/// pencil stream and report throughput plus shard/cache counters. The
+/// `--unique` knob controls duplication: `--jobs 200 --unique 25` submits
+/// each distinct pencil 8 times, so the expected cache hit rate is 87.5%.
+fn cmd_serve_bench(args: &Args) -> i32 {
+    use std::time::Instant;
+    let seed = args.get("seed", 0x5EEDu64);
+    let jobs = args.get("jobs", paraht::util::env::serve_jobs(200)).max(1);
+    let env_sizes = paraht::util::env::serve_sizes(&[16, 24, 32, 48]);
+    let sizes = args.get_list("sizes", &env_sizes);
+    let sizes = if sizes.is_empty() { env_sizes } else { sizes };
+    let unique = args.get("unique", jobs.min(32)).clamp(1, jobs);
+
+    let mut scfg = ServeConfig::from_env();
+    scfg.shards = args.get("shards", scfg.shards);
+    scfg.threads_per_shard = args.get("shard-threads", scfg.threads_per_shard);
+    scfg.queue_capacity = args.get("queue-cap", scfg.queue_capacity);
+    scfg.cache_entries = args.get("cache-cap", scfg.cache_entries);
+    scfg.base = Config {
+        r: args.get("r", 8),
+        p: args.get("p", 4),
+        q: args.get("q", 4),
+        ..Config::default()
+    };
+    println!(
+        "serve-bench: {jobs} jobs over {unique} distinct pencils (sizes {sizes:?}), \
+         {} shards x {} threads, queue cap {}, cache cap {}",
+        scfg.shards, scfg.threads_per_shard, scfg.queue_capacity, scfg.cache_entries
+    );
+
+    let router = match ShardRouter::new(scfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    let queue = SubmitQueue::new(router);
+    let handle = queue.handle();
+
+    let mut rng = Rng::new(seed);
+    let pool: Vec<Pencil> =
+        (0..unique).map(|i| random_pencil(sizes[i % sizes.len()], &mut rng)).collect();
+
+    let t = Instant::now();
+    let tickets: Vec<_> = (0..jobs)
+        .map(|i| {
+            let p = &pool[i % unique];
+            handle.submit(p.a.clone(), p.b.clone()).expect("flood submission accepted")
+        })
+        .collect();
+    let mut failed = 0usize;
+    for ticket in tickets {
+        if ticket.wait().is_err() {
+            failed += 1;
+        }
+    }
+    let secs = t.elapsed().as_secs_f64();
+
+    let rstats = queue.router().stats();
+    let qstats = queue.stats();
+    println!(
+        "{jobs} jobs in {secs:.3}s  ->  {:.1} pencils/sec  ({failed} failed)",
+        jobs as f64 / secs
+    );
+    println!("reduced per shard: {:?}", rstats.reduced_per_shard);
+    if let Some(c) = rstats.cache {
+        println!(
+            "cache: {} hits / {} misses (hit rate {:.1}%), {} entries, {} evictions",
+            c.hits,
+            c.misses,
+            100.0 * c.hit_rate(),
+            c.entries,
+            c.evictions
+        );
+    }
+    println!(
+        "queue: {} submitted, {} completed, {} rejected",
+        qstats.submitted, qstats.completed, qstats.rejected
+    );
+    queue.shutdown();
+    if failed > 0 {
+        1
+    } else {
+        0
+    }
+}
+
 fn cmd_validate(args: &Args) -> i32 {
     let n = args.get("n", 200usize);
     let mut rng = Rng::new(7);
@@ -315,9 +408,10 @@ fn print_help() {
         "paraht — parallel two-stage Hessenberg-triangular reduction\n\
          \n\
          USAGE:\n\
-           paraht reduce     --n 512 [--saddle] [--r 16 --p 8 --q 8] [--threads T] [--mode seq|par|sim] [--check]\n\
-           paraht experiment fig9a|fig9b|fig10|fig11|flops|ablations [--n N] [--sizes a,b,c] [--threads T]\n\
-           paraht validate   [--pjrt] [--n N]\n\
+           paraht reduce      --n 512 [--saddle] [--r 16 --p 8 --q 8] [--threads T] [--mode seq|par|sim] [--check]\n\
+           paraht experiment  fig9a|fig9b|fig10|fig11|flops|ablations [--n N] [--sizes a,b,c] [--threads T]\n\
+           paraht serve-bench [--jobs J] [--unique U] [--sizes a,b,c] [--shards N] [--shard-threads M] [--queue-cap C] [--cache-cap K]\n\
+           paraht validate    [--pjrt] [--n N]\n\
            paraht info"
     );
 }

@@ -1,0 +1,458 @@
+//! LRU result cache keyed by pencil content — the memo half of the
+//! serving layer.
+//!
+//! A serving tier sees repeated work: parameter sweeps resubmit the same
+//! pencil under the same tuning, retries resubmit failed floods, and
+//! batch clients deduplicate poorly. Since reductions are deterministic
+//! (bitwise, per the crate's determinism contract), a result computed once
+//! is the *exact* answer for every bitwise-equal resubmission — so caching
+//! is sound with no tolerance knobs at all.
+//!
+//! **Correctness before probability.** The [`CacheKey`] carries the full
+//! bit pattern of both matrices plus the result-relevant config fields,
+//! and lookups compare those bytes after the 64-bit
+//! [fingerprint](crate::serve::hash) has bucketed the candidates. A
+//! fingerprint collision therefore costs one extra comparison, never a
+//! wrong answer — the cache can be handed to the bitwise-oracle tests
+//! without a carve-out.
+//!
+//! **Bounded two ways.** `max_entries` caps the entry count and
+//! `max_bytes` caps the summed footprint (key bits + the four result
+//! factors); either bound evicts least-recently-used entries first. An
+//! entry that alone exceeds `max_bytes` is not cached (counted in
+//! [`CacheStats::skipped_too_large`]) — one oversized pencil must not
+//! flush an otherwise warm cache.
+
+use crate::config::Config;
+use crate::ht::two_stage::HtDecomposition;
+use crate::linalg::matrix::Matrix;
+use crate::serve::hash::pencil_fingerprint;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Full content key: the pencil's bit patterns plus the result-relevant
+/// tuning. Construct with [`CacheKey::new`] from the *effective* (clipped)
+/// config so the key describes the reduction that actually runs.
+#[derive(Clone, Debug)]
+pub struct CacheKey {
+    n: usize,
+    r: usize,
+    p: usize,
+    q: usize,
+    lookahead: bool,
+    /// Bit patterns of `A` then `B`, column-major storage order.
+    bits: Box<[u64]>,
+    fingerprint: u64,
+}
+
+impl CacheKey {
+    /// Key a square pencil under an effective config (callers pass the
+    /// output of [`Config::clipped_for`] when band clipping is active).
+    pub fn new(a: &Matrix, b: &Matrix, cfg: &Config) -> CacheKey {
+        let mut bits = Vec::with_capacity(a.data().len() + b.data().len());
+        bits.extend(a.data().iter().map(|v| v.to_bits()));
+        bits.extend(b.data().iter().map(|v| v.to_bits()));
+        CacheKey {
+            n: a.rows(),
+            r: cfg.r,
+            p: cfg.p,
+            q: cfg.q,
+            lookahead: cfg.lookahead,
+            bits: bits.into_boxed_slice(),
+            fingerprint: pencil_fingerprint(a, b, cfg),
+        }
+    }
+
+    /// The 64-bit bucketing fingerprint (see [`crate::serve::hash`]).
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
+    /// Approximate heap footprint of the key itself.
+    fn bytes(&self) -> usize {
+        self.bits.len() * 8 + std::mem::size_of::<CacheKey>()
+    }
+
+    /// Compare this stored key against a *borrowed* pencil + effective
+    /// config without materializing a `CacheKey` — the allocation-free
+    /// comparison behind [`ResultCache::lookup`] (the hit path must not
+    /// copy 2·n² words just to ask a question).
+    fn matches_pencil(&self, fp: u64, a: &Matrix, b: &Matrix, cfg: &Config) -> bool {
+        self.fingerprint == fp
+            && self.n == a.rows()
+            && self.r == cfg.r
+            && self.p == cfg.p
+            && self.q == cfg.q
+            && self.lookahead == cfg.lookahead
+            && self.bits.len() == a.data().len() + b.data().len()
+            && {
+                let (ka, kb) = self.bits.split_at(a.data().len());
+                ka.iter().zip(a.data()).all(|(&k, v)| k == v.to_bits())
+                    && kb.iter().zip(b.data()).all(|(&k, v)| k == v.to_bits())
+            }
+    }
+}
+
+impl PartialEq for CacheKey {
+    fn eq(&self, other: &CacheKey) -> bool {
+        self.fingerprint == other.fingerprint
+            && self.n == other.n
+            && self.r == other.r
+            && self.p == other.p
+            && self.q == other.q
+            && self.lookahead == other.lookahead
+            && self.bits == other.bits
+    }
+}
+
+impl Eq for CacheKey {}
+
+/// Hit/miss/eviction counters, exported for benches and dashboards.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups that returned a stored result.
+    pub hits: u64,
+    /// Lookups that found nothing (including fingerprint-collision
+    /// near-misses, which compare unequal on the full key).
+    pub misses: u64,
+    /// Entries stored.
+    pub insertions: u64,
+    /// Entries removed to satisfy the entry or byte bound.
+    pub evictions: u64,
+    /// Insertions refused because one entry alone exceeded the byte bound.
+    pub skipped_too_large: u64,
+    /// Entries currently resident.
+    pub entries: usize,
+    /// Bytes currently resident (keys + results).
+    pub bytes: usize,
+}
+
+impl CacheStats {
+    /// Hits as a fraction of all lookups (`NaN`-free: 0 when idle).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// One resident entry.
+struct Slot {
+    key: CacheKey,
+    value: Arc<HtDecomposition>,
+    bytes: usize,
+    /// Monotone use stamp; smallest = least recently used.
+    last_used: u64,
+}
+
+/// The LRU result cache. Not internally synchronized — the serving layer
+/// wraps it in a `Mutex` shared across shards (one cache, N shards: a
+/// pencil routed to shard 2 must hit a result computed on shard 0).
+pub struct ResultCache {
+    max_entries: usize,
+    max_bytes: usize,
+    /// Dense slot storage; `None` slots are reusable (indices must stay
+    /// stable because `index` points into this vector).
+    slots: Vec<Option<Slot>>,
+    free: Vec<usize>,
+    /// Fingerprint → candidate slot indices (collision chain).
+    index: HashMap<u64, Vec<usize>>,
+    tick: u64,
+    bytes: usize,
+    hits: u64,
+    misses: u64,
+    insertions: u64,
+    evictions: u64,
+    skipped_too_large: u64,
+}
+
+impl std::fmt::Debug for ResultCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ResultCache")
+            .field("max_entries", &self.max_entries)
+            .field("max_bytes", &self.max_bytes)
+            .field("stats", &self.stats())
+            .finish()
+    }
+}
+
+impl ResultCache {
+    /// Cache bounded by entry count and by summed byte footprint.
+    /// `max_entries == 0` is a valid always-miss cache (the router uses
+    /// `None` instead, but the degenerate bound must not panic).
+    pub fn new(max_entries: usize, max_bytes: usize) -> ResultCache {
+        ResultCache {
+            max_entries,
+            max_bytes,
+            slots: Vec::new(),
+            free: Vec::new(),
+            index: HashMap::new(),
+            tick: 0,
+            bytes: 0,
+            hits: 0,
+            misses: 0,
+            insertions: 0,
+            evictions: 0,
+            skipped_too_large: 0,
+        }
+    }
+
+    /// Number of resident entries.
+    pub fn len(&self) -> usize {
+        self.slots.len() - self.free.len()
+    }
+
+    /// Whether the cache is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits,
+            misses: self.misses,
+            insertions: self.insertions,
+            evictions: self.evictions,
+            skipped_too_large: self.skipped_too_large,
+            entries: self.len(),
+            bytes: self.bytes,
+        }
+    }
+
+    /// Find the live slot whose key satisfies `pred`, bucketed by
+    /// fingerprint. Read-only; LRU/counter updates happen in
+    /// [`ResultCache::touch`].
+    fn find_slot(&self, fp: u64, pred: impl Fn(&CacheKey) -> bool) -> Option<usize> {
+        self.index
+            .get(&fp)?
+            .iter()
+            .copied()
+            .find(|&i| pred(&self.slots[i].as_ref().expect("indexed slot is live").key))
+    }
+
+    /// Record the outcome of a probe: refresh the hit's LRU stamp and hand
+    /// out the stored result, or count the miss.
+    fn touch(&mut self, found: Option<usize>) -> Option<Arc<HtDecomposition>> {
+        match found {
+            Some(i) => {
+                self.tick += 1;
+                let slot = self.slots[i].as_mut().expect("indexed slot is live");
+                slot.last_used = self.tick;
+                self.hits += 1;
+                Some(slot.value.clone())
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Look a key up; a hit refreshes its LRU stamp and returns a shared
+    /// handle to the stored result.
+    pub fn get(&mut self, key: &CacheKey) -> Option<Arc<HtDecomposition>> {
+        let found = self.find_slot(key.fingerprint, |k| k == key);
+        self.touch(found)
+    }
+
+    /// Allocation-free lookup for the serving hot path: fingerprint the
+    /// borrowed pencil and compare stored key bits directly against its
+    /// data — no `CacheKey` (and no 2·n²-word copy) is materialized. A
+    /// hit is exactly a [`ResultCache::get`] hit on `CacheKey::new(a, b,
+    /// cfg)`; callers build the owned key only on the miss path, for
+    /// [`ResultCache::insert`].
+    pub fn lookup(&mut self, a: &Matrix, b: &Matrix, cfg: &Config) -> Option<Arc<HtDecomposition>> {
+        let fp = pencil_fingerprint(a, b, cfg);
+        let found = self.find_slot(fp, |k| k.matches_pencil(fp, a, b, cfg));
+        self.touch(found)
+    }
+
+    /// Store a result, evicting least-recently-used entries as needed to
+    /// respect both bounds. Re-inserting a resident key refreshes its LRU
+    /// stamp instead of duplicating it (two dispatchers can race the same
+    /// miss; both computed the identical bits, so either value serves).
+    pub fn insert(&mut self, key: CacheKey, value: Arc<HtDecomposition>) {
+        if self.max_entries == 0 {
+            return;
+        }
+        let entry_bytes = key.bytes() + result_bytes(&value);
+        if entry_bytes > self.max_bytes {
+            self.skipped_too_large += 1;
+            return;
+        }
+        // Refresh, don't duplicate, if the key is already resident.
+        if let Some(i) = self.find_slot(key.fingerprint, |k| *k == key) {
+            self.tick += 1;
+            self.slots[i].as_mut().expect("indexed slot is live").last_used = self.tick;
+            return;
+        }
+        while self.len() >= self.max_entries || self.bytes + entry_bytes > self.max_bytes {
+            if !self.evict_lru() {
+                break;
+            }
+        }
+        self.tick += 1;
+        let slot = Slot { key, value, bytes: entry_bytes, last_used: self.tick };
+        let fp = slot.key.fingerprint;
+        let idx = match self.free.pop() {
+            Some(i) => {
+                self.slots[i] = Some(slot);
+                i
+            }
+            None => {
+                self.slots.push(Some(slot));
+                self.slots.len() - 1
+            }
+        };
+        self.index.entry(fp).or_default().push(idx);
+        self.bytes += entry_bytes;
+        self.insertions += 1;
+    }
+
+    /// Remove the least-recently-used entry. Returns whether anything was
+    /// evicted (false only on an empty cache).
+    ///
+    /// Deliberately an O(entries) scan rather than an intrusive LRU list:
+    /// entries are whole decompositions (megabytes each), so both bounds
+    /// keep the slot count small — the scan is noise next to one matrix
+    /// copy, and the flat structure keeps the index/slot invariants easy
+    /// to audit. Revisit if a workload ever wants a many-thousand-entry
+    /// cache under byte pressure (each insert may then scan repeatedly).
+    fn evict_lru(&mut self) -> bool {
+        let victim = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.as_ref().map(|s| (i, s.last_used)))
+            .min_by_key(|&(_, stamp)| stamp)
+            .map(|(i, _)| i);
+        let Some(i) = victim else {
+            return false;
+        };
+        let slot = self.slots[i].take().expect("victim slot is live");
+        self.bytes -= slot.bytes;
+        let chain = self.index.get_mut(&slot.key.fingerprint).expect("victim is indexed");
+        chain.retain(|&j| j != i);
+        if chain.is_empty() {
+            self.index.remove(&slot.key.fingerprint);
+        }
+        self.free.push(i);
+        self.evictions += 1;
+        true
+    }
+}
+
+/// Heap footprint of a stored decomposition: four `n × n` factors.
+fn result_bytes(d: &HtDecomposition) -> usize {
+    8 * (d.h.data().len() + d.t.data().len() + d.q.data().len() + d.z.data().len())
+        + std::mem::size_of::<HtDecomposition>()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::reduce_seq;
+    use crate::pencil::random::random_pencil;
+    use crate::util::rng::Rng;
+
+    fn small_cfg() -> Config {
+        Config { r: 4, p: 2, q: 2, ..Config::default() }
+    }
+
+    fn entry(n: usize, seed: u64) -> (CacheKey, Arc<HtDecomposition>) {
+        let mut rng = Rng::new(seed);
+        let p = random_pencil(n, &mut rng);
+        let cfg = small_cfg();
+        let d = reduce_seq(&p.a, &p.b, &cfg).unwrap();
+        (CacheKey::new(&p.a, &p.b, &cfg), Arc::new(d))
+    }
+
+    #[test]
+    fn hit_after_insert_miss_before() {
+        let mut c = ResultCache::new(8, usize::MAX);
+        let (k, v) = entry(10, 1);
+        assert!(c.get(&k).is_none());
+        c.insert(k.clone(), v.clone());
+        let got = c.get(&k).expect("hit after insert");
+        assert!(Arc::ptr_eq(&got, &v), "cache returns the stored result");
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.insertions, s.entries), (1, 1, 1, 1));
+        assert!(s.bytes > 0);
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn capacity_bound_evicts_lru() {
+        let mut c = ResultCache::new(2, usize::MAX);
+        let (k1, v1) = entry(8, 11);
+        let (k2, v2) = entry(8, 12);
+        let (k3, v3) = entry(8, 13);
+        c.insert(k1.clone(), v1);
+        c.insert(k2.clone(), v2);
+        assert!(c.get(&k1).is_some(), "touch k1 so k2 is the LRU");
+        c.insert(k3.clone(), v3);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.stats().evictions, 1);
+        assert!(c.get(&k2).is_none(), "LRU entry was evicted");
+        assert!(c.get(&k1).is_some());
+        assert!(c.get(&k3).is_some());
+    }
+
+    #[test]
+    fn byte_bound_evicts_and_oversized_entries_are_skipped() {
+        let (k, v) = entry(12, 21);
+        let one = k.bytes() + result_bytes(&v);
+        // Room for exactly one entry of this size.
+        let mut c = ResultCache::new(64, one + one / 2);
+        c.insert(k.clone(), v);
+        assert_eq!(c.len(), 1);
+        let (k2, v2) = entry(12, 22);
+        c.insert(k2.clone(), v2);
+        assert_eq!(c.len(), 1, "byte bound forces eviction");
+        assert_eq!(c.stats().evictions, 1);
+        assert!(c.get(&k2).is_some());
+        // An entry alone above the bound is refused, cache untouched.
+        let (k3, v3) = entry(24, 23);
+        c.insert(k3.clone(), v3);
+        assert!(c.get(&k3).is_none());
+        assert_eq!(c.stats().skipped_too_large, 1);
+        assert!(c.get(&k2).is_some(), "resident entry survives the refusal");
+    }
+
+    #[test]
+    fn reinsert_refreshes_instead_of_duplicating() {
+        let mut c = ResultCache::new(4, usize::MAX);
+        let (k, v) = entry(8, 31);
+        c.insert(k.clone(), v.clone());
+        c.insert(k.clone(), v);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.stats().insertions, 1);
+    }
+
+    #[test]
+    fn different_config_same_pencil_is_a_different_key() {
+        let mut rng = Rng::new(41);
+        let p = random_pencil(10, &mut rng);
+        let cfg1 = small_cfg();
+        let cfg2 = Config { q: 3, ..small_cfg() };
+        let k1 = CacheKey::new(&p.a, &p.b, &cfg1);
+        let k2 = CacheKey::new(&p.a, &p.b, &cfg2);
+        assert_ne!(k1, k2);
+        let mut c = ResultCache::new(4, usize::MAX);
+        c.insert(k1, Arc::new(reduce_seq(&p.a, &p.b, &cfg1).unwrap()));
+        assert!(c.get(&k2).is_none(), "tuning is part of the key");
+    }
+
+    #[test]
+    fn zero_capacity_cache_never_stores() {
+        let mut c = ResultCache::new(0, usize::MAX);
+        let (k, v) = entry(8, 51);
+        c.insert(k.clone(), v);
+        assert!(c.get(&k).is_none());
+        assert_eq!(c.len(), 0);
+    }
+}

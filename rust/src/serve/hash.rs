@@ -1,0 +1,159 @@
+//! Content hashing for pencils — the fingerprint half of the serving
+//! layer's result cache.
+//!
+//! The cache contract is *bitwise*: two submissions hit the same entry iff
+//! their pencil bytes (the `f64` bit patterns of `A` and `B`, in storage
+//! order) and their effective tuning (`r`, `p`, `q`, `lookahead` — the
+//! parameters that change the computed factors; `threads` does not, by the
+//! determinism contract) are identical. `-0.0` and `0.0`, or two different
+//! NaN payloads, are therefore *different* keys — exactly the semantics
+//! the bitwise-oracle tests pin.
+//!
+//! The hasher is an FxHash-style multiply-rotate-xor mix (the pure-std
+//! cousin of rustc's `FxHasher`), chosen for speed on long `u64` streams.
+//! It is **not** collision-free, which is why [`crate::serve::cache`]
+//! stores the full key bytes and compares them on lookup: the 64-bit
+//! fingerprint only buckets, it never decides a hit on its own.
+//!
+//! One property *is* guaranteed, and the `tests/serve.rs` property suite
+//! leans on it: every mixing step `h' = (rotl₅(h) ^ w) · K` with odd `K`
+//! is a bijection in each argument when the other is fixed, so the whole
+//! stream hash is a bijection in any *single* input word given the rest.
+//! Flipping any single bit of any single element therefore always changes
+//! the fingerprint; only multi-word differences can collide.
+
+use crate::config::Config;
+use crate::linalg::matrix::Matrix;
+
+/// The FxHash multiplier (the 64-bit golden-ratio-derived odd constant
+/// used by rustc's hasher). Odd, so multiplication mod 2⁶⁴ is a bijection.
+const K: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+/// Incremental FxHash-style hasher over a stream of `u64` words.
+///
+/// Pure std, no allocation, deterministic across runs and platforms
+/// (always little-endian-free: inputs are whole `u64` words, never raw
+/// native-endian byte slices).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FxHasher64 {
+    state: u64,
+}
+
+impl FxHasher64 {
+    /// Fresh hasher (state 0).
+    pub fn new() -> Self {
+        FxHasher64 { state: 0 }
+    }
+
+    /// Mix one word into the state: `h ← (rotl₅(h) ^ w) · K`.
+    #[inline]
+    pub fn write_u64(&mut self, w: u64) {
+        self.state = (self.state.rotate_left(5) ^ w).wrapping_mul(K);
+    }
+
+    /// Mix a `usize` (widened to `u64`, so 32- and 64-bit targets agree).
+    #[inline]
+    pub fn write_usize(&mut self, w: usize) {
+        self.write_u64(w as u64);
+    }
+
+    /// Mix an `f64` by bit pattern (bitwise semantics: `-0.0 != 0.0`,
+    /// NaN payloads distinguish).
+    #[inline]
+    pub fn write_f64(&mut self, v: f64) {
+        self.write_u64(v.to_bits());
+    }
+
+    /// The current 64-bit fingerprint.
+    #[inline]
+    pub fn finish(&self) -> u64 {
+        self.state
+    }
+}
+
+/// Fingerprint a pencil together with the effective tuning that determines
+/// the reduction's output.
+///
+/// The stream is: a domain tag, the dimensions of both matrices, the
+/// result-relevant config fields (`r`, `p`, `q`, `lookahead` — pass the
+/// config *after* [`Config::clipped_for`] so the key matches what actually
+/// runs), then every element of `A` and `B` by bit pattern in column-major
+/// storage order. `threads` and `slices` are deliberately excluded: the
+/// determinism contract makes them output-invariant, so including them
+/// would only split cache entries that are bitwise interchangeable.
+pub fn pencil_fingerprint(a: &Matrix, b: &Matrix, cfg: &Config) -> u64 {
+    let mut h = FxHasher64::new();
+    h.write_u64(0x70_65_6e_63_69_6c_31_u64); // "pencil1" domain tag
+    h.write_usize(a.rows());
+    h.write_usize(a.cols());
+    h.write_usize(b.rows());
+    h.write_usize(b.cols());
+    h.write_usize(cfg.r);
+    h.write_usize(cfg.p);
+    h.write_usize(cfg.q);
+    h.write_u64(cfg.lookahead as u64);
+    for &v in a.data() {
+        h.write_f64(v);
+    }
+    for &v in b.data() {
+        h.write_f64(v);
+    }
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pencil::random::random_pencil;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fingerprint_is_deterministic_and_clone_invariant() {
+        let mut rng = Rng::new(0x5E21);
+        let p = random_pencil(12, &mut rng);
+        let cfg = Config::default();
+        let h1 = pencil_fingerprint(&p.a, &p.b, &cfg);
+        let h2 = pencil_fingerprint(&p.a.clone(), &p.b.clone(), &cfg);
+        assert_eq!(h1, h2);
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_config_fields() {
+        let mut rng = Rng::new(0x5E22);
+        let p = random_pencil(10, &mut rng);
+        let base = Config { r: 4, p: 2, q: 2, ..Config::default() };
+        let h = pencil_fingerprint(&p.a, &p.b, &base);
+        for cfg in [
+            Config { r: 5, ..base.clone() },
+            Config { p: 3, ..base.clone() },
+            Config { q: 3, ..base.clone() },
+            Config { lookahead: false, ..base.clone() },
+        ] {
+            assert_ne!(h, pencil_fingerprint(&p.a, &p.b, &cfg), "{cfg:?}");
+        }
+        // threads/slices are output-invariant and excluded from the key.
+        let t = Config { threads: 7, slices: 3, ..base.clone() };
+        assert_eq!(h, pencil_fingerprint(&p.a, &p.b, &t));
+    }
+
+    #[test]
+    fn single_word_change_always_changes_the_hash() {
+        // The bijectivity argument in the module docs, spot-checked: any
+        // single-element change (including sign-of-zero) flips the hash.
+        let mut rng = Rng::new(0x5E23);
+        let p = random_pencil(8, &mut rng);
+        let cfg = Config::default();
+        let h = pencil_fingerprint(&p.a, &p.b, &cfg);
+        let mut a2 = p.a.clone();
+        a2[(3, 4)] = f64::from_bits(a2[(3, 4)].to_bits() ^ 1);
+        assert_ne!(h, pencil_fingerprint(&a2, &p.b, &cfg));
+        let mut b2 = p.b.clone();
+        b2[(7, 7)] = -b2[(7, 7)]; // sign-bit flip
+        assert_ne!(h, pencil_fingerprint(&p.a, &b2, &cfg));
+        // 0.0 vs -0.0 below the triangle: still a different key.
+        let mut b3 = p.b.clone();
+        b3[(5, 0)] = -0.0; // was exactly 0.0 (B is upper triangular)
+        assert_eq!(p.b[(5, 0)], 0.0);
+        assert_ne!(h, pencil_fingerprint(&p.a, &b3, &cfg));
+    }
+}

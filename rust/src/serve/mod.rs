@@ -1,0 +1,52 @@
+//! The serving layer: sharded sessions, an async submission queue, and a
+//! content-addressed result cache — the batch-throughput tier on top of
+//! [`crate::api::HtSession`].
+//!
+//! One warm session makes one reduction fast; this module is what turns
+//! that into *sustained throughput* when many pencils flow through the
+//! process:
+//!
+//! * [`ShardRouter`] ([`router`]) — N sessions, requests routed by size
+//!   class so each shard's per-`n` workspace stays hot; shards share the
+//!   persistent worker pool (`threads_per_shard` executors per job).
+//! * [`SubmitQueue`] / [`SubmitHandle`] / [`JobTicket`] ([`queue`]) — a
+//!   bounded per-shard MPSC with one dispatcher thread per shard and
+//!   condvar-backed tickets; shutdown drains every accepted job
+//!   (the pool's park/notify protocol, adapted).
+//! * [`ResultCache`] ([`cache`]) keyed by [`hash`] fingerprints — bitwise
+//!   repeat submissions are answered without running anything, soundly:
+//!   full key bytes are compared on every hit, the 64-bit hash only
+//!   buckets.
+//!
+//! Everything is pure std, like the rest of the crate, and everything is
+//! pinned to the same bitwise contract: a result served through
+//! router + queue + cache is bit-for-bit what [`crate::api::reduce_seq`]
+//! returns for that pencil under the effective (band-clipped) config —
+//! `tests/serve.rs` asserts exactly that, including under mixed-size
+//! floods, cache eviction pressure, and shutdown mid-flood.
+//!
+//! ```no_run
+//! use paraht::serve::{ServeConfig, ShardRouter, SubmitQueue};
+//! # use paraht::pencil::random::random_pencil;
+//! # use paraht::util::rng::Rng;
+//! let router = ShardRouter::new(ServeConfig::from_env()).unwrap();
+//! let queue = SubmitQueue::new(router);
+//! let handle = queue.handle(); // Clone one per client thread
+//! let mut rng = Rng::new(7);
+//! let p = random_pencil(64, &mut rng);
+//! let ticket = handle.submit(p.a, p.b).unwrap(); // routed + enqueued
+//! let d = ticket.wait().unwrap();                // bitwise = oracle
+//! assert_eq!(d.h.rows(), 64);
+//! println!("cache: {:?}", queue.router().stats().cache);
+//! queue.shutdown();                              // drains, then joins
+//! ```
+
+pub mod cache;
+pub mod hash;
+pub mod queue;
+pub mod router;
+
+pub use cache::{CacheKey, CacheStats, ResultCache};
+pub use hash::{pencil_fingerprint, FxHasher64};
+pub use queue::{JobTicket, QueueStats, SubmitHandle, SubmitQueue};
+pub use router::{RouterStats, ServeConfig, ShardRouter};

@@ -1,0 +1,403 @@
+//! The async submission queue: bounded MPSC lanes in front of the shard
+//! router, one dispatcher thread per shard, condvar-backed result tickets.
+//!
+//! Clients call [`SubmitHandle::submit`] (cheap: shape check, route,
+//! enqueue) and get a [`JobTicket`] back; [`JobTicket::wait`] blocks until
+//! that job's dispatcher has filled the ticket. Submission is **bounded**:
+//! each shard has its own FIFO of depth `queue_capacity`, and a submitter
+//! whose target lane is full blocks until the dispatcher drains it — the
+//! backpressure that keeps a flood from buffering unboundedly.
+//!
+//! **Threading model.** Routing happens at submit time (the size-class
+//! hash of [`crate::serve::ShardRouter::shard_for`]), so each dispatcher
+//! owns exactly one lane and locks exactly one shard session — N shards
+//! serve N jobs concurrently, each on `threads_per_shard` pool executors.
+//! Tickets are `(Mutex<Option<Result>>, Condvar)` pairs: the dispatcher
+//! stores the result under the mutex and `notify_all`s, the waiter loops
+//! on the condvar — the same park/notify shape as the worker pool.
+//!
+//! **Shutdown protocol** (the pool's documented sequence, adapted):
+//!
+//! 1. [`SubmitQueue::shutdown`] (or drop) sets each lane's `closed` flag
+//!    *under that lane's mutex* and notifies both condvars — a submitter
+//!    or dispatcher is either already waiting (woken, re-checks, sees the
+//!    flag) or between its check and `wait` (the flag write is ordered
+//!    before its re-check by the mutex): no lost wakeup.
+//! 2. Submitters that observe `closed` fail with a typed
+//!    [`Error::Runtime`] *without* enqueuing; no ticket is created.
+//! 3. Each dispatcher **drains its lane before exiting** — it only
+//!    returns when its FIFO is empty *and* closed — so every ticket
+//!    handed out before shutdown completes with a real result (the
+//!    graceful-drain contract pinned by `tests/serve.rs`).
+//! 4. Every dispatcher `JoinHandle` is joined; after `shutdown` returns,
+//!    no serving thread survives.
+
+use crate::error::{Error, Result};
+use crate::ht::two_stage::HtDecomposition;
+use crate::linalg::matrix::Matrix;
+use crate::serve::router::{check_square_pencil, ShardRouter};
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// One queued job: the pencil plus the ticket to fill.
+struct Job {
+    a: Matrix,
+    b: Matrix,
+    ticket: Arc<TicketShared>,
+}
+
+/// Completion slot shared by a dispatcher and one waiter.
+struct TicketShared {
+    slot: Mutex<Option<Result<Arc<HtDecomposition>>>>,
+    cv: Condvar,
+}
+
+/// Handle to one submitted job; redeem with [`JobTicket::wait`].
+pub struct JobTicket {
+    shared: Arc<TicketShared>,
+}
+
+impl JobTicket {
+    /// Block until the job completes and take its result. Every accepted
+    /// submission completes — including across shutdown, which drains the
+    /// lanes before the dispatchers exit — so `wait` cannot hang on a
+    /// ticket that `submit` actually returned.
+    pub fn wait(self) -> Result<Arc<HtDecomposition>> {
+        let mut slot = self.shared.slot.lock().unwrap();
+        loop {
+            if let Some(result) = slot.take() {
+                return result;
+            }
+            slot = self.shared.cv.wait(slot).unwrap();
+        }
+    }
+
+    /// Non-blocking probe: whether the result is ready (a `wait` after
+    /// `true` returns immediately).
+    pub fn is_ready(&self) -> bool {
+        self.shared.slot.lock().unwrap().is_some()
+    }
+}
+
+/// One bounded lane (per shard).
+struct Lane {
+    state: Mutex<LaneState>,
+    /// Wakes the lane's dispatcher when a job arrives (or on shutdown).
+    not_empty: Condvar,
+    /// Wakes blocked submitters when the dispatcher pops (or on shutdown).
+    not_full: Condvar,
+}
+
+struct LaneState {
+    jobs: VecDeque<Job>,
+    closed: bool,
+}
+
+impl Lane {
+    fn new() -> Lane {
+        Lane {
+            state: Mutex::new(LaneState { jobs: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+        }
+    }
+}
+
+/// State shared by the queue owner, every [`SubmitHandle`] clone, and the
+/// dispatcher threads.
+struct QueueShared {
+    router: ShardRouter,
+    lanes: Vec<Lane>,
+    capacity: usize,
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    rejected: AtomicU64,
+}
+
+/// Queue-level counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct QueueStats {
+    /// Jobs accepted into a lane.
+    pub submitted: u64,
+    /// Jobs whose ticket has been filled (success or typed error).
+    pub completed: u64,
+    /// Submissions refused because the queue was shut down.
+    pub rejected: u64,
+    /// Jobs currently waiting in the lanes.
+    pub pending: usize,
+}
+
+/// Cloneable submission endpoint (see the [module docs](self)).
+///
+/// Handles stay valid after [`SubmitQueue::shutdown`]; their `submit`
+/// calls then fail fast with a typed [`Error::Runtime`].
+#[derive(Clone)]
+pub struct SubmitHandle {
+    shared: Arc<QueueShared>,
+}
+
+impl SubmitHandle {
+    /// Enqueue one pencil for reduction. Blocks while the target shard's
+    /// lane is full (backpressure); fails fast with [`Error::Shape`] on a
+    /// non-square pencil or [`Error::Runtime`] after shutdown.
+    pub fn submit(&self, a: Matrix, b: Matrix) -> Result<JobTicket> {
+        check_square_pencil(&a, &b)?;
+        let shard = self.shared.router.shard_for(a.rows());
+        let lane = &self.shared.lanes[shard];
+        let ticket = Arc::new(TicketShared { slot: Mutex::new(None), cv: Condvar::new() });
+        {
+            let mut st = lane.state.lock().unwrap();
+            loop {
+                if st.closed {
+                    self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+                    return Err(Error::runtime(
+                        "serve: submission queue is shut down; no new jobs accepted",
+                    ));
+                }
+                if st.jobs.len() < self.shared.capacity {
+                    break;
+                }
+                st = lane.not_full.wait(st).unwrap();
+            }
+            st.jobs.push_back(Job { a, b, ticket: ticket.clone() });
+        }
+        lane.not_empty.notify_one();
+        self.shared.submitted.fetch_add(1, Ordering::Relaxed);
+        Ok(JobTicket { shared: ticket })
+    }
+
+    /// Queue-level counter snapshot.
+    pub fn stats(&self) -> QueueStats {
+        stats_of(&self.shared)
+    }
+}
+
+fn stats_of(shared: &QueueShared) -> QueueStats {
+    QueueStats {
+        submitted: shared.submitted.load(Ordering::Relaxed),
+        completed: shared.completed.load(Ordering::Relaxed),
+        rejected: shared.rejected.load(Ordering::Relaxed),
+        pending: shared.lanes.iter().map(|l| l.state.lock().unwrap().jobs.len()).sum(),
+    }
+}
+
+/// Body of one per-shard dispatcher: pop a job from the lane (or park),
+/// reduce it on this shard via the router (cache consulted first), fill
+/// the ticket; exit only when the lane is drained *and* closed.
+fn dispatcher_loop(shared: Arc<QueueShared>, shard: usize) {
+    loop {
+        let job = {
+            let lane = &shared.lanes[shard];
+            let mut st = lane.state.lock().unwrap();
+            loop {
+                if let Some(job) = st.jobs.pop_front() {
+                    // Wake one blocked submitter into the freed slot.
+                    lane.not_full.notify_one();
+                    break Some(job);
+                }
+                if st.closed {
+                    break None;
+                }
+                st = lane.not_empty.wait(st).unwrap();
+            }
+        };
+        let Some(job) = job else {
+            return; // drained and closed: graceful exit
+        };
+        // A panicking reduction must not kill the dispatcher (its lane
+        // would silently hang every later waiter): trap it into the
+        // ticket as a typed error and keep serving.
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            shared.router.reduce_on(shard, &job.a, &job.b)
+        }))
+        .unwrap_or_else(|_| Err(Error::runtime("serve: reduction panicked; job dropped")));
+        shared.completed.fetch_add(1, Ordering::Relaxed);
+        *job.ticket.slot.lock().unwrap() = Some(result);
+        job.ticket.cv.notify_all();
+    }
+}
+
+/// The owning half of the serving queue: holds the router, the lanes and
+/// the dispatcher threads. Create with [`SubmitQueue::new`], hand out
+/// [`SubmitHandle`]s via [`SubmitQueue::handle`], stop with
+/// [`SubmitQueue::shutdown`] (drop runs the same protocol).
+pub struct SubmitQueue {
+    shared: Arc<QueueShared>,
+    dispatchers: Vec<JoinHandle<()>>,
+}
+
+impl std::fmt::Debug for SubmitQueue {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SubmitQueue")
+            .field("shards", &self.shared.lanes.len())
+            .field("capacity", &self.shared.capacity)
+            .field("stats", &stats_of(&self.shared))
+            .finish_non_exhaustive()
+    }
+}
+
+impl SubmitQueue {
+    /// Spawn the serving tier around a router: one lane + one named
+    /// dispatcher thread (`paraht-serve-<shard>`) per shard, each lane
+    /// bounded at the router's configured `queue_capacity`.
+    pub fn new(router: ShardRouter) -> SubmitQueue {
+        let capacity = router.config().queue_capacity;
+        let shards = router.shard_count();
+        let shared = Arc::new(QueueShared {
+            router,
+            lanes: (0..shards).map(|_| Lane::new()).collect(),
+            capacity,
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+        });
+        let dispatchers = (0..shards)
+            .map(|shard| {
+                let sh = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("paraht-serve-{shard}"))
+                    .spawn(move || dispatcher_loop(sh, shard))
+                    .expect("spawn serve dispatcher")
+            })
+            .collect();
+        SubmitQueue { shared, dispatchers }
+    }
+
+    /// A new submission endpoint (cheap to clone, one per client thread).
+    pub fn handle(&self) -> SubmitHandle {
+        SubmitHandle { shared: self.shared.clone() }
+    }
+
+    /// The router behind the queue (for stats and direct synchronous use).
+    pub fn router(&self) -> &ShardRouter {
+        &self.shared.router
+    }
+
+    /// Queue-level counter snapshot.
+    pub fn stats(&self) -> QueueStats {
+        stats_of(&self.shared)
+    }
+
+    /// Graceful shutdown (the documented protocol): close every lane,
+    /// wake everyone, join every dispatcher. Already-accepted jobs are
+    /// drained and their tickets filled; concurrent and later submissions
+    /// fail with a typed error. Consuming `self` makes "no further
+    /// owner-side use" a compile-time fact; outstanding [`SubmitHandle`]s
+    /// remain safe to call.
+    pub fn shutdown(self) {
+        drop(self);
+    }
+
+    fn close_and_join(&mut self) {
+        for lane in &self.shared.lanes {
+            lane.state.lock().unwrap().closed = true;
+            lane.not_empty.notify_all();
+            lane.not_full.notify_all();
+        }
+        for h in self.dispatchers.drain(..) {
+            // Dispatchers trap job panics, so join failure is unreachable;
+            // don't double-panic during drop if it somehow happens.
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for SubmitQueue {
+    fn drop(&mut self) {
+        self.close_and_join();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::reduce_seq;
+    use crate::config::Config;
+    use crate::pencil::random::random_pencil;
+    use crate::serve::router::ServeConfig;
+    use crate::util::proptest::max_abs_diff;
+    use crate::util::rng::Rng;
+
+    fn small_queue(shards: usize, capacity: usize) -> SubmitQueue {
+        let cfg = ServeConfig {
+            shards,
+            queue_capacity: capacity,
+            base: Config { r: 4, p: 2, q: 2, ..Config::default() },
+            ..ServeConfig::default()
+        };
+        SubmitQueue::new(ShardRouter::new(cfg).unwrap())
+    }
+
+    #[test]
+    fn submit_wait_roundtrip_is_bitwise_the_oracle() {
+        let mut rng = Rng::new(0x0E_01);
+        let q = small_queue(2, 8);
+        let h = q.handle();
+        let p = random_pencil(14, &mut rng);
+        let ticket = h.submit(p.a.clone(), p.b.clone()).unwrap();
+        let d = ticket.wait().unwrap();
+        let eff = q.router().config().base.clipped_for(14);
+        let oracle = reduce_seq(&p.a, &p.b, &eff).unwrap();
+        assert_eq!(max_abs_diff(&d.h, &oracle.h), 0.0);
+        assert_eq!(max_abs_diff(&d.z, &oracle.z), 0.0);
+        let stats = q.stats();
+        assert_eq!((stats.submitted, stats.completed, stats.rejected), (1, 1, 0));
+        q.shutdown();
+    }
+
+    #[test]
+    fn shape_error_fails_fast_without_a_ticket() {
+        let q = small_queue(1, 4);
+        let h = q.handle();
+        let e = h.submit(Matrix::zeros(3, 4), Matrix::zeros(3, 3)).unwrap_err();
+        assert!(matches!(e, Error::Shape(_)));
+        assert_eq!(q.stats().submitted, 0);
+    }
+
+    #[test]
+    fn submit_after_shutdown_is_a_typed_error() {
+        let q = small_queue(2, 4);
+        let h = q.handle();
+        q.shutdown();
+        let mut rng = Rng::new(0x0E_02);
+        let p = random_pencil(8, &mut rng);
+        let e = h.submit(p.a, p.b).unwrap_err();
+        assert!(matches!(e, Error::Runtime(_)), "{e}");
+        assert_eq!(h.stats().rejected, 1);
+    }
+
+    #[test]
+    fn tickets_accepted_before_shutdown_complete() {
+        let mut rng = Rng::new(0x0E_03);
+        let q = small_queue(1, 32);
+        let h = q.handle();
+        let pencils: Vec<_> = (0..6).map(|_| random_pencil(10, &mut rng)).collect();
+        let tickets: Vec<_> = pencils
+            .iter()
+            .map(|p| h.submit(p.a.clone(), p.b.clone()).unwrap())
+            .collect();
+        q.shutdown(); // drains the lane before the dispatcher exits
+        for (p, t) in pencils.iter().zip(tickets) {
+            let d = t.wait().expect("accepted job completes across shutdown");
+            let eff = Config { r: 4, p: 2, q: 2, ..Config::default() };
+            let oracle = reduce_seq(&p.a, &p.b, &eff).unwrap();
+            assert_eq!(max_abs_diff(&d.h, &oracle.h), 0.0);
+        }
+    }
+
+    #[test]
+    fn is_ready_becomes_true_after_wait_would_succeed() {
+        let mut rng = Rng::new(0x0E_04);
+        let q = small_queue(1, 4);
+        let h = q.handle();
+        let p = random_pencil(8, &mut rng);
+        let ticket = h.submit(p.a, p.b).unwrap();
+        // Shutdown drains the lane, so afterwards the ticket must be ready.
+        q.shutdown();
+        assert!(ticket.is_ready());
+        ticket.wait().unwrap();
+    }
+}

@@ -1,0 +1,396 @@
+//! The shard router: N long-lived [`HtSession`]s behind one front door.
+//!
+//! [`HtSession`] caches one per-`n` workspace at a time (panel plans,
+//! sweep groups, reflector arenas); a mixed-size request stream through a
+//! *single* session would rebuild that workspace on every size change.
+//! The router replicates the session N ways and routes every request by
+//! its **size class** (a hash of `n`), so each shard sees a stable slice
+//! of the size distribution and its cached workspace stays hot. Shards
+//! share the process-global worker pool — `threads_per_shard` (the
+//! paper's `M` in "N sessions × M threads") sets how many pool executors
+//! one shard's reduction uses.
+//!
+//! A shared [`ResultCache`] sits in front of the shards: bitwise-repeat
+//! submissions are answered without touching a session (see
+//! [`crate::serve::cache`] for why that is sound, not merely probable).
+//!
+//! The router is synchronous and `Sync` — each shard is a `Mutex`, so
+//! concurrent callers (e.g. the per-shard dispatcher threads of
+//! [`crate::serve::SubmitQueue`]) proceed in parallel as long as they
+//! target different shards.
+
+use crate::api::HtSession;
+use crate::config::Config;
+use crate::error::{Error, Result};
+use crate::ht::two_stage::HtDecomposition;
+use crate::linalg::matrix::Matrix;
+use crate::serve::cache::{CacheKey, CacheStats, ResultCache};
+use crate::serve::hash::FxHasher64;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// Lock a serving-tier mutex, recovering from poisoning instead of
+/// propagating it. A panic inside one reduction must cost exactly that
+/// job, not the shard: sessions are safe to reuse after an unwind (the
+/// working factors are locals that unwound with the panic, and the
+/// per-`n` arenas are `reset()` at the start of every graph run), and the
+/// cache has no panic point between its accounting updates — so the
+/// poison flag carries no information here, and honoring it would turn
+/// one bad pencil into a permanently dead shard (every later
+/// `lock().unwrap()` re-panicking behind the queue's `catch_unwind`).
+fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Serving-layer configuration: shard/queue/cache geometry around a base
+/// reduction [`Config`]. Defaults are modest (2 shards × 1 thread, a
+/// 64-entry / 256 MiB cache, 256-deep queues); [`ServeConfig::from_env`]
+/// applies the `PALLAS_SERVE_*` knobs on top.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Number of router shards (`N` — one `HtSession` plus one dispatcher
+    /// thread each).
+    pub shards: usize,
+    /// Worker-pool executors per shard reduction (`M`; `1` runs the
+    /// sequential oracle per job, which is the right shape for floods of
+    /// small pencils).
+    pub threads_per_shard: usize,
+    /// Per-shard submission-queue depth; submitters block (backpressure)
+    /// when their shard's queue is full.
+    pub queue_capacity: usize,
+    /// Result-cache entry bound (`0` disables caching entirely).
+    pub cache_entries: usize,
+    /// Result-cache byte bound (keys + stored factors).
+    pub cache_bytes: usize,
+    /// Clip the stage-1 band to each pencil's size
+    /// ([`Config::clipped_for`]) instead of rejecting `r >= n` — on by
+    /// default: a serving tier sees arbitrary sizes and should not bounce
+    /// small pencils off the paper tuning.
+    pub clip_band: bool,
+    /// Base reduction tuning for every shard (`threads` is overridden by
+    /// `threads_per_shard`).
+    pub base: Config,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            shards: 2,
+            threads_per_shard: 1,
+            queue_capacity: 256,
+            cache_entries: 64,
+            cache_bytes: 256 << 20,
+            clip_band: true,
+            base: Config::default(),
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Defaults overridden by the `PALLAS_SERVE_*` environment knobs
+    /// (parsed centrally in [`crate::util::env`]).
+    pub fn from_env() -> ServeConfig {
+        let d = ServeConfig::default();
+        ServeConfig {
+            shards: crate::util::env::serve_shards(d.shards),
+            threads_per_shard: crate::util::env::serve_threads(d.threads_per_shard),
+            queue_capacity: crate::util::env::serve_queue_cap(d.queue_capacity),
+            cache_entries: crate::util::env::serve_cache_entries(d.cache_entries),
+            cache_bytes: crate::util::env::serve_cache_bytes(d.cache_bytes),
+            ..d
+        }
+    }
+
+    /// Validate the serving geometry plus the base tuning (the same typed
+    /// [`Error::Config`] surface as the session builder).
+    pub fn validate(&self) -> Result<()> {
+        if self.shards < 1 {
+            return Err(Error::config("serve: shards must be >= 1"));
+        }
+        if self.shards > 1024 {
+            return Err(Error::config(format!(
+                "serve: shards = {} exceeds the shard budget (1024)",
+                self.shards
+            )));
+        }
+        if self.queue_capacity < 1 {
+            return Err(Error::config("serve: queue_capacity must be >= 1"));
+        }
+        let session_cfg = Config { threads: self.threads_per_shard, ..self.base.clone() };
+        session_cfg.validate()
+    }
+}
+
+/// Router-level counters (cache counters live in [`CacheStats`]).
+#[derive(Clone, Debug, Default)]
+pub struct RouterStats {
+    /// Reductions actually executed per shard (cache hits never reach a
+    /// shard and are not counted here).
+    pub reduced_per_shard: Vec<u64>,
+    /// Cache counters, when a cache is configured.
+    pub cache: Option<CacheStats>,
+}
+
+impl RouterStats {
+    /// Total reductions executed across all shards.
+    pub fn reduced_total(&self) -> u64 {
+        self.reduced_per_shard.iter().sum()
+    }
+}
+
+/// N sharded sessions + shared result cache (see the [module docs](self)).
+pub struct ShardRouter {
+    cfg: ServeConfig,
+    shards: Vec<Mutex<HtSession>>,
+    reduced: Vec<AtomicU64>,
+    cache: Option<Mutex<ResultCache>>,
+}
+
+impl std::fmt::Debug for ShardRouter {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ShardRouter")
+            .field("shards", &self.shards.len())
+            .field("threads_per_shard", &self.cfg.threads_per_shard)
+            .field("cache", &self.cache.as_ref().map(|c| lock_recover(c).stats()))
+            .finish_non_exhaustive()
+    }
+}
+
+impl ShardRouter {
+    /// Build the router: validates the config once and constructs one
+    /// session per shard (resolving the shared worker pool when
+    /// `threads_per_shard > 1`, exactly like a hand-built session).
+    pub fn new(cfg: ServeConfig) -> Result<ShardRouter> {
+        cfg.validate()?;
+        let session_cfg = Config { threads: cfg.threads_per_shard, ..cfg.base.clone() };
+        let mut shards = Vec::with_capacity(cfg.shards);
+        for _ in 0..cfg.shards {
+            let session = HtSession::builder()
+                .config(session_cfg.clone())
+                .clip_band(cfg.clip_band)
+                .build()?;
+            shards.push(Mutex::new(session));
+        }
+        let reduced = (0..cfg.shards).map(|_| AtomicU64::new(0)).collect();
+        let cache = if cfg.cache_entries > 0 {
+            Some(Mutex::new(ResultCache::new(cfg.cache_entries, cfg.cache_bytes)))
+        } else {
+            None
+        };
+        Ok(ShardRouter { cfg, shards, reduced, cache })
+    }
+
+    /// The validated serving configuration.
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    /// Number of shards.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Size-class routing: the shard responsible for problem size `n`.
+    /// A hash of `n` (not `n % shards`) so that arithmetic size
+    /// progressions don't all land on one shard; every request for the
+    /// same `n` maps to the same shard, which is what keeps that shard's
+    /// per-`n` workspace warm.
+    pub fn shard_for(&self, n: usize) -> usize {
+        let mut h = FxHasher64::new();
+        h.write_usize(n);
+        (h.finish() % self.shards.len() as u64) as usize
+    }
+
+    /// Reduce one pencil through the serving path: shape check → cache
+    /// lookup → size-class shard → session reduce → cache fill. The
+    /// result is bitwise identical to [`crate::api::reduce_seq`] under the
+    /// same effective config, whether it came from a shard or the cache.
+    pub fn reduce(&self, a: &Matrix, b: &Matrix) -> Result<Arc<HtDecomposition>> {
+        check_square_pencil(a, b)?;
+        self.reduce_on(self.shard_for(a.rows()), a, b)
+    }
+
+    /// Reduce on an explicit shard — the entry the per-shard dispatcher
+    /// threads use (they already routed at submit time). Still consults
+    /// the shared cache first.
+    pub(crate) fn reduce_on(
+        &self,
+        shard: usize,
+        a: &Matrix,
+        b: &Matrix,
+    ) -> Result<Arc<HtDecomposition>> {
+        check_square_pencil(a, b)?;
+        let n = a.rows();
+        let Some(cache) = &self.cache else {
+            return Ok(Arc::new(self.run_on_shard(shard, a, b)?));
+        };
+        // Key with the *effective* (clipped) tuning so the key describes
+        // the reduction that actually runs. `threads` is excluded from the
+        // key (determinism contract), so every shard shares entries. The
+        // hit path is allocation-free (`ResultCache::lookup` compares
+        // stored bits against the borrowed pencil); the owned key is only
+        // built on a miss, for the insert.
+        let eff =
+            if self.cfg.clip_band { self.cfg.base.clipped_for(n) } else { self.cfg.base.clone() };
+        if let Some(hit) = lock_recover(cache).lookup(a, b, &eff) {
+            return Ok(hit);
+        }
+        // The lock is *not* held while reducing: two racing misses on the
+        // same pencil compute bitwise-identical results and the second
+        // insert degrades to an LRU refresh.
+        let d = Arc::new(self.run_on_shard(shard, a, b)?);
+        lock_recover(cache).insert(CacheKey::new(a, b, &eff), d.clone());
+        Ok(d)
+    }
+
+    /// Run the reduction on one shard's session, counting it.
+    fn run_on_shard(&self, shard: usize, a: &Matrix, b: &Matrix) -> Result<HtDecomposition> {
+        self.reduced[shard].fetch_add(1, Ordering::Relaxed);
+        let mut session = lock_recover(&self.shards[shard]);
+        let result = session.reduce(a, b);
+        // A serving shard runs unboundedly many reductions: the session's
+        // per-call phase log must not grow with traffic (the router's own
+        // counters are the serving-tier telemetry).
+        session.clear_phases();
+        result
+    }
+
+    /// Counter snapshot (per-shard executed reductions + cache counters).
+    pub fn stats(&self) -> RouterStats {
+        RouterStats {
+            reduced_per_shard: self.reduced.iter().map(|c| c.load(Ordering::Relaxed)).collect(),
+            cache: self.cache.as_ref().map(|c| lock_recover(c).stats()),
+        }
+    }
+}
+
+/// Typed shape check shared by the router and the submission queue: a
+/// serving request must be a square, consistent pencil.
+pub(crate) fn check_square_pencil(a: &Matrix, b: &Matrix) -> Result<()> {
+    let n = a.rows();
+    if a.cols() != n || b.rows() != n || b.cols() != n {
+        return Err(Error::shape(format!(
+            "serve: pencil must be square and consistent: A {}x{}, B {}x{}",
+            a.rows(),
+            a.cols(),
+            b.rows(),
+            b.cols()
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::reduce_seq;
+    use crate::pencil::random::random_pencil;
+    use crate::util::proptest::max_abs_diff;
+    use crate::util::rng::Rng;
+
+    fn small_serve_cfg() -> ServeConfig {
+        ServeConfig {
+            shards: 3,
+            base: Config { r: 4, p: 2, q: 2, ..Config::default() },
+            ..ServeConfig::default()
+        }
+    }
+
+    #[test]
+    fn rejects_bad_geometry_and_bad_base() {
+        let cfg = ServeConfig { shards: 0, ..ServeConfig::default() };
+        assert!(matches!(ShardRouter::new(cfg).unwrap_err(), Error::Config(_)));
+        let cfg = ServeConfig { queue_capacity: 0, ..ServeConfig::default() };
+        assert!(matches!(ShardRouter::new(cfg).unwrap_err(), Error::Config(_)));
+        let cfg = ServeConfig {
+            base: Config { p: 1, ..Config::default() },
+            ..ServeConfig::default()
+        };
+        assert!(matches!(ShardRouter::new(cfg).unwrap_err(), Error::Config(_)));
+        let cfg = ServeConfig { threads_per_shard: 0, ..ServeConfig::default() };
+        assert!(matches!(ShardRouter::new(cfg).unwrap_err(), Error::Config(_)));
+    }
+
+    #[test]
+    fn routing_is_stable_and_in_range() {
+        let r = ShardRouter::new(small_serve_cfg()).unwrap();
+        for n in [2usize, 6, 10, 23, 40, 64] {
+            let s = r.shard_for(n);
+            assert!(s < r.shard_count());
+            assert_eq!(s, r.shard_for(n), "same n must always route to the same shard");
+        }
+    }
+
+    #[test]
+    fn routed_reduce_is_bitwise_the_oracle() {
+        let mut rng = Rng::new(0x50_01);
+        let r = ShardRouter::new(small_serve_cfg()).unwrap();
+        for &n in &[2usize, 6, 10, 23, 40] {
+            let p = random_pencil(n, &mut rng);
+            let d = r.reduce(&p.a, &p.b).unwrap();
+            let eff = r.config().base.clipped_for(n);
+            let oracle = reduce_seq(&p.a, &p.b, &eff).unwrap();
+            assert_eq!(max_abs_diff(&d.h, &oracle.h), 0.0, "n={n}: H");
+            assert_eq!(max_abs_diff(&d.t, &oracle.t), 0.0, "n={n}: T");
+            assert_eq!(max_abs_diff(&d.q, &oracle.q), 0.0, "n={n}: Q");
+            assert_eq!(max_abs_diff(&d.z, &oracle.z), 0.0, "n={n}: Z");
+        }
+        let stats = r.stats();
+        assert_eq!(stats.reduced_total(), 5);
+    }
+
+    #[test]
+    fn repeat_submission_hits_the_cache() {
+        let mut rng = Rng::new(0x50_02);
+        let p = random_pencil(12, &mut rng);
+        let r = ShardRouter::new(small_serve_cfg()).unwrap();
+        let d1 = r.reduce(&p.a, &p.b).unwrap();
+        let d2 = r.reduce(&p.a, &p.b).unwrap();
+        assert!(Arc::ptr_eq(&d1, &d2), "second submission must be served from the cache");
+        let stats = r.stats();
+        assert_eq!(stats.reduced_total(), 1, "only one reduction actually ran");
+        let cache = stats.cache.expect("cache is on by default");
+        assert_eq!((cache.hits, cache.misses), (1, 1));
+    }
+
+    #[test]
+    fn cache_disabled_reduces_every_time() {
+        let mut rng = Rng::new(0x50_03);
+        let p = random_pencil(10, &mut rng);
+        let cfg = ServeConfig { cache_entries: 0, ..small_serve_cfg() };
+        let r = ShardRouter::new(cfg).unwrap();
+        let d1 = r.reduce(&p.a, &p.b).unwrap();
+        let d2 = r.reduce(&p.a, &p.b).unwrap();
+        assert_eq!(max_abs_diff(&d1.h, &d2.h), 0.0, "recomputation is still bitwise");
+        assert_eq!(r.stats().reduced_total(), 2);
+        assert!(r.stats().cache.is_none());
+    }
+
+    #[test]
+    fn poisoned_shard_lock_recovers_and_keeps_serving() {
+        let mut rng = Rng::new(0x50_04);
+        let p = random_pencil(10, &mut rng);
+        let r = ShardRouter::new(small_serve_cfg()).unwrap();
+        let shard = r.shard_for(10);
+        // Poison the shard mutex the way a panicking reduction would.
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _guard = r.shards[shard].lock().unwrap();
+            panic!("simulated job panic while holding the shard lock");
+        }));
+        assert!(r.shards[shard].is_poisoned());
+        // One bad job must cost that job only — the shard keeps serving,
+        // and correctly.
+        let d = r.reduce(&p.a, &p.b).unwrap();
+        let oracle = reduce_seq(&p.a, &p.b, &r.config().base.clipped_for(10)).unwrap();
+        assert_eq!(max_abs_diff(&d.h, &oracle.h), 0.0, "post-poison result is still bitwise");
+    }
+
+    #[test]
+    fn shape_errors_are_typed_and_early() {
+        let r = ShardRouter::new(small_serve_cfg()).unwrap();
+        let a = Matrix::zeros(4, 5);
+        let b = Matrix::zeros(4, 4);
+        assert!(matches!(r.reduce(&a, &b).unwrap_err(), Error::Shape(_)));
+        assert_eq!(r.stats().reduced_total(), 0, "nothing ran");
+    }
+}

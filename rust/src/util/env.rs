@@ -22,6 +22,13 @@
 //! | `PALLAS_BATCH_N`         | pencil size for the batch-throughput bench |
 //! | `PALLAS_BATCH_SIZES`     | comma-separated batch sizes for the batch-throughput bench |
 //! | `PALLAS_BENCH_OUT`       | output-path override for the `BENCH_*.json` artifacts |
+//! | `PALLAS_SERVE_SHARDS`    | shard count for the serving router ([`crate::serve::ServeConfig`]) |
+//! | `PALLAS_SERVE_THREADS`   | worker-pool executors per shard reduction |
+//! | `PALLAS_SERVE_QUEUE_CAP` | per-shard submission-queue depth (backpressure bound) |
+//! | `PALLAS_SERVE_CACHE_CAP` | result-cache entry bound (`0` disables caching) |
+//! | `PALLAS_SERVE_CACHE_BYTES` | result-cache byte bound (keys + stored factors) |
+//! | `PALLAS_SERVE_JOBS`      | flood size for the serve bench / `serve-bench` CLI mode |
+//! | `PALLAS_SERVE_SIZES`     | comma-separated pencil sizes for the serve flood mix |
 
 use crate::config::MAX_THREADS;
 
@@ -125,6 +132,48 @@ fn sizes_or(v: Option<String>, default: &[usize]) -> Vec<usize> {
     v.map(|s| parse_usize_list(&s))
         .filter(|l| !l.is_empty())
         .unwrap_or_else(|| default.to_vec())
+}
+
+/// Shard count for the serving router (`PALLAS_SERVE_SHARDS`), clamped
+/// into `[1, 1024]` (the router's shard budget).
+pub fn serve_shards(default: usize) -> usize {
+    var("SERVE_SHARDS").and_then(|s| parse_usize(&s)).map(|v| v.clamp(1, 1024)).unwrap_or(default)
+}
+
+/// Worker-pool executors per shard reduction (`PALLAS_SERVE_THREADS`),
+/// clamped into `[1, MAX_THREADS]`.
+pub fn serve_threads(default: usize) -> usize {
+    var("SERVE_THREADS")
+        .and_then(|s| parse_usize(&s))
+        .map(|v| v.clamp(1, MAX_THREADS))
+        .unwrap_or(default)
+}
+
+/// Per-shard submission-queue depth (`PALLAS_SERVE_QUEUE_CAP`), floor 1.
+pub fn serve_queue_cap(default: usize) -> usize {
+    var("SERVE_QUEUE_CAP").and_then(|s| parse_usize(&s)).map(|v| v.max(1)).unwrap_or(default)
+}
+
+/// Result-cache entry bound (`PALLAS_SERVE_CACHE_CAP`; `0` disables the
+/// cache entirely).
+pub fn serve_cache_entries(default: usize) -> usize {
+    var("SERVE_CACHE_CAP").and_then(|s| parse_usize(&s)).unwrap_or(default)
+}
+
+/// Result-cache byte bound (`PALLAS_SERVE_CACHE_BYTES`).
+pub fn serve_cache_bytes(default: usize) -> usize {
+    var("SERVE_CACHE_BYTES").and_then(|s| parse_usize(&s)).unwrap_or(default)
+}
+
+/// Flood size for the serve bench / CLI mode (`PALLAS_SERVE_JOBS`).
+pub fn serve_jobs(default: usize) -> usize {
+    var("SERVE_JOBS").and_then(|s| parse_usize(&s)).unwrap_or(default)
+}
+
+/// Pencil-size mix for the serve flood (`PALLAS_SERVE_SIZES`); an unset
+/// or fully malformed list falls back to the default.
+pub fn serve_sizes(default: &[usize]) -> Vec<usize> {
+    sizes_or(var("SERVE_SIZES"), default)
 }
 
 #[cfg(test)]

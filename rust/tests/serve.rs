@@ -1,0 +1,352 @@
+//! Serving-layer integration tests: every result that comes out of the
+//! shard router, the async submission queue, or the result cache must be
+//! bitwise identical to the sequential oracle (`api::reduce_seq`) under
+//! the effective (band-clipped) config — across mixed-size floods, cache
+//! eviction pressure, concurrent submitters, and shutdown mid-flood.
+
+use paraht::api::reduce_seq;
+use paraht::config::Config;
+use paraht::error::Error;
+use paraht::ht::two_stage::HtDecomposition;
+use paraht::pencil::random::random_pencil;
+use paraht::pencil::Pencil;
+use paraht::serve::{pencil_fingerprint, ServeConfig, ShardRouter, SubmitQueue};
+use paraht::util::proptest::for_each_case;
+use paraht::util::rng::Rng;
+use std::time::Duration;
+
+fn assert_bitwise(d: &HtDecomposition, oracle: &HtDecomposition, label: &str) {
+    use paraht::util::proptest::max_abs_diff;
+    assert_eq!(max_abs_diff(&d.h, &oracle.h), 0.0, "{label}: H");
+    assert_eq!(max_abs_diff(&d.t, &oracle.t), 0.0, "{label}: T");
+    assert_eq!(max_abs_diff(&d.q, &oracle.q), 0.0, "{label}: Q");
+    assert_eq!(max_abs_diff(&d.z, &oracle.z), 0.0, "{label}: Z");
+}
+
+/// Oracle for the serving path: the sequential reduction under the
+/// band-clipped config (the routers in these tests keep the default
+/// `clip_band = true`).
+fn serve_oracle(p: &Pencil, base: &Config) -> HtDecomposition {
+    reduce_seq(&p.a, &p.b, &base.clipped_for(p.n())).unwrap()
+}
+
+/// A paper-tuned (r = 16) serving config over `shards` shards — mixed
+/// sizes below the band exercise the clipping path.
+fn paper_serve(shards: usize) -> ServeConfig {
+    ServeConfig { shards, ..ServeConfig::default() }
+}
+
+/// A small-pencil serving config (r = 4) for the flood tests.
+fn small_serve(shards: usize, queue_capacity: usize) -> ServeConfig {
+    ServeConfig {
+        shards,
+        queue_capacity,
+        base: Config { r: 4, p: 2, q: 2, ..Config::default() },
+        ..ServeConfig::default()
+    }
+}
+
+/// Router path, paper tuning, mixed sizes including `n` below the band
+/// and a tiny no-op pencil: every routed result is bitwise the oracle.
+#[test]
+fn router_mixed_size_flood_is_bitwise_oracle() {
+    let mut rng = Rng::new(0x5EA1);
+    let sizes = [2usize, 6, 10, 17, 23, 40, 10, 6, 23];
+    let pencils: Vec<Pencil> = sizes.iter().map(|&n| random_pencil(n, &mut rng)).collect();
+    let router = ShardRouter::new(paper_serve(3)).unwrap();
+    for (i, p) in pencils.iter().enumerate() {
+        let d = router.reduce(&p.a, &p.b).unwrap();
+        let oracle = serve_oracle(p, &router.config().base);
+        assert_bitwise(&d, &oracle, &format!("router pencil {i} (n={})", p.n()));
+    }
+    let stats = router.stats();
+    assert_eq!(stats.reduced_total(), pencils.len() as u64, "all distinct: no cache hit");
+    assert_eq!(stats.reduced_per_shard.len(), 3);
+}
+
+/// Queue path under concurrent submitters: three client threads flood a
+/// two-shard queue with mixed sizes; every ticket resolves bitwise.
+#[test]
+fn queue_concurrent_submitters_bitwise_oracle() {
+    let mut rng = Rng::new(0x5EA2);
+    let sizes = [2usize, 6, 12, 20, 33];
+    let pencils: Vec<Pencil> = sizes.iter().map(|&n| random_pencil(n, &mut rng)).collect();
+    let base = small_serve(2, 4).base.clone();
+    let oracles: Vec<HtDecomposition> = pencils.iter().map(|p| serve_oracle(p, &base)).collect();
+
+    let queue = SubmitQueue::new(ShardRouter::new(small_serve(2, 4)).unwrap());
+    let handle = queue.handle();
+    std::thread::scope(|s| {
+        let joins: Vec<_> = (0..3)
+            .map(|t| {
+                let handle = handle.clone();
+                let pencils = &pencils;
+                s.spawn(move || {
+                    let mut results = Vec::new();
+                    for k in 0..pencils.len() {
+                        // Offset start so the submitters interleave.
+                        let i = (k + t) % pencils.len();
+                        let ticket = handle
+                            .submit(pencils[i].a.clone(), pencils[i].b.clone())
+                            .expect("queue accepts while open");
+                        results.push((i, ticket.wait().expect("served reduction succeeds")));
+                    }
+                    results
+                })
+            })
+            .collect();
+        for join in joins {
+            for (i, d) in join.join().expect("submitter thread completes") {
+                assert_bitwise(&d, &oracles[i], &format!("queued pencil {i}"));
+            }
+        }
+    });
+    let qstats = queue.stats();
+    assert_eq!(qstats.submitted, 15);
+    assert_eq!(qstats.completed, 15);
+    assert_eq!(qstats.pending, 0);
+    queue.shutdown();
+}
+
+/// Cache eviction under pressure: a 2-entry cache cycled over 5 distinct
+/// pencils in a hit-friendly pattern must evict repeatedly while every
+/// answer (cached or recomputed) stays bitwise.
+#[test]
+fn cache_eviction_pressure_stays_bitwise() {
+    let mut rng = Rng::new(0x5EA3);
+    let pencils: Vec<Pencil> = (0..5).map(|_| random_pencil(12, &mut rng)).collect();
+    let cfg = ServeConfig { cache_entries: 2, ..small_serve(2, 8) };
+    let router = ShardRouter::new(cfg).unwrap();
+    let oracles: Vec<HtDecomposition> =
+        pencils.iter().map(|p| serve_oracle(p, &router.config().base)).collect();
+    for round in 0..3 {
+        for (i, p) in pencils.iter().enumerate() {
+            // Submit each pencil twice back-to-back: the second is a hit
+            // (just inserted), while cycling 5 keys through 2 slots forces
+            // evictions between rounds.
+            for rep in 0..2 {
+                let d = router.reduce(&p.a, &p.b).unwrap();
+                assert_bitwise(&d, &oracles[i], &format!("round {round} rep {rep} pencil {i}"));
+            }
+        }
+    }
+    let cache = router.stats().cache.expect("cache configured");
+    assert!(cache.evictions > 0, "2-entry cache over 5 keys must evict: {cache:?}");
+    assert!(cache.hits >= 15, "back-to-back repeats hit: {cache:?}");
+    assert!(cache.entries <= 2, "entry bound respected: {cache:?}");
+}
+
+/// Eviction racing concurrent submitters through the queue: correctness
+/// (bitwise parity) must survive a thrashing cache.
+#[test]
+fn cache_eviction_race_through_queue_stays_bitwise() {
+    let mut rng = Rng::new(0x5EA4);
+    // One size: every pencil lands on one lane; a second size exercises
+    // the other shard concurrently.
+    let pencils: Vec<Pencil> = (0..4)
+        .map(|i| random_pencil(if i % 2 == 0 { 10 } else { 14 }, &mut rng))
+        .collect();
+    let cfg = ServeConfig { cache_entries: 2, ..small_serve(2, 4) };
+    let queue = SubmitQueue::new(ShardRouter::new(cfg).unwrap());
+    let base = queue.router().config().base.clone();
+    let oracles: Vec<HtDecomposition> =
+        pencils.iter().map(|p| serve_oracle(p, &base)).collect();
+    std::thread::scope(|s| {
+        let joins: Vec<_> = (0..3)
+            .map(|_| {
+                let handle = queue.handle();
+                let pencils = &pencils;
+                s.spawn(move || {
+                    let mut out = Vec::new();
+                    for _round in 0..4 {
+                        for (i, p) in pencils.iter().enumerate() {
+                            let t = handle.submit(p.a.clone(), p.b.clone()).unwrap();
+                            out.push((i, t.wait().unwrap()));
+                        }
+                    }
+                    out
+                })
+            })
+            .collect();
+        for join in joins {
+            for (i, d) in join.join().unwrap() {
+                assert_bitwise(&d, &oracles[i], &format!("raced pencil {i}"));
+            }
+        }
+    });
+    let cache = queue.router().stats().cache.expect("cache configured");
+    assert!(cache.hits + cache.misses == 48, "every submission consulted the cache: {cache:?}");
+    queue.shutdown();
+}
+
+/// Shutdown mid-flood: submitters race a shutdown. Every *accepted*
+/// ticket must complete with a bitwise-correct result (graceful drain);
+/// every refused submission must be the typed shutdown error.
+#[test]
+fn shutdown_mid_flood_completes_every_accepted_ticket() {
+    let mut rng = Rng::new(0x5EA5);
+    let pencils: Vec<Pencil> =
+        [6usize, 10, 14, 6, 10].iter().map(|&n| random_pencil(n, &mut rng)).collect();
+    let base = small_serve(2, 2).base.clone();
+    let oracles: Vec<HtDecomposition> = pencils.iter().map(|p| serve_oracle(p, &base)).collect();
+
+    // Repeat to vary the race window (the ignored stress hammer below
+    // runs many more iterations with randomized geometry).
+    for round in 0..4 {
+        let queue = SubmitQueue::new(ShardRouter::new(small_serve(2, 2)).unwrap());
+        let handle = queue.handle();
+        std::thread::scope(|s| {
+            let joins: Vec<_> = (0..3)
+                .map(|_| {
+                    let handle = handle.clone();
+                    let pencils = &pencils;
+                    s.spawn(move || {
+                        let mut accepted = Vec::new();
+                        let mut rejected = 0usize;
+                        for _rep in 0..6 {
+                            for (i, p) in pencils.iter().enumerate() {
+                                match handle.submit(p.a.clone(), p.b.clone()) {
+                                    Ok(t) => accepted.push((i, t)),
+                                    Err(e) => {
+                                        assert!(
+                                            matches!(e, Error::Runtime(_)),
+                                            "only the typed shutdown error is allowed: {e}"
+                                        );
+                                        rejected += 1;
+                                    }
+                                }
+                            }
+                        }
+                        (accepted, rejected)
+                    })
+                })
+                .collect();
+            // Let some submissions land, then pull the plug mid-flood.
+            std::thread::sleep(Duration::from_millis(2 + round as u64));
+            queue.shutdown();
+            for join in joins {
+                let (accepted, _rejected) = join.join().expect("submitter survives shutdown");
+                for (i, ticket) in accepted {
+                    let d = ticket.wait().expect("accepted ticket completes across shutdown");
+                    assert_bitwise(&d, &oracles[i], &format!("round {round} pencil {i}"));
+                }
+            }
+        });
+    }
+}
+
+/// Property: the pencil fingerprint is invariant under cloning and
+/// sensitive to any single-element bitflip (the bijectivity argument in
+/// `serve::hash` — a single changed word always changes the hash).
+#[test]
+fn hash_clone_invariant_and_bitflip_sensitive() {
+    for_each_case(24, 0x5EA6, |rng| {
+        let n = 2 + rng.below(18);
+        let p = random_pencil(n, rng);
+        let cfg = Config { r: 4, p: 2, q: 2, ..Config::default() };
+        let h0 = pencil_fingerprint(&p.a, &p.b, &cfg);
+        if h0 != pencil_fingerprint(&p.a.clone(), &p.b.clone(), &cfg) {
+            return Err("clone changed the fingerprint".into());
+        }
+        // Flip one random bit of one random element of A or B.
+        let in_a = rng.below(2) == 0;
+        let i = rng.below(n);
+        let j = rng.below(n);
+        let bit = rng.below(64) as u32;
+        let flip = |m: &paraht::Matrix| {
+            let mut m = m.clone();
+            m[(i, j)] = f64::from_bits(m[(i, j)].to_bits() ^ (1u64 << bit));
+            m
+        };
+        let h1 = if in_a {
+            pencil_fingerprint(&flip(&p.a), &p.b, &cfg)
+        } else {
+            pencil_fingerprint(&p.a, &flip(&p.b), &cfg)
+        };
+        if h1 == h0 {
+            return Err(format!(
+                "bitflip (in_a={in_a}, i={i}, j={j}, bit={bit}) did not change the fingerprint"
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Queue stress hammer: randomized geometry, concurrent submitters,
+/// shutdown at random points mid-flood. Every accepted ticket must
+/// complete bitwise-correct; refused submissions must carry the typed
+/// shutdown error; shutdown must never hang (a hang here is a queue
+/// drain/wakeup race).
+///
+/// Ignored by default; the CI pool-stress job's `pool_stress` name filter
+/// runs it alongside the worker-pool hammer. Locally:
+/// `cargo test --release pool_stress -- --ignored`.
+#[test]
+#[ignore = "stress hammer; run explicitly or via the CI pool-stress job"]
+fn pool_stress_serve_queue() {
+    let iters = paraht::util::env::stress_iters(30);
+    let mut rng = Rng::new(0x5EA7);
+    let sizes = [2usize, 6, 10, 16];
+    // Shared pencil/oracle pool across iterations (small, cheap).
+    let base = Config { r: 4, p: 2, q: 2, ..Config::default() };
+    let pencils: Vec<Pencil> = sizes.iter().map(|&n| random_pencil(n, &mut rng)).collect();
+    let oracles: Vec<HtDecomposition> =
+        pencils.iter().map(|p| serve_oracle(p, &base)).collect();
+
+    for iter in 0..iters {
+        let cfg = ServeConfig {
+            shards: 1 + rng.below(4),
+            queue_capacity: 1 + rng.below(6),
+            cache_entries: [0usize, 2, 64][rng.below(3)],
+            base: base.clone(),
+            ..ServeConfig::default()
+        };
+        let queue = SubmitQueue::new(ShardRouter::new(cfg).unwrap());
+        let handle = queue.handle();
+        let reps = 1 + rng.below(5);
+        let shutdown_early = iter % 2 == 0;
+        let delay_us = rng.below(500) as u64;
+        std::thread::scope(|s| {
+            let joins: Vec<_> = (0..3)
+                .map(|_| {
+                    let handle = handle.clone();
+                    let pencils = &pencils;
+                    s.spawn(move || {
+                        let mut accepted = Vec::new();
+                        for _ in 0..reps {
+                            for (i, p) in pencils.iter().enumerate() {
+                                match handle.submit(p.a.clone(), p.b.clone()) {
+                                    Ok(t) => accepted.push((i, t)),
+                                    Err(e) => {
+                                        assert!(matches!(e, Error::Runtime(_)), "{e}")
+                                    }
+                                }
+                            }
+                        }
+                        accepted
+                    })
+                })
+                .collect();
+            if shutdown_early {
+                std::thread::sleep(Duration::from_micros(delay_us));
+                queue.shutdown(); // mid-flood: drain + join must not hang
+            } else {
+                // Drain by waiting first, then shut down idle.
+                for join in joins {
+                    for (i, t) in join.join().unwrap() {
+                        let d = t.wait().expect("ticket completes");
+                        assert_bitwise(&d, &oracles[i], &format!("iter {iter} pencil {i}"));
+                    }
+                }
+                queue.shutdown();
+                return;
+            }
+            for join in joins {
+                for (i, t) in join.join().unwrap() {
+                    let d = t.wait().expect("accepted ticket completes across shutdown");
+                    assert_bitwise(&d, &oracles[i], &format!("iter {iter} pencil {i}"));
+                }
+            }
+        });
+    }
+}
