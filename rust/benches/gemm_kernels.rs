@@ -10,6 +10,12 @@
 //! (fresh threads per call, identical panel split) on every benched shape —
 //! the pool must never lose.
 //!
+//! Since the work-assisting scheduler landed (`coordinator::assist`), a
+//! second sweep pits the static one-panel-per-executor split against the
+//! dynamic claim-counter drain on the same shapes (`static_vs_assist_4t`
+//! in the JSON); assisting must be no slower than static at 4 threads on
+//! the largest square shape (soft mode / `PALLAS_BENCH_TOL` apply).
+//!
 //! Env knobs (canonical `PALLAS_` names; legacy `PARAHT_` aliases accepted
 //! — see `util::env`):
 //! * `PALLAS_GEMM_SIZES=128,256,512` — square sizes to sweep (default).
@@ -20,9 +26,10 @@
 //!   parallel-speedup floor and the pooled-vs-scoped comparison (see
 //!   `experiments::common`).
 
+use paraht::coordinator::assist::Schedule;
 use paraht::coordinator::slices::partition;
 use paraht::experiments::common;
-use paraht::linalg::gemm::{gemm, gemm_par, Trans};
+use paraht::linalg::gemm::{gemm, gemm_par, gemm_par_sched, Trans};
 use paraht::linalg::matrix::Matrix;
 use paraht::util::flops;
 use paraht::util::rng::Rng;
@@ -120,6 +127,33 @@ fn time_gemm(
     best
 }
 
+/// Best-of-3 wall-clock of the pooled multiply under an explicit schedule
+/// (static panel split vs work-assisting claim counter), bypassing the
+/// `PALLAS_ASSIST` process default so both arms measure what they claim.
+fn time_gemm_sched(
+    a: &Matrix,
+    ta: Trans,
+    b: &Matrix,
+    tb: Trans,
+    m: usize,
+    n: usize,
+    threads: usize,
+    sched: Schedule,
+) -> f64 {
+    let mut c = Matrix::zeros(m, n);
+    let mut best = f64::INFINITY;
+    for rep in 0..4 {
+        let t = Instant::now();
+        gemm_par_sched(1.0, a.as_ref(), ta, b.as_ref(), tb, 0.0, c.as_mut(), threads, sched);
+        let secs = t.elapsed().as_secs_f64();
+        if rep > 0 {
+            best = best.min(secs);
+        }
+    }
+    assert!(c.norm_fro().is_finite(), "scheduled gemm produced non-finite output");
+    best
+}
+
 /// Best-of-3 wall-clock of the scoped-spawn baseline on the same multiply.
 fn time_scoped(
     a: &Matrix,
@@ -169,6 +203,15 @@ struct VsCase {
     trans: &'static str,
     pooled_secs: f64,
     scoped_secs: f64,
+}
+
+struct SchedCase {
+    m: usize,
+    n: usize,
+    k: usize,
+    trans: &'static str,
+    static_secs: f64,
+    assist_secs: f64,
 }
 
 fn main() {
@@ -252,6 +295,46 @@ fn main() {
     }
     let pooled_ok = vs_fail.is_empty();
 
+    // ---- Static vs work-assisting schedule, same shapes, same team. ----
+    // Dynamic oversplits the column panels (~4× the thread count, floor
+    // 2·NR columns) and lets workers claim them from an atomic counter;
+    // the claim overhead must be paid for by better load balance. The
+    // acceptance bar is on the largest square shape only (small shapes sit
+    // near the sequential-fallback threshold, where a ~µs claim loop is
+    // noise-dominated); all shapes are recorded for the trajectory.
+    let mut assist_cases: Vec<SchedCase> = Vec::new();
+    let mut assist_ok = true;
+    let assist_slack = 1.10 * common::bench_tol();
+    let mut assist_msg = String::new();
+    println!("\nstatic vs work-assisting gemm_par_sched ({VS_THREADS} threads):");
+    for &(m, n, k, ta, tb) in &vs_shapes {
+        let a = if ta == Trans::No {
+            Matrix::randn(m, k, &mut rng)
+        } else {
+            Matrix::randn(k, m, &mut rng)
+        };
+        let b = if tb == Trans::No {
+            Matrix::randn(k, n, &mut rng)
+        } else {
+            Matrix::randn(n, k, &mut rng)
+        };
+        let st = time_gemm_sched(&a, ta, &b, tb, m, n, VS_THREADS, Schedule::Static);
+        let dy = time_gemm_sched(&a, ta, &b, tb, m, n, VS_THREADS, Schedule::Dynamic);
+        let trans = trans_label(ta, tb);
+        let ratio = dy / st;
+        println!(
+            "{m:>5} x {n:<5} k={k:<5} {trans}  static {st:>9.4}s  assist {dy:>9.4}s  ratio {ratio:>5.2}"
+        );
+        if m == big && n == big && k == big && dy > st * assist_slack {
+            assist_ok = false;
+            assist_msg = format!(
+                "assisting gemm slower than static on the largest shape {m}x{n}x{k}: \
+                 {dy:.4}s vs {st:.4}s (ratio {ratio:.2} > {assist_slack:.2})"
+            );
+        }
+        assist_cases.push(SchedCase { m, n, k, trans, static_secs: st, assist_secs: dy });
+    }
+
     // Acceptance floor: ≥ 2× at 4 threads for the n=512-class multiply.
     // Timing-sensitive — soft mode / PALLAS_BENCH_TOL apply (CI runners
     // may have fewer than 4 physical cores). Evaluated here but asserted
@@ -284,6 +367,17 @@ fn main() {
     }
     j.push_str("  ],\n");
     let _ = writeln!(j, "  \"pooled_no_slower_held\": {pooled_ok},");
+    let _ = write!(j, "  \"static_vs_assist_{VS_THREADS}t\": [\n");
+    for (i, c) in assist_cases.iter().enumerate() {
+        let _ = write!(
+            j,
+            "    {{\"m\": {}, \"n\": {}, \"k\": {}, \"trans\": \"{}\", \"static_secs\": {:.6}, \"assist_secs\": {:.6}, \"ratio\": {:.4}}}",
+            c.m, c.n, c.k, c.trans, c.static_secs, c.assist_secs, c.assist_secs / c.static_secs
+        );
+        j.push_str(if i + 1 < assist_cases.len() { ",\n" } else { "\n" });
+    }
+    j.push_str("  ],\n");
+    let _ = writeln!(j, "  \"assist_no_slower_held\": {assist_ok},");
     let _ = write!(j, "  \"par_speedup_n{big}\": {{");
     for (i, &(th, s)) in speedups.iter().enumerate() {
         let _ = write!(j, "{}\"x{th}\": {s:.3}", if i > 0 { ", " } else { "" });
@@ -300,10 +394,16 @@ fn main() {
     for msg in &vs_fail {
         common::bench_check(false, msg);
     }
+    common::bench_check(assist_ok, &assist_msg);
     if ok {
         println!("shape checks OK (gemm_par 4-thread speedup {s4:.2}x >= 2x)");
     }
     if pooled_ok {
         println!("pooled-vs-scoped OK (pool no slower on all {} shapes)", vs_cases.len());
+    }
+    if assist_ok {
+        println!(
+            "static-vs-assist OK (assisting no slower at {VS_THREADS} threads on n={big})"
+        );
     }
 }

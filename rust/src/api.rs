@@ -287,6 +287,17 @@ impl HtSessionBuilder {
         self
     }
 
+    /// Enable work-assisting dynamic panel scheduling
+    /// ([`crate::coordinator::assist`]): executors claim panels from a
+    /// shared atomic counter instead of receiving a static split. Results
+    /// are bitwise identical either way (pinned by `tests/equivalence.rs`);
+    /// only the work assignment changes. Off by default; the
+    /// `PALLAS_ASSIST` env knob flips the process default instead.
+    pub fn dynamic_schedule(mut self, on: bool) -> Self {
+        self.cfg.dynamic_schedule = on;
+        self
+    }
+
     /// Clip the stage-1 bandwidth to `min(r, n - 1)` per pencil instead of
     /// rejecting `r >= n` — the small-pencil throughput mode that lets one
     /// session with the paper tuning serve [`HtSession::reduce_batch`]
@@ -479,7 +490,14 @@ impl HtSession {
         self.ensure_workspace(n, cfg);
         let capture = self.capture;
         let pool = self.pool;
-        let ws = self.ws.as_ref().expect("workspace just ensured");
+        // Take the workspace out of the session for the duration of the
+        // stage runs: the graphs borrow its plans and arenas, and an owned
+        // local keeps those borrows fully disjoint from `self` — no
+        // session borrow is live across the pool submits, so adding
+        // `&mut self` telemetry between the stages can never trip over the
+        // workspace again. Restored below; a panicking stage leaves the
+        // slot `None`, which the next call simply rebuilds.
+        let ws = self.ws.take().expect("workspace just ensured");
         ws.arena1.reset();
         ws.arena2.reset();
 
@@ -518,6 +536,7 @@ impl HtSession {
             }
         };
         let stage2_secs = t2.secs();
+        self.ws = Some(ws);
 
         Ok((HtDecomposition { h, t, q, z, stage1_secs, stage2_secs }, tr1.zip(tr2)))
     }
@@ -568,8 +587,12 @@ impl HtSession {
                 .collect();
             // Trace-capture sessions hold no pool handle (see `build`);
             // batches still run threaded (they are plain data-parallel
-            // jobs), resolving the team lazily here on first use.
-            self.pool.unwrap_or_else(pool::global).run_tasks(tasks, threads);
+            // jobs), resolving the team lazily here on first use. The
+            // session's dynamic-schedule gate applies: under it, workers
+            // claim pencils from the assist counter instead of a static
+            // assignment (bitwise irrelevant — each job is indivisible).
+            let sched = crate::coordinator::assist::Schedule::for_config(&self.cfg);
+            self.pool.unwrap_or_else(pool::global).run_tasks_sched(tasks, threads, sched);
         }
 
         let mut out = Vec::with_capacity(pencils.len());
@@ -710,6 +733,41 @@ mod tests {
         let owned = s.take_traces().expect("accessor hands the trace out once");
         assert_eq!(owned.0.durations.len(), traces.0.durations.len());
         assert!(s.trace().is_none());
+    }
+
+    #[test]
+    fn builder_dynamic_schedule_gate_round_trips() {
+        let s = HtSession::builder().dynamic_schedule(true).build().unwrap();
+        assert!(s.config().dynamic_schedule);
+        let s = HtSession::builder().build().unwrap();
+        assert!(!s.config().dynamic_schedule, "gate defaults off");
+    }
+
+    #[test]
+    fn session_reuse_under_tracing_rebuilds_workspace() {
+        // The reduce_graph borrow restructure (owned workspace local):
+        // a trace-capturing session reused across size changes must
+        // rebuild its workspace and stay bitwise on the oracle on every
+        // call — same-size reuse, rebuild on growth, rebuild on shrink.
+        let mut rng = Rng::new(0xA1_08);
+        let p1 = random_pencil(30, &mut rng);
+        let p2 = random_pencil(41, &mut rng);
+        let cfg = Config { r: 4, p: 2, q: 2, ..Config::default() };
+        let rec = TraceRecorder::new();
+        let mut s = HtSession::builder().config(cfg.clone()).trace(rec.clone()).build().unwrap();
+        for (i, p) in [&p1, &p1, &p2, &p1].iter().enumerate() {
+            let d = s.reduce(&p.a, &p.b).unwrap();
+            assert_same(
+                &d,
+                &reduce_seq(&p.a, &p.b, &cfg).unwrap(),
+                &format!("traced reuse call {i} (n={})", p.n()),
+            );
+        }
+        assert_eq!(rec.len(), 4);
+        assert!(
+            rec.reports().iter().all(|r| r.traces.is_some()),
+            "every traced call must carry task traces"
+        );
     }
 
     #[test]

@@ -21,6 +21,14 @@ pub struct Config {
     pub slices: usize,
     /// Whether stage-2 lookahead tasks are enabled (§3.3). Ablation switch.
     pub lookahead: bool,
+    /// Work-assisting dynamic panel scheduling
+    /// ([`crate::coordinator::assist`]): executors claim panel indices
+    /// from a shared atomic counter at run time instead of receiving a
+    /// static split up front. Changes *who* computes each panel, never the
+    /// panel contents, so results stay bitwise identical to static runs
+    /// (pinned by `tests/equivalence.rs`). Default off; the
+    /// `PALLAS_ASSIST` env knob flips the process-wide default.
+    pub dynamic_schedule: bool,
     /// Offload large WY applications to the PJRT runtime when available.
     pub use_pjrt: bool,
     /// RNG seed for workload generation.
@@ -36,6 +44,7 @@ impl Default for Config {
             threads: 1,
             slices: 0,
             lookahead: true,
+            dynamic_schedule: false,
             use_pjrt: false,
             seed: 0x5EED,
         }
@@ -158,6 +167,14 @@ mod tests {
         let c = Config::default();
         assert_eq!((c.r, c.p, c.q), (16, 8, 8));
         assert!(c.validate().is_ok());
+        assert!(!c.dynamic_schedule, "work assisting must be opt-in");
+    }
+
+    #[test]
+    fn dynamic_schedule_gate_passes_validation_and_survives_clipping() {
+        let c = Config { dynamic_schedule: true, ..Config::default() };
+        assert!(c.validate().is_ok());
+        assert!(c.clipped_for(10).dynamic_schedule, "clipping must not drop the gate");
     }
 
     #[test]

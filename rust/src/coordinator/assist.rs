@@ -1,0 +1,282 @@
+//! Work-assisting panel claiming: the atomic chunk-claiming loop that lets
+//! executors pick up panels *dynamically* instead of receiving a static
+//! assignment up front.
+//!
+//! The paper's stage-1 trailing updates and stage-2 group applies carve a
+//! matrix into panels and hand one contiguous span to each executor. A
+//! static split is optimal only when every panel costs the same; the
+//! triangular slices (`L_B`, the lookahead blocks) and cache effects make
+//! real panel costs uneven, so the last executor to finish sets the pace —
+//! classic tail imbalance. Work assisting replaces the up-front assignment
+//! with a shared [`ClaimCounter`]: each executor repeatedly claims the next
+//! unclaimed panel index with one `fetch_add` until the counter drains.
+//! Fast executors simply claim more panels; nobody waits on a straggler's
+//! leftover assignment.
+//!
+//! **Determinism.** Claiming decides *who* computes a panel, never the
+//! accumulation order inside it. Every panel's contents are a pure function
+//! of the panel bounds, and the bitwise slicing-invariance contract in
+//! [`crate::linalg::gemm`] (each output element accumulates in ascending-k
+//! order into its own scalar accumulator) makes the results independent of
+//! how the output is carved into panels at all. Dynamic runs are therefore
+//! bitwise identical to static runs and to the sequential oracle —
+//! `tests/equivalence.rs` pins this at 1/2/4/7 threads.
+//!
+//! **Scope.** The claim counter schedules *independent* task lists (the
+//! data-parallel entry points: `gemm_par`, `WyRep::apply_par`,
+//! `pool::run_data_parallel`, batch mode). Dependency-carrying task graphs
+//! already get dynamic scheduling from the pool's shared ready FIFO; for
+//! those, the gate instead oversplits the slice goal ([`slice_goal`]) so
+//! the FIFO has finer panels to balance with.
+//!
+//! Gating: off by default. `Config::dynamic_schedule` turns it on per run;
+//! the `PALLAS_ASSIST` env knob ([`crate::util::env::assist`]) flips the
+//! process-wide default for entry points that take no config.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+use crate::config::Config;
+
+/// How a data-parallel task list is assigned to executors.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Schedule {
+    /// Static split: panels are assigned up front (one contiguous span per
+    /// executor) — the historical behavior, and the default.
+    Static,
+    /// Work assisting: executors claim panel indices from a shared
+    /// [`ClaimCounter`] at run time; panels are oversplit ([`oversplit`])
+    /// so there is slack for the fast executors to absorb.
+    Dynamic,
+}
+
+impl Schedule {
+    /// Whether this schedule claims panels dynamically.
+    pub fn is_dynamic(self) -> bool {
+        matches!(self, Schedule::Dynamic)
+    }
+
+    /// The process-wide default schedule: [`Schedule::Dynamic`] when the
+    /// `PALLAS_ASSIST` env knob is set, else [`Schedule::Static`]. Read
+    /// once and cached — the knob is a process-level default, not a
+    /// per-call switch (per-call control is `Config::dynamic_schedule` and
+    /// the explicit `*_sched` entry points).
+    pub fn from_env() -> Schedule {
+        static ASSIST: OnceLock<bool> = OnceLock::new();
+        if *ASSIST.get_or_init(crate::util::env::assist) {
+            Schedule::Dynamic
+        } else {
+            Schedule::Static
+        }
+    }
+
+    /// The schedule a config selects: the explicit gate wins, else the
+    /// process default.
+    pub fn for_config(cfg: &Config) -> Schedule {
+        if cfg.dynamic_schedule {
+            Schedule::Dynamic
+        } else {
+            Schedule::from_env()
+        }
+    }
+}
+
+/// Oversplit factor for dynamic panel splits: aim for this many panels per
+/// executor so the claim loop has slack to balance with. More panels →
+/// finer balancing but more claim/dispatch overhead; 4 is the conventional
+/// sweet spot for chunk-claiming loops over near-uniform work.
+pub const OVERSPLIT: usize = 4;
+
+/// Panel-count goal for a dynamic split with `parts` executors.
+pub fn oversplit(parts: usize) -> usize {
+    parts.saturating_mul(OVERSPLIT).max(1)
+}
+
+/// Slice-count goal for the stage-1/stage-2 graph builders: the config's
+/// effective slice count, oversplit when the dynamic gate is on (the graph
+/// FIFO then has finer panels to balance with). An explicit `slices`
+/// setting is honored as-is — it is a measurement knob, not a hint.
+pub fn slice_goal(cfg: &Config) -> usize {
+    let base = cfg.effective_slices();
+    if cfg.slices == 0 && Schedule::for_config(cfg).is_dynamic() {
+        oversplit(base)
+    } else {
+        base
+    }
+}
+
+/// A shared claim counter over `total` panels: each [`ClaimCounter::claim`]
+/// hands out the next unclaimed index exactly once, across any number of
+/// concurrent executors.
+///
+/// This is the whole scheduler — one `fetch_add` per panel, no locks, no
+/// per-executor state. Indices are claimed in ascending order, which keeps
+/// the common case (executors racing through a panel list) cache-friendly:
+/// adjacent panels go to whoever is free, and a straggler holds up exactly
+/// the panel it is computing, never a span.
+pub struct ClaimCounter {
+    next: AtomicUsize,
+    total: usize,
+}
+
+impl ClaimCounter {
+    /// A counter over panel indices `0..total`.
+    pub fn new(total: usize) -> ClaimCounter {
+        ClaimCounter { next: AtomicUsize::new(0), total }
+    }
+
+    /// Number of panels this counter hands out.
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    /// Claim the next panel index, or `None` once all panels are claimed.
+    /// Relaxed ordering suffices: the counter only allocates indices; the
+    /// batch's `remaining` counter (with acquire/release) is what
+    /// publishes task *effects* to the waiting submitter.
+    pub fn claim(&self) -> Option<usize> {
+        let i = self.next.fetch_add(1, Ordering::Relaxed);
+        if i < self.total {
+            Some(i)
+        } else {
+            None
+        }
+    }
+
+    /// Cancel all unclaimed panels: subsequent [`ClaimCounter::claim`]
+    /// calls return `None`. In-flight panels are unaffected. (`fetch_max`,
+    /// not `store`: a racing `claim` may have pushed `next` past `total`
+    /// already, and winding it back would hand indices out twice.)
+    pub fn cancel(&self) {
+        self.next.fetch_max(self.total, Ordering::Relaxed);
+    }
+
+    /// Whether every panel has been claimed (claimed ≠ completed: panels
+    /// may still be running on other executors).
+    pub fn drained(&self) -> bool {
+        self.next.load(Ordering::Relaxed) >= self.total
+    }
+}
+
+/// The work-assisting loop: claim panels until the counter drains, running
+/// `body` on each claimed index. The batch scheduler inlines a variant of
+/// this (with panic poisoning); this standalone form is for direct use and
+/// for tests.
+pub fn assist_loop(counter: &ClaimCounter, mut body: impl FnMut(usize)) {
+    while let Some(i) = counter.claim() {
+        body(i);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn claims_each_index_exactly_once_single_thread() {
+        let c = ClaimCounter::new(5);
+        let mut got = Vec::new();
+        assist_loop(&c, |i| got.push(i));
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
+        assert!(c.drained());
+        assert_eq!(c.claim(), None, "exhausted counter stays exhausted");
+    }
+
+    #[test]
+    fn zero_panels_is_immediately_exhausted() {
+        let c = ClaimCounter::new(0);
+        assert!(c.drained());
+        assert_eq!(c.claim(), None);
+        let mut ran = false;
+        assist_loop(&c, |_| ran = true);
+        assert!(!ran, "no body call for an empty counter");
+    }
+
+    #[test]
+    fn one_panel_goes_to_exactly_one_claimer() {
+        let c = ClaimCounter::new(1);
+        assert_eq!(c.claim(), Some(0));
+        assert_eq!(c.claim(), None);
+        assert_eq!(c.claim(), None);
+    }
+
+    #[test]
+    fn more_workers_than_panels_exhausts_cleanly() {
+        // 7 workers race over 3 panels: every panel claimed exactly once,
+        // the surplus workers observe exhaustion and do nothing.
+        let c = ClaimCounter::new(3);
+        let hits: Vec<AtomicUsize> = (0..3).map(|_| AtomicUsize::new(0)).collect();
+        std::thread::scope(|s| {
+            for _ in 0..7 {
+                s.spawn(|| {
+                    assist_loop(&c, |i| {
+                        hits[i].fetch_add(1, Ordering::SeqCst);
+                    })
+                });
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+        assert!(c.drained());
+    }
+
+    #[test]
+    fn concurrent_claims_partition_the_index_space() {
+        // Heavier race: claims across threads must partition 0..N with no
+        // duplicate and no gap.
+        const N: usize = 997; // prime, so no thread-count divides it
+        let c = ClaimCounter::new(N);
+        let hits: Vec<AtomicUsize> = (0..N).map(|_| AtomicUsize::new(0)).collect();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    assist_loop(&c, |i| {
+                        hits[i].fetch_add(1, Ordering::SeqCst);
+                    })
+                });
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn cancel_stops_further_claims() {
+        let c = ClaimCounter::new(100);
+        assert_eq!(c.claim(), Some(0));
+        c.cancel();
+        assert_eq!(c.claim(), None);
+        assert!(c.drained());
+        // Cancel is idempotent and never winds the counter back.
+        c.cancel();
+        assert_eq!(c.claim(), None);
+    }
+
+    #[test]
+    fn oversplit_scales_and_never_returns_zero() {
+        assert_eq!(oversplit(0), 1);
+        assert_eq!(oversplit(1), OVERSPLIT);
+        assert_eq!(oversplit(4), 4 * OVERSPLIT);
+        assert_eq!(oversplit(usize::MAX), usize::MAX, "saturates, no overflow");
+    }
+
+    #[test]
+    fn schedule_selection_honors_the_config_gate() {
+        let off = Config::default();
+        assert!(!off.dynamic_schedule, "gate must default off");
+        let on = Config { dynamic_schedule: true, ..Config::default() };
+        assert_eq!(Schedule::for_config(&on), Schedule::Dynamic);
+        assert!(Schedule::Dynamic.is_dynamic());
+        assert!(!Schedule::Static.is_dynamic());
+    }
+
+    #[test]
+    fn slice_goal_oversplits_only_under_the_gate_with_auto_slices() {
+        let base = Config { threads: 4, ..Config::default() };
+        assert_eq!(slice_goal(&base), base.effective_slices());
+        let dynamic = Config { threads: 4, dynamic_schedule: true, ..Config::default() };
+        assert_eq!(slice_goal(&dynamic), oversplit(dynamic.effective_slices()));
+        // Explicit slice counts are a measurement knob: honored verbatim.
+        let pinned = Config { slices: 8, dynamic_schedule: true, ..Config::default() };
+        assert_eq!(slice_goal(&pinned), 8);
+    }
+}

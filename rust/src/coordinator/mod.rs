@@ -9,6 +9,10 @@
 //! * [`sim`] — discrete-event makespan simulator: replays a measured task
 //!   trace on P virtual workers (the substitution for the paper's 28-core
 //!   machine; DESIGN.md §5).
+//! * [`assist`] — work-assisting panel claiming: the atomic claim-counter
+//!   loop behind `Config::dynamic_schedule` (each claimed index = one
+//!   panel; claiming decides *who* computes a panel, never the
+//!   accumulation order inside it).
 //! * [`slices`] — row/column slicing of the apply tasks (Figs. 3, 8).
 //! * [`stage1_par`]/[`stage2_par`] — task-graph builders for both stages.
 //! * [`baseline_par`] — task-graph builders modelling the comparators'
@@ -16,6 +20,7 @@
 //! * [`driver`] — the ParaHT entry point: real threads or simulation.
 
 pub mod access;
+pub mod assist;
 pub mod graph;
 pub mod pool;
 pub mod sim;

@@ -17,6 +17,13 @@
 //!   ready. Load imbalance between slices (e.g. the triangular `L_B`
 //!   slices) is absorbed by the shared queue.
 //!
+//! Dependency-free batches can alternatively run under the work-assisting
+//! drain ([`super::assist`], `Schedule::Dynamic`): executors claim task
+//! indices from a shared atomic counter instead of pulling from the FIFO —
+//! one `fetch_add` per task, no queue traffic. Same caller-participation,
+//! panic and lifetime rules as the FIFO path; the submitter still blocks
+//! until `remaining == 0`.
+//!
 //! **Caller participation.** The thread that submits a batch executes it
 //! too: [`WorkerPool::run_graph`] enqueues the batch for up to
 //! `threads - 1` pool workers ("helpers") and then drains it itself, so a
@@ -57,6 +64,7 @@
 //! 4. Every `JoinHandle` is joined; after `shutdown`/`drop` returns, no
 //!    pool thread survives (asserted by `drop_joins_all_workers`).
 
+use super::assist::{ClaimCounter, Schedule};
 use super::graph::{TaskClass, TaskGraph};
 use std::any::Any;
 use std::collections::VecDeque;
@@ -108,6 +116,11 @@ struct Batch {
     /// Cap on attached pool workers (`threads - 1`; the submitter is the
     /// extra executor).
     max_helpers: usize,
+    /// Work-assisting mode ([`super::assist`]): when set, executors claim
+    /// task indices from this counter instead of pulling from the ready
+    /// FIFO. Only valid for dependency-free batches (`pending`/`succs`
+    /// empty) — the counter has no notion of edges.
+    assist: Option<ClaimCounter>,
 }
 
 /// Abort bomb for scheduler-internal panics. Job panics are caught and
@@ -139,6 +152,10 @@ impl Batch {
         // Disarmed by the normal return (drop without an active panic);
         // see `AbortOnUnwind` for why internal panics must not escape.
         let _guard = AbortOnUnwind;
+        if let Some(counter) = &self.assist {
+            self.work_assisted(counter);
+            return;
+        }
         loop {
             // Pull a ready task or wait; exit when all tasks are done.
             let task = {
@@ -154,24 +171,7 @@ impl Batch {
                 }
             };
 
-            let f = self.runs[task].lock().unwrap().take().expect("task run twice");
-            let result = if self.poisoned.load(Ordering::Acquire) {
-                // Batch already failing: cancel (drop) instead of running.
-                // The drop itself is guarded too — a closure owning a value
-                // with a panicking `Drop` must not kill the worker mid-drain
-                // (that would leak the task's `remaining` decrement and hang
-                // the submitter).
-                catch_unwind(AssertUnwindSafe(move || drop(f)))
-            } else {
-                catch_unwind(AssertUnwindSafe(f))
-            };
-            if let Err(payload) = result {
-                self.poisoned.store(true, Ordering::Release);
-                let mut slot = self.panic.lock().unwrap();
-                if slot.is_none() {
-                    *slot = Some(payload);
-                }
-            }
+            self.run_task(task);
 
             // Mark done, wake successors. This block must run even for
             // cancelled tasks or the drain deadlocks.
@@ -200,6 +200,57 @@ impl Batch {
                 // and deadlocks.
                 drop(self.ready.lock().unwrap());
                 self.cv.notify_all();
+            }
+        }
+    }
+
+    /// Work-assisting drain ([`super::assist`]): claim task indices from
+    /// the shared counter until it is exhausted, then wait for the panels
+    /// claimed by *other* executors to finish. No ready-FIFO traffic per
+    /// task — one `fetch_add` claims, one `fetch_sub` completes. Valid
+    /// only for dependency-free batches (every task immediately runnable).
+    fn work_assisted(&self, counter: &ClaimCounter) {
+        while let Some(task) = counter.claim() {
+            self.run_task(task);
+            let left = self.remaining.fetch_sub(1, Ordering::AcqRel) - 1;
+            if left == 0 {
+                // Wake-for-exit: same fence-through-the-mutex protocol as
+                // the FIFO path (see the comment there) — an executor that
+                // drained the counter may be between its `remaining` check
+                // and `cv.wait`.
+                drop(self.ready.lock().unwrap());
+                self.cv.notify_all();
+            }
+        }
+        // Every panel is claimed, but claimed ≠ completed: other executors
+        // may still be running theirs, and the submitter must not return
+        // while lifetime-erased closures are live (see `erase`).
+        let mut q = self.ready.lock().unwrap();
+        while self.remaining.load(Ordering::Acquire) != 0 {
+            q = self.cv.wait(q).unwrap();
+        }
+    }
+
+    /// Take-and-run machinery shared by the FIFO and assisted drains: run
+    /// the task's closure — or drop it unrun if the batch is poisoned —
+    /// capturing the first panic payload.
+    fn run_task(&self, task: usize) {
+        let f = self.runs[task].lock().unwrap().take().expect("task run twice");
+        let result = if self.poisoned.load(Ordering::Acquire) {
+            // Batch already failing: cancel (drop) instead of running.
+            // The drop itself is guarded too — a closure owning a value
+            // with a panicking `Drop` must not kill the worker mid-drain
+            // (that would leak the task's `remaining` decrement and hang
+            // the submitter).
+            catch_unwind(AssertUnwindSafe(move || drop(f)))
+        } else {
+            catch_unwind(AssertUnwindSafe(f))
+        };
+        if let Err(payload) = result {
+            self.poisoned.store(true, Ordering::Release);
+            let mut slot = self.panic.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(payload);
             }
         }
     }
@@ -340,13 +391,18 @@ impl WorkerPool {
             panic: Mutex::new(None),
             helpers: AtomicUsize::new(0),
             max_helpers: threads - 1,
+            assist: None,
         });
+        self.execute_batch(batch);
+    }
 
-        // Publish to the parked workers, then participate. Helpers drain
-        // the batch concurrently with us; `work` returns for everyone once
-        // `remaining == 0`. Never-published batches (no workers, or a
-        // 1-helper cap with an empty pool) skip the global mutex entirely —
-        // both here and in the cleanup below.
+    /// Publish a batch to the parked workers, participate in draining it,
+    /// garbage-collect the queue entry and re-raise any job panic on this
+    /// thread. Never-published batches (no workers, or a 0-helper cap)
+    /// skip the global mutex entirely — both on publish and on cleanup.
+    fn execute_batch(&self, batch: Arc<Batch>) {
+        // Publish, then participate. Helpers drain the batch concurrently
+        // with us; `work` returns for everyone once `remaining == 0`.
         let published = batch.max_helpers > 0 && !self.handles.is_empty();
         if published {
             self.shared.state.lock().unwrap().queue.push_back(batch.clone());
@@ -368,12 +424,33 @@ impl WorkerPool {
     }
 
     /// Execute independent closures — the data-parallel entry used by
-    /// `linalg::gemm::gemm_par` and `WyRep::apply_par`. Semantically a
-    /// degenerate task graph (no accesses → no edges → every task
-    /// immediately ready); sharing [`WorkerPool::run_graph`] keeps one
-    /// scheduler for dataflow and data-parallel work. `threads <= 1` (or a
-    /// single task) runs inline on the caller with no graph overhead.
+    /// `linalg::gemm::gemm_par` and `WyRep::apply_par` — under the
+    /// process-default schedule (`PALLAS_ASSIST`; static unless set). See
+    /// [`WorkerPool::run_tasks_sched`].
     pub fn run_tasks<'a>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 'a>>, threads: usize) {
+        self.run_tasks_sched(tasks, threads, Schedule::from_env());
+    }
+
+    /// Execute independent closures under an explicit schedule.
+    ///
+    /// * [`Schedule::Static`] — semantically a degenerate task graph (no
+    ///   accesses → no edges → every task immediately ready); sharing
+    ///   [`WorkerPool::run_graph`] keeps one scheduler for dataflow and
+    ///   data-parallel work.
+    /// * [`Schedule::Dynamic`] — work assisting: the tasks share a
+    ///   [`ClaimCounter`] and every executor claims indices until it
+    ///   drains, so load imbalance between tasks is absorbed without any
+    ///   per-task queue traffic. Tasks still run exactly once each with
+    ///   the same panic/poisoning semantics as the graph path.
+    ///
+    /// `threads <= 1` (or a single task) runs inline on the caller with no
+    /// scheduling overhead — in submission order, under either schedule.
+    pub fn run_tasks_sched<'a>(
+        &self,
+        tasks: Vec<Box<dyn FnOnce() + Send + 'a>>,
+        threads: usize,
+        sched: Schedule,
+    ) {
         if tasks.is_empty() {
             return;
         }
@@ -384,12 +461,37 @@ impl WorkerPool {
             return;
         }
         let workers = threads.min(tasks.len());
-        let mut g = TaskGraph::new();
-        for t in tasks {
-            g.add(TaskClass::Gemm, Vec::new(), t);
+        if !sched.is_dynamic() {
+            let mut g = TaskGraph::new();
+            for t in tasks {
+                g.add(TaskClass::Gemm, Vec::new(), t);
+            }
+            g.finalize();
+            self.run_graph(g, workers);
+            return;
         }
-        g.finalize();
-        self.run_graph(g, workers);
+
+        // Work-assisting batch: no graph, no ready FIFO — just the erased
+        // closures and a claim counter over their indices. The FIFO mutex
+        // and condvar stay in the struct solely for the wake-for-exit
+        // handshake in `work_assisted`.
+        let n = tasks.len();
+        let runs: Vec<Mutex<Option<Job>>> =
+            tasks.into_iter().map(|t| Mutex::new(Some(erase(t)))).collect();
+        let batch = Arc::new(Batch {
+            ready: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            remaining: AtomicUsize::new(n),
+            pending: Vec::new(),
+            runs,
+            succs: Vec::new(),
+            poisoned: AtomicBool::new(false),
+            panic: Mutex::new(None),
+            helpers: AtomicUsize::new(0),
+            max_helpers: workers - 1,
+            assist: Some(ClaimCounter::new(n)),
+        });
+        self.execute_batch(batch);
     }
 
     /// Explicit shutdown: park → set flag → wake → join (the documented
@@ -440,10 +542,20 @@ pub fn run_parallel(graph: TaskGraph<'_>, threads: usize) {
     global().run_graph(graph, threads);
 }
 
-/// Execute independent closures on the process-global pool — see
-/// [`WorkerPool::run_tasks`].
+/// Execute independent closures on the process-global pool under the
+/// process-default schedule — see [`WorkerPool::run_tasks`].
 pub fn run_data_parallel<'a>(tasks: Vec<Box<dyn FnOnce() + Send + 'a>>, threads: usize) {
     global().run_tasks(tasks, threads);
+}
+
+/// Execute independent closures on the process-global pool under an
+/// explicit schedule — see [`WorkerPool::run_tasks_sched`].
+pub fn run_data_parallel_sched<'a>(
+    tasks: Vec<Box<dyn FnOnce() + Send + 'a>>,
+    threads: usize,
+    sched: Schedule,
+) {
+    global().run_tasks_sched(tasks, threads, sched);
 }
 
 #[cfg(test)]
@@ -655,6 +767,124 @@ mod tests {
                 "round {round}"
             );
         }
+    }
+
+    #[test]
+    fn assisted_runs_every_task_exactly_once() {
+        let pool = WorkerPool::new(3);
+        for threads in [2usize, 4, 7, 16] {
+            let cells: Vec<AtomicUsize> = (0..23).map(|_| AtomicUsize::new(0)).collect();
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = cells
+                .iter()
+                .map(|c| {
+                    Box::new(move || {
+                        c.fetch_add(1, Ordering::SeqCst);
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run_tasks_sched(tasks, threads, Schedule::Dynamic);
+            assert!(cells.iter().all(|c| c.load(Ordering::SeqCst) == 1), "threads={threads}");
+        }
+        pool.run_tasks_sched(Vec::new(), 4, Schedule::Dynamic); // empty is a no-op
+    }
+
+    #[test]
+    fn assisted_zero_worker_pool_drains_on_caller() {
+        // No helpers: the submitter claims every panel itself.
+        let pool = WorkerPool::new(0);
+        let c = AtomicUsize::new(0);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..9)
+            .map(|_| {
+                Box::new(|| {
+                    c.fetch_add(1, Ordering::SeqCst);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_tasks_sched(tasks, 4, Schedule::Dynamic);
+        assert_eq!(c.load(Ordering::SeqCst), 9);
+    }
+
+    #[test]
+    fn assisted_panic_poisons_batch_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..32usize)
+                .map(|i| {
+                    Box::new(move || {
+                        if i == 5 {
+                            panic!("boom in assisted job 5");
+                        }
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run_tasks_sched(tasks, 3, Schedule::Dynamic);
+        }));
+        assert!(result.is_err(), "assisted job panic must propagate to the submitter");
+        // The batch drained (no deadlock above) and the pool stays usable
+        // — on both schedules.
+        for sched in [Schedule::Static, Schedule::Dynamic] {
+            let c = AtomicUsize::new(0);
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..10)
+                .map(|_| {
+                    Box::new(|| {
+                        c.fetch_add(1, Ordering::SeqCst);
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run_tasks_sched(tasks, 3, sched);
+            assert_eq!(c.load(Ordering::SeqCst), 10, "pool must stay usable ({sched:?})");
+        }
+    }
+
+    #[test]
+    fn assisted_nested_submission_makes_progress() {
+        // An assisted job that submits an assisted batch to the same pool:
+        // caller participation holds on the claim-counter path too.
+        let pool = WorkerPool::new(1);
+        let c = AtomicUsize::new(0);
+        {
+            let pool = &pool;
+            let c = &c;
+            let outer: Vec<Box<dyn FnOnce() + Send + '_>> = (0..3)
+                .map(|_| {
+                    Box::new(move || {
+                        let inner: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+                            .map(|_| {
+                                Box::new(|| {
+                                    c.fetch_add(1, Ordering::SeqCst);
+                                })
+                                    as Box<dyn FnOnce() + Send + '_>
+                            })
+                            .collect();
+                        pool.run_tasks_sched(inner, 2, Schedule::Dynamic);
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run_tasks_sched(outer, 2, Schedule::Dynamic);
+        }
+        assert_eq!(c.load(Ordering::SeqCst), 12);
+    }
+
+    #[test]
+    fn assisted_uneven_task_costs_complete() {
+        // Wildly uneven task durations: the claim loop must still complete
+        // every task and return only when all are done (the imbalance
+        // scenario the scheduler exists for).
+        let pool = WorkerPool::new(3);
+        let done = AtomicUsize::new(0);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..12usize)
+            .map(|i| {
+                let done = &done;
+                Box::new(move || {
+                    if i == 0 {
+                        std::thread::sleep(std::time::Duration::from_millis(20));
+                    }
+                    done.fetch_add(1, Ordering::SeqCst);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_tasks_sched(tasks, 4, Schedule::Dynamic);
+        assert_eq!(done.load(Ordering::SeqCst), 12);
     }
 
     #[test]

@@ -79,7 +79,12 @@ pub fn build_graph<'a>(
 ) -> TaskGraph<'a> {
     let n = a.rows();
     let nb = cfg.r;
-    let nslices = cfg.effective_slices();
+    // Under the dynamic gate the slice goal is oversplit: the graph's
+    // shared ready FIFO is already a dynamic scheduler for these
+    // dependency-carrying tasks, so finer slices (same bits — the apply
+    // kernels are slicing-invariant) are all it needs to absorb the
+    // triangular-slice imbalance. See `coordinator::assist`.
+    let nslices = super::assist::slice_goal(cfg);
     let mut g = TaskGraph::new();
 
     for (pi, plan) in plans.iter().enumerate() {

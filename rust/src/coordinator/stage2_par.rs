@@ -119,7 +119,10 @@ pub fn build_graph<'a>(
     let n = a.rows();
     let ng = groups.len();
     let r = cfg.r;
-    let nslices = cfg.effective_slices();
+    // Oversplit under the dynamic gate — finer slices for the graph's
+    // ready FIFO to balance with, bitwise-identical results (see
+    // `coordinator::assist` and the stage-1 builder's note).
+    let nslices = super::assist::slice_goal(cfg);
     // Band depth the next generate may touch above/left of the WY regions:
     // group g+1's rects start ~(r − q) rows above this group's s5(k) in the
     // same columns, so a slack of 2(r + q) is comfortably safe while

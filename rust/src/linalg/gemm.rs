@@ -25,8 +25,9 @@
 //! relative so the algorithms only need a *consistent* GEMM.
 
 use super::matrix::{MatMut, MatRef, Matrix};
+use crate::coordinator::assist::{self, Schedule};
 use crate::coordinator::pool;
-use crate::coordinator::slices::partition;
+use crate::coordinator::slices::{partition, partition_capped};
 use crate::util::flops;
 use std::cell::RefCell;
 
@@ -394,6 +395,9 @@ fn pack_b(b: MatRef<'_>, tb: Trans, l0: usize, kb: usize, jc: usize, nb: usize, 
 /// the results are bitwise identical under *any* split. Falls back to the
 /// sequential kernel when the problem is too small to amortize the pool
 /// round trip or `threads <= 1`.
+///
+/// Runs under the process-default schedule (`PALLAS_ASSIST`; static unless
+/// set) — see [`gemm_par_sched`] for explicit control.
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_par(
     alpha: f64,
@@ -404,6 +408,34 @@ pub fn gemm_par(
     beta: f64,
     c: MatMut<'_>,
     threads: usize,
+) {
+    gemm_par_sched(alpha, a, ta, b, tb, beta, c, threads, Schedule::from_env());
+}
+
+/// [`gemm_par`] under an explicit schedule.
+///
+/// * [`Schedule::Static`] — one panel per executor, assigned up front (the
+///   historical split: a pure function of `(n, threads)`).
+/// * [`Schedule::Dynamic`] — work assisting ([`crate::coordinator::assist`]):
+///   `C` is oversplit into ~4× as many column panels (floor `2·NR` columns
+///   each) and executors claim panels from a shared atomic counter, so an
+///   executor stuck on a slow panel holds up only that panel.
+///
+/// Both schedules produce bitwise-identical results: by the module's
+/// slicing-invariance contract every `C` element accumulates in the same
+/// order under *any* column split, and claiming decides only who computes
+/// a panel.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_par_sched(
+    alpha: f64,
+    a: MatRef<'_>,
+    ta: Trans,
+    b: MatRef<'_>,
+    tb: Trans,
+    beta: f64,
+    c: MatMut<'_>,
+    threads: usize,
+    sched: Schedule,
 ) {
     let m = c.rows();
     let n = c.cols();
@@ -416,9 +448,15 @@ pub fn gemm_par(
         gemm(alpha, a, ta, b, tb, beta, c);
         return;
     }
-    // One panel per worker: each re-packs its own A block (duplicated pack
-    // work, but no sharing/synchronization inside the kernel).
-    let panels = partition(0..n, threads);
+    // Static: one panel per worker — each re-packs its own A block
+    // (duplicated pack work, but no sharing/synchronization inside the
+    // kernel). Dynamic: finer panels for the claim loop to balance with,
+    // kept at >= 2·NR columns so the kernel's register blocking stays
+    // effective.
+    let panels = match sched {
+        Schedule::Static => partition(0..n, threads),
+        Schedule::Dynamic => partition_capped(0..n, assist::oversplit(threads), 2 * NR),
+    };
     let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(panels.len());
     let mut rest = c;
     let mut consumed = 0;
@@ -432,7 +470,7 @@ pub fn gemm_par(
         };
         tasks.push(Box::new(move || gemm(alpha, a, ta, bp, tb, beta, panel)));
     }
-    pool::global().run_tasks(tasks, threads);
+    pool::global().run_tasks_sched(tasks, threads, sched);
 }
 
 /// Convenience: allocate and return `A·B`.

@@ -130,7 +130,28 @@ impl WyRep {
     /// the same bits. Falls back to the sequential apply when
     /// `threads <= 1` or the update is too small to amortize the pool
     /// round trip.
+    ///
+    /// Runs under the process-default schedule (`PALLAS_ASSIST`; static
+    /// unless set) — see [`WyRep::apply_par_sched`] for explicit control.
     pub fn apply_par(&self, side: Side, trans: Trans, c: MatMut<'_>, threads: usize) {
+        self.apply_par_sched(side, trans, c, threads, crate::coordinator::assist::Schedule::from_env());
+    }
+
+    /// [`WyRep::apply_par`] under an explicit schedule: static assigns one
+    /// free-dimension panel per executor up front; dynamic oversplits the
+    /// free dimension (~4× the executor count, floor 4 rows/columns per
+    /// panel) and lets executors claim panels from a shared atomic counter
+    /// ([`crate::coordinator::assist`]). Bitwise-identical either way —
+    /// the slicing-invariance argument above holds for any panel count.
+    pub fn apply_par_sched(
+        &self,
+        side: Side,
+        trans: Trans,
+        c: MatMut<'_>,
+        threads: usize,
+        sched: crate::coordinator::assist::Schedule,
+    ) {
+        use crate::coordinator::assist::{self, Schedule};
         let k = self.k();
         if k == 0 {
             return;
@@ -149,7 +170,12 @@ impl WyRep {
             self.apply(side, trans, c);
             return;
         }
-        let panels = crate::coordinator::slices::partition(0..free, threads);
+        let panels = match sched {
+            Schedule::Static => crate::coordinator::slices::partition(0..free, threads),
+            Schedule::Dynamic => {
+                crate::coordinator::slices::partition_capped(0..free, assist::oversplit(threads), 4)
+            }
+        };
         let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(panels.len());
         let mut rest = c;
         let mut consumed = 0;
@@ -162,7 +188,7 @@ impl WyRep {
             rest = right;
             tasks.push(Box::new(move || self.apply(side, trans, panel)));
         }
-        crate::coordinator::pool::global().run_tasks(tasks, threads);
+        crate::coordinator::pool::global().run_tasks_sched(tasks, threads, sched);
     }
 }
 

@@ -151,6 +151,15 @@ impl SubmitHandle {
         {
             let mut st = lane.state.lock().unwrap();
             loop {
+                // `closed` is re-checked at the top of every iteration —
+                // i.e. after *every* wakeup from `not_full.wait`, spurious
+                // or broadcast — while holding the lane mutex, and the
+                // push below sits in the same critical section as the last
+                // check. A submitter parked in `not_full` while the queue
+                // closes therefore always lands in the rejection branch:
+                // it can never act on a stale pre-close capacity check and
+                // enqueue a job no dispatcher will drain (pinned by
+                // `submit_racing_close_never_enqueues_after_shutdown`).
                 if st.closed {
                     self.shared.rejected.fetch_add(1, Ordering::Relaxed);
                     return Err(Error::runtime(
@@ -386,6 +395,63 @@ mod tests {
             let oracle = reduce_seq(&p.a, &p.b, &eff).unwrap();
             assert_eq!(max_abs_diff(&d.h, &oracle.h), 0.0);
         }
+    }
+
+    #[test]
+    fn submit_racing_close_never_enqueues_after_shutdown() {
+        // Regression for the shutdown race: submitters blocked in
+        // `not_full.wait` on a full lane while the queue closes must
+        // observe the closed flag on wakeup (under the lane mutex) and
+        // fail with the typed error — never push a job that no dispatcher
+        // will drain. A capacity-1 single-shard lane forces the blocking.
+        let mut rng = Rng::new(0x0E_05);
+        let q = small_queue(1, 1);
+        let h = q.handle();
+        let pencils: Vec<_> = (0..24).map(|_| random_pencil(16, &mut rng)).collect();
+        std::thread::scope(|s| {
+            let workers: Vec<_> = pencils
+                .chunks(6)
+                .map(|chunk| {
+                    let h = h.clone();
+                    s.spawn(move || {
+                        let mut oks = Vec::new();
+                        let mut errs = 0u64;
+                        for p in chunk {
+                            match h.submit(p.a.clone(), p.b.clone()) {
+                                Ok(t) => oks.push(t),
+                                Err(e) => {
+                                    assert!(
+                                        matches!(e, Error::Runtime(_)),
+                                        "closed-lane rejection must be typed: {e}"
+                                    );
+                                    errs += 1;
+                                }
+                            }
+                        }
+                        (oks, errs)
+                    })
+                })
+                .collect();
+            // Let some submissions land and some block, then close while
+            // the rest race the flag.
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            q.shutdown();
+            let mut total_errs = 0;
+            for w in workers {
+                let (oks, errs) = w.join().unwrap();
+                total_errs += errs;
+                for t in oks {
+                    t.wait().expect("every accepted job completes across shutdown");
+                }
+            }
+            let stats = h.stats();
+            assert_eq!(
+                stats.submitted, stats.completed,
+                "a job enqueued after close would leave submitted > completed"
+            );
+            assert_eq!(stats.rejected, total_errs, "every rejection surfaced as an error");
+            assert_eq!(stats.pending, 0, "no job left stranded in a lane");
+        });
     }
 
     #[test]

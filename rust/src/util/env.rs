@@ -13,6 +13,7 @@
 //! | Variable (canonical)     | Meaning |
 //! |--------------------------|---------|
 //! | `PALLAS_POOL_THREADS`    | worker-team size *including* the caller ([`crate::coordinator::pool::global`]) |
+//! | `PALLAS_ASSIST`          | `1`/`true`: work-assisting dynamic panel scheduling as the process default ([`crate::coordinator::assist`]) |
 //! | `PALLAS_BENCH_SOFT`      | `1`/`true`: timing-sensitive bench asserts warn instead of aborting |
 //! | `PALLAS_BENCH_TOL`       | multiplier `≥ 1` relaxing timing-sensitive bench thresholds |
 //! | `PALLAS_STRESS_ITERS`    | iteration count for the pool stress hammer |
@@ -72,6 +73,15 @@ pub fn parse_usize_list(s: &str) -> Vec<usize> {
 /// `available_parallelism`).
 pub fn pool_threads() -> Option<usize> {
     var("POOL_THREADS").and_then(|s| parse_usize(&s)).map(|t| t.clamp(1, MAX_THREADS))
+}
+
+/// Whether work-assisting dynamic panel scheduling is the process-wide
+/// default (`PALLAS_ASSIST`). Read once (and cached) by
+/// [`crate::coordinator::assist::Schedule::from_env`]; the per-run
+/// `Config::dynamic_schedule` gate and the explicit `*_sched` entry
+/// points override it in both directions.
+pub fn assist() -> bool {
+    var("ASSIST").map(|v| parse_flag(&v)).unwrap_or(false)
 }
 
 /// Whether the benches run in *soft* mode (`PALLAS_BENCH_SOFT`): the
@@ -211,6 +221,19 @@ mod tests {
         assert!(!parse_flag("0"));
         assert!(!parse_flag(""));
         assert!(!parse_flag("yes"));
+    }
+
+    #[test]
+    fn assist_knob_resolves_through_the_alias_chain() {
+        // The assist knob is `parse_flag` over the standard alias lookup;
+        // exercise the composition through the injected core.
+        let env = env_of(&[("PARAHT_ASSIST", "true")]);
+        let got = first_from(|n| env.get(n).cloned(), "ASSIST");
+        assert!(got.map(|v| parse_flag(&v)).unwrap_or(false));
+        let env = env_of(&[("PALLAS_ASSIST", "0"), ("PARAHT_ASSIST", "1")]);
+        let got = first_from(|n| env.get(n).cloned(), "ASSIST");
+        assert!(!got.map(|v| parse_flag(&v)).unwrap_or(false), "canonical 0 wins over legacy 1");
+        assert_eq!(first_from(|_| None, "ASSIST"), None, "unset means static default");
     }
 
     #[test]

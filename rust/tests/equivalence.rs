@@ -1,9 +1,10 @@
 //! Equivalence tests pinning every execution path to the sequential
 //! oracle: the session front door (`api::HtSession::reduce` at 1/2/4/7
-//! threads, trace capture, and `reduce_batch`) and the deprecated
-//! `run_paraht` shim must all produce the same `(H, T, Q, Z)` as the
-//! sequential two-stage driver (`api::reduce_seq`) — including block sizes
-//! that do not divide the problem size.
+//! threads, static and work-assisting dynamic schedules, trace capture,
+//! and `reduce_batch`) and the deprecated `run_paraht` shim must all
+//! produce the same `(H, T, Q, Z)` as the sequential two-stage driver
+//! (`api::reduce_seq`) — including block sizes that do not divide the
+//! problem size.
 //!
 //! The task bodies are the same kernels executed in a valid topological
 //! order, and every slice kernel is bitwise independent of the slicing
@@ -74,6 +75,32 @@ fn assert_modes_match_oracle(pencil: &Pencil, cfg: &Config, label: &str) {
             &oracle,
             &format!("{label}: session threads={threads}"),
         );
+    }
+
+    // Work-assisting dynamic scheduling (`Config::dynamic_schedule`), at
+    // every thread count: claiming panels from the shared atomic counter
+    // decides only *who* computes each panel, so not a single bit may
+    // move. Swept twice per thread count — with the pencil's pinned slice
+    // count, and with auto slices (slices = 0), where the dynamic gate
+    // additionally oversplits the stage graphs' slice goal (the finest
+    // panels the claim loop and the graph FIFO ever see).
+    for &threads in SESSION_THREADS {
+        for (slices, tag) in [(cfg.slices, "pinned"), (0usize, "auto-oversplit")] {
+            let dyn_cfg =
+                Config { dynamic_schedule: true, slices, threads, ..cfg.clone() };
+            let mut session = HtSession::builder()
+                .config(dyn_cfg)
+                .build()
+                .unwrap_or_else(|e| panic!("{label}: dynamic build({threads}) failed: {e}"));
+            let run = session
+                .reduce(&pencil.a, &pencil.b)
+                .unwrap_or_else(|e| panic!("{label}: dynamic({threads},{tag}) failed: {e}"));
+            assert_same(
+                (&run.h, &run.t, &run.q, &run.z),
+                &oracle,
+                &format!("{label}: dynamic threads={threads} slices={tag}"),
+            );
+        }
     }
 
     // Trace capture (the old ExecMode::Trace) through the session.
@@ -178,6 +205,37 @@ fn repeated_parallel_runs_are_deterministic() {
     assert_eq!(max_abs_diff(&r1.t, &r2.t), 0.0);
     assert_eq!(max_abs_diff(&r1.q, &r2.q), 0.0);
     assert_eq!(max_abs_diff(&r1.z, &r2.z), 0.0);
+}
+
+#[test]
+fn repeated_dynamic_runs_are_deterministic() {
+    // Work-assisting claims race on an atomic counter, so *which worker*
+    // computes a panel varies run to run — the numbers must not. Two
+    // dynamic runs must be bitwise identical to each other and to the
+    // static run at the same thread count.
+    let mut rng = Rng::new(0xE0_0C);
+    let pencil = random_pencil(41, &mut rng);
+    let cfg = Config {
+        r: 4,
+        p: 3,
+        q: 3,
+        slices: 0, // auto: let the dynamic gate oversplit the slice goal
+        dynamic_schedule: true,
+        ..Config::default()
+    };
+    let mut s1 = HtSession::builder().config(cfg.clone()).threads(5).build().unwrap();
+    let mut s2 = HtSession::builder().config(cfg.clone()).threads(5).build().unwrap();
+    let static_cfg = Config { dynamic_schedule: false, ..cfg };
+    let mut s3 = HtSession::builder().config(static_cfg).threads(5).build().unwrap();
+    let r1 = s1.reduce(&pencil.a, &pencil.b).unwrap();
+    let r2 = s2.reduce(&pencil.a, &pencil.b).unwrap();
+    let r3 = s3.reduce(&pencil.a, &pencil.b).unwrap();
+    for (other, label) in [(&r2, "dynamic repeat"), (&r3, "static twin")] {
+        assert_eq!(max_abs_diff(&r1.h, &other.h), 0.0, "{label}: H diverges");
+        assert_eq!(max_abs_diff(&r1.t, &other.t), 0.0, "{label}: T diverges");
+        assert_eq!(max_abs_diff(&r1.q, &other.q), 0.0, "{label}: Q diverges");
+        assert_eq!(max_abs_diff(&r1.z, &other.z), 0.0, "{label}: Z diverges");
+    }
 }
 
 #[test]

@@ -109,6 +109,67 @@ fn property_gemm_par_bitwise_equals_gemm() {
 }
 
 #[test]
+fn property_static_and_dynamic_schedules_are_bitwise_identical() {
+    // Slicing invariance, exercised through both schedulers: the static
+    // one-panel-per-executor split and the work-assisting oversplit (~4×
+    // panels claimed from an atomic counter) must both reproduce the
+    // sequential kernel's bits exactly, for random shapes and thread
+    // counts — including counts that do not divide the panel dimension.
+    use paraht::coordinator::assist::Schedule;
+    use paraht::linalg::gemm::gemm_par_sched;
+    const SCHEDS: [(Schedule, &str); 2] =
+        [(Schedule::Static, "static"), (Schedule::Dynamic, "dynamic")];
+    for_each_case(16, 0x9a04, |rng| {
+        // GEMM: shapes above the parallel flop threshold.
+        let m = 40 + rng.below(120);
+        let n = 40 + rng.below(120);
+        let k = 30 + rng.below(260);
+        let a = Matrix::randn(m, k, rng);
+        let b = Matrix::randn(k, n, rng);
+        let c0 = Matrix::randn(m, n, rng);
+        let mut seq = c0.clone();
+        gemm(1.0, a.as_ref(), Trans::No, b.as_ref(), Trans::No, 1.0, seq.as_mut());
+        let threads = 2 + rng.below(6);
+        for (sched, label) in SCHEDS {
+            let mut got = c0.clone();
+            gemm_par_sched(
+                1.0,
+                a.as_ref(),
+                Trans::No,
+                b.as_ref(),
+                Trans::No,
+                1.0,
+                got.as_mut(),
+                threads,
+                sched,
+            );
+            check_that(
+                &format!("gemm {label} {m}x{n}x{k} threads={threads} bitwise"),
+                max_abs_diff(&got, &seq) == 0.0,
+            )?;
+        }
+
+        // WY block-reflector application (the stage kernels' workhorse).
+        let mw = 30 + rng.below(40);
+        let kw = 1 + rng.below(12);
+        let nc = 20 + rng.below(40);
+        let (_, wy) = qr_reflectors(mw, kw, rng);
+        let cw = Matrix::randn(mw, nc, rng);
+        let mut seq_wy = cw.clone();
+        wy.apply(Side::Left, Trans::Yes, seq_wy.as_mut());
+        for (sched, label) in SCHEDS {
+            let mut got = cw.clone();
+            wy.apply_par_sched(Side::Left, Trans::Yes, got.as_mut(), threads, sched);
+            check_that(
+                &format!("wy {label} m={mw} k={kw} nc={nc} threads={threads} bitwise"),
+                max_abs_diff(&got, &seq_wy) == 0.0,
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn property_gemm_column_slicing_invariance() {
     // Computing C in arbitrary column panels reproduces the full-call bits
     // — the exact property the parallel apply tasks rely on.

@@ -340,3 +340,113 @@ fn pool_stress() {
         pool.shutdown(); // joins every worker; a hang here is a shutdown race
     }
 }
+
+/// Work-assisting twin of [`pool_stress`]: the same submit/drain/shutdown
+/// hammer, but every dependency-free batch is forced through the dynamic
+/// claim-counter drain (`run_tasks_sched(.., Schedule::Dynamic)`), with
+/// randomized panel counts (including 0, 1, and more panels than workers),
+/// randomized helper counts, concurrent submitters racing on one team, and
+/// mid-run panics that must poison the batch without hanging the counter
+/// wait (`claimed != completed` is exactly the window a lost wakeup hides
+/// in). Name keeps the `pool_stress` prefix so the CI pool-stress job's
+/// name filter picks both hammers up.
+///
+/// Ignored by default; locally:
+/// `cargo test --release pool_stress -- --ignored`.
+#[test]
+#[ignore = "stress hammer; run explicitly or via the CI pool-stress job"]
+fn pool_stress_assist() {
+    use paraht::coordinator::assist::Schedule;
+    use paraht::coordinator::pool::WorkerPool;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    let iters: usize = paraht::util::env::stress_iters(40);
+    let mut rng = Rng::new(0xA5_5157);
+    for iter in 0..iters {
+        // Fresh pool per iteration: spawn → submit → drain → shutdown.
+        let pool = WorkerPool::new(rng.below(5));
+        let batches = 1 + rng.below(4);
+        for _ in 0..batches {
+            // Panel-count extremes on purpose: empty (no claimable index),
+            // one panel (exactly one claimer wins), and counts far above
+            // the worker count (every worker's claim loop must drain).
+            let n = match rng.below(4) {
+                0 => 0,
+                1 => 1,
+                _ => 2 + rng.below(63),
+            };
+            let threads = 1 + rng.below(8);
+            let counter = AtomicU64::new(0);
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..n)
+                .map(|_| {
+                    Box::new(|| {
+                        counter.fetch_add(1, Ordering::SeqCst);
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run_tasks_sched(tasks, threads, Schedule::Dynamic);
+            assert_eq!(
+                counter.load(Ordering::SeqCst),
+                n as u64,
+                "lost or double-claimed panel (iter {iter})"
+            );
+        }
+
+        // Concurrent submitters racing assisted batches on the shared team
+        // (every 3rd iteration): each batch owns its own claim counter, so
+        // interleaved claims from two batches must never cross-complete.
+        if iter % 3 == 0 {
+            std::thread::scope(|s| {
+                for _ in 0..3 {
+                    let pool = &pool;
+                    s.spawn(move || {
+                        let c = AtomicU64::new(0);
+                        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..32)
+                            .map(|_| {
+                                Box::new(|| {
+                                    c.fetch_add(1, Ordering::SeqCst);
+                                }) as Box<dyn FnOnce() + Send + '_>
+                            })
+                            .collect();
+                        pool.run_tasks_sched(tasks, 4, Schedule::Dynamic);
+                        assert_eq!(c.load(Ordering::SeqCst), 32);
+                    });
+                }
+            });
+        }
+
+        // A panic at a random claimed index must poison the batch (later
+        // claims are dropped, not run), propagate to the submitter, and
+        // leave the pool reusable for the next assisted batch (every 6th
+        // iteration; sparse to limit panic-hook stderr noise).
+        if iter % 6 == 0 {
+            let n = 8 + rng.below(24);
+            let bomb = rng.below(n);
+            let r = catch_unwind(AssertUnwindSafe(|| {
+                let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..n)
+                    .map(|i| {
+                        Box::new(move || {
+                            if i == bomb {
+                                panic!("assist stress panic");
+                            }
+                        }) as Box<dyn FnOnce() + Send + '_>
+                    })
+                    .collect();
+                pool.run_tasks_sched(tasks, 1 + rng.below(6), Schedule::Dynamic);
+            }));
+            assert!(r.is_err(), "panic must propagate (iter {iter})");
+            let c = AtomicU64::new(0);
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..8)
+                .map(|_| {
+                    Box::new(|| {
+                        c.fetch_add(1, Ordering::SeqCst);
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run_tasks_sched(tasks, 4, Schedule::Dynamic);
+            assert_eq!(c.load(Ordering::SeqCst), 8, "pool unusable after panic");
+        }
+
+        pool.shutdown(); // joins every worker; a hang here is a claim-wait race
+    }
+}
