@@ -40,6 +40,7 @@
 
 use crate::config::Config;
 use crate::coordinator::graph::TaskTrace;
+use crate::coordinator::access::MatId;
 use crate::coordinator::pool::{self, WorkerPool};
 use crate::coordinator::slices::SharedMat;
 use crate::coordinator::stage1_par::{self, Stage1Arena};
@@ -505,10 +506,12 @@ impl HtSession {
 
         let t1 = Timer::start();
         let tr1 = {
-            let sa = SharedMat::new(&mut h);
-            let sb = SharedMat::new(&mut t);
-            let sq = SharedMat::new(&mut q);
-            let sz = SharedMat::new(&mut z);
+            // Tagged handles so the concurrency auditor (when active) can
+            // match views against the graph's declared regions.
+            let sa = SharedMat::tagged(&mut h, MatId::A);
+            let sb = SharedMat::tagged(&mut t, MatId::B);
+            let sq = SharedMat::tagged(&mut q, MatId::Q);
+            let sz = SharedMat::tagged(&mut z, MatId::Z);
             let graph = stage1_par::build_graph(&sa, &sb, &sq, &sz, &ws.arena1, &ws.plans, cfg);
             if capture {
                 Some(graph.run_sequential())
@@ -522,10 +525,10 @@ impl HtSession {
 
         let t2 = Timer::start();
         let tr2 = {
-            let sa = SharedMat::new(&mut h);
-            let sb = SharedMat::new(&mut t);
-            let sq = SharedMat::new(&mut q);
-            let sz = SharedMat::new(&mut z);
+            let sa = SharedMat::tagged(&mut h, MatId::A);
+            let sb = SharedMat::tagged(&mut t, MatId::B);
+            let sq = SharedMat::tagged(&mut q, MatId::Q);
+            let sz = SharedMat::tagged(&mut z, MatId::Z);
             let graph = stage2_par::build_graph(&sa, &sb, &sq, &sz, &ws.arena2, &ws.groups, cfg);
             if capture {
                 Some(graph.run_sequential())

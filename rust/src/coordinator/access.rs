@@ -41,12 +41,24 @@ impl Region {
         Region { mat, rows, cols }
     }
 
-    /// Whether the region is empty.
+    /// Whether the region is empty (describes no matrix elements).
+    ///
+    /// Zero-width ranges (`k..k`) are empty wherever they sit — including
+    /// at matrix boundaries (`0..0`, `n..n`) — and reversed ranges
+    /// (`hi..lo`) count as empty too rather than as a huge span, so a
+    /// builder clamping `end` below `start` degrades to "no access", not
+    /// to a spurious conflict.
     pub fn is_empty(&self) -> bool {
         self.rows.start >= self.rows.end || self.cols.start >= self.cols.end
     }
 
     /// Whether two regions overlap (same matrix, intersecting rectangles).
+    ///
+    /// Empty regions intersect nothing — without the explicit guards, a
+    /// zero-width range sitting strictly inside another region's span
+    /// (e.g. `5..5` vs `0..10`) would satisfy the half-open interval
+    /// comparisons and report a phantom overlap. Symmetric by
+    /// construction: `a.intersects(&b) == b.intersects(&a)`.
     pub fn intersects(&self, other: &Region) -> bool {
         self.mat == other.mat
             && !self.is_empty()
@@ -55,6 +67,21 @@ impl Region {
             && other.rows.start < self.rows.end
             && self.cols.start < other.cols.end
             && other.cols.start < self.cols.end
+    }
+
+    /// Whether `other` lies entirely inside this region.
+    ///
+    /// An empty `other` is vacuously contained (it touches no elements);
+    /// a non-empty `other` needs the same matrix and both of its ranges
+    /// inside this region's ranges. An empty `self` therefore contains
+    /// only empty regions.
+    pub fn contains(&self, other: &Region) -> bool {
+        other.is_empty()
+            || (self.mat == other.mat
+                && self.rows.start <= other.rows.start
+                && other.rows.end <= self.rows.end
+                && self.cols.start <= other.cols.start
+                && other.cols.end <= self.cols.end)
     }
 }
 
@@ -98,6 +125,30 @@ mod tests {
         assert!(!a.intersects(&c)); // touching edge, half-open
         assert!(!a.intersects(&d)); // different matrix
         assert!(!Region::new(MatId::A, 3..3, 0..5).intersects(&a)); // empty
+    }
+
+    #[test]
+    fn zero_width_ranges_at_boundaries_are_empty_and_inert() {
+        let full = Region::new(MatId::A, 0..10, 0..10);
+        for r in [0..0, 5..5, 10..10, 7..3] {
+            let z = Region::new(MatId::A, r.clone(), 0..10);
+            assert!(z.is_empty(), "{r:?} must be empty");
+            assert!(!z.intersects(&full) && !full.intersects(&z));
+            assert!(full.contains(&z), "empty regions are vacuously contained");
+        }
+    }
+
+    #[test]
+    fn containment_semantics() {
+        let outer = Region::new(MatId::A, 2..8, 1..9);
+        assert!(outer.contains(&Region::new(MatId::A, 2..8, 1..9)), "self");
+        assert!(outer.contains(&Region::new(MatId::A, 3..7, 4..5)), "strict inner");
+        assert!(!outer.contains(&Region::new(MatId::A, 1..8, 1..9)), "row overhang");
+        assert!(!outer.contains(&Region::new(MatId::A, 2..8, 1..10)), "col overhang");
+        assert!(!outer.contains(&Region::new(MatId::B, 3..7, 4..5)), "wrong matrix");
+        let empty = Region::new(MatId::A, 4..4, 4..4);
+        assert!(!empty.contains(&Region::new(MatId::A, 4..5, 4..5)), "empty holds nothing");
+        assert!(empty.contains(&Region::new(MatId::B, 9..9, 0..3)), "empty in empty, vacuous");
     }
 
     #[test]

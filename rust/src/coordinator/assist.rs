@@ -33,6 +33,8 @@
 //! the `PALLAS_ASSIST` env knob ([`crate::util::env::assist`]) flips the
 //! process-wide default for entry points that take no config.
 
+#[cfg(any(feature = "audit", debug_assertions))]
+use std::sync::atomic::AtomicBool;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::OnceLock;
 
@@ -117,12 +119,25 @@ pub fn slice_goal(cfg: &Config) -> usize {
 pub struct ClaimCounter {
     next: AtomicUsize,
     total: usize,
+    /// Concurrency-audit shadow (`coordinator::audit`): one flag per
+    /// panel, set on hand-out. A second hand-out of the same index —
+    /// which would run a panel twice and corrupt the accumulation — trips
+    /// an assert with the offending index. `None` when the auditor is
+    /// inactive; absent entirely from release builds without the feature.
+    #[cfg(any(feature = "audit", debug_assertions))]
+    handed: Option<Vec<AtomicBool>>,
 }
 
 impl ClaimCounter {
     /// A counter over panel indices `0..total`.
     pub fn new(total: usize) -> ClaimCounter {
-        ClaimCounter { next: AtomicUsize::new(0), total }
+        ClaimCounter {
+            next: AtomicUsize::new(0),
+            total,
+            #[cfg(any(feature = "audit", debug_assertions))]
+            handed: super::audit::active()
+                .then(|| (0..total).map(|_| AtomicBool::new(false)).collect()),
+        }
     }
 
     /// Number of panels this counter hands out.
@@ -137,6 +152,13 @@ impl ClaimCounter {
     pub fn claim(&self) -> Option<usize> {
         let i = self.next.fetch_add(1, Ordering::Relaxed);
         if i < self.total {
+            #[cfg(any(feature = "audit", debug_assertions))]
+            if let Some(handed) = &self.handed {
+                assert!(
+                    !handed[i].swap(true, Ordering::Relaxed),
+                    "concurrency audit failed: claim counter handed out panel index {i} twice"
+                );
+            }
             Some(i)
         } else {
             None

@@ -165,15 +165,25 @@ impl<'a> TaskGraph<'a> {
     /// Execute sequentially in submission order (which is always a valid
     /// topological order), timing each task. Returns the per-task trace.
     pub fn run_sequential(mut self) -> TaskTrace {
+        // Audit scope (if active) — built before the deps are moved into
+        // the trace; sequential order trivially satisfies happens-before,
+        // but the *containment* half of the audit is order-independent and
+        // the race scan still validates the declared edges.
+        #[cfg(any(feature = "audit", debug_assertions))]
+        let scope = super::audit::scope_for(&self);
         let mut trace = TaskTrace::default();
-        for t in &mut self.tasks {
+        for (_id, t) in self.tasks.iter_mut().enumerate() {
             let f = t.run.take().expect("task already taken");
+            #[cfg(any(feature = "audit", debug_assertions))]
+            let _audit = super::audit::enter_task(scope.as_ref(), _id);
             let start = std::time::Instant::now();
             f();
             trace.durations.push(start.elapsed());
             trace.classes.push(t.class);
             trace.deps.push(std::mem::take(&mut t.deps));
         }
+        #[cfg(any(feature = "audit", debug_assertions))]
+        super::audit::check_scope(scope);
         trace
     }
 

@@ -14,6 +14,11 @@
 //!   panel; claiming decides *who* computes a panel, never the
 //!   accumulation order inside it).
 //! * [`slices`] — row/column slicing of the apply tasks (Figs. 3, 8).
+//! * `audit` (compiled under `--features audit` or `debug_assertions`) —
+//!   shadow access tracker enforcing the declared-region contract behind
+//!   the unsafe `SharedMat` views: containment of every actual view in
+//!   its task's declarations, and happens-before ordering of every
+//!   overlapping access pair.
 //! * [`stage1_par`]/[`stage2_par`] — task-graph builders for both stages.
 //! * [`baseline_par`] — task-graph builders modelling the comparators'
 //!   parallel-BLAS execution.
@@ -21,6 +26,8 @@
 
 pub mod access;
 pub mod assist;
+#[cfg(any(feature = "audit", debug_assertions))]
+pub mod audit;
 pub mod graph;
 pub mod pool;
 pub mod sim;

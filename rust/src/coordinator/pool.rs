@@ -65,6 +65,8 @@
 //!    pool thread survives (asserted by `drop_joins_all_workers`).
 
 use super::assist::{ClaimCounter, Schedule};
+#[cfg(any(feature = "audit", debug_assertions))]
+use super::audit;
 use super::graph::{TaskClass, TaskGraph};
 use std::any::Any;
 use std::collections::VecDeque;
@@ -87,6 +89,10 @@ type Job = Box<dyn FnOnce() + Send + 'static>;
 /// never the (by then empty) closure slots — so no erased borrow is ever
 /// dereferenced after the true lifetime ends.
 fn erase<'a>(f: Box<dyn FnOnce() + Send + 'a>) -> Job {
+    // SAFETY: only the lifetime is transmuted — the vtable and data
+    // pointers are unchanged. The submitter blocks until `remaining == 0`
+    // (every closure taken and run or dropped), so no erased borrow
+    // outlives its true lifetime; see the doc comment above.
     unsafe {
         std::mem::transmute::<Box<dyn FnOnce() + Send + 'a>, Box<dyn FnOnce() + Send + 'static>>(f)
     }
@@ -121,6 +127,12 @@ struct Batch {
     /// FIFO. Only valid for dependency-free batches (`pending`/`succs`
     /// empty) — the counter has no notion of edges.
     assist: Option<ClaimCounter>,
+    /// Concurrency-audit scope ([`super::audit`]) for this batch, if the
+    /// auditor is active and the graph declared accesses. Executors enter
+    /// the per-task context around each closure; the submitter runs the
+    /// end-of-batch check.
+    #[cfg(any(feature = "audit", debug_assertions))]
+    scope: Option<std::sync::Arc<audit::AuditScope>>,
 }
 
 /// Abort bomb for scheduler-internal panics. Job panics are caught and
@@ -236,6 +248,11 @@ impl Batch {
     /// capturing the first panic payload.
     fn run_task(&self, task: usize) {
         let f = self.runs[task].lock().unwrap().take().expect("task run twice");
+        // Attribute the closure's `SharedMat` views to this task id (and
+        // clear any outer context when the batch is unaudited — nested
+        // data-parallel views must not attribute to the enclosing task).
+        #[cfg(any(feature = "audit", debug_assertions))]
+        let _audit = audit::enter_task(self.scope.as_ref(), task);
         let result = if self.poisoned.load(Ordering::Acquire) {
             // Batch already failing: cancel (drop) instead of running.
             // The drop itself is guarded too — a closure owning a value
@@ -358,11 +375,19 @@ impl WorkerPool {
         if n == 0 {
             return;
         }
+        // Audit scope (if active): snapshot declarations + reachability
+        // before the closures are taken out of the graph.
+        #[cfg(any(feature = "audit", debug_assertions))]
+        let scope = audit::scope_for(&graph);
         if threads <= 1 {
             // Degenerate case: run in submission order on the caller.
-            for t in &mut graph.tasks {
+            for (_id, t) in graph.tasks.iter_mut().enumerate() {
+                #[cfg(any(feature = "audit", debug_assertions))]
+                let _audit = audit::enter_task(scope.as_ref(), _id);
                 (t.run.take().unwrap())();
             }
+            #[cfg(any(feature = "audit", debug_assertions))]
+            audit::check_scope(scope);
             return;
         }
 
@@ -392,6 +417,8 @@ impl WorkerPool {
             helpers: AtomicUsize::new(0),
             max_helpers: threads - 1,
             assist: None,
+            #[cfg(any(feature = "audit", debug_assertions))]
+            scope,
         });
         self.execute_batch(batch);
     }
@@ -420,6 +447,13 @@ impl WorkerPool {
         }
         if let Some(p) = batch.panic.lock().unwrap().take() {
             std::panic::resume_unwind(p);
+        }
+        // Audit verdict last, on the submitting thread: every closure has
+        // run (remaining == 0) and no job panicked, so the recorded access
+        // log is complete.
+        #[cfg(any(feature = "audit", debug_assertions))]
+        if let Some(scope) = &batch.scope {
+            scope.check();
         }
     }
 
@@ -490,6 +524,10 @@ impl WorkerPool {
             helpers: AtomicUsize::new(0),
             max_helpers: workers - 1,
             assist: Some(ClaimCounter::new(n)),
+            // Data-parallel batches declare no regions: nothing to audit
+            // (the claim counter carries its own uniqueness shadow).
+            #[cfg(any(feature = "audit", debug_assertions))]
+            scope: None,
         });
         self.execute_batch(batch);
     }

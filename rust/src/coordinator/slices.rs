@@ -1,6 +1,9 @@
 //! Row/column slice partitioning for the apply tasks (paper Fig. 3/8) and
 //! the shared-matrix handle the tasks operate through.
 
+#[cfg(any(feature = "audit", debug_assertions))]
+use super::audit;
+use super::access::MatId;
 use crate::linalg::matrix::{MatMut, MatRef, Matrix};
 use std::ops::Range;
 
@@ -56,16 +59,40 @@ pub struct SharedMat {
     ptr: *mut f64,
     rows: usize,
     cols: usize,
+    /// Audit identity: which declared matrix this handle is, if any.
+    /// `None` (untagged) handles are invisible to the concurrency auditor.
+    id: Option<MatId>,
 }
 
+// SAFETY: `SharedMat` is a bounds-carrying raw pointer into a caller-owned
+// `Matrix` buffer; it performs no interior mutation itself. Sending or
+// sharing the *handle* across threads is free — all aliasing discipline
+// lives with the `unsafe` view constructors below, whose callers (the task
+// graph) guarantee that concurrently-running tasks touch disjoint regions.
 unsafe impl Send for SharedMat {}
+// SAFETY: see the `Send` impl above — `&SharedMat` only exposes the view
+// constructors, which carry the aliasing obligation themselves.
 unsafe impl Sync for SharedMat {}
 
 impl SharedMat {
     /// Wrap a matrix. The caller must keep `m` alive and un-borrowed for
-    /// the lifetime of the scheduler run.
+    /// the lifetime of the scheduler run. The handle is *untagged*: the
+    /// concurrency auditor (`coordinator::audit`) cannot see views made
+    /// through it. Graph builders should use [`SharedMat::tagged`].
     pub fn new(m: &mut Matrix) -> SharedMat {
-        SharedMat { ptr: m.data_mut().as_mut_ptr(), rows: m.rows(), cols: m.cols() }
+        SharedMat { ptr: m.data_mut().as_mut_ptr(), rows: m.rows(), cols: m.cols(), id: None }
+    }
+
+    /// Wrap a matrix and tag it with its declared identity, so the
+    /// concurrency auditor can match views made through this handle
+    /// against the issuing task's declared [`MatId`] regions.
+    pub fn tagged(m: &mut Matrix, id: MatId) -> SharedMat {
+        SharedMat { id: Some(id), ..SharedMat::new(m) }
+    }
+
+    /// The audit identity this handle was constructed with, if any.
+    pub fn id(&self) -> Option<MatId> {
+        self.id
     }
 
     /// Number of rows.
@@ -80,10 +107,20 @@ impl SharedMat {
     /// Mutable view of a region.
     ///
     /// # Safety
-    /// The caller must guarantee (here: via the task graph's region edges)
-    /// that no concurrently-running task accesses an overlapping region.
+    /// The caller must guarantee:
+    /// * `r.end <= self.rows()` and `c.end <= self.cols()` (checked by a
+    ///   `debug_assert!` only);
+    /// * no concurrently-running task accesses an overlapping region, and
+    ///   no other live view of this matrix on *this* task overlaps `r × c`
+    ///   mutably — here discharged by the task graph's region edges (each
+    ///   task views only rectangles inside its declared regions, and
+    ///   conflicting declarations order the tasks). The concurrency
+    ///   auditor (`coordinator::audit`) checks both halves of that
+    ///   argument at runtime when enabled.
     pub unsafe fn view(&self, r: Range<usize>, c: Range<usize>) -> MatMut<'_> {
         debug_assert!(r.end <= self.rows && c.end <= self.cols);
+        #[cfg(any(feature = "audit", debug_assertions))]
+        audit::on_view(self.id, &r, &c, true);
         MatMut::from_raw_parts(
             self.ptr.add(r.start + c.start * self.rows),
             r.end - r.start,
@@ -95,15 +132,38 @@ impl SharedMat {
     /// Immutable view of a region.
     ///
     /// # Safety
-    /// As [`SharedMat::view`], with concurrent reads allowed.
+    /// As [`SharedMat::view`], with concurrent reads of the same region
+    /// allowed (no concurrently-running task may *write* an overlapping
+    /// region).
     pub unsafe fn view_ref(&self, r: Range<usize>, c: Range<usize>) -> MatRef<'_> {
         debug_assert!(r.end <= self.rows && c.end <= self.cols);
+        #[cfg(any(feature = "audit", debug_assertions))]
+        audit::on_view(self.id, &r, &c, false);
         MatRef::from_raw_parts(
             self.ptr.add(r.start + c.start * self.rows) as *const f64,
             r.end - r.start,
             c.end - c.start,
             self.rows,
         )
+    }
+
+    /// Whole-matrix mutable view, for tasks whose *algorithm* (not the
+    /// view rectangle) bounds the touched region — e.g. the stage-2
+    /// generate phase, which receives full-matrix `MatMut`s and stays
+    /// inside its band by construction. The concurrency auditor records
+    /// the issuing task's *declared* regions for this view instead of the
+    /// full rectangle (declaration-granularity trust; see
+    /// `coordinator::audit`'s module docs).
+    ///
+    /// # Safety
+    /// As [`SharedMat::view`], where the "actual rectangle" obligation is
+    /// the set of elements the callee really touches: the caller asserts
+    /// that everything reachable through this view that is actually
+    /// accessed lies inside the issuing task's declared write regions.
+    pub unsafe fn view_full(&self) -> MatMut<'_> {
+        #[cfg(any(feature = "audit", debug_assertions))]
+        audit::on_view_full(self.id);
+        MatMut::from_raw_parts(self.ptr, self.rows, self.cols, self.rows)
     }
 }
 
@@ -131,6 +191,8 @@ mod tests {
     fn shared_mat_views() {
         let mut m = Matrix::from_fn(4, 4, |i, j| (i * 10 + j) as f64);
         let sh = SharedMat::new(&mut m);
+        // SAFETY: single-threaded test; the views are in bounds and the
+        // mutable view does not overlap the (already dropped) read view.
         unsafe {
             let v = sh.view_ref(1..3, 2..4);
             assert_eq!(v.at(0, 0), 12.0);
@@ -138,5 +200,12 @@ mod tests {
             w.set(0, 0, 99.0);
         }
         assert_eq!(m[(0, 0)], 99.0);
+    }
+
+    #[test]
+    fn tagged_handles_carry_identity() {
+        let mut m = Matrix::zeros(2, 2);
+        assert_eq!(SharedMat::new(&mut m).id(), None, "plain handles are untagged");
+        assert_eq!(SharedMat::tagged(&mut m, MatId::Q).id(), Some(MatId::Q));
     }
 }

@@ -111,6 +111,9 @@ pub fn build_graph<'a>(
                     if i2e <= i1 {
                         continue;
                     }
+                    // SAFETY: [i1, i2e) × [j, je) ⊆ the declared write
+                    // A[panel_top.., j..je] (blocks start at panel_top);
+                    // region edges exclude concurrent overlap.
                     let wy = factor_panel_block(unsafe { a.view(i1..i2e, j..je) });
                     *arena.slots[qrow][k].lock().unwrap() = Some(wy);
                 }
@@ -133,6 +136,9 @@ pub fn build_graph<'a>(
                         }
                         let slot = arena.slots[qrow][k].lock().unwrap();
                         let wy = slot.as_ref().expect("GL must have filled slot");
+                        // SAFETY: [i1, i2e) × c ⊆ the declared write
+                        // A[panel_top.., cols]; this slice owns `c`
+                        // exclusively via the region edges.
                         wy.apply(Side::Left, Trans::Yes, unsafe { a.view(i1..i2e, c.clone()) });
                     }
                 },
@@ -156,6 +162,9 @@ pub fn build_graph<'a>(
                         let c0 = c.start.max(i1);
                         let slot = arena.slots[qrow][k].lock().unwrap();
                         let wy = slot.as_ref().unwrap();
+                        // SAFETY: [i1, i2e) × [c0, c.end) ⊆ the declared
+                        // write B[panel_top.., cols] (c0 = max(c.start, i1)
+                        // only shrinks the slice's own column span).
                         wy.apply(Side::Left, Trans::Yes, unsafe { a_or(b).view(i1..i2e, c0..c.end) });
                     }
                 },
@@ -178,6 +187,8 @@ pub fn build_graph<'a>(
                         }
                         let slot = arena.slots[qrow][k].lock().unwrap();
                         let wy = slot.as_ref().unwrap();
+                        // SAFETY: rr × [i1, i2e) ⊆ the declared write
+                        // Q[rows, panel_top..n]; row slices are disjoint.
                         wy.apply(Side::Right, Trans::No, unsafe { q.view(rr.clone(), i1..i2e) });
                     }
                 },
@@ -206,8 +217,13 @@ pub fn build_graph<'a>(
                     Access::write(MatId::Slots, zrow..zrow + 1, k..k + 1),
                 ],
                 move || {
+                    // SAFETY: a read of [i1, i2e)² ⊆ this task's declared
+                    // write B[band_lo..i2e, i1..i2e] (band_lo ≤ i1) —
+                    // reading one's own exclusive region.
                     let wy = opposite_reflector(unsafe { b.view_ref(i1..i2e, i1..i2e) }, nb);
+                    // SAFETY: exactly the declared write region.
                     wy.apply(Side::Right, Trans::No, unsafe { b.view(band_lo..i2e, i1..i2e) });
+                    // SAFETY: [i1, i2e)² ⊆ the declared write region.
                     flush_b_subdiagonal(unsafe { b.view(i1..i2e, i1..i2e) }, t);
                     *arena.slots[zrow][k].lock().unwrap() = Some(wy);
                 },
@@ -224,6 +240,9 @@ pub fn build_graph<'a>(
                     move || {
                         let slot = arena.slots[zrow][k].lock().unwrap();
                         let wy = slot.as_ref().unwrap();
+                        // SAFETY: rr × [i1, i2e) is exactly the declared
+                        // write B[rows, i1..i2e]; row slices are disjoint
+                        // and sit above the generate task's band.
                         wy.apply(Side::Right, Trans::No, unsafe { b.view(rr.clone(), i1..i2e) });
                     },
                 );
@@ -246,6 +265,8 @@ pub fn build_graph<'a>(
                         }
                         let slot = arena.slots[zrow][k].lock().unwrap();
                         let wy = slot.as_ref().unwrap();
+                        // SAFETY: rr × [i1, i2e) ⊆ the declared write
+                        // A[rows, panel_top..n] (i1 ≥ panel_top).
                         wy.apply(Side::Right, Trans::No, unsafe { a.view(rr.clone(), i1..i2e) });
                     }
                 },
@@ -268,6 +289,8 @@ pub fn build_graph<'a>(
                         }
                         let slot = arena.slots[zrow][k].lock().unwrap();
                         let wy = slot.as_ref().unwrap();
+                        // SAFETY: rr × [i1, i2e) ⊆ the declared write
+                        // Z[rows, panel_top..n] (i1 ≥ panel_top).
                         wy.apply(Side::Right, Trans::No, unsafe { z.view(rr.clone(), i1..i2e) });
                     }
                 },
@@ -297,10 +320,12 @@ pub fn reduce_to_banded_par(
     let n = a.rows();
     let plans = panel_plans(n, cfg.r, cfg.p);
     let arena = Stage1Arena::new(&plans);
-    let sa = SharedMat::new(a);
-    let sb = SharedMat::new(b);
-    let sq = SharedMat::new(q);
-    let sz = SharedMat::new(z);
+    // Tagged handles: the concurrency auditor (when active) matches every
+    // view against the issuing task's declared regions for that MatId.
+    let sa = SharedMat::tagged(a, MatId::A);
+    let sb = SharedMat::tagged(b, MatId::B);
+    let sq = SharedMat::tagged(q, MatId::Q);
+    let sz = SharedMat::tagged(z, MatId::Z);
     let graph = build_graph(&sa, &sb, &sq, &sz, &arena, &plans, cfg);
     match mode {
         ExecMode::Threads(t) => {

@@ -139,8 +139,15 @@ pub fn build_graph<'a>(
         let mut gen_acc = generate_accesses(n, r, j1, qg);
         gen_acc.push(Access::write(MatId::Slots, gi..gi + 1, 0..1));
         g.add(TaskClass::Gen2, gen_acc, move || {
-            let store =
-                generate_group(unsafe { a.view(0..n, 0..n) }, unsafe { b.view(0..n, 0..n) }, n, r, j1, qg);
+            // SAFETY: `generate_group` needs whole-matrix views (the band
+            // geometry lives in the algorithm), but every element it
+            // touches lies inside this task's declared per-chase-step band
+            // rectangles (`generate_accesses`); the auditor records those
+            // declarations for these views.
+            let av = unsafe { a.view_full() };
+            // SAFETY: as above, for the `B` band rectangles.
+            let bv = unsafe { b.view_full() };
+            let store = generate_group(av, bv, n, r, j1, qg);
             *slot.lock().unwrap() = Some(store);
         });
 
@@ -172,15 +179,25 @@ pub fn build_graph<'a>(
                 move || {
                     let guard = slot.lock().unwrap();
                     let store = guard.as_ref().expect("Gen2 fills slot");
-                    z_ragged_for(store, k, unsafe { a.view(0..n, 0..n) }, unsafe {
-                        b.view(0..n, 0..n)
-                    });
+                    // SAFETY: `z_ragged_for` takes whole-matrix views but
+                    // touches only rows [s5, e4(j)) × the staircase
+                    // columns ⊆ this task's declared band rectangle
+                    // (declaration-granularity; see `SharedMat::view_full`).
+                    let av = unsafe { a.view_full() };
+                    // SAFETY: as above, for `B`.
+                    let bv = unsafe { b.view_full() };
+                    z_ragged_for(store, k, av, bv);
                     if let Some(za) = z_apply_for(store, k) {
                         let za = Arc::new(za);
                         if za.s5 > look_lo {
+                            // SAFETY: [look_lo, s5) × [ci1, ci2e) ⊆ the
+                            // declared write A[look_lo..max(e4max, s5),
+                            // ci1..ci2e] (za.* match the builder's
+                            // geometry; s5 is clamped to n).
                             za.wy.apply(Side::Right, Trans::No, unsafe {
                                 a.view(look_lo..za.s5.min(n), za.ci1..za.ci2e)
                             });
+                            // SAFETY: same rectangle, declared on `B`.
                             za.wy.apply(Side::Right, Trans::No, unsafe {
                                 b.view(look_lo..za.s5.min(n), za.ci1..za.ci2e)
                             });
@@ -203,9 +220,13 @@ pub fn build_graph<'a>(
                     move || {
                         let za = arena.zcache[gi][k].lock().unwrap().clone();
                         if let Some(za) = za {
+                            // SAFETY: rr × [ci1, ci2e) is this slice's
+                            // declared write on A (za.ci* equal the
+                            // builder's ci1/ci2e); row slices disjoint.
                             za.wy.apply(Side::Right, Trans::No, unsafe {
                                 a.view(rr.clone(), za.ci1..za.ci2e)
                             });
+                            // SAFETY: same rectangle, declared on `B`.
                             za.wy.apply(Side::Right, Trans::No, unsafe {
                                 b.view(rr.clone(), za.ci1..za.ci2e)
                             });
@@ -230,6 +251,9 @@ pub fn build_graph<'a>(
                     for k in (0..kmax).rev() {
                         let za = arena.zcache[gi][k].lock().unwrap().clone();
                         if let Some(za) = za {
+                            // SAFETY: rr × [ci1, ci2e) ⊆ the declared
+                            // write Z[rows, j1+1..n] (ci1 = j1+kr+1 ≥
+                            // j1+1, ci2e ≤ n); row slices disjoint.
                             za.wy.apply(Side::Right, Trans::No, unsafe {
                                 z.view(rr.clone(), za.ci1..za.ci2e)
                             });
@@ -265,11 +289,17 @@ pub fn build_graph<'a>(
                         let qa = Arc::new(qa);
                         let ce = c_look.min(n);
                         if qa.c5 < ce {
+                            // SAFETY: [ci1, ci2e) × [c5, ce) ⊆ the
+                            // declared write A[ci1..ci2e, c5..c_look]
+                            // (qa.c5 ≥ the builder's clamped c5).
                             qa.wy.apply(Side::Left, Trans::Yes, unsafe {
                                 a.view(qa.ci1..qa.ci2e, qa.c5..ce)
                             });
                         }
                         if qa.c6 < ce {
+                            // SAFETY: [ci1, ci2e) × [c6, ce) ⊆ the
+                            // declared write B[ci1..ci2e, c5..c_look]
+                            // (c6 ≥ c5 for every k).
                             qa.wy.apply(Side::Left, Trans::Yes, unsafe {
                                 b.view(qa.ci1..qa.ci2e, qa.c6..ce)
                             });
@@ -294,12 +324,17 @@ pub fn build_graph<'a>(
                         if let Some(qa) = qa {
                             let c0a = qa.c5.max(cc.start);
                             if c0a < cc.end {
+                                // SAFETY: [ci1, ci2e) × [c0a, cc.end) ⊆
+                                // this slice's declared write
+                                // A[ci1..ci2e, cols] (c0a ≥ cc.start).
                                 qa.wy.apply(Side::Left, Trans::Yes, unsafe {
                                     a.view(qa.ci1..qa.ci2e, c0a..cc.end)
                                 });
                             }
                             let c0b = qa.c6.max(cc.start);
                             if c0b < cc.end {
+                                // SAFETY: as above for `B` (c0b ≥
+                                // cc.start).
                                 qa.wy.apply(Side::Left, Trans::Yes, unsafe {
                                     b.view(qa.ci1..qa.ci2e, c0b..cc.end)
                                 });
@@ -325,6 +360,9 @@ pub fn build_graph<'a>(
                     for k in (0..kmax).rev() {
                         let qa = arena.qcache[gi][k].lock().unwrap().clone();
                         if let Some(qa) = qa {
+                            // SAFETY: rr × [ci1, ci2e) ⊆ the declared
+                            // write Q[rows, j1+1..n] (ci1 = j1+kr+1 ≥
+                            // j1+1, ci2e ≤ n); row slices disjoint.
                             qa.wy.apply(Side::Right, Trans::No, unsafe {
                                 q.view(rr.clone(), qa.ci1..qa.ci2e)
                             });
@@ -366,10 +404,12 @@ pub fn reduce_blocked_par(
     let n = a.rows();
     let groups = sweep_groups(n, cfg.q);
     let arena = Stage2Arena::new(n, cfg.r, &groups);
-    let sa = SharedMat::new(a);
-    let sb = SharedMat::new(b);
-    let sq = SharedMat::new(q);
-    let sz = SharedMat::new(z);
+    // Tagged handles: the concurrency auditor (when active) matches every
+    // view against the issuing task's declared regions for that MatId.
+    let sa = SharedMat::tagged(a, MatId::A);
+    let sb = SharedMat::tagged(b, MatId::B);
+    let sq = SharedMat::tagged(q, MatId::Q);
+    let sz = SharedMat::tagged(z, MatId::Z);
     let graph = build_graph(&sa, &sb, &sq, &sz, &arena, &groups, cfg);
     match mode {
         ExecMode::Threads(t) => {

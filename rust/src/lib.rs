@@ -33,6 +33,11 @@
 //! * **L1 (Pallas)** — `python/compile/kernels/`: tiled WY block-reflector
 //!   kernels, validated against a pure-jnp oracle.
 #![warn(missing_docs)]
+// Every `unsafe` block must carry a `// SAFETY:` comment stating the
+// invariant it relies on; CI promotes this to an error (`-D warnings`).
+// The concurrency auditor (`coordinator::audit`) checks the view-range
+// half of those claims at run time.
+#![warn(clippy::undocumented_unsafe_blocks)]
 
 pub mod api;
 pub mod baselines;

@@ -56,6 +56,8 @@ pub fn larf_left(v: &[f64], tau: f64, c: MatMut<'_>) {
     let vm = as_col(v);
     // w = Cᵀ v (n×1)
     {
+        // SAFETY: `w` is a live local Vec of n elements, exclusively
+        // borrowed for this block only.
         let wm = unsafe { MatMut::from_raw_parts(w.as_mut_ptr(), n, 1, n) };
         gemm(1.0, c.rb(), Trans::Yes, vm, Trans::No, 0.0, wm);
     }
@@ -77,6 +79,8 @@ pub fn larf_right(v: &[f64], tau: f64, c: MatMut<'_>) {
     let vm = as_col(v);
     // w = C v (m×1)
     {
+        // SAFETY: `w` is a live local Vec of m elements, exclusively
+        // borrowed for this block only.
         let wm = unsafe { MatMut::from_raw_parts(w.as_mut_ptr(), m, 1, m) };
         gemm(1.0, c.rb(), Trans::No, vm, Trans::No, 0.0, wm);
     }

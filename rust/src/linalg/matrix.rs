@@ -176,8 +176,11 @@ pub struct MatRef<'a> {
     _marker: PhantomData<&'a f64>,
 }
 
-// Views are plain borrows of f64 data; sharing across threads is safe.
+// SAFETY: a `MatRef` is a plain shared borrow of `f64` data (no interior
+// mutability, no thread affinity); sending it to another thread is safe.
 unsafe impl Send for MatRef<'_> {}
+// SAFETY: shared reads of `f64` data from multiple threads are safe; the
+// view offers no mutation.
 unsafe impl Sync for MatRef<'_> {}
 
 impl<'a> MatRef<'a> {
@@ -216,6 +219,9 @@ impl<'a> MatRef<'a> {
     #[inline]
     pub fn at(&self, i: usize, j: usize) -> f64 {
         debug_assert!(i < self.rows && j < self.cols, "index ({i},{j}) out of {}x{}", self.rows, self.cols);
+        // SAFETY: for in-bounds (i, j) — asserted in debug builds — the
+        // offset i + j*ld lies inside the ld*(cols-1)+rows elements the
+        // view's constructor contract guarantees live and readable.
         unsafe { *self.ptr.add(i + j * self.ld) }
     }
 
@@ -223,6 +229,9 @@ impl<'a> MatRef<'a> {
     #[inline]
     pub fn col(&self, j: usize) -> &'a [f64] {
         debug_assert!(j < self.cols);
+        // SAFETY: column j starts at offset j*ld and spans `rows`
+        // contiguous elements, all inside the constructor-guaranteed
+        // region; the returned borrow inherits the view's lifetime 'a.
         unsafe { std::slice::from_raw_parts(self.ptr.add(j * self.ld), self.rows) }
     }
 
@@ -231,6 +240,8 @@ impl<'a> MatRef<'a> {
         assert!(r.start <= r.end && r.end <= self.rows, "row range {r:?} out of {}", self.rows);
         assert!(c.start <= c.end && c.end <= self.cols, "col range {c:?} out of {}", self.cols);
         MatRef {
+            // SAFETY: the asserted ranges keep the offset (and the
+            // subview's extent, with the same ld) inside this view.
             ptr: unsafe { self.ptr.add(r.start + c.start * self.ld) },
             rows: r.end - r.start,
             cols: c.end - c.start,
@@ -280,6 +291,10 @@ pub struct MatMut<'a> {
     _marker: PhantomData<&'a mut f64>,
 }
 
+// SAFETY: a `MatMut` is an exclusive borrow of `f64` data (its contract
+// says no aliasing access for 'a), so moving it to another thread is safe
+// — exactly like `&mut [f64]`. Deliberately NOT `Sync`: `&MatMut` still
+// reads, and cross-thread shared access is the auditor's business.
 unsafe impl Send for MatMut<'_> {}
 
 impl<'a> MatMut<'a> {
@@ -318,6 +333,9 @@ impl<'a> MatMut<'a> {
     #[inline]
     pub fn at(&self, i: usize, j: usize) -> f64 {
         debug_assert!(i < self.rows && j < self.cols);
+        // SAFETY: in-bounds (i, j) — asserted in debug builds — stays
+        // inside the exclusively-borrowed region of the constructor
+        // contract.
         unsafe { *self.ptr.add(i + j * self.ld) }
     }
 
@@ -325,6 +343,9 @@ impl<'a> MatMut<'a> {
     #[inline]
     pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f64 {
         debug_assert!(i < self.rows && j < self.cols);
+        // SAFETY: as in `at`; `&mut self` makes the returned exclusive
+        // borrow unique (no other access through this view while it
+        // lives).
         unsafe { &mut *self.ptr.add(i + j * self.ld) }
     }
 
@@ -338,6 +359,9 @@ impl<'a> MatMut<'a> {
     #[inline]
     pub fn col_mut(&mut self, j: usize) -> &mut [f64] {
         debug_assert!(j < self.cols);
+        // SAFETY: column j is `rows` contiguous in-bounds elements, and
+        // `&mut self` guarantees no other borrow of them while the slice
+        // lives.
         unsafe { std::slice::from_raw_parts_mut(self.ptr.add(j * self.ld), self.rows) }
     }
 
@@ -357,6 +381,8 @@ impl<'a> MatMut<'a> {
         assert!(r.start <= r.end && r.end <= self.rows, "row range {r:?} out of {}", self.rows);
         assert!(c.start <= c.end && c.end <= self.cols, "col range {c:?} out of {}", self.cols);
         MatMut {
+            // SAFETY: the asserted ranges keep the subview inside this
+            // view's region; `self` is consumed, so exclusivity transfers.
             ptr: unsafe { self.ptr.add(r.start + c.start * self.ld) },
             rows: r.end - r.start,
             cols: c.end - c.start,
@@ -376,6 +402,9 @@ impl<'a> MatMut<'a> {
             _marker: PhantomData,
         };
         let right = MatMut {
+            // SAFETY: j ≤ cols (asserted), so the offset is in bounds;
+            // the two panels cover disjoint column ranges of a consumed
+            // exclusive view, so neither aliases the other.
             ptr: unsafe { self.ptr.add(j * self.ld) },
             rows: self.rows,
             cols: self.cols - j,
@@ -396,6 +425,9 @@ impl<'a> MatMut<'a> {
             _marker: PhantomData,
         };
         let bottom = MatMut {
+            // SAFETY: i ≤ rows (asserted); with the shared ld the two
+            // panels address disjoint row ranges of a consumed exclusive
+            // view (they interleave in memory but never overlap).
             ptr: unsafe { self.ptr.add(i) },
             rows: self.rows - i,
             cols: self.cols,

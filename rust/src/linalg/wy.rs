@@ -240,6 +240,10 @@ pub fn trmm_upper_right(trans: Trans, t: MatRef<'_>, mut x: MatMut<'_>) {
             for j in (0..k).rev() {
                 let tjj = t.at(j, j);
                 // x_j ← x_j·t_jj + Σ_{l<j} x_l·t_lj, reading x_l in place.
+                // SAFETY: every column of the exclusively-borrowed X is m
+                // in-bounds contiguous elements; xj (mutable, column j)
+                // and each xl (shared, column l < j) are distinct columns
+                // of one `ld ≥ m` layout, so the borrows never alias.
                 unsafe {
                     let base = x.ptr();
                     let ld = x.ld();
@@ -259,6 +263,9 @@ pub fn trmm_upper_right(trans: Trans, t: MatRef<'_>, mut x: MatMut<'_>) {
             // (X Tᵀ)_col j = Σ_{l ≥ j} X_l T[j,l] : process j forward.
             for j in 0..k {
                 let tjj = t.at(j, j);
+                // SAFETY: as in the `Trans::No` arm — xj is column j,
+                // each xl is a distinct column l > j; disjoint columns of
+                // an exclusive view cannot alias.
                 unsafe {
                     let base = x.ptr();
                     let ld = x.ld();

@@ -38,6 +38,8 @@ use crate::linalg::matrix::Matrix;
 use crate::serve::router::{check_square_pencil, ShardRouter};
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
+#[cfg(any(feature = "audit", debug_assertions))]
+use std::sync::atomic::AtomicBool;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -53,6 +55,13 @@ struct Job {
 struct TicketShared {
     slot: Mutex<Option<Result<Arc<HtDecomposition>>>>,
     cv: Condvar,
+    /// Concurrency-audit shadow (`coordinator::audit`): set when the
+    /// dispatcher fills the ticket. A second fill — which would clobber a
+    /// result a waiter may already have taken, or signal a job that ran
+    /// twice — trips an assert. Absent from release builds without the
+    /// `audit` feature.
+    #[cfg(any(feature = "audit", debug_assertions))]
+    filled: AtomicBool,
 }
 
 /// Handle to one submitted job; redeem with [`JobTicket::wait`].
@@ -147,7 +156,12 @@ impl SubmitHandle {
         check_square_pencil(&a, &b)?;
         let shard = self.shared.router.shard_for(a.rows());
         let lane = &self.shared.lanes[shard];
-        let ticket = Arc::new(TicketShared { slot: Mutex::new(None), cv: Condvar::new() });
+        let ticket = Arc::new(TicketShared {
+            slot: Mutex::new(None),
+            cv: Condvar::new(),
+            #[cfg(any(feature = "audit", debug_assertions))]
+            filled: AtomicBool::new(false),
+        });
         {
             let mut st = lane.state.lock().unwrap();
             loop {
@@ -224,6 +238,15 @@ fn dispatcher_loop(shared: Arc<QueueShared>, shard: usize) {
         }))
         .unwrap_or_else(|_| Err(Error::runtime("serve: reduction panicked; job dropped")));
         shared.completed.fetch_add(1, Ordering::Relaxed);
+        // Ticket lifecycle audit: every accepted ticket is filled
+        // (completed-or-poisoned) exactly once. Jobs are moved out of the
+        // lane by `pop_front`, so a double fill can only mean a duplicated
+        // job — catch it here rather than as a clobbered result.
+        #[cfg(any(feature = "audit", debug_assertions))]
+        assert!(
+            !job.ticket.filled.swap(true, Ordering::Relaxed),
+            "concurrency audit failed: serve ticket filled twice (shard {shard})"
+        );
         *job.ticket.slot.lock().unwrap() = Some(result);
         job.ticket.cv.notify_all();
     }

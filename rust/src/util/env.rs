@@ -14,6 +14,7 @@
 //! |--------------------------|---------|
 //! | `PALLAS_POOL_THREADS`    | worker-team size *including* the caller ([`crate::coordinator::pool::global`]) |
 //! | `PALLAS_ASSIST`          | `1`/`true`: work-assisting dynamic panel scheduling as the process default ([`crate::coordinator::assist`]) |
+//! | `PALLAS_AUDIT`           | `1`/`true` forces the concurrency auditor on, anything else forces it off; unset defers to the `audit` feature (audit-capable builds only — see `coordinator::audit`) |
 //! | `PALLAS_BENCH_SOFT`      | `1`/`true`: timing-sensitive bench asserts warn instead of aborting |
 //! | `PALLAS_BENCH_TOL`       | multiplier `≥ 1` relaxing timing-sensitive bench thresholds |
 //! | `PALLAS_STRESS_ITERS`    | iteration count for the pool stress hammer |
@@ -82,6 +83,15 @@ pub fn pool_threads() -> Option<usize> {
 /// points override it in both directions.
 pub fn assist() -> bool {
     var("ASSIST").map(|v| parse_flag(&v)).unwrap_or(false)
+}
+
+/// Explicit concurrency-auditor setting (`PALLAS_AUDIT`): `Some(true)` /
+/// `Some(false)` when the knob is set, `None` when unset (the
+/// audit-capable build then falls back to its compile-time default — on
+/// under `--features audit`, off in plain debug builds). Read once (and
+/// cached) by `coordinator::audit::active`.
+pub fn audit() -> Option<bool> {
+    var("AUDIT").map(|v| parse_flag(&v))
 }
 
 /// Whether the benches run in *soft* mode (`PALLAS_BENCH_SOFT`): the
@@ -234,6 +244,21 @@ mod tests {
         let got = first_from(|n| env.get(n).cloned(), "ASSIST");
         assert!(!got.map(|v| parse_flag(&v)).unwrap_or(false), "canonical 0 wins over legacy 1");
         assert_eq!(first_from(|_| None, "ASSIST"), None, "unset means static default");
+    }
+
+    #[test]
+    fn audit_knob_is_tri_state() {
+        // Set-to-truthy / set-to-falsy / unset must stay distinguishable:
+        // the auditor treats unset as "defer to the compile-time default".
+        let on = env_of(&[("PALLAS_AUDIT", "1")]);
+        assert_eq!(first_from(|n| on.get(n).cloned(), "AUDIT").map(|v| parse_flag(&v)), Some(true));
+        let off = env_of(&[("PARAHT_AUDIT", "0")]);
+        assert_eq!(
+            first_from(|n| off.get(n).cloned(), "AUDIT").map(|v| parse_flag(&v)),
+            Some(false),
+            "explicitly-off via the legacy alias"
+        );
+        assert_eq!(first_from(|_| None, "AUDIT").map(|v| parse_flag(&v)), None, "unset defers");
     }
 
     #[test]

@@ -1,0 +1,199 @@
+//! End-to-end tests for the concurrency auditor (`coordinator::audit`):
+//! the seeded-violation negative tests the subsystem exists for (a view
+//! escaping its declared region; a dependency edge deliberately dropped
+//! through the epoch window), activation gating, and audit-on smoke runs
+//! of the claim counter, the serving queue, and a full threaded reduction.
+//!
+//! This file owns its process, which is what makes flipping the global
+//! [`audit::set_override`] safe: the lib unit tests and the other
+//! integration binaries never see it. Tests here serialize on a local
+//! mutex because the override is process-global even within this binary.
+#![cfg(any(feature = "audit", debug_assertions))]
+
+use paraht::api::{reduce_seq, HtSession};
+use paraht::config::Config;
+use paraht::coordinator::access::{Access, MatId};
+use paraht::coordinator::assist::{assist_loop, ClaimCounter};
+use paraht::coordinator::audit;
+use paraht::coordinator::graph::{TaskClass, TaskGraph};
+use paraht::coordinator::slices::SharedMat;
+use paraht::linalg::matrix::Matrix;
+use paraht::pencil::random::random_pencil;
+use paraht::serve::{ServeConfig, ShardRouter, SubmitQueue};
+use paraht::util::proptest::max_abs_diff;
+use paraht::util::rng::Rng;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+/// Serialize every test in this binary: they all manipulate the
+/// process-global auditor override. Robust against a failed (panicked)
+/// test poisoning the lock — the next test just takes it over.
+fn exclusive() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    payload
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_else(|| "<non-string panic>".into())
+}
+
+#[test]
+fn view_exceeding_declared_region_is_caught_with_diagnostics() {
+    let _lock = exclusive();
+    audit::set_override(Some(true));
+    let mut m = Matrix::zeros(8, 8);
+    let sh = SharedMat::tagged(&mut m, MatId::A);
+    let mut g = TaskGraph::new();
+    // Declares a 2×2 write but views 3×3 — the off-by-one the auditor
+    // exists to catch.
+    g.add(TaskClass::GL, vec![Access::write(MatId::A, 0..2, 0..2)], || {
+        // SAFETY: single task, in bounds; intentionally outside the
+        // declaration so the auditor (not UB) trips.
+        let mut v = unsafe { sh.view(0..3, 0..3) };
+        v.set(0, 0, 1.0);
+    });
+    g.finalize();
+    let err = catch_unwind(AssertUnwindSafe(move || g.run_sequential())).unwrap_err();
+    let msg = panic_message(err);
+    assert!(msg.contains("concurrency audit failed"), "{msg}");
+    assert!(msg.contains("containment"), "{msg}");
+    assert!(msg.contains("task 0"), "names the offending task: {msg}");
+    assert!(msg.contains("A[0..3, 0..3]"), "names the actual rectangle: {msg}");
+    assert!(msg.contains("A[0..2, 0..2]"), "names the declared rectangle: {msg}");
+    audit::set_override(None);
+}
+
+#[test]
+fn deliberately_dropped_edge_is_reported_as_named_race() {
+    let _lock = exclusive();
+    audit::set_override(Some(true));
+    let mut m = Matrix::zeros(8, 8);
+    let sh = SharedMat::tagged(&mut m, MatId::A);
+    let mut g = TaskGraph::new();
+    // Task 0 writes A[0..4, 0..4]...
+    g.add(TaskClass::Upd2, vec![Access::write(MatId::A, 0..4, 0..4)], || {
+        // SAFETY: in bounds, inside the declaration.
+        let mut v = unsafe { sh.view(0..4, 0..4) };
+        v.set(0, 0, 1.0);
+    });
+    // ...then three epoch boundaries with B-only filler tasks push task 0
+    // out of the conflict-scan window (EPOCH_WINDOW = 3), so the
+    // conflicting task below gets NO edge — the exact failure mode of a
+    // misused `new_epoch` (the fillers do not collectively rewrite A).
+    for i in 0..3usize {
+        g.new_epoch();
+        g.add(TaskClass::LB, vec![Access::write(MatId::B, i..i + 1, 0..1)], || {});
+    }
+    g.new_epoch();
+    // Task 4 overlaps task 0 on A[2..4, 2..4] with no ordering path.
+    g.add(TaskClass::Upd2, vec![Access::write(MatId::A, 2..6, 2..6)], || {
+        // SAFETY: in bounds, inside the declaration.
+        let mut v = unsafe { sh.view(2..6, 2..6) };
+        v.set(0, 0, 2.0);
+    });
+    assert!(
+        g.tasks[4].deps.is_empty(),
+        "precondition: the epoch window must actually have dropped the edge"
+    );
+    g.finalize();
+    let err = catch_unwind(AssertUnwindSafe(move || g.run_sequential())).unwrap_err();
+    let msg = panic_message(err);
+    assert!(msg.contains("race"), "{msg}");
+    assert!(msg.contains("no path 0 → 4"), "names both tasks and the missing path: {msg}");
+    assert!(msg.contains("A[0..4, 0..4]"), "names task 0's rectangle: {msg}");
+    assert!(msg.contains("A[2..6, 2..6]"), "names task 4's rectangle: {msg}");
+    audit::set_override(None);
+}
+
+#[test]
+fn scope_is_skipped_when_inactive_or_nothing_is_declared() {
+    let _lock = exclusive();
+    // Accessless graphs have nothing to check even with the auditor on.
+    audit::set_override(Some(true));
+    let mut g = TaskGraph::new();
+    g.add(TaskClass::Gemm, vec![], || {});
+    g.finalize();
+    assert!(audit::scope_for(&g).is_none(), "accessless graph needs no scope");
+    // A forced-off auditor skips scopes entirely, declared or not.
+    audit::set_override(Some(false));
+    assert!(!audit::active());
+    let mut g = TaskGraph::new();
+    g.add(TaskClass::GL, vec![Access::write(MatId::A, 0..2, 0..2)], || {});
+    g.finalize();
+    assert!(audit::scope_for(&g).is_none(), "forced-off auditor builds no scope");
+    audit::set_override(Some(true));
+    assert!(audit::active());
+    assert!(audit::scope_for(&g).is_some(), "forced-on auditor audits declared graphs");
+    audit::set_override(None);
+}
+
+#[test]
+fn claim_counter_uniqueness_shadow_is_armed_under_audit() {
+    let _lock = exclusive();
+    audit::set_override(Some(true));
+    // With the auditor on, the counter carries the hand-out shadow; a
+    // clean drain must pass it (each index handed out exactly once).
+    let c = ClaimCounter::new(64);
+    let mut got = Vec::new();
+    assist_loop(&c, |i| got.push(i));
+    assert_eq!(got, (0..64).collect::<Vec<_>>());
+    assert_eq!(c.claim(), None, "exhausted counter stays exhausted");
+    audit::set_override(None);
+}
+
+#[test]
+fn serve_tickets_complete_exactly_once_under_audit() {
+    let _lock = exclusive();
+    audit::set_override(Some(true));
+    // Flood a small queue and drain it across shutdown: every ticket must
+    // be filled exactly once (the dispatcher's lifecycle assert is armed
+    // in this build) and match the sequential oracle.
+    let mut rng = Rng::new(0xAD_01);
+    let cfg = ServeConfig {
+        shards: 2,
+        queue_capacity: 4,
+        base: Config { r: 4, p: 2, q: 2, ..Config::default() },
+        ..ServeConfig::default()
+    };
+    let q = SubmitQueue::new(ShardRouter::new(cfg).unwrap());
+    let h = q.handle();
+    let pencils: Vec<_> = (0..6).map(|_| random_pencil(12, &mut rng)).collect();
+    let tickets: Vec<_> =
+        pencils.iter().map(|p| h.submit(p.a.clone(), p.b.clone()).unwrap()).collect();
+    q.shutdown();
+    let eff = Config { r: 4, p: 2, q: 2, ..Config::default() }.clipped_for(12);
+    for (p, t) in pencils.iter().zip(tickets) {
+        let d = t.wait().expect("accepted ticket completes across shutdown");
+        let oracle = reduce_seq(&p.a, &p.b, &eff).unwrap();
+        assert_eq!(max_abs_diff(&d.h, &oracle.h), 0.0);
+    }
+    audit::set_override(None);
+}
+
+#[test]
+fn threaded_reduction_is_audit_clean_and_bitwise_the_oracle() {
+    let _lock = exclusive();
+    audit::set_override(Some(true));
+    // The positive half of the acceptance criteria: a real stage-1 +
+    // stage-2 graph run, fully audited (tagged handles, per-task context,
+    // end-of-batch check), finishes with zero violations and does not
+    // perturb a single bit. Non-divisible blocking exercises the clipped
+    // edge rectangles — exactly where an off-by-one would hide.
+    let mut rng = Rng::new(0xAD_02);
+    let pencil = random_pencil(45, &mut rng);
+    let cfg = Config { r: 4, p: 3, q: 3, slices: 6, ..Config::default() };
+    let oracle = reduce_seq(&pencil.a, &pencil.b, &cfg).unwrap();
+    let before = audit::recorded_total();
+    let mut session = HtSession::builder().config(cfg).threads(4).build().unwrap();
+    let run = session.reduce(&pencil.a, &pencil.b).unwrap();
+    assert!(audit::recorded_total() > before, "the audited run must record accesses");
+    assert_eq!(max_abs_diff(&run.h, &oracle.h), 0.0);
+    assert_eq!(max_abs_diff(&run.t, &oracle.t), 0.0);
+    assert_eq!(max_abs_diff(&run.q, &oracle.q), 0.0);
+    assert_eq!(max_abs_diff(&run.z, &oracle.z), 0.0);
+    audit::set_override(None);
+}

@@ -341,6 +341,37 @@ fn deprecated_shims_compile_and_delegate_unchanged() {
     assert!(run.traces.is_some(), "Trace mode still returns traces through the shim");
 }
 
+#[cfg(any(feature = "audit", debug_assertions))]
+#[test]
+fn audit_hooks_do_not_perturb_results() {
+    // The concurrency auditor's zero-interference contract: the same
+    // threaded reduction with the auditor forced off and forced on must be
+    // bitwise identical (the hooks only *observe* view rectangles), and
+    // the audited run must actually have recorded accesses. Flipping the
+    // process-global override concurrently with the other tests in this
+    // binary is benign either way: audited runs are audit-clean, and this
+    // very test is the proof the bits never move.
+    use paraht::coordinator::audit;
+    let mut rng = Rng::new(0xE0_0D);
+    let pencil = random_pencil(44, &mut rng);
+    let cfg = Config { r: 4, p: 3, q: 3, slices: 8, ..Config::default() };
+    let mut reduce = |cfg: &Config| {
+        let mut s = HtSession::builder().config(cfg.clone()).threads(4).build().unwrap();
+        s.reduce(&pencil.a, &pencil.b).unwrap()
+    };
+    audit::set_override(Some(false));
+    let off = reduce(&cfg);
+    audit::set_override(Some(true));
+    let before = audit::recorded_total();
+    let on = reduce(&cfg);
+    audit::set_override(None);
+    assert!(audit::recorded_total() > before, "the audited run must record accesses");
+    assert_eq!(max_abs_diff(&off.h, &on.h), 0.0, "audit hooks must not perturb H");
+    assert_eq!(max_abs_diff(&off.t, &on.t), 0.0, "audit hooks must not perturb T");
+    assert_eq!(max_abs_diff(&off.q, &on.q), 0.0, "audit hooks must not perturb Q");
+    assert_eq!(max_abs_diff(&off.z, &on.z), 0.0, "audit hooks must not perturb Z");
+}
+
 #[test]
 fn trace_recorder_sink_observes_identical_reduction() {
     // The TraceSink replacement for ExecMode::Trace: a recorder-equipped

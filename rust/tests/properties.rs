@@ -4,6 +4,7 @@
 //! application equivalence, over randomized square / rectangular /
 //! degenerate shapes.
 
+use paraht::coordinator::access::{MatId, Region};
 use paraht::linalg::gemm::{gemm, gemm_par, matmul, matmul_t, Trans};
 use paraht::linalg::householder::{larf_left, Reflector};
 use paraht::linalg::lu::LuFactor;
@@ -407,6 +408,94 @@ fn property_wy_equals_naive_reflector_application() {
 
         // The materialized Q is orthogonal at machine precision.
         check_rel("WY Q orth", orth_residual(&wy.form_q()), 1e-13)?;
+        Ok(())
+    });
+}
+
+/// Random half-open range over `0..=max`, biased toward the interesting
+/// degenerate shapes: ~1/4 zero-width (`k..k`, including the boundary
+/// positions 0 and `max`), ~1/8 reversed (`hi..lo`, which must behave as
+/// empty), the rest proper non-empty ranges.
+fn gen_range(rng: &mut Rng, max: usize) -> std::ops::Range<usize> {
+    match rng.below(8) {
+        0 | 1 => {
+            let k = rng.below(max + 1);
+            k..k
+        }
+        2 => {
+            let lo = rng.below(max);
+            let hi = lo + 1 + rng.below(max - lo);
+            hi..lo
+        }
+        _ => {
+            let lo = rng.below(max);
+            let hi = lo + 1 + rng.below(max - lo);
+            lo..hi
+        }
+    }
+}
+
+/// Element-level reference for the `Region` predicates: a point is in a
+/// region iff both its half-open ranges contain it.
+fn points(r: &Region, max: usize) -> Vec<(usize, usize)> {
+    (0..max)
+        .flat_map(|i| (0..max).map(move |j| (i, j)))
+        .filter(|&(i, j)| r.rows.contains(&i) && r.cols.contains(&j))
+        .collect()
+}
+
+#[test]
+fn property_region_intersects_matches_pointwise_reference_and_is_symmetric() {
+    const MAX: usize = 9;
+    for_each_case(300, 0x9140, |rng| {
+        let a = Region::new(MatId::A, gen_range(rng, MAX), gen_range(rng, MAX));
+        let same_mat = rng.below(4) != 0; // mostly same matrix, sometimes not
+        let b = Region::new(
+            if same_mat { MatId::A } else { MatId::B },
+            gen_range(rng, MAX),
+            gen_range(rng, MAX),
+        );
+        // Symmetry.
+        check_that("intersect symmetry", a.intersects(&b) == b.intersects(&a))?;
+        // Pointwise reference: regions intersect iff they share a point
+        // (on the same matrix).
+        let pa = points(&a, MAX);
+        let pb = points(&b, MAX);
+        let shared = same_mat && pa.iter().any(|p| pb.contains(p));
+        check_that("intersect = shares a point", a.intersects(&b) == shared)?;
+        // Empty regions are inert: no intersection, vacuously contained.
+        if a.is_empty() {
+            check_that("empty never intersects", !a.intersects(&b) && !b.intersects(&a))?;
+            check_that("empty is vacuously contained", b.contains(&a))?;
+            check_that("empty region spans no points", pa.is_empty())?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn property_region_contains_matches_pointwise_reference() {
+    const MAX: usize = 9;
+    for_each_case(300, 0x9141, |rng| {
+        let a = Region::new(MatId::A, gen_range(rng, MAX), gen_range(rng, MAX));
+        let same_mat = rng.below(4) != 0;
+        let b = Region::new(
+            if same_mat { MatId::A } else { MatId::B },
+            gen_range(rng, MAX),
+            gen_range(rng, MAX),
+        );
+        // Pointwise reference: a contains b iff every point of b is a
+        // point of a (and they name the same matrix, unless b is empty).
+        let pa = points(&a, MAX);
+        let pb = points(&b, MAX);
+        let reference = pb.is_empty() || (same_mat && pb.iter().all(|p| pa.contains(p)));
+        check_that("contains = pointwise subset", a.contains(&b) == reference)?;
+        // Containment of a non-empty region implies intersection.
+        if a.contains(&b) && !b.is_empty() {
+            check_that("contains(non-empty) implies intersects", a.intersects(&b))?;
+        }
+        // A region always contains itself.
+        check_that("contains is reflexive", a.contains(&a))?;
         Ok(())
     });
 }
