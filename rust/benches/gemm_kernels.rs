@@ -16,9 +16,21 @@
 //! in the JSON); assisting must be no slower than static at 4 threads on
 //! the largest square shape (soft mode / `PALLAS_BENCH_TOL` apply).
 //!
+//! Since the runtime-dispatched microkernels landed (`linalg::kernels`),
+//! a third sweep times every kernel variant this CPU can run — scalar
+//! always, AVX2+FMA / NEON when available — on the square sizes
+//! sequentially and at 4 threads on the largest (`kernels` in the JSON,
+//! with a GFLOP/s column per entry). The SIMD variant must be no slower
+//! than scalar on the largest sequential square shape (soft mode /
+//! `PALLAS_BENCH_TOL` apply). The sweep forces each variant via
+//! `kernels::with_kernel`, bypassing `PALLAS_KERNEL` — which still
+//! selects the kernel for every *other* section of this bench.
+//!
 //! Env knobs (canonical `PALLAS_` names; legacy `PARAHT_` aliases accepted
 //! — see `util::env`):
 //! * `PALLAS_GEMM_SIZES=128,256,512` — square sizes to sweep (default).
+//! * `PALLAS_KERNEL=scalar|avx2|neon|auto` — microkernel for the
+//!   non-kernel-sweep sections (`linalg::kernels`).
 //! * `PALLAS_BENCH_OUT=path` — JSON output path (default `BENCH_gemm.json`
 //!   in the working directory, i.e. `rust/` under `cargo bench`).
 //! * `PALLAS_POOL_THREADS` — worker-team size (see `coordinator::pool`).
@@ -30,6 +42,7 @@ use paraht::coordinator::assist::Schedule;
 use paraht::coordinator::slices::partition;
 use paraht::experiments::common;
 use paraht::linalg::gemm::{gemm, gemm_par, gemm_par_sched, Trans};
+use paraht::linalg::kernels::{self, Kernel};
 use paraht::linalg::matrix::Matrix;
 use paraht::util::flops;
 use paraht::util::rng::Rng;
@@ -214,6 +227,16 @@ struct SchedCase {
     assist_secs: f64,
 }
 
+struct KernelCase {
+    kernel: &'static str,
+    m: usize,
+    n: usize,
+    k: usize,
+    threads: usize,
+    secs: f64,
+    gflops: f64,
+}
+
 fn main() {
     flops::set_enabled(false); // measure the kernel, not the counter
     let sizes = paraht::util::env::gemm_sizes(&[128, 256, 512]);
@@ -335,6 +358,73 @@ fn main() {
         assist_cases.push(SchedCase { m, n, k, trans, static_secs: st, assist_secs: dy });
     }
 
+    // ---- Per-kernel-variant sweep (scalar vs AVX2 / NEON). ----
+    // Forces each variant this CPU can run via `kernels::with_kernel`
+    // (thread-local install; the pool's batch capture propagates it to the
+    // workers, so the 4-thread entry exercises the same inheritance path
+    // production batches do). `all_available()` lists scalar first, so the
+    // scalar baseline time is recorded before any SIMD variant is compared
+    // against it. Acceptance: no SIMD variant may be slower than scalar on
+    // the largest sequential square shape (10% noise slack ×
+    // PALLAS_BENCH_TOL; soft mode warns instead of aborting).
+    let variants = Kernel::all_available();
+    let mut kernel_cases: Vec<KernelCase> = Vec::new();
+    let mut scalar_big = f64::NAN;
+    let mut kernel_ok = true;
+    let mut kernel_msg = String::new();
+    let kernel_slack = 1.10 * common::bench_tol();
+    let names: Vec<&str> = variants.iter().map(|kv| kv.name()).collect();
+    println!("\nkernel variants on this CPU: {}", names.join(", "));
+    for &kv in &variants {
+        for &s in &sizes {
+            let a = Matrix::randn(s, s, &mut rng);
+            let b = Matrix::randn(s, s, &mut rng);
+            let secs =
+                kernels::with_kernel(kv, || time_gemm(&a, Trans::No, &b, Trans::No, s, s, 1));
+            let gflops = 2.0 * (s as f64).powi(3) / secs / 1e9;
+            println!(
+                "{:>6}  {s:>5} x {s:<5} k={s:<5} NN  threads=1  {secs:>9.4}s  {gflops:>7.2} GFLOP/s",
+                kv.name()
+            );
+            kernel_cases.push(KernelCase { kernel: kv.name(), m: s, n: s, k: s, threads: 1, secs, gflops });
+            if s == big {
+                if kv == Kernel::Scalar {
+                    scalar_big = secs;
+                } else if secs > scalar_big * kernel_slack {
+                    kernel_ok = false;
+                    kernel_msg = format!(
+                        "{} kernel slower than scalar on {big}x{big}x{big}: \
+                         {secs:.4}s vs {scalar_big:.4}s (ratio {:.2} > {kernel_slack:.2})",
+                        kv.name(),
+                        secs / scalar_big
+                    );
+                }
+            }
+        }
+        // One pooled entry at the largest size per variant: the batch
+        // captures the submitting thread's kernel, so this pins (and
+        // prices) the worker-inheritance path, not just the math.
+        let a = Matrix::randn(big, big, &mut rng);
+        let b = Matrix::randn(big, big, &mut rng);
+        let secs = kernels::with_kernel(kv, || {
+            time_gemm(&a, Trans::No, &b, Trans::No, big, big, VS_THREADS)
+        });
+        let gflops = 2.0 * (big as f64).powi(3) / secs / 1e9;
+        println!(
+            "{:>6}  {big:>5} x {big:<5} k={big:<5} NN  threads={VS_THREADS}  {secs:>9.4}s  {gflops:>7.2} GFLOP/s",
+            kv.name()
+        );
+        kernel_cases.push(KernelCase {
+            kernel: kv.name(),
+            m: big,
+            n: big,
+            k: big,
+            threads: VS_THREADS,
+            secs,
+            gflops,
+        });
+    }
+
     // Acceptance floor: ≥ 2× at 4 threads for the n=512-class multiply.
     // Timing-sensitive — soft mode / PALLAS_BENCH_TOL apply (CI runners
     // may have fewer than 4 physical cores). Evaluated here but asserted
@@ -378,6 +468,17 @@ fn main() {
     }
     j.push_str("  ],\n");
     let _ = writeln!(j, "  \"assist_no_slower_held\": {assist_ok},");
+    j.push_str("  \"kernels\": [\n");
+    for (i, c) in kernel_cases.iter().enumerate() {
+        let _ = write!(
+            j,
+            "    {{\"kernel\": \"{}\", \"m\": {}, \"n\": {}, \"k\": {}, \"threads\": {}, \"secs\": {:.6}, \"gflops\": {:.3}}}",
+            c.kernel, c.m, c.n, c.k, c.threads, c.secs, c.gflops
+        );
+        j.push_str(if i + 1 < kernel_cases.len() { ",\n" } else { "\n" });
+    }
+    j.push_str("  ],\n");
+    let _ = writeln!(j, "  \"simd_no_slower_held\": {kernel_ok},");
     let _ = write!(j, "  \"par_speedup_n{big}\": {{");
     for (i, &(th, s)) in speedups.iter().enumerate() {
         let _ = write!(j, "{}\"x{th}\": {s:.3}", if i > 0 { ", " } else { "" });
@@ -395,6 +496,7 @@ fn main() {
         common::bench_check(false, msg);
     }
     common::bench_check(assist_ok, &assist_msg);
+    common::bench_check(kernel_ok, &kernel_msg);
     if ok {
         println!("shape checks OK (gemm_par 4-thread speedup {s4:.2}x >= 2x)");
     }
@@ -404,6 +506,12 @@ fn main() {
     if assist_ok {
         println!(
             "static-vs-assist OK (assisting no slower at {VS_THREADS} threads on n={big})"
+        );
+    }
+    if kernel_ok {
+        println!(
+            "kernel variants OK ({} no slower than scalar on n={big})",
+            names.join("/")
         );
     }
 }

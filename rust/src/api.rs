@@ -68,6 +68,9 @@ pub fn reduce_seq(a: &Matrix, b: &Matrix, cfg: &Config) -> Result<HtDecompositio
     let n = a.rows();
     check_pencil_shape(a, b)?;
     cfg.validate_for(n)?;
+    // Every GEMM below (and in anything this call nests) runs under the
+    // config's resolved microkernel; restored on return or unwind.
+    let _kernel = crate::linalg::kernels::enter(cfg.resolved_kernel());
     let (mut h, mut t, mut q, mut z) = prepare_pencil(a, b);
 
     let t1 = Timer::start();
@@ -299,6 +302,17 @@ impl HtSessionBuilder {
         self
     }
 
+    /// Select the GEMM microkernel ([`crate::linalg::kernels`]): `Auto`
+    /// (the default) defers to the `PALLAS_KERNEL` knob / runtime feature
+    /// detection, an explicit choice overrides both (unavailable SIMD
+    /// requests clamp to scalar). For a fixed kernel results stay bitwise
+    /// invariant across threads, slicing and scheduling; across kernels
+    /// they differ by O(eps) — see `linalg::kernels`.
+    pub fn kernel(mut self, choice: crate::linalg::KernelChoice) -> Self {
+        self.cfg.kernel = choice;
+        self
+    }
+
     /// Clip the stage-1 bandwidth to `min(r, n - 1)` per pencil instead of
     /// rejecting `r >= n` — the small-pencil throughput mode that lets one
     /// session with the paper tuning serve [`HtSession::reduce_batch`]
@@ -488,6 +502,10 @@ impl HtSession {
         cfg: &Config,
     ) -> Result<(HtDecomposition, Option<(TaskTrace, TaskTrace)>)> {
         let n = a.rows();
+        // Install the config's microkernel on the submitting thread; the
+        // pool captures it into every stage batch, so graph tasks on the
+        // workers compute under the same kernel (see `coordinator::pool`).
+        let _kernel = crate::linalg::kernels::enter(cfg.resolved_kernel());
         self.ensure_workspace(n, cfg);
         let capture = self.capture;
         let pool = self.pool;
@@ -744,6 +762,15 @@ mod tests {
         assert!(s.config().dynamic_schedule);
         let s = HtSession::builder().build().unwrap();
         assert!(!s.config().dynamic_schedule, "gate defaults off");
+    }
+
+    #[test]
+    fn builder_kernel_setter_round_trips() {
+        use crate::linalg::KernelChoice;
+        let s = HtSession::builder().kernel(KernelChoice::Scalar).build().unwrap();
+        assert_eq!(s.config().kernel, KernelChoice::Scalar);
+        let s = HtSession::builder().build().unwrap();
+        assert_eq!(s.config().kernel, KernelChoice::Auto, "kernel defaults to auto");
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Algorithm configuration (the paper's tuning parameters).
 
 use crate::error::{Error, Result};
+use crate::linalg::kernels::{Kernel, KernelChoice};
 
 /// Tuning parameters of the two-stage reduction.
 ///
@@ -31,6 +32,14 @@ pub struct Config {
     pub dynamic_schedule: bool,
     /// Offload large WY applications to the PJRT runtime when available.
     pub use_pjrt: bool,
+    /// GEMM microkernel selection ([`crate::linalg::kernels`]). `Auto`
+    /// (the default) defers to the `PALLAS_KERNEL` env knob / runtime
+    /// feature detection; an explicit choice overrides both (clamped to
+    /// scalar when the requested SIMD is unavailable). Changes per-term
+    /// rounding (fused vs unfused), never the accumulation order, so
+    /// results for a *fixed* kernel stay bitwise invariant across
+    /// threads/slicing/scheduling; across kernels they differ by O(eps).
+    pub kernel: KernelChoice,
     /// RNG seed for workload generation.
     pub seed: u64,
 }
@@ -46,6 +55,7 @@ impl Default for Config {
             lookahead: true,
             dynamic_schedule: false,
             use_pjrt: false,
+            kernel: KernelChoice::Auto,
             seed: 0x5EED,
         }
     }
@@ -148,6 +158,20 @@ impl Config {
         cfg
     }
 
+    /// The concrete microkernel this configuration runs with: `Auto`
+    /// resolves through the process default (`PALLAS_KERNEL`, then runtime
+    /// feature detection), an explicit choice through
+    /// [`Kernel::detect`] (which clamps unavailable SIMD requests to
+    /// scalar). Driver entry points install this on the executing threads;
+    /// the serving layer mixes its id into cache keys and fingerprints so
+    /// results computed under different kernels never alias.
+    pub fn resolved_kernel(&self) -> Kernel {
+        match self.kernel {
+            KernelChoice::Auto => crate::linalg::kernels::process_default(),
+            choice => Kernel::detect(choice),
+        }
+    }
+
     /// Effective slice count for apply tasks.
     pub fn effective_slices(&self) -> usize {
         if self.slices > 0 {
@@ -168,6 +192,19 @@ mod tests {
         assert_eq!((c.r, c.p, c.q), (16, 8, 8));
         assert!(c.validate().is_ok());
         assert!(!c.dynamic_schedule, "work assisting must be opt-in");
+        assert_eq!(c.kernel, KernelChoice::Auto, "kernel selection defaults to auto");
+    }
+
+    #[test]
+    fn kernel_choice_resolves_and_survives_clipping() {
+        // An explicit scalar request resolves to the scalar kernel on every
+        // platform, and the process-default path (Auto) returns one of the
+        // runtime-available variants.
+        let c = Config { kernel: KernelChoice::Scalar, ..Config::default() };
+        assert_eq!(c.resolved_kernel(), Kernel::Scalar);
+        assert!(c.clipped_for(10).kernel == KernelChoice::Scalar, "clipping must not drop the kernel");
+        let auto = Config::default().resolved_kernel();
+        assert!(Kernel::all_available().contains(&auto));
     }
 
     #[test]

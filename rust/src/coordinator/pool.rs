@@ -42,7 +42,14 @@
 //! they compute: dependency edges still force a valid topological order,
 //! and the data-parallel entry points keep the exact panel split of the
 //! scoped-spawn implementation, so `tests/equivalence.rs` continues to pin
-//! every parallel run bitwise to the sequential oracle.
+//! every parallel run bitwise to the sequential oracle. Part of "what they
+//! compute" is the GEMM microkernel variant
+//! ([`crate::linalg::kernels`]): every batch captures the submitter's
+//! thread-current kernel at submission and installs it around each task,
+//! so pool workers — whose own thread-local state is whatever the
+//! *previous* batch left — always run under the submitter's kernel and
+//! the per-kernel bitwise contract survives work stealing, nested
+//! submission and batch mode.
 //!
 //! **Panics.** A panicking job poisons its batch: the first payload is
 //! captured, the remaining tasks are drained *without running* (their
@@ -127,6 +134,11 @@ struct Batch {
     /// FIFO. Only valid for dependency-free batches (`pending`/`succs`
     /// empty) — the counter has no notion of edges.
     assist: Option<ClaimCounter>,
+    /// The submitter's GEMM kernel at submission time
+    /// ([`crate::linalg::kernels::current`]), installed around every task
+    /// so helpers compute with the same microkernel as the submitting
+    /// thread (see the module's Determinism notes).
+    kernel: crate::linalg::kernels::Kernel,
     /// Concurrency-audit scope ([`super::audit`]) for this batch, if the
     /// auditor is active and the graph declared accesses. Executors enter
     /// the per-task context around each closure; the submitter runs the
@@ -253,6 +265,10 @@ impl Batch {
         // data-parallel views must not attribute to the enclosing task).
         #[cfg(any(feature = "audit", debug_assertions))]
         let _audit = audit::enter_task(self.scope.as_ref(), task);
+        // Run under the submitter's GEMM kernel, whatever this thread's
+        // own thread-local state is (restored on drop — including when the
+        // closure panics, so a poisoned batch cannot leak an override).
+        let _kernel = crate::linalg::kernels::enter(self.kernel);
         let result = if self.poisoned.load(Ordering::Acquire) {
             // Batch already failing: cancel (drop) instead of running.
             // The drop itself is guarded too — a closure owning a value
@@ -417,6 +433,7 @@ impl WorkerPool {
             helpers: AtomicUsize::new(0),
             max_helpers: threads - 1,
             assist: None,
+            kernel: crate::linalg::kernels::current(),
             #[cfg(any(feature = "audit", debug_assertions))]
             scope,
         });
@@ -524,6 +541,7 @@ impl WorkerPool {
             helpers: AtomicUsize::new(0),
             max_helpers: workers - 1,
             assist: Some(ClaimCounter::new(n)),
+            kernel: crate::linalg::kernels::current(),
             // Data-parallel batches declare no regions: nothing to audit
             // (the claim counter carries its own uniqueness shadow).
             #[cfg(any(feature = "audit", debug_assertions))]
@@ -923,6 +941,32 @@ mod tests {
             .collect();
         pool.run_tasks_sched(tasks, 4, Schedule::Dynamic);
         assert_eq!(done.load(Ordering::SeqCst), 12);
+    }
+
+    #[test]
+    fn batch_tasks_run_under_the_submitters_kernel() {
+        use crate::linalg::kernels::{self, Kernel};
+        // Workers' own thread-local state is unrelated to the submitter's;
+        // the batch capture must make every task observe the submitter's
+        // kernel — on both schedules.
+        let pool = WorkerPool::new(2);
+        for sched in [Schedule::Static, Schedule::Dynamic] {
+            let ok = AtomicUsize::new(0);
+            kernels::with_kernel(Kernel::Scalar, || {
+                let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..16)
+                    .map(|_| {
+                        let ok = &ok;
+                        Box::new(move || {
+                            if kernels::current() == Kernel::Scalar {
+                                ok.fetch_add(1, Ordering::SeqCst);
+                            }
+                        }) as Box<dyn FnOnce() + Send + '_>
+                    })
+                    .collect();
+                pool.run_tasks_sched(tasks, 3, sched);
+            });
+            assert_eq!(ok.load(Ordering::SeqCst), 16, "{sched:?}");
+        }
     }
 
     #[test]

@@ -9,21 +9,34 @@
 //! the edge-case tails are shared too: short tiles are zero-padded to full
 //! micro-panels and only the valid `mr×nr` corner is written back).
 //!
+//! The microkernel itself comes in runtime-dispatched variants
+//! ([`super::kernels`]): the portable scalar reference, AVX2+FMA on
+//! x86-64, NEON on aarch64 — selected once per process via
+//! `PALLAS_KERNEL` / [`crate::config::Config::kernel`] and resolved here
+//! once per [`gemm`] call from the thread-local [`kernels::current`].
+//! All variants share the `MR×NR` tile and the pack layout, so the
+//! blocking and panel geometry below are kernel-independent.
+//!
 //! **Determinism contract** (load-bearing — the parallel coordinator pins
-//! its output bitwise to the sequential oracle): every element `C[i,j]`
-//! accumulates `op(A)[i,l]·op(B)[l,j]` in ascending `l` order into its own
-//! scalar accumulator, one `KC`-block at a time, and receives
+//! its output bitwise to the sequential oracle): *for a fixed kernel*,
+//! every element `C[i,j]` accumulates `op(A)[i,l]·op(B)[l,j]` in ascending
+//! `l` order into its own accumulator (a scalar or a private SIMD lane —
+//! lanes never mix), one `KC`-block at a time, and receives
 //! `alpha·(block sum)` once per `KC` block. Neither the `m`/`n` blocking
 //! nor the position of the element inside a tile affects that order, so the
 //! result is *bitwise invariant* under row/column slicing — computing a
 //! column slice of `C` gives exactly the bits of the corresponding columns
 //! of the full product. [`gemm_par`] and the coordinator's sliced apply
-//! tasks rely on this.
+//! tasks rely on this. *Across* kernels the bits differ by O(eps) (fused
+//! vs unfused per-term rounding); the scalar kernel is the cross-kernel
+//! reference — see `super::kernels` and `tests/kernels.rs`.
 //!
 //! Absolute throughput is recorded by `benches/gemm_kernels.rs` into
-//! `BENCH_gemm.json` (see EXPERIMENTS.md §Perf); all paper plots are
-//! relative so the algorithms only need a *consistent* GEMM.
+//! `BENCH_gemm.json` (per kernel variant, with a GFLOP/s column — see
+//! EXPERIMENTS.md §Perf); all paper plots are relative so the algorithms
+//! only need a *consistent* GEMM.
 
+use super::kernels::{self, Kernel};
 use super::matrix::{MatMut, MatRef, Matrix};
 use crate::coordinator::assist::{self, Schedule};
 use crate::coordinator::pool;
@@ -40,10 +53,7 @@ pub enum Trans {
     Yes,
 }
 
-/// Microkernel tile height (rows of `C` per register tile).
-pub const MR: usize = 8;
-/// Microkernel tile width (columns of `C` per register tile).
-pub const NR: usize = 4;
+pub use super::kernels::{MR, NR};
 /// Cache block size in the k (inner) dimension: `MR·KC` doubles ≈ 16 KiB
 /// per A micro-panel, `KC·NC` ≈ 1 MiB for the packed B panel.
 const KC: usize = 256;
@@ -98,7 +108,11 @@ pub fn gemm(alpha: f64, a: MatRef<'_>, ta: Trans, b: MatRef<'_>, tb: Trans, beta
         return;
     }
     flops::add(2 * (m as u64) * (n as u64) * (k as u64));
-    gemm_packed(alpha, a, ta, b, tb, c);
+    // Resolve the microkernel variant once per call from the thread-local
+    // override (installed by the drivers / pool workers from
+    // `Config::resolved_kernel`), falling back to the process default.
+    let kernel = kernels::current();
+    gemm_packed(alpha, a, ta, b, tb, c, kernel);
 }
 
 /// Apply the `beta` prescale to `C` (exactly as LAPACK: `beta == 0`
@@ -119,8 +133,17 @@ fn scale_c(beta: f64, mut c: MatMut<'_>) {
 
 /// The packed kernel driver (post-validation, `beta` already applied,
 /// non-degenerate dims). GotoBLAS loop order: `jc` (NC) → `l0` (KC, pack B)
-/// → `ic` (MC, pack A) → `jr` (NR) → `ir` (MR) → microkernel.
-fn gemm_packed(alpha: f64, a: MatRef<'_>, ta: Trans, b: MatRef<'_>, tb: Trans, mut c: MatMut<'_>) {
+/// → `ic` (MC, pack A) → `jr` (NR) → `ir` (MR) → microkernel (the
+/// `kernel`-selected variant; the packing and blocking are shared).
+fn gemm_packed(
+    alpha: f64,
+    a: MatRef<'_>,
+    ta: Trans,
+    b: MatRef<'_>,
+    tb: Trans,
+    mut c: MatMut<'_>,
+    kernel: Kernel,
+) {
     let m = c.rows();
     let n = c.cols();
     let k = if ta == Trans::No { a.cols() } else { a.rows() };
@@ -129,16 +152,19 @@ fn gemm_packed(alpha: f64, a: MatRef<'_>, ta: Trans, b: MatRef<'_>, tb: Trans, m
     // machinery — for n == 1 or k == 1 it would copy the whole large
     // operand per call and waste 3/4 of the microkernel lanes on
     // zero-padding. Both fast paths compute each element with *exactly*
-    // the packed path's arithmetic (same KC blocking, ascending-`l`
-    // per-element accumulation, `alpha` applied once per block), so they
-    // are bitwise identical to it and the slicing-invariance contract is
-    // unaffected by which path a view takes.
+    // the packed path's arithmetic under the same kernel (same KC
+    // blocking, ascending-`l` per-element accumulation, fused per term
+    // iff the kernel is, `alpha` applied once per block), so they are
+    // bitwise identical to it and the slicing-invariance contract is
+    // unaffected by which path a view takes. `ger_k1` is
+    // kernel-independent: one product per element, k == 1 always routes
+    // here for full calls and slices alike.
     if k == 1 {
         ger_k1(alpha, a, ta, b, tb, c);
         return;
     }
     if n == 1 {
-        gemv_n1(alpha, a, ta, b, tb, c);
+        gemv_n1(alpha, a, ta, b, tb, c, kernel);
         return;
     }
 
@@ -177,7 +203,7 @@ fn gemm_packed(alpha: f64, a: MatRef<'_>, ta: Trans, b: MatRef<'_>, tb: Trans, m
                             let mr = MR.min(mb - ir);
                             let apanel = &apack[(ir / MR) * (MR * kb)..(ir / MR + 1) * (MR * kb)];
                             let mut acc = [[0.0f64; MR]; NR];
-                            microkernel(kb, apanel, bpanel, &mut acc);
+                            kernels::microkernel(kernel, kb, apanel, bpanel, &mut acc);
                             // Write back the valid mr×nr corner.
                             for (j, accj) in acc.iter().enumerate().take(nr) {
                                 let cj = &mut c.col_mut(jc + jr + j)[ic + ir..ic + ir + mr];
@@ -232,8 +258,21 @@ fn ger_k1(alpha: f64, a: MatRef<'_>, ta: Trans, b: MatRef<'_>, tb: Trans, mut c:
 
 /// GEMV fast path (`n == 1`): `C[:,0] += alpha·op(A)·op(B)[:,0]`, with the
 /// packed path's exact accumulation structure — one KC block at a time,
-/// per-element ascending-`l` sums, `alpha` applied once per block.
-fn gemv_n1(alpha: f64, a: MatRef<'_>, ta: Trans, b: MatRef<'_>, tb: Trans, mut c: MatMut<'_>) {
+/// per-element ascending-`l` sums, `alpha` applied once per block. Because
+/// 1-column slices of wider products also land here, each term must round
+/// exactly like the packed microkernel under the same `kernel`: fused
+/// variants use `f64::mul_add` (IEEE fma, bitwise equal to the SIMD
+/// `fmadd`/`fmla` per element), scalar keeps the separate mul-then-add.
+fn gemv_n1(
+    alpha: f64,
+    a: MatRef<'_>,
+    ta: Trans,
+    b: MatRef<'_>,
+    tb: Trans,
+    mut c: MatMut<'_>,
+    kernel: Kernel,
+) {
+    let fused = kernel.fused();
     let m = c.rows();
     let k = if ta == Trans::No { a.cols() } else { a.rows() };
     // op(B) column 0 for the current KC block, materialized contiguously
@@ -264,13 +303,23 @@ fn gemv_n1(alpha: f64, a: MatRef<'_>, ta: Trans, b: MatRef<'_>, tb: Trans, mut c
             match ta {
                 Trans::No => {
                     // Column-axpy over the block: per element i the adds
-                    // land in ascending-l order (l is the outer loop).
+                    // land in ascending-l order (l is the outer loop). The
+                    // fused/unfused branch is hoisted out of the hot loops.
                     let acc = &mut apack[..m];
                     acc.fill(0.0);
-                    for (l, &bv) in bblk[..kb].iter().enumerate() {
-                        let al = a.col(l0 + l);
-                        for (s, &av) in acc.iter_mut().zip(al.iter()) {
-                            *s += av * bv;
+                    if fused {
+                        for (l, &bv) in bblk[..kb].iter().enumerate() {
+                            let al = a.col(l0 + l);
+                            for (s, &av) in acc.iter_mut().zip(al.iter()) {
+                                *s = av.mul_add(bv, *s);
+                            }
+                        }
+                    } else {
+                        for (l, &bv) in bblk[..kb].iter().enumerate() {
+                            let al = a.col(l0 + l);
+                            for (s, &av) in acc.iter_mut().zip(al.iter()) {
+                                *s += av * bv;
+                            }
                         }
                     }
                     for (ci, &s) in cj.iter_mut().zip(acc.iter()) {
@@ -283,8 +332,14 @@ fn gemv_n1(alpha: f64, a: MatRef<'_>, ta: Trans, b: MatRef<'_>, tb: Trans, mut c
                     for (i, ci) in cj.iter_mut().enumerate() {
                         let ai = &a.col(i)[l0..l0 + kb];
                         let mut s = 0.0;
-                        for (l, &av) in ai.iter().enumerate() {
-                            s += av * bblk[l];
+                        if fused {
+                            for (l, &av) in ai.iter().enumerate() {
+                                s = av.mul_add(bblk[l], s);
+                            }
+                        } else {
+                            for (l, &av) in ai.iter().enumerate() {
+                                s += av * bblk[l];
+                            }
                         }
                         *ci += alpha * s;
                     }
@@ -293,24 +348,6 @@ fn gemv_n1(alpha: f64, a: MatRef<'_>, ta: Trans, b: MatRef<'_>, tb: Trans, mut c
             l0 += kb;
         }
     });
-}
-
-/// The register microkernel: `acc[j][i] += Ap[l,i]·Bp[l,j]` over the packed
-/// micro-panels. Per-element scalar accumulators in ascending-`l` order —
-/// the determinism contract — with the `MR` lane dimension left to LLVM to
-/// vectorize (fixed-size array views elide the bounds checks).
-#[inline]
-fn microkernel(kb: usize, apanel: &[f64], bpanel: &[f64], acc: &mut [[f64; MR]; NR]) {
-    debug_assert!(apanel.len() >= kb * MR && bpanel.len() >= kb * NR);
-    for l in 0..kb {
-        let av: &[f64; MR] = apanel[l * MR..l * MR + MR].try_into().unwrap();
-        let bv: &[f64; NR] = bpanel[l * NR..l * NR + NR].try_into().unwrap();
-        for (accj, &bj) in acc.iter_mut().zip(bv.iter()) {
-            for (aij, &ai) in accj.iter_mut().zip(av.iter()) {
-                *aij += ai * bj;
-            }
-        }
-    }
 }
 
 /// Pack `op(A)(ic..ic+mb, l0..l0+kb)` into `MR`-row micro-panels:

@@ -1,0 +1,110 @@
+//! The AVX2+FMA microkernel (x86-64).
+//!
+//! Eight 4-lane `__m256d` accumulators hold the full `8×4` tile — two
+//! registers (low/high half of the `MR = 8` row dimension) per `C` column.
+//! Each k-step broadcasts one element of the packed B panel per column and
+//! issues two `vfmadd` per column: 8 fused multiply-adds per step, the
+//! same ascending-`l`, one-accumulator-per-element order as the scalar
+//! reference. Lanes never mix (no horizontal reductions), so the bitwise
+//! slicing-invariance argument of `linalg::gemm` holds for this variant
+//! exactly as for scalar — only the per-term rounding differs (fused:
+//! one rounding instead of two), which is the cross-kernel O(eps) delta.
+//!
+//! Compiled whenever the target is x86-64 but *executed* only behind
+//! [`super::Kernel::detect`]'s runtime feature check — see the `# Safety`
+//! contract on [`microkernel_8x4`] and the dispatch-site SAFETY comment in
+//! [`super::microkernel`].
+
+use super::{MR, NR};
+use std::arch::x86_64::{
+    __m256d, _mm256_fmadd_pd, _mm256_loadu_pd, _mm256_set1_pd, _mm256_setzero_pd,
+    _mm256_storeu_pd,
+};
+
+/// AVX2+FMA register microkernel: `acc[j][i] += Σ_l Ap[l,i]·Bp[l,j]`
+/// (fused per term) over the packed micro-panels.
+///
+/// # Safety
+///
+/// The caller must ensure the executing CPU supports the `avx2` and `fma`
+/// target features (e.g. `is_x86_feature_detected!("avx2")` and
+/// `("fma")` both true) — the function body is compiled with those
+/// features enabled, so calling it on an older CPU is undefined behavior
+/// (illegal instruction at best). In-bounds access is *not* part of the
+/// contract: panel lengths are asserted at entry, and the tile geometry
+/// (`MR`/`NR`) is fixed by the shared pack layout.
+#[target_feature(enable = "avx2", enable = "fma")]
+pub unsafe fn microkernel_8x4(kb: usize, apanel: &[f64], bpanel: &[f64], acc: &mut [[f64; MR]; NR]) {
+    assert!(
+        apanel.len() >= kb * MR && bpanel.len() >= kb * NR,
+        "avx2 microkernel: panel shorter than kb tiles"
+    );
+    let ap = apanel.as_ptr();
+    let bp = bpanel.as_ptr();
+
+    // Two accumulator registers per C column: rows 0..4 and 4..8.
+    let mut lo: [__m256d; NR] = [_mm256_setzero_pd(); NR];
+    let mut hi: [__m256d; NR] = [_mm256_setzero_pd(); NR];
+    for (j, (rlo, rhi)) in lo.iter_mut().zip(hi.iter_mut()).enumerate() {
+        // SAFETY: each `acc[j]` is an `[f64; 8]`, so the unaligned 4-lane
+        // loads at offsets 0 and 4 end exactly at MR == 8.
+        unsafe {
+            *rlo = _mm256_loadu_pd(acc[j].as_ptr());
+            *rhi = _mm256_loadu_pd(acc[j].as_ptr().add(4));
+        }
+    }
+
+    for l in 0..kb {
+        // SAFETY: l < kb and apanel.len() >= kb·MR (asserted above), so
+        // the two 4-lane loads at l·MR and l·MR + 4 stay in bounds.
+        let (a_lo, a_hi) = unsafe {
+            let p = ap.add(l * MR);
+            (_mm256_loadu_pd(p), _mm256_loadu_pd(p.add(4)))
+        };
+        for j in 0..NR {
+            // SAFETY: l·NR + j < kb·NR <= bpanel.len() (asserted above).
+            let b = unsafe { _mm256_set1_pd(*bp.add(l * NR + j)) };
+            lo[j] = _mm256_fmadd_pd(a_lo, b, lo[j]);
+            hi[j] = _mm256_fmadd_pd(a_hi, b, hi[j]);
+        }
+    }
+
+    for j in 0..NR {
+        // SAFETY: same bounds as the loads — `acc[j]` is `[f64; 8]`.
+        unsafe {
+            _mm256_storeu_pd(acc[j].as_mut_ptr(), lo[j]);
+            _mm256_storeu_pd(acc[j].as_mut_ptr().add(4), hi[j]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_fused_reference_bitwise() {
+        if !super::super::avx2_runtime_available() {
+            eprintln!("skipping: CPU lacks avx2+fma");
+            return;
+        }
+        // Three KC-ish steps of mixed-sign data: the AVX2 kernel must
+        // equal a scalar fma accumulation (same order, same fusedness)
+        // bit for bit, lane by lane.
+        let kb = 3;
+        let apanel: Vec<f64> = (0..kb * MR).map(|i| ((i * 37 % 19) as f64) * 0.375 - 3.0).collect();
+        let bpanel: Vec<f64> = (0..kb * NR).map(|i| 1.0 - ((i * 11 % 7) as f64) * 0.25).collect();
+        let mut acc = [[0.0f64; MR]; NR];
+        // SAFETY: guarded by the runtime feature check above.
+        unsafe { microkernel_8x4(kb, &apanel, &bpanel, &mut acc) };
+        for (j, accj) in acc.iter().enumerate() {
+            for (i, &got) in accj.iter().enumerate() {
+                let mut want = 0.0f64;
+                for l in 0..kb {
+                    want = apanel[l * MR + i].mul_add(bpanel[l * NR + j], want);
+                }
+                assert_eq!(got.to_bits(), want.to_bits(), "({i},{j})");
+            }
+        }
+    }
+}

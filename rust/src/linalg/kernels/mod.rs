@@ -1,0 +1,424 @@
+//! GEMM microkernel variants and runtime dispatch.
+//!
+//! The packed GEMM driver (`linalg::gemm`) funnels every flop of both
+//! reduction stages through one `MR×NR` register microkernel. This module
+//! owns that kernel in three interchangeable variants — the portable
+//! scalar reference ([`scalar`]), an AVX2+FMA variant on x86-64 ([`avx2`])
+//! and a NEON variant on aarch64 ([`neon`]) — plus the machinery that
+//! picks one at run time and threads the choice through every execution
+//! path without touching the ~40 stage/WY call sites:
+//!
+//! * [`KernelChoice`] is the *request* level: what `PALLAS_KERNEL` and
+//!   [`crate::config::Config::kernel`] express (`auto`/`scalar`/`avx2`/
+//!   `neon`, parseable on every architecture).
+//! * [`Kernel`] is the *resolved* level: a variant that is guaranteed
+//!   runnable on this CPU. The only constructor is [`Kernel::detect`],
+//!   which consults `std::arch` runtime feature detection and clamps
+//!   unavailable requests to [`Kernel::Scalar`] — so holding a `Kernel`
+//!   value *is* the proof that its intrinsics may be executed (the
+//!   soundness argument for the `unsafe` dispatch below; see
+//!   ARCHITECTURE.md "Kernel dispatch").
+//! * [`process_default`] resolves `PALLAS_KERNEL` once per process
+//!   (`auto` → best available); [`current`] reads a thread-local override
+//!   installed by [`enter`]/[`with_kernel`], falling back to the process
+//!   default. Driver entry points (`api::reduce_seq`, the session's graph
+//!   path) install the config's resolved kernel around each reduction, and
+//!   `coordinator::pool` captures the submitter's `current()` into every
+//!   batch so pool workers run under the same kernel — batch mode, nested
+//!   submits and the serving tier inherit the choice with no extra
+//!   plumbing.
+//!
+//! **Determinism contract (narrowed, not broken).** For a *fixed* kernel,
+//! results are bitwise invariant across threads, slicing and scheduling:
+//! every variant accumulates each `C[i,j]` in ascending-`l` order into its
+//! own per-element accumulator (scalar f64 or one SIMD lane — lanes never
+//! mix), so the argument in `linalg::gemm`'s module docs holds per
+//! variant. *Across* kernels results differ by O(eps): the SIMD variants
+//! use fused multiply-add (one rounding per term instead of two), which is
+//! a different — slightly more accurate — rounding sequence than the
+//! scalar `mul` + `add`. The scalar kernel is the cross-kernel reference;
+//! `tests/kernels.rs` pins both halves of the contract.
+//!
+//! All variants share the same `MR×NR = 8×4` tile and the same packed
+//! micro-panel layout, so the pack buffers, the `2·NR` panel floors and
+//! the work-assisting oversplit geometry are kernel-independent — choosing
+//! a kernel never changes *what* is packed or how work is split, only the
+//! arithmetic that consumes the panels.
+
+use std::cell::Cell;
+use std::sync::OnceLock;
+
+pub mod scalar;
+
+#[cfg(target_arch = "x86_64")]
+pub mod avx2;
+
+#[cfg(target_arch = "aarch64")]
+pub mod neon;
+
+/// Microkernel tile height (rows of `C` per register tile). Shared by
+/// every kernel variant — see the module docs for why the geometry is
+/// kernel-independent.
+pub const MR: usize = 8;
+/// Microkernel tile width (columns of `C` per register tile).
+pub const NR: usize = 4;
+
+/// A *requested* kernel — the parse-level selector expressed by the
+/// `PALLAS_KERNEL` env knob and [`crate::config::Config::kernel`].
+///
+/// Every variant exists on every architecture (a config file naming
+/// `avx2` must parse on an aarch64 host); [`Kernel::detect`] clamps
+/// requests the running CPU cannot honor to the scalar reference.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub enum KernelChoice {
+    /// Pick the best kernel the CPU supports (the default).
+    #[default]
+    Auto,
+    /// The portable scalar reference kernel.
+    Scalar,
+    /// The AVX2+FMA kernel (x86-64; clamped to scalar elsewhere or when
+    /// the CPU lacks the features).
+    Avx2,
+    /// The NEON kernel (aarch64; clamped to scalar elsewhere).
+    Neon,
+}
+
+impl KernelChoice {
+    /// Parse a `PALLAS_KERNEL` value: `auto` / `scalar` / `avx2` / `neon`,
+    /// case-insensitive, surrounding whitespace tolerated. `None` for
+    /// anything else (callers fall back to [`KernelChoice::Auto`]).
+    pub fn parse(s: &str) -> Option<KernelChoice> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" => Some(KernelChoice::Auto),
+            "scalar" => Some(KernelChoice::Scalar),
+            "avx2" => Some(KernelChoice::Avx2),
+            "neon" => Some(KernelChoice::Neon),
+            _ => None,
+        }
+    }
+
+    /// The knob spelling of this choice (round-trips through
+    /// [`KernelChoice::parse`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelChoice::Auto => "auto",
+            KernelChoice::Scalar => "scalar",
+            KernelChoice::Avx2 => "avx2",
+            KernelChoice::Neon => "neon",
+        }
+    }
+}
+
+/// A *resolved* kernel: a variant whose instructions are guaranteed
+/// executable on this CPU.
+///
+/// Only [`Kernel::detect`] constructs non-scalar variants, and only after
+/// the corresponding `std::arch` runtime feature check has passed in this
+/// process — that invariant is what makes the `unsafe` calls in
+/// [`microkernel`] sound. Variants that cannot exist on the compilation
+/// target are compiled out entirely.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Kernel {
+    /// Portable scalar reference ([`scalar::microkernel_8x4`]) — the
+    /// cross-kernel O(eps) anchor, always available.
+    Scalar,
+    /// AVX2+FMA ([`avx2::microkernel_8x4`]): constructed only after
+    /// `is_x86_feature_detected!("avx2")` and `("fma")` both passed.
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+    /// NEON ([`neon::microkernel_8x4`]): constructed only after
+    /// `is_aarch64_feature_detected!("neon")` passed.
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+}
+
+impl Kernel {
+    /// Resolve a request against this CPU: `Auto` picks the best available
+    /// variant; an explicit request for a variant this host cannot run
+    /// (wrong architecture, or the CPU lacks the features) clamps to
+    /// [`Kernel::Scalar`] rather than erroring — a config naming `avx2`
+    /// must stay runnable on every machine.
+    pub fn detect(choice: KernelChoice) -> Kernel {
+        match choice {
+            KernelChoice::Auto => best_available(),
+            KernelChoice::Scalar => Kernel::Scalar,
+            KernelChoice::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    if avx2_runtime_available() {
+                        return Kernel::Avx2;
+                    }
+                }
+                Kernel::Scalar
+            }
+            KernelChoice::Neon => {
+                #[cfg(target_arch = "aarch64")]
+                {
+                    if neon_runtime_available() {
+                        return Kernel::Neon;
+                    }
+                }
+                Kernel::Scalar
+            }
+        }
+    }
+
+    /// Stable numeric id (0 = scalar, 1 = avx2, 2 = neon) — the value
+    /// mixed into the serving tier's pencil fingerprints and compared in
+    /// its cache keys, so results computed under different kernels (which
+    /// differ by O(eps) bits) can never collide in the cache.
+    pub fn id(self) -> u64 {
+        match self {
+            Kernel::Scalar => 0,
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Avx2 => 1,
+            #[cfg(target_arch = "aarch64")]
+            Kernel::Neon => 2,
+        }
+    }
+
+    /// Display/bench label for this variant.
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Avx2 => "avx2",
+            #[cfg(target_arch = "aarch64")]
+            Kernel::Neon => "neon",
+        }
+    }
+
+    /// The request that resolves back to exactly this kernel on this host
+    /// (`Kernel::detect(k.choice()) == k`).
+    pub fn choice(self) -> KernelChoice {
+        match self {
+            Kernel::Scalar => KernelChoice::Scalar,
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Avx2 => KernelChoice::Avx2,
+            #[cfg(target_arch = "aarch64")]
+            Kernel::Neon => KernelChoice::Neon,
+        }
+    }
+
+    /// Whether this variant accumulates with fused multiply-add (one
+    /// rounding per term). The GEMV fast path in `linalg::gemm` branches
+    /// on this so 1-column slices stay bitwise identical to the packed
+    /// path *per kernel* — `f64::mul_add` is the same IEEE operation the
+    /// SIMD fma instructions compute, bit for bit.
+    pub fn fused(self) -> bool {
+        !matches!(self, Kernel::Scalar)
+    }
+
+    /// Every kernel this CPU can run (scalar first). The bench sweeps and
+    /// the cross-kernel parity tests iterate this.
+    pub fn all_available() -> Vec<Kernel> {
+        let mut v = vec![Kernel::Scalar];
+        #[cfg(target_arch = "x86_64")]
+        {
+            if avx2_runtime_available() {
+                v.push(Kernel::Avx2);
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            if neon_runtime_available() {
+                v.push(Kernel::Neon);
+            }
+        }
+        v
+    }
+}
+
+/// Runtime check for the AVX2 kernel's full feature set. Both features are
+/// required: the kernel's loads are AVX, its accumulation is FMA.
+#[cfg(target_arch = "x86_64")]
+fn avx2_runtime_available() -> bool {
+    std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+}
+
+/// Runtime check for NEON (mandatory on AArch64, but asked anyway — the
+/// detect-then-construct invariant stays uniform across variants).
+#[cfg(target_arch = "aarch64")]
+fn neon_runtime_available() -> bool {
+    std::arch::is_aarch64_feature_detected!("neon")
+}
+
+/// Best kernel this CPU supports (the meaning of `auto`).
+fn best_available() -> Kernel {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2_runtime_available() {
+            return Kernel::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if neon_runtime_available() {
+            return Kernel::Neon;
+        }
+    }
+    Kernel::Scalar
+}
+
+/// The process-default kernel: `PALLAS_KERNEL` resolved through
+/// [`Kernel::detect`] exactly once (first use) and cached for the process
+/// lifetime — dispatch-once, so the hot loops never re-run feature
+/// detection or env parsing.
+pub fn process_default() -> Kernel {
+    static PROCESS_DEFAULT: OnceLock<Kernel> = OnceLock::new();
+    *PROCESS_DEFAULT.get_or_init(|| Kernel::detect(crate::util::env::kernel()))
+}
+
+thread_local! {
+    /// Thread-local kernel override, installed by [`enter`] /
+    /// [`with_kernel`]. `None` means "use the process default".
+    static CURRENT: Cell<Option<Kernel>> = const { Cell::new(None) };
+}
+
+/// The kernel in effect on this thread: the innermost [`enter`] override,
+/// else [`process_default`]. `linalg::gemm` resolves this once per `gemm`
+/// call; `coordinator::pool` captures it at batch submission so workers
+/// execute under the submitter's kernel.
+pub fn current() -> Kernel {
+    CURRENT.with(|c| c.get()).unwrap_or_else(process_default)
+}
+
+/// Scoped kernel override: restores the previous thread-local state on
+/// drop (including on unwind), so nested reductions with different
+/// configured kernels compose correctly.
+#[must_use = "the override lasts only while the guard is alive"]
+pub struct KernelGuard {
+    prev: Option<Kernel>,
+}
+
+/// Install `kernel` as this thread's current kernel until the returned
+/// guard drops. Driver entry points call this with the config's resolved
+/// kernel; [`crate::coordinator::pool`] calls it around every batch task
+/// with the kernel captured at submission.
+pub fn enter(kernel: Kernel) -> KernelGuard {
+    let prev = CURRENT.with(|c| c.replace(Some(kernel)));
+    KernelGuard { prev }
+}
+
+impl Drop for KernelGuard {
+    fn drop(&mut self) {
+        CURRENT.with(|c| c.set(self.prev));
+    }
+}
+
+/// Run `f` with `kernel` as the thread's current kernel (guard form of
+/// [`enter`] for closures — the bench sweeps and parity tests use this).
+pub fn with_kernel<R>(kernel: Kernel, f: impl FnOnce() -> R) -> R {
+    let _guard = enter(kernel);
+    f()
+}
+
+/// Dispatch one `MR×NR` register-tile accumulation to the resolved
+/// kernel: `acc[j][i] += Σ_l Ap[l,i]·Bp[l,j]` over the packed micro-panels
+/// (fused per term on the SIMD variants), ascending `l`, one accumulator
+/// per element — the per-kernel determinism contract.
+#[inline]
+pub(crate) fn microkernel(
+    kernel: Kernel,
+    kb: usize,
+    apanel: &[f64],
+    bpanel: &[f64],
+    acc: &mut [[f64; MR]; NR],
+) {
+    match kernel {
+        Kernel::Scalar => scalar::microkernel_8x4(kb, apanel, bpanel, acc),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `Kernel::Avx2` values exist only via `Kernel::detect`,
+        // which requires `is_x86_feature_detected!("avx2")` and `("fma")`
+        // to have passed in this process — exactly the target features the
+        // callee enables, so executing it cannot hit an illegal
+        // instruction.
+        Kernel::Avx2 => unsafe { avx2::microkernel_8x4(kb, apanel, bpanel, acc) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: `Kernel::Neon` values exist only via `Kernel::detect`
+        // after `is_aarch64_feature_detected!("neon")` passed — the one
+        // target feature the callee enables.
+        Kernel::Neon => unsafe { neon::microkernel_8x4(kb, apanel, bpanel, acc) },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_knob_spellings_case_insensitively() {
+        assert_eq!(KernelChoice::parse("auto"), Some(KernelChoice::Auto));
+        assert_eq!(KernelChoice::parse("scalar"), Some(KernelChoice::Scalar));
+        assert_eq!(KernelChoice::parse("AVX2"), Some(KernelChoice::Avx2));
+        assert_eq!(KernelChoice::parse(" neon "), Some(KernelChoice::Neon));
+        assert_eq!(KernelChoice::parse("avx512"), None);
+        assert_eq!(KernelChoice::parse(""), None);
+    }
+
+    #[test]
+    fn names_round_trip_through_parse() {
+        for c in [KernelChoice::Auto, KernelChoice::Scalar, KernelChoice::Avx2, KernelChoice::Neon]
+        {
+            assert_eq!(KernelChoice::parse(c.name()), Some(c));
+        }
+    }
+
+    #[test]
+    fn detect_clamps_unavailable_requests_to_scalar() {
+        // Whatever the host: an explicit scalar request resolves scalar,
+        // and requests for the *other* architecture's kernel clamp.
+        assert_eq!(Kernel::detect(KernelChoice::Scalar), Kernel::Scalar);
+        #[cfg(target_arch = "x86_64")]
+        assert_eq!(Kernel::detect(KernelChoice::Neon), Kernel::Scalar);
+        #[cfg(target_arch = "aarch64")]
+        assert_eq!(Kernel::detect(KernelChoice::Avx2), Kernel::Scalar);
+        // Auto resolves to something this CPU can run — by construction a
+        // member of `all_available`.
+        assert!(Kernel::all_available().contains(&Kernel::detect(KernelChoice::Auto)));
+    }
+
+    #[test]
+    fn resolved_kernels_resolve_back_to_themselves() {
+        for k in Kernel::all_available() {
+            assert_eq!(Kernel::detect(k.choice()), k, "{}", k.name());
+        }
+    }
+
+    #[test]
+    fn ids_are_distinct_and_scalar_is_zero() {
+        let kernels = Kernel::all_available();
+        assert_eq!(kernels[0], Kernel::Scalar);
+        assert_eq!(kernels[0].id(), 0);
+        assert!(!kernels[0].fused(), "scalar is the non-fused reference");
+        let mut ids: Vec<u64> = kernels.iter().map(|k| k.id()).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), kernels.len(), "kernel ids must be distinct");
+        for k in &kernels[1..] {
+            assert!(k.fused(), "every SIMD variant accumulates with fma");
+        }
+    }
+
+    #[test]
+    fn thread_local_override_nests_and_restores() {
+        let default = current();
+        let kernels = Kernel::all_available();
+        let inner = *kernels.last().unwrap();
+        with_kernel(Kernel::Scalar, || {
+            assert_eq!(current(), Kernel::Scalar);
+            with_kernel(inner, || assert_eq!(current(), inner));
+            assert_eq!(current(), Kernel::Scalar, "inner guard must restore");
+        });
+        assert_eq!(current(), default, "outer guard must restore the default");
+    }
+
+    #[test]
+    fn override_is_per_thread() {
+        with_kernel(Kernel::Scalar, || {
+            // A fresh thread sees the process default, not this override.
+            let seen = std::thread::spawn(current).join().unwrap();
+            assert_eq!(seen, process_default());
+        });
+    }
+}

@@ -1,0 +1,103 @@
+//! The NEON microkernel (aarch64).
+//!
+//! Sixteen 2-lane `float64x2_t` accumulators hold the full `8×4` tile —
+//! four registers (row pairs 0-1, 2-3, 4-5, 6-7) per `C` column. Each
+//! k-step broadcasts one element of the packed B panel per column and
+//! issues four `fmla` per column: 16 fused multiply-adds per step, the
+//! same ascending-`l`, one-accumulator-per-element order as the scalar
+//! reference. Lanes never mix, so the bitwise slicing-invariance argument
+//! of `linalg::gemm` holds per variant; the fused rounding makes this
+//! kernel bitwise identical to the AVX2 variant per element (both compute
+//! IEEE fma in the same order) and O(eps) from scalar.
+//!
+//! Compiled whenever the target is aarch64 but *executed* only behind
+//! [`super::Kernel::detect`]'s runtime feature check — see the `# Safety`
+//! contract on [`microkernel_8x4`] and the dispatch-site SAFETY comment in
+//! [`super::microkernel`].
+
+use super::{MR, NR};
+use std::arch::aarch64::{float64x2_t, vdupq_n_f64, vfmaq_f64, vld1q_f64, vst1q_f64};
+
+/// NEON register microkernel: `acc[j][i] += Σ_l Ap[l,i]·Bp[l,j]` (fused
+/// per term) over the packed micro-panels.
+///
+/// # Safety
+///
+/// The caller must ensure the executing CPU supports the `neon` target
+/// feature (`is_aarch64_feature_detected!("neon")` — mandatory on
+/// AArch64, but the detect-then-construct invariant is kept uniform
+/// across variants). The function body is compiled with that feature
+/// enabled. In-bounds access is *not* part of the contract: panel lengths
+/// are asserted at entry, and the tile geometry (`MR`/`NR`) is fixed by
+/// the shared pack layout.
+#[target_feature(enable = "neon")]
+pub unsafe fn microkernel_8x4(kb: usize, apanel: &[f64], bpanel: &[f64], acc: &mut [[f64; MR]; NR]) {
+    assert!(
+        apanel.len() >= kb * MR && bpanel.len() >= kb * NR,
+        "neon microkernel: panel shorter than kb tiles"
+    );
+    let ap = apanel.as_ptr();
+    let bp = bpanel.as_ptr();
+
+    // Four 2-lane accumulators per C column (row pairs of MR == 8).
+    let mut accv: [[float64x2_t; 4]; NR] = [[vdupq_n_f64(0.0); 4]; NR];
+    for (j, col) in accv.iter_mut().enumerate() {
+        for (h, reg) in col.iter_mut().enumerate() {
+            // SAFETY: `acc[j]` is an `[f64; 8]`; the 2-lane load at offset
+            // 2·h (h < 4) ends at most at element 8.
+            *reg = unsafe { vld1q_f64(acc[j].as_ptr().add(2 * h)) };
+        }
+    }
+
+    for l in 0..kb {
+        // SAFETY: l < kb and apanel.len() >= kb·MR (asserted above), so
+        // the four 2-lane loads at l·MR + 2·h (h < 4) stay in bounds.
+        let a: [float64x2_t; 4] = unsafe {
+            let p = ap.add(l * MR);
+            [vld1q_f64(p), vld1q_f64(p.add(2)), vld1q_f64(p.add(4)), vld1q_f64(p.add(6))]
+        };
+        for (j, col) in accv.iter_mut().enumerate() {
+            // SAFETY: l·NR + j < kb·NR <= bpanel.len() (asserted above).
+            let b = unsafe { vdupq_n_f64(*bp.add(l * NR + j)) };
+            for (reg, &ah) in col.iter_mut().zip(a.iter()) {
+                // fmla: reg + ah·b, fused — one rounding per term.
+                *reg = vfmaq_f64(*reg, ah, b);
+            }
+        }
+    }
+
+    for (j, col) in accv.iter().enumerate() {
+        for (h, &reg) in col.iter().enumerate() {
+            // SAFETY: same bounds as the loads — `acc[j]` is `[f64; 8]`.
+            unsafe { vst1q_f64(acc[j].as_mut_ptr().add(2 * h), reg) };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_fused_reference_bitwise() {
+        if !super::super::neon_runtime_available() {
+            eprintln!("skipping: CPU lacks neon");
+            return;
+        }
+        let kb = 3;
+        let apanel: Vec<f64> = (0..kb * MR).map(|i| ((i * 37 % 19) as f64) * 0.375 - 3.0).collect();
+        let bpanel: Vec<f64> = (0..kb * NR).map(|i| 1.0 - ((i * 11 % 7) as f64) * 0.25).collect();
+        let mut acc = [[0.0f64; MR]; NR];
+        // SAFETY: guarded by the runtime feature check above.
+        unsafe { microkernel_8x4(kb, &apanel, &bpanel, &mut acc) };
+        for (j, accj) in acc.iter().enumerate() {
+            for (i, &got) in accj.iter().enumerate() {
+                let mut want = 0.0f64;
+                for l in 0..kb {
+                    want = apanel[l * MR + i].mul_add(bpanel[l * NR + j], want);
+                }
+                assert_eq!(got.to_bits(), want.to_bits(), "({i},{j})");
+            }
+        }
+    }
+}

@@ -1,0 +1,53 @@
+//! The portable scalar reference microkernel — the exact kernel the crate
+//! shipped with before runtime dispatch existed, moved here bitwise
+//! unchanged. It is the cross-kernel O(eps) reference (`PALLAS_KERNEL=
+//! scalar` reproduces the historical numbers exactly) and the clamp target
+//! for unavailable SIMD requests.
+
+use super::{MR, NR};
+
+/// The scalar register microkernel: `acc[j][i] += Ap[l,i]·Bp[l,j]` over
+/// the packed micro-panels. Per-element scalar accumulators in
+/// ascending-`l` order — the determinism contract — with the `MR` lane
+/// dimension left to LLVM to vectorize (fixed-size array views elide the
+/// bounds checks). Each term is a separate `mul` then `add` (two
+/// roundings), which is what makes this the non-fused reference the SIMD
+/// variants are compared against.
+#[inline]
+pub fn microkernel_8x4(kb: usize, apanel: &[f64], bpanel: &[f64], acc: &mut [[f64; MR]; NR]) {
+    debug_assert!(apanel.len() >= kb * MR && bpanel.len() >= kb * NR);
+    for l in 0..kb {
+        let av: &[f64; MR] = apanel[l * MR..l * MR + MR].try_into().unwrap();
+        let bv: &[f64; NR] = bpanel[l * NR..l * NR + NR].try_into().unwrap();
+        for (accj, &bj) in acc.iter_mut().zip(bv.iter()) {
+            for (aij, &ai) in accj.iter_mut().zip(av.iter()) {
+                *aij += ai * bj;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_the_reference_sum() {
+        // 2 k-steps over a fully populated 8x4 tile, checked against a
+        // hand-rolled ascending-l scalar accumulation.
+        let kb = 2;
+        let apanel: Vec<f64> = (0..kb * MR).map(|i| (i as f64) * 0.5 - 3.0).collect();
+        let bpanel: Vec<f64> = (0..kb * NR).map(|i| 1.0 - (i as f64) * 0.25).collect();
+        let mut acc = [[0.0f64; MR]; NR];
+        microkernel_8x4(kb, &apanel, &bpanel, &mut acc);
+        for (j, accj) in acc.iter().enumerate() {
+            for (i, &got) in accj.iter().enumerate() {
+                let mut want = 0.0f64;
+                for l in 0..kb {
+                    want += apanel[l * MR + i] * bpanel[l * NR + j];
+                }
+                assert_eq!(got, want, "({i},{j})");
+            }
+        }
+    }
+}

@@ -1,7 +1,8 @@
 //! Dense linear-algebra substrate (the role MKL plays in the paper).
 //!
 //! Everything is built from scratch over column-major `f64` storage:
-//! level-1 kernels, a blocked GEMM, Householder reflectors with compact-WY
+//! level-1 kernels, a blocked GEMM with runtime-dispatched SIMD
+//! microkernels ([`kernels`]), Householder reflectors with compact-WY
 //! block representations, QR/LQ/RQ factorizations, Givens rotations, and
 //! the verification helpers that back the paper's accuracy claims.
 
@@ -9,6 +10,7 @@ pub mod blas1;
 pub mod gemm;
 pub mod givens;
 pub mod householder;
+pub mod kernels;
 pub mod lu;
 pub mod matrix;
 pub mod qr;
@@ -17,5 +19,6 @@ pub mod verify;
 pub mod wy;
 
 pub use gemm::{gemm, gemm_par, matmul, matmul_t, Trans};
+pub use kernels::{Kernel, KernelChoice};
 pub use matrix::{MatMut, MatRef, Matrix};
 pub use wy::{Side, WyRep};

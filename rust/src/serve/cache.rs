@@ -40,6 +40,10 @@ pub struct CacheKey {
     p: usize,
     q: usize,
     lookahead: bool,
+    /// Resolved GEMM-kernel id ([`crate::linalg::Kernel::id`]): kernels
+    /// differ by O(eps) bits, so results computed under different kernels
+    /// must never alias in the cache.
+    kernel: u64,
     /// Bit patterns of `A` then `B`, column-major storage order.
     bits: Box<[u64]>,
     fingerprint: u64,
@@ -58,6 +62,7 @@ impl CacheKey {
             p: cfg.p,
             q: cfg.q,
             lookahead: cfg.lookahead,
+            kernel: cfg.resolved_kernel().id(),
             bits: bits.into_boxed_slice(),
             fingerprint: pencil_fingerprint(a, b, cfg),
         }
@@ -84,6 +89,7 @@ impl CacheKey {
             && self.p == cfg.p
             && self.q == cfg.q
             && self.lookahead == cfg.lookahead
+            && self.kernel == cfg.resolved_kernel().id()
             && self.bits.len() == a.data().len() + b.data().len()
             && {
                 let (ka, kb) = self.bits.split_at(a.data().len());
@@ -101,6 +107,7 @@ impl PartialEq for CacheKey {
             && self.p == other.p
             && self.q == other.q
             && self.lookahead == other.lookahead
+            && self.kernel == other.kernel
             && self.bits == other.bits
     }
 }
@@ -481,6 +488,32 @@ mod tests {
         let mut c = ResultCache::new(4, usize::MAX);
         c.insert(k1, Arc::new(reduce_seq(&p.a, &p.b, &cfg1).unwrap()));
         assert!(c.get(&k2).is_none(), "tuning is part of the key");
+    }
+
+    #[test]
+    fn different_kernel_same_pencil_is_a_different_key() {
+        use crate::linalg::Kernel;
+        let kernels = Kernel::all_available();
+        let mut rng = Rng::new(42);
+        let p = random_pencil(10, &mut rng);
+        if kernels.len() >= 2 {
+            let cfg1 = Config { kernel: kernels[0].choice(), ..small_cfg() };
+            let cfg2 = Config { kernel: kernels[1].choice(), ..small_cfg() };
+            let k1 = CacheKey::new(&p.a, &p.b, &cfg1);
+            let k2 = CacheKey::new(&p.a, &p.b, &cfg2);
+            assert_ne!(k1, k2, "kernel id is part of the key");
+            let mut c = ResultCache::new(4, usize::MAX);
+            c.insert(k1, Arc::new(reduce_seq(&p.a, &p.b, &cfg1).unwrap()));
+            assert!(c.get(&k2).is_none());
+            assert!(c.lookup(&p.a, &p.b, &cfg2).is_none());
+            assert!(c.lookup(&p.a, &p.b, &cfg1).is_some());
+        } else {
+            // Scalar-only host: a clamped SIMD request keys identically to
+            // an explicit scalar request (both resolve to the same kernel).
+            let cfg1 = Config { kernel: crate::linalg::KernelChoice::Scalar, ..small_cfg() };
+            let cfg2 = Config { kernel: crate::linalg::KernelChoice::Avx2, ..small_cfg() };
+            assert_eq!(CacheKey::new(&p.a, &p.b, &cfg1), CacheKey::new(&p.a, &p.b, &cfg2));
+        }
     }
 
     #[test]

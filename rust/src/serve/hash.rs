@@ -3,9 +3,10 @@
 //!
 //! The cache contract is *bitwise*: two submissions hit the same entry iff
 //! their pencil bytes (the `f64` bit patterns of `A` and `B`, in storage
-//! order) and their effective tuning (`r`, `p`, `q`, `lookahead` — the
-//! parameters that change the computed factors; `threads` does not, by the
-//! determinism contract) are identical. `-0.0` and `0.0`, or two different
+//! order) and their effective tuning (`r`, `p`, `q`, `lookahead`, plus the
+//! *resolved* GEMM kernel — the parameters that change the computed
+//! factors; `threads` does not, by the per-kernel determinism contract)
+//! are identical. `-0.0` and `0.0`, or two different
 //! NaN payloads, are therefore *different* keys — exactly the semantics
 //! the bitwise-oracle tests pin.
 //!
@@ -75,12 +76,16 @@ impl FxHasher64 {
 /// the reduction's output.
 ///
 /// The stream is: a domain tag, the dimensions of both matrices, the
-/// result-relevant config fields (`r`, `p`, `q`, `lookahead` — pass the
-/// config *after* [`Config::clipped_for`] so the key matches what actually
-/// runs), then every element of `A` and `B` by bit pattern in column-major
-/// storage order. `threads` and `slices` are deliberately excluded: the
-/// determinism contract makes them output-invariant, so including them
-/// would only split cache entries that are bitwise interchangeable.
+/// result-relevant config fields (`r`, `p`, `q`, `lookahead`, and the
+/// *resolved* kernel id — pass the config *after* [`Config::clipped_for`]
+/// so the key matches what actually runs), then every element of `A` and
+/// `B` by bit pattern in column-major storage order. `threads` and
+/// `slices` are deliberately excluded: the determinism contract makes them
+/// output-invariant for a fixed kernel, so including them would only split
+/// cache entries that are bitwise interchangeable. The kernel *is*
+/// included — and at the resolved level, not the request level, so `auto`
+/// and an explicit spelling of the same variant share entries while
+/// kernels with genuinely different bits (fused vs unfused) never do.
 pub fn pencil_fingerprint(a: &Matrix, b: &Matrix, cfg: &Config) -> u64 {
     let mut h = FxHasher64::new();
     h.write_u64(0x70_65_6e_63_69_6c_31_u64); // "pencil1" domain tag
@@ -92,6 +97,7 @@ pub fn pencil_fingerprint(a: &Matrix, b: &Matrix, cfg: &Config) -> u64 {
     h.write_usize(cfg.p);
     h.write_usize(cfg.q);
     h.write_u64(cfg.lookahead as u64);
+    h.write_u64(cfg.resolved_kernel().id());
     for &v in a.data() {
         h.write_f64(v);
     }
@@ -134,6 +140,33 @@ mod tests {
         // threads/slices are output-invariant and excluded from the key.
         let t = Config { threads: 7, slices: 3, ..base.clone() };
         assert_eq!(h, pencil_fingerprint(&p.a, &p.b, &t));
+    }
+
+    #[test]
+    fn fingerprint_keys_on_the_resolved_kernel() {
+        use crate::linalg::{Kernel, KernelChoice};
+        let mut rng = Rng::new(0x5E24);
+        let p = random_pencil(10, &mut rng);
+        let base = Config { r: 4, p: 2, q: 2, ..Config::default() };
+        let kernels = Kernel::all_available();
+        if kernels.len() >= 2 {
+            // Two genuinely different kernels must never share a key.
+            let ka = Config { kernel: kernels[0].choice(), ..base.clone() };
+            let kb = Config { kernel: kernels[1].choice(), ..base.clone() };
+            assert_ne!(
+                pencil_fingerprint(&p.a, &p.b, &ka),
+                pencil_fingerprint(&p.a, &p.b, &kb)
+            );
+        }
+        // Resolved-level keying: a request that clamps (or auto-resolves)
+        // to the same kernel as an explicit spelling shares its entry.
+        let auto = Config { kernel: KernelChoice::Auto, ..base.clone() };
+        let explicit =
+            Config { kernel: auto.resolved_kernel().choice(), ..base.clone() };
+        assert_eq!(
+            pencil_fingerprint(&p.a, &p.b, &auto),
+            pencil_fingerprint(&p.a, &p.b, &explicit)
+        );
     }
 
     #[test]

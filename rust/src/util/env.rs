@@ -15,6 +15,7 @@
 //! | `PALLAS_POOL_THREADS`    | worker-team size *including* the caller ([`crate::coordinator::pool::global`]) |
 //! | `PALLAS_ASSIST`          | `1`/`true`: work-assisting dynamic panel scheduling as the process default ([`crate::coordinator::assist`]) |
 //! | `PALLAS_AUDIT`           | `1`/`true` forces the concurrency auditor on, anything else forces it off; unset defers to the `audit` feature (audit-capable builds only — see `coordinator::audit`) |
+//! | `PALLAS_KERNEL`          | GEMM microkernel selection: `auto` (default), `scalar`, `avx2`, `neon` ([`crate::linalg::kernels`]; unavailable requests clamp to `scalar`) |
 //! | `PALLAS_BENCH_SOFT`      | `1`/`true`: timing-sensitive bench asserts warn instead of aborting |
 //! | `PALLAS_BENCH_TOL`       | multiplier `≥ 1` relaxing timing-sensitive bench thresholds |
 //! | `PALLAS_STRESS_ITERS`    | iteration count for the pool stress hammer |
@@ -33,6 +34,7 @@
 //! | `PALLAS_SERVE_SIZES`     | comma-separated pencil sizes for the serve flood mix |
 
 use crate::config::MAX_THREADS;
+use crate::linalg::kernels::KernelChoice;
 
 /// Look a knob up by suffix: `PALLAS_<suffix>` first, then the legacy
 /// `PARAHT_<suffix>` alias.
@@ -92,6 +94,16 @@ pub fn assist() -> bool {
 /// cached) by `coordinator::audit::active`.
 pub fn audit() -> Option<bool> {
     var("AUDIT").map(|v| parse_flag(&v))
+}
+
+/// Requested GEMM microkernel (`PALLAS_KERNEL`): `auto`, `scalar`,
+/// `avx2` or `neon` (case-insensitive, whitespace-tolerant). Unset or
+/// unrecognized spellings fall back to [`KernelChoice::Auto`] — pick the
+/// best runtime-supported variant. Read once (and cached) by
+/// [`crate::linalg::kernels::process_default`]; the per-run
+/// [`crate::config::Config::kernel`] override wins over this knob.
+pub fn kernel() -> KernelChoice {
+    var("KERNEL").and_then(|s| KernelChoice::parse(&s)).unwrap_or(KernelChoice::Auto)
 }
 
 /// Whether the benches run in *soft* mode (`PALLAS_BENCH_SOFT`): the
@@ -259,6 +271,24 @@ mod tests {
             "explicitly-off via the legacy alias"
         );
         assert_eq!(first_from(|_| None, "AUDIT").map(|v| parse_flag(&v)), None, "unset defers");
+    }
+
+    #[test]
+    fn kernel_knob_resolves_through_the_alias_chain() {
+        // The kernel knob composes `KernelChoice::parse` over the standard
+        // alias lookup; exercise the composition through the injected core.
+        let resolve = |env: &HashMap<String, String>| {
+            first_from(|n| env.get(n).cloned(), "KERNEL")
+                .and_then(|s| KernelChoice::parse(&s))
+                .unwrap_or(KernelChoice::Auto)
+        };
+        let env = env_of(&[("PALLAS_KERNEL", "scalar"), ("PARAHT_KERNEL", "avx2")]);
+        assert_eq!(resolve(&env), KernelChoice::Scalar, "canonical wins over legacy");
+        let env = env_of(&[("PARAHT_KERNEL", " AVX2 ")]);
+        assert_eq!(resolve(&env), KernelChoice::Avx2, "legacy alias, case/space tolerant");
+        let env = env_of(&[("PALLAS_KERNEL", "sse9000")]);
+        assert_eq!(resolve(&env), KernelChoice::Auto, "unrecognized falls back to auto");
+        assert_eq!(resolve(&HashMap::new()), KernelChoice::Auto, "unset is auto");
     }
 
     #[test]

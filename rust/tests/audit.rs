@@ -197,3 +197,42 @@ fn threaded_reduction_is_audit_clean_and_bitwise_the_oracle() {
     assert_eq!(max_abs_diff(&run.z, &oracle.z), 0.0);
     audit::set_override(None);
 }
+
+#[test]
+fn simd_kernel_reduction_is_audit_clean_and_bitwise_its_own_oracle() {
+    let _lock = exclusive();
+    audit::set_override(Some(true));
+    // Same positive acceptance run, forced onto the best kernel this CPU
+    // has (AVX2/NEON when present, scalar otherwise): the SIMD microkernel
+    // changes the *bits inside* each declared rectangle, never which
+    // rectangles are touched — so the audited graph stays violation-free
+    // and the threaded run stays bitwise the sequential oracle *under the
+    // same kernel*. On scalar-only hosts this degenerates to the test
+    // above, which is exactly the clamping contract.
+    use paraht::linalg::Kernel;
+    let best = *Kernel::all_available().last().unwrap();
+    let mut rng = Rng::new(0xAD_03);
+    let pencil = random_pencil(45, &mut rng);
+    let cfg = Config {
+        r: 4,
+        p: 3,
+        q: 3,
+        slices: 6,
+        kernel: best.choice(),
+        ..Config::default()
+    };
+    let oracle = reduce_seq(&pencil.a, &pencil.b, &cfg).unwrap();
+    let before = audit::recorded_total();
+    let mut session = HtSession::builder().config(cfg).threads(4).build().unwrap();
+    let run = session.reduce(&pencil.a, &pencil.b).unwrap();
+    assert!(
+        audit::recorded_total() > before,
+        "the audited SIMD ({}) run must record accesses",
+        best.name()
+    );
+    assert_eq!(max_abs_diff(&run.h, &oracle.h), 0.0, "{} H", best.name());
+    assert_eq!(max_abs_diff(&run.t, &oracle.t), 0.0, "{} T", best.name());
+    assert_eq!(max_abs_diff(&run.q, &oracle.q), 0.0, "{} Q", best.name());
+    assert_eq!(max_abs_diff(&run.z, &oracle.z), 0.0, "{} Z", best.name());
+    audit::set_override(None);
+}

@@ -1,0 +1,309 @@
+//! Kernel-dispatch acceptance suite: the per-kernel determinism contract
+//! and the cross-kernel O(eps) parity, pinned end to end.
+//!
+//! What is *bitwise* (exact equality, per fixed kernel): thread count,
+//! slice count, static-vs-assisting schedule, 1-column slices of a larger
+//! product, and `gemm_par` vs `gemm`. What is *O(eps)* (tolerance
+//! comparison, never equality): one kernel vs another — the SIMD variants
+//! fuse multiply-add (one rounding per term) where the scalar reference
+//! rounds twice, so their bits legitimately differ by rounding.
+//!
+//! On hosts without a SIMD kernel (`Kernel::all_available()` is just
+//! `[Scalar]`) the cross-kernel tests degenerate to scalar-vs-scalar and
+//! pass trivially; the fixed-kernel invariance sweep still exercises the
+//! full dispatch plumbing (config → session → pool batch capture).
+
+use paraht::api::{reduce_seq, HtSession};
+use paraht::config::Config;
+use paraht::linalg::gemm::{gemm, gemm_par, Trans};
+use paraht::linalg::kernels::{self, Kernel, KernelChoice};
+use paraht::linalg::matrix::Matrix;
+use paraht::pencil::random::random_pencil;
+use paraht::util::proptest::max_abs_diff;
+use paraht::util::rng::Rng;
+
+/// Bitwise matrix comparison: `-0.0 != 0.0`, NaN payloads distinguish —
+/// stricter than `max_abs_diff == 0`, which the determinism tests need
+/// because the adversarial tiles below deliberately produce signed zeros.
+fn assert_bitwise(a: &Matrix, b: &Matrix, label: &str) {
+    assert_eq!(a.rows(), b.rows(), "{label}: row mismatch");
+    assert_eq!(a.cols(), b.cols(), "{label}: col mismatch");
+    for (i, (x, y)) in a.data().iter().zip(b.data()).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{label}: element {i} differs ({x:e} vs {y:e})"
+        );
+    }
+}
+
+/// A tile salted with adversarial values: denormals, signed zeros, and
+/// large/small magnitude mixes that stress the fused-vs-unfused rounding
+/// delta and the zero-padding of partial micro-panels.
+fn adversarial(rows: usize, cols: usize, rng: &mut Rng) -> Matrix {
+    let mut m = Matrix::randn(rows, cols, rng);
+    for j in 0..cols {
+        for i in 0..rows {
+            match (i * 31 + j * 7) % 11 {
+                0 => m[(i, j)] = 0.0,
+                1 => m[(i, j)] = -0.0,
+                2 => m[(i, j)] = 1e-310,        // subnormal
+                3 => m[(i, j)] = -3e-312,       // negative subnormal
+                4 => m[(i, j)] *= 1e150,
+                5 => m[(i, j)] *= 1e-150,
+                _ => {}
+            }
+        }
+    }
+    m
+}
+
+#[test]
+fn kernel_choice_parses_and_detect_clamps_to_runnable() {
+    // Parse-level: every spelling round-trips, garbage is rejected.
+    for choice in [
+        KernelChoice::Auto,
+        KernelChoice::Scalar,
+        KernelChoice::Avx2,
+        KernelChoice::Neon,
+    ] {
+        assert_eq!(KernelChoice::parse(choice.name()), Some(choice));
+        assert_eq!(
+            KernelChoice::parse(&format!("  {}  ", choice.name().to_uppercase())),
+            Some(choice)
+        );
+    }
+    assert_eq!(KernelChoice::parse("avx512"), None);
+    assert_eq!(KernelChoice::parse(""), None);
+
+    // Resolve-level: every request — including ones this architecture
+    // cannot honor — clamps to a kernel the CPU can actually run.
+    let available = Kernel::all_available();
+    assert_eq!(available[0], Kernel::Scalar, "scalar is always available and first");
+    for choice in [
+        KernelChoice::Auto,
+        KernelChoice::Scalar,
+        KernelChoice::Avx2,
+        KernelChoice::Neon,
+    ] {
+        let k = Kernel::detect(choice);
+        assert!(available.contains(&k), "{choice:?} resolved to unavailable {k:?}");
+    }
+    assert_eq!(Kernel::detect(KernelChoice::Scalar), Kernel::Scalar);
+    assert!(!Kernel::Scalar.fused(), "scalar is the unfused reference");
+}
+
+#[test]
+fn fixed_kernel_reduction_is_invariant_across_threads_and_schedules() {
+    // The narrowed determinism contract, per kernel: with `Config::kernel`
+    // pinned, thread count / slice count / schedule choice must not move a
+    // single bit relative to the sequential oracle under the SAME kernel.
+    // n = 36 with r·p = 12 keeps every path (panel clip, sweep groups)
+    // alive while the sweep stays fast.
+    let mut rng = Rng::new(0x4B_01);
+    let pencil = random_pencil(36, &mut rng);
+    for kernel in Kernel::all_available() {
+        let cfg = Config {
+            r: 4,
+            p: 3,
+            q: 3,
+            slices: 6,
+            kernel: kernel.choice(),
+            ..Config::default()
+        };
+        let oracle = reduce_seq(&pencil.a, &pencil.b, &cfg).unwrap();
+        oracle.verify(&pencil.a, &pencil.b).assert_ok(1e-10);
+        for threads in [1usize, 2, 4] {
+            for dynamic in [false, true] {
+                let run_cfg =
+                    Config { threads, dynamic_schedule: dynamic, ..cfg.clone() };
+                let mut session =
+                    HtSession::builder().config(run_cfg).build().unwrap();
+                let run = session.reduce(&pencil.a, &pencil.b).unwrap();
+                let label = format!(
+                    "kernel={} threads={threads} dynamic={dynamic}",
+                    kernel.name()
+                );
+                assert_bitwise(&oracle.h, &run.h, &format!("{label}: H"));
+                assert_bitwise(&oracle.t, &run.t, &format!("{label}: T"));
+                assert_bitwise(&oracle.q, &run.q, &format!("{label}: Q"));
+                assert_bitwise(&oracle.z, &run.z, &format!("{label}: Z"));
+            }
+        }
+    }
+}
+
+#[test]
+fn simd_matches_scalar_to_rounding_on_random_tiles() {
+    // Cross-kernel contract: same product, different rounding. The fused
+    // kernels must agree with the scalar reference to O(eps)-per-term —
+    // far tighter than any algorithmic difference could produce, far
+    // looser than bitwise. Sizes straddle KC = 256 so the k-blocking
+    // boundary (where per-block alpha application and accumulator
+    // carry-over live) is crossed.
+    let mut rng = Rng::new(0x4B_02);
+    for &(m, n, k) in &[(64usize, 48usize, 300usize), (100, 100, 100), (8, 4, 513)] {
+        let a = Matrix::randn(m, k, &mut rng);
+        let b = Matrix::randn(k, n, &mut rng);
+        let reference = kernels::with_kernel(Kernel::Scalar, || {
+            let mut c = Matrix::zeros(m, n);
+            gemm(1.0, a.as_ref(), Trans::No, b.as_ref(), Trans::No, 0.0, c.as_mut());
+            c
+        });
+        let scale = a.norm_fro() * b.norm_fro();
+        for kernel in Kernel::all_available() {
+            if kernel == Kernel::Scalar {
+                continue;
+            }
+            let c = kernels::with_kernel(kernel, || {
+                let mut c = Matrix::zeros(m, n);
+                gemm(1.0, a.as_ref(), Trans::No, b.as_ref(), Trans::No, 0.0, c.as_mut());
+                c
+            });
+            let diff = max_abs_diff(&reference, &c);
+            assert!(
+                diff <= 1e-13 * scale,
+                "{} vs scalar on {m}x{n}x{k}: diff {diff:e} > 1e-13 * {scale:e}",
+                kernel.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn simd_matches_scalar_on_adversarial_tiles() {
+    // Subnormals, signed zeros and huge dynamic range: the per-element
+    // bound is computed from |A|·|B| (the worst-case accumulated
+    // magnitude), with an absolute floor so all-subnormal dot products —
+    // where the relative bound underflows to zero — still pass only if
+    // the kernels agree to within absolute noise.
+    let mut rng = Rng::new(0x4B_03);
+    let (m, n, k) = (40usize, 24usize, 280usize);
+    let a = adversarial(m, k, &mut rng);
+    let b = adversarial(k, n, &mut rng);
+    let abs_a = Matrix::from_fn(m, k, |i, j| a[(i, j)].abs());
+    let abs_b = Matrix::from_fn(k, n, |i, j| b[(i, j)].abs());
+    let run = |kernel: Kernel| {
+        kernels::with_kernel(kernel, || {
+            let mut c = Matrix::zeros(m, n);
+            gemm(1.0, a.as_ref(), Trans::No, b.as_ref(), Trans::No, 0.0, c.as_mut());
+            c
+        })
+    };
+    let reference = run(Kernel::Scalar);
+    let mut absprod = Matrix::zeros(m, n);
+    kernels::with_kernel(Kernel::Scalar, || {
+        gemm(
+            1.0,
+            abs_a.as_ref(),
+            Trans::No,
+            abs_b.as_ref(),
+            Trans::No,
+            0.0,
+            absprod.as_mut(),
+        );
+    });
+    for kernel in Kernel::all_available() {
+        if kernel == Kernel::Scalar {
+            continue;
+        }
+        let c = run(kernel);
+        for j in 0..n {
+            for i in 0..m {
+                let diff = (reference[(i, j)] - c[(i, j)]).abs();
+                let bound = 1e-13 * absprod[(i, j)] + 1e-300;
+                assert!(
+                    diff <= bound,
+                    "{} vs scalar at ({i},{j}): diff {diff:e} > {bound:e}",
+                    kernel.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn one_column_slices_match_the_full_product_bitwise_per_kernel() {
+    // Slicing invariance at its sharpest edge: a 1-column slice of C takes
+    // the `gemv_n1` fast path, which branches on `Kernel::fused()` exactly
+    // so this test can hold — per kernel, column-by-column assembly must
+    // reproduce the packed full product bit for bit, signed zeros
+    // included (the adversarial tile plants them).
+    let mut rng = Rng::new(0x4B_04);
+    let (m, n, k) = (60usize, 12usize, 270usize);
+    for (tile, tag) in [
+        (
+            (Matrix::randn(m, k, &mut rng), Matrix::randn(k, n, &mut rng)),
+            "random",
+        ),
+        ((adversarial(m, k, &mut rng), adversarial(k, n, &mut rng)), "adversarial"),
+    ] {
+        let (a, b) = tile;
+        for kernel in Kernel::all_available() {
+            kernels::with_kernel(kernel, || {
+                let mut full = Matrix::zeros(m, n);
+                gemm(1.0, a.as_ref(), Trans::No, b.as_ref(), Trans::No, 0.0, full.as_mut());
+                let mut sliced = Matrix::zeros(m, n);
+                for j in 0..n {
+                    gemm(
+                        1.0,
+                        a.as_ref(),
+                        Trans::No,
+                        b.sub(0..k, j..j + 1),
+                        Trans::No,
+                        0.0,
+                        sliced.sub_mut(0..m, j..j + 1),
+                    );
+                }
+                assert_bitwise(
+                    &full,
+                    &sliced,
+                    &format!("{tag} tile, kernel={}", kernel.name()),
+                );
+            });
+        }
+    }
+}
+
+#[test]
+fn gemm_par_is_bitwise_gemm_per_kernel() {
+    // The pool inherits the submitter's kernel (batch capture), so the
+    // parallel panels run the same microkernel as the sequential call —
+    // and the panel split itself is bitwise-invariant. Both facts at once:
+    // per kernel, `gemm_par` at 4 threads equals `gemm` exactly.
+    let mut rng = Rng::new(0x4B_05);
+    let (m, n, k) = (96usize, 80usize, 260usize);
+    let a = Matrix::randn(m, k, &mut rng);
+    let b = Matrix::randn(k, n, &mut rng);
+    for kernel in Kernel::all_available() {
+        kernels::with_kernel(kernel, || {
+            let mut seq = Matrix::zeros(m, n);
+            gemm(1.0, a.as_ref(), Trans::No, b.as_ref(), Trans::No, 0.0, seq.as_mut());
+            let mut par = Matrix::zeros(m, n);
+            gemm_par(1.0, a.as_ref(), Trans::No, b.as_ref(), Trans::No, 0.0, par.as_mut(), 4);
+            assert_bitwise(&seq, &par, &format!("gemm_par kernel={}", kernel.name()));
+        });
+    }
+}
+
+#[test]
+fn builder_kernel_and_env_knob_agree_on_resolution() {
+    // The two override routes — `HtSession::builder().kernel(...)` and a
+    // `Config` literal — must resolve identically, and `Auto` must resolve
+    // to the process default the env knob establishes.
+    let via_builder = HtSession::builder()
+        .kernel(KernelChoice::Scalar)
+        .build()
+        .unwrap()
+        .config()
+        .resolved_kernel();
+    let via_config =
+        Config { kernel: KernelChoice::Scalar, ..Config::default() }.resolved_kernel();
+    assert_eq!(via_builder, via_config);
+    assert_eq!(via_builder, Kernel::Scalar);
+    assert_eq!(
+        Config::default().resolved_kernel(),
+        kernels::process_default(),
+        "Auto resolves to the process default"
+    );
+}
