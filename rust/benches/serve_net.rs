@@ -1,0 +1,296 @@
+//! Bench: serving front-door overhead — the same mixed-size pencil flood
+//! through three doors:
+//!
+//! * **in-process** — `SubmitHandle` straight into the queue (baseline);
+//! * **socket** — the frame protocol over loopback TCP (`NetServer` +
+//!   one `NetClient` per client thread), same queue behind it;
+//! * **procs** — the `ShardSupervisor`'s per-shard child processes,
+//!   frames over stdin/stdout (this bench binary re-invokes itself with
+//!   `--shard-worker`, which is why it must be `harness = false`).
+//!
+//! The cache is disabled everywhere so the numbers isolate transport +
+//! process overhead, not memoization. Bitwise parity of every door
+//! against the sequential oracle — including band-clip sizes (n ≤ r) —
+//! is hard-asserted up front; per-mode p50/p90/p99 latencies come from
+//! the serving tier's own log2-bucket histograms.
+//!
+//! Writes `BENCH_serve_net.json` (override: `PALLAS_BENCH_OUT`) before
+//! any timing-sensitive assertion. Env knobs: `PALLAS_SERVE_JOBS`,
+//! `PALLAS_SERVE_SIZES`, `PALLAS_BENCH_SOFT`, `PALLAS_BENCH_TOL`.
+
+use paraht::api::reduce_seq;
+use paraht::config::Config;
+use paraht::experiments::common;
+use paraht::ht::two_stage::HtDecomposition;
+use paraht::pencil::random::random_pencil;
+use paraht::pencil::Pencil;
+use paraht::serve::{
+    LatencyHistogram, NetClient, NetConfig, NetServer, ServeConfig, ShardRouter, ShardSupervisor,
+    SubmitQueue, SupervisorConfig,
+};
+use paraht::util::env;
+use paraht::util::proptest::max_abs_diff;
+use paraht::util::rng::Rng;
+use std::fmt::Write as _;
+use std::time::Instant;
+
+const CLIENTS: usize = 3;
+
+/// Small-pencil serving tuning (band must fit the smallest size).
+fn base_cfg() -> Config {
+    Config { r: 4, p: 2, q: 4, ..Config::default() }
+}
+
+fn serve_cfg() -> ServeConfig {
+    ServeConfig {
+        shards: 2,
+        threads_per_shard: 1,
+        cache_entries: 0, // isolate transport overhead, not memoization
+        base: base_cfg(),
+        ..ServeConfig::default()
+    }
+}
+
+fn supervisor_cfg() -> SupervisorConfig {
+    SupervisorConfig {
+        procs: 2,
+        threads_per_proc: 1,
+        base: base_cfg(),
+        // worker_argv stays empty: it resolves to this bench executable
+        // plus `--shard-worker`, which `main` handles first thing.
+        ..SupervisorConfig::default()
+    }
+}
+
+/// Hard bitwise gate: `d` must be exactly the sequential oracle under the
+/// effective (band-clipped) config.
+fn assert_parity(label: &str, p: &Pencil, d: &HtDecomposition) {
+    let eff = base_cfg().clipped_for(p.n());
+    let oracle = reduce_seq(&p.a, &p.b, &eff).expect("oracle reduction succeeds");
+    assert_eq!(max_abs_diff(&d.h, &oracle.h), 0.0, "{label}: H diverges (n={})", p.n());
+    assert_eq!(max_abs_diff(&d.t, &oracle.t), 0.0, "{label}: T diverges (n={})", p.n());
+    assert_eq!(max_abs_diff(&d.q, &oracle.q), 0.0, "{label}: Q diverges (n={})", p.n());
+    assert_eq!(max_abs_diff(&d.z, &oracle.z), 0.0, "{label}: Z diverges (n={})", p.n());
+}
+
+struct ModeRow {
+    mode: &'static str,
+    jobs: usize,
+    secs: f64,
+    pencils_per_sec: f64,
+    p50_ms: f64,
+    p90_ms: f64,
+    p99_ms: f64,
+    mean_ms: f64,
+}
+
+fn mode_row(mode: &'static str, jobs: usize, secs: f64, hist: &LatencyHistogram) -> ModeRow {
+    let s = hist.snapshot();
+    ModeRow {
+        mode,
+        jobs,
+        secs,
+        pencils_per_sec: jobs as f64 / secs,
+        p50_ms: s.p50_ms(),
+        p90_ms: s.p90_ms(),
+        p99_ms: s.p99_ms(),
+        mean_ms: s.mean_ms(),
+    }
+}
+
+/// In-process baseline: `CLIENTS` threads submit through clones of one
+/// `SubmitHandle` and wait each ticket synchronously.
+fn run_in_process(pool: &[Pencil], jobs: usize) -> ModeRow {
+    let queue = SubmitQueue::new(ShardRouter::new(serve_cfg()).unwrap());
+    let handle = queue.handle();
+    for p in pool.iter().take(4) {
+        let d = handle.submit(p.a.clone(), p.b.clone()).unwrap().wait().unwrap();
+        assert_parity("in_process", p, &d);
+    }
+    let hist = LatencyHistogram::new();
+    let t = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..CLIENTS {
+            let handle = queue.handle();
+            let hist = &hist;
+            s.spawn(move || {
+                let mut i = c;
+                while i < jobs {
+                    let p = &pool[i % pool.len()];
+                    let t0 = Instant::now();
+                    let ticket =
+                        handle.submit(p.a.clone(), p.b.clone()).expect("submission accepted");
+                    ticket.wait().expect("served reduction succeeds");
+                    hist.record(t0.elapsed());
+                    i += CLIENTS;
+                }
+            });
+        }
+    });
+    let secs = t.elapsed().as_secs_f64();
+    queue.shutdown();
+    mode_row("in_process", jobs, secs, &hist)
+}
+
+/// Loopback socket: same queue, but every job is framed, sent, decoded,
+/// executed, framed back. One connection per client thread (the server's
+/// acceptor pool is sized to match).
+fn run_socket(pool: &[Pencil], jobs: usize) -> ModeRow {
+    let queue = SubmitQueue::new(ShardRouter::new(serve_cfg()).unwrap());
+    let ncfg = NetConfig { addr: "127.0.0.1:0".to_string(), acceptors: CLIENTS };
+    let server = NetServer::start(queue, ncfg).expect("bind loopback server");
+    let addr = server.addr().to_string();
+    {
+        let mut client = NetClient::connect(&addr).expect("connect parity client");
+        for p in pool.iter().take(4) {
+            let d = client.reduce(&p.a, &p.b).expect("socket reduction succeeds");
+            assert_parity("socket", p, &d);
+        }
+    }
+    let hist = LatencyHistogram::new();
+    let t = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..CLIENTS {
+            let addr = &addr;
+            let hist = &hist;
+            s.spawn(move || {
+                let mut client = NetClient::connect(addr).expect("connect flood client");
+                let mut i = c;
+                while i < jobs {
+                    let p = &pool[i % pool.len()];
+                    let t0 = Instant::now();
+                    client.reduce(&p.a, &p.b).expect("socket reduction succeeds");
+                    hist.record(t0.elapsed());
+                    i += CLIENTS;
+                }
+            });
+        }
+    });
+    let secs = t.elapsed().as_secs_f64();
+    let stats = NetClient::connect(&addr)
+        .and_then(|mut c| c.stats())
+        .expect("stats over the socket");
+    assert!(stats.contains("\"mode\": \"queue\""), "stats JSON names its backend: {stats}");
+    server.shutdown();
+    mode_row("socket", jobs, secs, &hist)
+}
+
+/// Multi-process: per-shard child workers behind the supervisor, frames
+/// over stdin/stdout. A healthy flood must never restart a child —
+/// hard-asserted via the supervisor's counters.
+fn run_procs(pool: &[Pencil], jobs: usize) -> ModeRow {
+    let sup = ShardSupervisor::new(supervisor_cfg()).expect("supervisor config valid");
+    for p in pool.iter().take(4) {
+        let d = sup.reduce(&p.a, &p.b).expect("supervised reduction succeeds");
+        assert_parity("procs", p, &d);
+    }
+    let hist = LatencyHistogram::new();
+    let t = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..CLIENTS {
+            let sup = &sup;
+            let hist = &hist;
+            s.spawn(move || {
+                let mut i = c;
+                while i < jobs {
+                    let p = &pool[i % pool.len()];
+                    let t0 = Instant::now();
+                    sup.reduce(&p.a, &p.b).expect("supervised reduction succeeds");
+                    hist.record(t0.elapsed());
+                    i += CLIENTS;
+                }
+            });
+        }
+    });
+    let secs = t.elapsed().as_secs_f64();
+    let stats = sup.stats();
+    assert_eq!(stats.restarts(), 0, "healthy flood must not restart a child");
+    sup.shutdown();
+    mode_row("procs", jobs, secs, &hist)
+}
+
+fn main() {
+    // Worker mode first: the supervisor re-invokes this executable with
+    // `--shard-worker`, and the worker owns stdin/stdout entirely.
+    if std::env::args().any(|a| a == "--shard-worker") {
+        std::process::exit(paraht::serve::worker_main());
+    }
+
+    let sizes = env::serve_sizes(&[12, 16, 24]);
+    let jobs = env::serve_jobs(96).max(CLIENTS);
+    eprintln!(
+        "serve_net: {jobs} jobs x 3 doors, sizes {sizes:?} \
+         (set PALLAS_SERVE_JOBS / PALLAS_SERVE_SIZES to change)"
+    );
+
+    let mut rng = Rng::new(0x5E7);
+    // The parity prefix (first 4 pool entries, checked by every mode)
+    // deliberately includes band-clip sizes n <= r.
+    let mut pool: Vec<Pencil> =
+        [3usize, 4, 6].iter().map(|&n| random_pencil(n, &mut rng)).collect();
+    let distinct = jobs.min(32).max(4);
+    pool.extend((0..distinct - 3).map(|i| random_pencil(sizes[i % sizes.len()], &mut rng)));
+
+    let rows = vec![
+        run_in_process(&pool, jobs),
+        run_socket(&pool, jobs),
+        run_procs(&pool, jobs),
+    ];
+    println!(
+        "{:<12}{:>7}{:>10}{:>14}{:>10}{:>10}{:>10}{:>10}",
+        "mode", "jobs", "secs", "pencils/sec", "p50ms", "p90ms", "p99ms", "meanms"
+    );
+    for r in &rows {
+        println!(
+            "{:<12}{:>7}{:>10.4}{:>14.1}{:>10.2}{:>10.2}{:>10.2}{:>10.2}",
+            r.mode, r.jobs, r.secs, r.pencils_per_sec, r.p50_ms, r.p90_ms, r.p99_ms, r.mean_ms
+        );
+    }
+
+    let pps = |mode: &str| {
+        rows.iter().find(|r| r.mode == mode).map(|r| r.pencils_per_sec).unwrap_or(f64::NAN)
+    };
+    let socket_overhead = pps("in_process") / pps("socket");
+    // Timing-sensitive shape condition: loopback framing costs something,
+    // but must not eat an order of magnitude on these job sizes. Asserted
+    // only after the JSON artifact exists.
+    let cond_socket = socket_overhead <= 10.0 * common::bench_tol();
+
+    let mut body = String::new();
+    let _ = writeln!(body, "  \"jobs\": {jobs},");
+    let _ = writeln!(body, "  \"sizes\": {sizes:?},");
+    let _ = writeln!(body, "  \"clients\": {CLIENTS},");
+    body.push_str("  \"modes\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let _ = write!(
+            body,
+            "    {{\"mode\": \"{}\", \"jobs\": {}, \"secs\": {:.6}, \"pencils_per_sec\": {}, \
+             \"p50_ms\": {}, \"p90_ms\": {}, \"p99_ms\": {}, \"mean_ms\": {}}}",
+            r.mode,
+            r.jobs,
+            r.secs,
+            common::json_num(r.pencils_per_sec),
+            common::json_num(r.p50_ms),
+            common::json_num(r.p90_ms),
+            common::json_num(r.p99_ms),
+            common::json_num(r.mean_ms)
+        );
+        body.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    body.push_str("  ],\n");
+    let _ = writeln!(body, "  \"socket_overhead\": {},", common::json_num(socket_overhead));
+    let _ = write!(body, "  \"checks_held\": {cond_socket}");
+    common::write_bench_json("BENCH_serve_net.json", "serve_net", &body);
+
+    if common::bench_check(
+        cond_socket,
+        &format!(
+            "socket door must stay within 10x of in-process: {:.1} vs {:.1} pencils/sec \
+             (overhead {socket_overhead:.2}x)",
+            pps("socket"),
+            pps("in_process")
+        ),
+    ) {
+        println!("\nshape checks OK (all doors bitwise-exact; socket overhead {socket_overhead:.2}x)");
+    }
+}

@@ -172,6 +172,22 @@ impl Config {
         }
     }
 
+    /// Whether two configs share the *result-determining* tuning: `r`,
+    /// `p`, `q`, `lookahead`, and the resolved GEMM kernel — the exact
+    /// field set the serving cache keys on
+    /// ([`crate::serve::pencil_fingerprint`]). Capacity knobs (`threads`,
+    /// `slices`, `dynamic_schedule`) are output-invariant by the
+    /// determinism contract and deliberately ignored. The network front
+    /// door uses this to decide whether a client's explicit wire tuning
+    /// matches the tuning the serving queue is pinned to.
+    pub fn same_tuning(&self, other: &Config) -> bool {
+        self.r == other.r
+            && self.p == other.p
+            && self.q == other.q
+            && self.lookahead == other.lookahead
+            && self.resolved_kernel() == other.resolved_kernel()
+    }
+
     /// Effective slice count for apply tasks.
     pub fn effective_slices(&self) -> usize {
         if self.slices > 0 {
@@ -285,6 +301,28 @@ mod tests {
         // Tiny no-op pencils come back unchanged (floor at r = 2 for n = 3).
         assert_eq!(c.clipped_for(2).r, 16);
         assert_eq!(c.clipped_for(3).r, 2);
+    }
+
+    #[test]
+    fn same_tuning_tracks_result_determining_fields_only() {
+        let base = Config { r: 8, p: 4, q: 4, ..Config::default() };
+        // Capacity knobs don't split tunings.
+        let capacity =
+            Config { threads: 16, slices: 9, dynamic_schedule: true, ..base.clone() };
+        assert!(base.same_tuning(&capacity));
+        // Every result-determining field does.
+        for other in [
+            Config { r: 9, ..base.clone() },
+            Config { p: 5, ..base.clone() },
+            Config { q: 5, ..base.clone() },
+            Config { lookahead: false, ..base.clone() },
+        ] {
+            assert!(!base.same_tuning(&other), "{other:?}");
+        }
+        // Kernel comparison is at the resolved level: Auto vs the explicit
+        // spelling of what Auto resolves to are the same tuning.
+        let explicit = Config { kernel: base.resolved_kernel().choice(), ..base.clone() };
+        assert!(base.same_tuning(&explicit));
     }
 
     #[test]

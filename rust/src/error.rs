@@ -17,6 +17,21 @@ pub enum Error {
     /// PJRT runtime failure (artifact loading / compilation / execution).
     Runtime(String),
 
+    /// Admission control shed this job: the target lane stayed full past
+    /// the configured deadline ([`crate::serve::queue`]'s `try_submit` /
+    /// `submit_timeout`). The job was never enqueued; resubmitting later
+    /// is safe.
+    Overloaded(String),
+
+    /// A supervised shard child process died with this job in flight
+    /// ([`crate::serve::supervisor`]). The supervisor restarts the child
+    /// with capped backoff; resubmitting is safe (reductions are pure).
+    ShardDown(String),
+
+    /// Wire-protocol decode failure ([`crate::serve::proto`]): truncated,
+    /// oversized or malformed frame, or an unsupported protocol version.
+    Protocol(String),
+
     /// I/O failure.
     Io(std::io::Error),
 }
@@ -28,6 +43,9 @@ impl fmt::Display for Error {
             Error::Config(msg) => write!(f, "config error: {msg}"),
             Error::Numerical(msg) => write!(f, "numerical error: {msg}"),
             Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
+            Error::Overloaded(msg) => write!(f, "overloaded: {msg}"),
+            Error::ShardDown(msg) => write!(f, "shard down: {msg}"),
+            Error::Protocol(msg) => write!(f, "protocol error: {msg}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
     }
@@ -67,5 +85,17 @@ impl Error {
     /// Helper for runtime errors.
     pub fn runtime(msg: impl Into<String>) -> Self {
         Error::Runtime(msg.into())
+    }
+    /// Helper for admission-control shedding errors.
+    pub fn overloaded(msg: impl Into<String>) -> Self {
+        Error::Overloaded(msg.into())
+    }
+    /// Helper for dead-shard errors.
+    pub fn shard_down(msg: impl Into<String>) -> Self {
+        Error::ShardDown(msg.into())
+    }
+    /// Helper for wire-protocol errors.
+    pub fn protocol(msg: impl Into<String>) -> Self {
+        Error::Protocol(msg.into())
     }
 }

@@ -57,4 +57,7 @@ pub use config::Config;
 pub use error::{Error, Result};
 pub use ht::two_stage::HtDecomposition;
 pub use linalg::matrix::Matrix;
-pub use serve::{ServeConfig, ShardRouter, SubmitQueue};
+pub use serve::{
+    NetClient, NetConfig, NetServer, ServeConfig, ShardRouter, ShardSupervisor, SubmitQueue,
+    SupervisorConfig,
+};

@@ -8,9 +8,16 @@
 //!                    [--sizes a,b,c] [--threads T]
 //! paraht serve-bench [--jobs J] [--unique U] [--sizes a,b,c] [--shards N]
 //!                    [--shard-threads M] [--queue-cap C] [--cache-cap K]
+//! paraht serve-net   [--addr HOST:PORT|unix:PATH] [--acceptors N]
+//!                    [--procs P] [--stats] [serve-bench geometry args]
 //! paraht validate    [--pjrt]
 //! paraht info
 //! ```
+//!
+//! The hidden `--shard-worker` mode (handled before normal argument
+//! parsing) turns this binary into a frame-protocol worker on
+//! stdin/stdout for [`paraht::serve::ShardSupervisor`] — it is spawned
+//! by a supervising parent, not invoked by people.
 
 use paraht::api::HtSession;
 use paraht::config::Config;
@@ -25,12 +32,20 @@ use paraht::util::rng::Rng;
 
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
+    // Worker mode must win before any other parsing: the supervisor
+    // re-invokes this very binary with `--shard-worker`, and the worker
+    // must never print banners or parse job-count flags — its stdin and
+    // stdout belong to the frame protocol.
+    if raw.iter().any(|a| a == "--shard-worker") {
+        std::process::exit(paraht::serve::worker_main());
+    }
     let args = Args::parse(raw);
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
     let code = match cmd {
         "reduce" => cmd_reduce(&args),
         "experiment" => cmd_experiment(&args),
         "serve-bench" => cmd_serve_bench(&args),
+        "serve-net" => cmd_serve_net(&args),
         "validate" => cmd_validate(&args),
         "info" => cmd_info(),
         _ => {
@@ -305,7 +320,9 @@ fn cmd_serve_bench(args: &Args) -> i32 {
         jobs as f64 / secs
     );
     println!("reduced per shard: {:?}", rstats.reduced_per_shard);
-    if let Some(c) = rstats.cache {
+    // One atomic snapshot under the cache lock — the hit/miss/entry
+    // numbers printed here are from a single consistent instant.
+    if let Some(c) = queue.router().cache_stats() {
         println!(
             "cache: {} hits / {} misses (hit rate {:.1}%), {} entries, {} evictions",
             c.hits,
@@ -316,14 +333,100 @@ fn cmd_serve_bench(args: &Args) -> i32 {
         );
     }
     println!(
-        "queue: {} submitted, {} completed, {} rejected",
-        qstats.submitted, qstats.completed, qstats.rejected
+        "queue: {} submitted, {} completed, {} rejected, {} shed",
+        qstats.submitted, qstats.completed, qstats.rejected, qstats.shed
     );
+    for (class, h) in queue.latency_snapshot() {
+        if h.count == 0 {
+            continue;
+        }
+        println!(
+            "latency[{}]: n={}  p50 {:.2}ms  p90 {:.2}ms  p99 {:.2}ms  mean {:.2}ms",
+            class.label(),
+            h.count,
+            h.p50_ms(),
+            h.p90_ms(),
+            h.p99_ms(),
+            h.mean_ms()
+        );
+    }
     queue.shutdown();
     if failed > 0 {
         1
     } else {
         0
+    }
+}
+
+/// Serve the reduction tier over a socket (`--addr`, default from
+/// `PALLAS_NET_ADDR`), backed either by the in-process queue (default)
+/// or, with `--procs P` (or `PALLAS_SHARD_PROCS`), by supervised
+/// per-size-class child processes. `--stats` connects as a client
+/// instead and prints the server's statistics JSON.
+fn cmd_serve_net(args: &Args) -> i32 {
+    use paraht::serve::{NetClient, NetConfig, NetServer, ShardSupervisor, SupervisorConfig};
+
+    let mut ncfg = NetConfig::from_env();
+    ncfg.addr = args.get_str("addr", &ncfg.addr);
+    ncfg.acceptors = args.get("acceptors", ncfg.acceptors);
+
+    if args.has_flag("stats") {
+        return match NetClient::connect(&ncfg.addr).and_then(|mut c| c.stats()) {
+            Ok(json) => {
+                println!("{json}");
+                0
+            }
+            Err(e) => {
+                eprintln!("error: {e}");
+                1
+            }
+        };
+    }
+
+    let procs = args.get("procs", paraht::util::env::shard_procs(0));
+    let server = if procs > 0 {
+        let mut sup = SupervisorConfig::from_env();
+        sup.procs = procs;
+        sup.threads_per_proc = args.get("shard-threads", sup.threads_per_proc);
+        sup.base = Config {
+            r: args.get("r", sup.base.r),
+            p: args.get("p", sup.base.p),
+            q: args.get("q", sup.base.q),
+            ..sup.base
+        };
+        println!(
+            "serve-net: {} supervised worker processes x {} threads",
+            sup.procs, sup.threads_per_proc
+        );
+        ShardSupervisor::new(sup).and_then(|s| NetServer::start_supervised(s, ncfg))
+    } else {
+        let mut scfg = ServeConfig::from_env();
+        scfg.shards = args.get("shards", scfg.shards);
+        scfg.threads_per_shard = args.get("shard-threads", scfg.threads_per_shard);
+        scfg.queue_capacity = args.get("queue-cap", scfg.queue_capacity);
+        scfg.cache_entries = args.get("cache-cap", scfg.cache_entries);
+        println!(
+            "serve-net: {} in-process shards x {} threads, queue cap {}, cache cap {}",
+            scfg.shards, scfg.threads_per_shard, scfg.queue_capacity, scfg.cache_entries
+        );
+        ShardRouter::new(scfg).map(SubmitQueue::new).and_then(|q| NetServer::start(q, ncfg))
+    };
+    let server = match server {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "listening on {0} — query with `paraht serve-net --stats --addr {0}`",
+        server.addr()
+    );
+    // Park forever: this process serves until killed. A ^C never runs
+    // the server's Drop, which is fine — supervised workers exit on
+    // stdin EOF, their documented shutdown path.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
     }
 }
 
@@ -411,6 +514,7 @@ fn print_help() {
            paraht reduce      --n 512 [--saddle] [--r 16 --p 8 --q 8] [--threads T] [--mode seq|par|sim] [--check]\n\
            paraht experiment  fig9a|fig9b|fig10|fig11|flops|ablations [--n N] [--sizes a,b,c] [--threads T]\n\
            paraht serve-bench [--jobs J] [--unique U] [--sizes a,b,c] [--shards N] [--shard-threads M] [--queue-cap C] [--cache-cap K]\n\
+           paraht serve-net   [--addr HOST:PORT|unix:PATH] [--acceptors N] [--procs P] [--stats] [geometry args as serve-bench]\n\
            paraht validate    [--pjrt] [--n N]\n\
            paraht info"
     );

@@ -217,7 +217,22 @@ impl ResultCache {
         self.len() == 0
     }
 
-    /// Counter snapshot.
+    /// Atomic counter snapshot. `ResultCache` is not internally
+    /// synchronized — callers hold the serving layer's cache mutex for the
+    /// duration of this call, so the returned [`CacheStats`] is one
+    /// consistent instant: `hits + misses` always equals the lookups that
+    /// actually happened, and `entries`/`bytes` describe the same resident
+    /// set. Contrast with reading the counters through several separate
+    /// lock acquisitions, which can tear (a hit recorded between reads
+    /// shows up in one field but not another). The CLI and bench printers
+    /// route through [`crate::serve::ShardRouter::cache_stats`], which
+    /// takes the lock once around this.
+    pub fn snapshot(&self) -> CacheStats {
+        self.stats()
+    }
+
+    /// Counter snapshot (alias of [`ResultCache::snapshot`]; kept as the
+    /// historical name).
     pub fn stats(&self) -> CacheStats {
         CacheStats {
             hits: self.hits,

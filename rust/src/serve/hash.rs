@@ -72,6 +72,20 @@ impl FxHasher64 {
     }
 }
 
+/// Size-class routing shared by the in-process [`crate::serve::ShardRouter`]
+/// and the multi-process [`crate::serve::supervisor::ShardSupervisor`]: the
+/// shard (out of `count`) responsible for problem size `n`. A hash of `n`
+/// rather than `n % count`, so arithmetic size progressions spread instead
+/// of piling onto one shard; the same `n` always maps to the same shard,
+/// which is what keeps that shard's per-`n` workspace warm. Keeping the one
+/// definition here means a pencil floods to the *same* size class whether
+/// the shard is a thread or a child process.
+pub fn size_class_shard(n: usize, count: usize) -> usize {
+    let mut h = FxHasher64::new();
+    h.write_usize(n);
+    (h.finish() % count.max(1) as u64) as usize
+}
+
 /// Fingerprint a pencil together with the effective tuning that determines
 /// the reduction's output.
 ///
@@ -112,6 +126,19 @@ mod tests {
     use super::*;
     use crate::pencil::random::random_pencil;
     use crate::util::rng::Rng;
+
+    #[test]
+    fn size_class_shard_is_stable_in_range_and_zero_count_safe() {
+        for n in [0usize, 2, 16, 23, 400] {
+            for count in [1usize, 2, 3, 7] {
+                let s = size_class_shard(n, count);
+                assert!(s < count);
+                assert_eq!(s, size_class_shard(n, count), "same n, same shard");
+            }
+        }
+        // Degenerate count clamps instead of dividing by zero.
+        assert_eq!(size_class_shard(10, 0), 0);
+    }
 
     #[test]
     fn fingerprint_is_deterministic_and_clone_invariant() {

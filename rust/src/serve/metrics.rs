@@ -1,0 +1,347 @@
+//! Serving-tier latency observability: fixed-bucket histograms with
+//! lock-cheap atomic counters, one per pencil size class.
+//!
+//! The look-ahead literature (Rodríguez-Sánchez et al., 1709.00302) makes
+//! the point that *saturation* behaviour — what the tail looks like when
+//! every lane is busy — is the metric that matters for a serving tier, not
+//! single-job latency. This module makes that measurable: every completed
+//! ticket records its submit→completion time into a [`LatencyHistogram`]
+//! selected by the job's [`SizeClass`], and snapshots report p50/p90/p99
+//! next to the cache hit/miss counters.
+//!
+//! **Design.** Buckets are fixed at construction (powers of two in
+//! microseconds, [`BUCKETS`] of them), so recording is one atomic
+//! increment on a precomputed index — no locks, no allocation, no
+//! contention beyond cache-line sharing on hot buckets. Quantiles are
+//! computed at *snapshot* time by walking the cumulative distribution and
+//! reporting the upper edge of the bucket where the target rank lands —
+//! an upper bound with relative error ≤ 2× (one bucket), which is the
+//! right trade for a histogram that must be recordable from every
+//! dispatcher thread at once.
+//!
+//! Everything here is pure std and shared by value inside `Arc`s: the
+//! submission queue owns one [`ServeMetrics`] and records at ticket
+//! completion; the network front door ([`crate::serve::net`]) exports the
+//! same snapshots through the protocol's `Stats` request; the CLI and the
+//! `serve_net` bench print them.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Number of histogram buckets. Bucket `i` counts latencies in
+/// `[2^i, 2^(i+1))` microseconds; bucket 0 also absorbs sub-microsecond
+/// samples and the last bucket absorbs everything above `2^BUCKETS` µs
+/// (~1.2 hours — far past any sane reduction).
+pub const BUCKETS: usize = 32;
+
+/// Fixed-bucket latency histogram with atomic counters.
+///
+/// `record` is wait-free (one relaxed `fetch_add` per counter); `snapshot`
+/// reads every bucket without stopping writers, so a snapshot taken under
+/// load is a consistent-enough view (individual counters are exact, the
+/// set is racy by at most the samples recorded mid-walk — fine for
+/// percentile reporting, documented here so nobody "fixes" it with a
+/// lock).
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_micros: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram::new()
+    }
+}
+
+impl LatencyHistogram {
+    /// Empty histogram.
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_micros: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one latency sample.
+    pub fn record(&self, d: Duration) {
+        let micros = d.as_micros().min(u128::from(u64::MAX)) as u64;
+        self.buckets[bucket_of(micros)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_micros.fetch_add(micros, Ordering::Relaxed);
+    }
+
+    /// Copy the counters out (see the type docs for the consistency
+    /// contract under concurrent writers).
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+            count: self.count.load(Ordering::Relaxed),
+            sum_micros: self.sum_micros.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Bucket index for a sample of `micros` microseconds: `floor(log2)`,
+/// clamped into the fixed bucket range.
+fn bucket_of(micros: u64) -> usize {
+    if micros == 0 {
+        0
+    } else {
+        (63 - micros.leading_zeros() as usize).min(BUCKETS - 1)
+    }
+}
+
+/// Plain-value copy of a [`LatencyHistogram`] at one instant; quantiles
+/// are computed here, off the hot path.
+#[derive(Clone, Debug)]
+pub struct HistogramSnapshot {
+    /// Per-bucket sample counts (bucket `i` = `[2^i, 2^(i+1))` µs).
+    pub buckets: [u64; BUCKETS],
+    /// Total samples recorded.
+    pub count: u64,
+    /// Sum of all samples in microseconds (for the mean).
+    pub sum_micros: u64,
+}
+
+impl HistogramSnapshot {
+    /// Upper-bound estimate of the `q`-quantile in milliseconds (`q` in
+    /// `[0, 1]`): the upper edge of the bucket where the target rank
+    /// lands. Returns 0 for an empty histogram.
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        // Rank of the target sample, 1-based, clamped into [1, count].
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                // Upper edge of bucket i is 2^(i+1) µs.
+                return (1u64 << (i + 1)) as f64 / 1_000.0;
+            }
+        }
+        // Unreachable when the counters are consistent; racy snapshots can
+        // leave count ahead of the bucket sum — report the top edge.
+        (1u64 << BUCKETS) as f64 / 1_000.0
+    }
+
+    /// Median latency upper bound in milliseconds.
+    pub fn p50_ms(&self) -> f64 {
+        self.quantile_ms(0.50)
+    }
+
+    /// 90th-percentile latency upper bound in milliseconds.
+    pub fn p90_ms(&self) -> f64 {
+        self.quantile_ms(0.90)
+    }
+
+    /// 99th-percentile latency upper bound in milliseconds (the tail the
+    /// admission-control deadline is tuned against).
+    pub fn p99_ms(&self) -> f64 {
+        self.quantile_ms(0.99)
+    }
+
+    /// Mean latency in milliseconds (exact, unlike the quantiles: the sum
+    /// is tracked directly).
+    pub fn mean_ms(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_micros as f64 / self.count as f64 / 1_000.0
+        }
+    }
+}
+
+/// Pencil size classes for latency accounting. Boundaries are fixed (not
+/// config-dependent) so that dashboards and bench artifacts are comparable
+/// across serving geometries: latency scales with `n³` work, so mixing a
+/// `n = 16` flood into a `n = 512` histogram would bury the tail the
+/// histogram exists to show.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SizeClass {
+    /// `n < 32` — band-clip territory, sub-millisecond reductions.
+    Tiny,
+    /// `32 <= n < 128`.
+    Small,
+    /// `128 <= n < 512` — the paper's figure range.
+    Medium,
+    /// `n >= 512`.
+    Large,
+}
+
+impl SizeClass {
+    /// All classes, in ascending size order (stable across releases — the
+    /// `BENCH_serve_net.json` schema and the `Stats` reply index by it).
+    pub const ALL: [SizeClass; 4] =
+        [SizeClass::Tiny, SizeClass::Small, SizeClass::Medium, SizeClass::Large];
+
+    /// The class a problem size `n` falls into.
+    pub fn of(n: usize) -> SizeClass {
+        match n {
+            0..=31 => SizeClass::Tiny,
+            32..=127 => SizeClass::Small,
+            128..=511 => SizeClass::Medium,
+            _ => SizeClass::Large,
+        }
+    }
+
+    /// Stable lowercase label (JSON keys, table rows).
+    pub fn label(self) -> &'static str {
+        match self {
+            SizeClass::Tiny => "tiny",
+            SizeClass::Small => "small",
+            SizeClass::Medium => "medium",
+            SizeClass::Large => "large",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            SizeClass::Tiny => 0,
+            SizeClass::Small => 1,
+            SizeClass::Medium => 2,
+            SizeClass::Large => 3,
+        }
+    }
+}
+
+/// One latency histogram per size class — the serving tier's shared
+/// observability block. Lives in an `Arc` next to the submission queue's
+/// counters; recording picks the class from the job's `n`.
+#[derive(Debug, Default)]
+pub struct ServeMetrics {
+    per_class: [LatencyHistogram; 4],
+}
+
+impl ServeMetrics {
+    /// Empty metrics block.
+    pub fn new() -> ServeMetrics {
+        ServeMetrics::default()
+    }
+
+    /// Record one completed job: size `n`, submit→completion latency `d`.
+    pub fn record(&self, n: usize, d: Duration) {
+        self.per_class[SizeClass::of(n).index()].record(d);
+    }
+
+    /// Snapshot every class (including empty ones — consumers filter).
+    pub fn snapshot(&self) -> Vec<(SizeClass, HistogramSnapshot)> {
+        SizeClass::ALL
+            .iter()
+            .map(|&c| (c, self.per_class[c.index()].snapshot()))
+            .collect()
+    }
+
+    /// Render the non-empty classes as a JSON object fragment
+    /// (`{"tiny": {"count": …, "p50_ms": …, …}, …}`) — the shape exported
+    /// through the protocol's `Stats` reply and printed by the CLI.
+    pub fn to_json(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::from("{");
+        let mut first = true;
+        for (class, snap) in self.snapshot() {
+            if snap.count == 0 {
+                continue;
+            }
+            if !first {
+                out.push_str(", ");
+            }
+            first = false;
+            let _ = write!(
+                out,
+                "\"{}\": {{\"count\": {}, \"mean_ms\": {:.3}, \"p50_ms\": {:.3}, \
+                 \"p90_ms\": {:.3}, \"p99_ms\": {:.3}}}",
+                class.label(),
+                snap.count,
+                snap.mean_ms(),
+                snap.p50_ms(),
+                snap.p90_ms(),
+                snap.p99_ms()
+            );
+        }
+        out.push('}');
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_edges_are_log2() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 0);
+        assert_eq!(bucket_of(2), 1);
+        assert_eq!(bucket_of(3), 1);
+        assert_eq!(bucket_of(4), 2);
+        assert_eq!(bucket_of(1023), 9);
+        assert_eq!(bucket_of(1024), 10);
+        assert_eq!(bucket_of(u64::MAX), BUCKETS - 1, "huge samples clamp to the top bucket");
+    }
+
+    #[test]
+    fn quantiles_walk_the_cumulative_distribution() {
+        let h = LatencyHistogram::new();
+        // 90 samples at ~1 ms (bucket 9: [512, 1024) µs), 10 at ~100 ms
+        // (bucket 16: [65536, 131072) µs).
+        for _ in 0..90 {
+            h.record(Duration::from_micros(600));
+        }
+        for _ in 0..10 {
+            h.record(Duration::from_micros(100_000));
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 100);
+        // p50 and p90 land in the 1 ms bucket: upper edge 1024 µs.
+        assert_eq!(s.p50_ms(), 1.024);
+        assert_eq!(s.p90_ms(), 1.024);
+        // p99 lands in the 100 ms bucket: upper edge 131072 µs.
+        assert_eq!(s.p99_ms(), 131.072);
+        assert!((s.mean_ms() - 10.54).abs() < 0.01, "mean is exact: {}", s.mean_ms());
+    }
+
+    #[test]
+    fn empty_histogram_reports_zero() {
+        let s = LatencyHistogram::new().snapshot();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.p50_ms(), 0.0);
+        assert_eq!(s.p99_ms(), 0.0);
+        assert_eq!(s.mean_ms(), 0.0);
+    }
+
+    #[test]
+    fn size_classes_have_fixed_boundaries() {
+        assert_eq!(SizeClass::of(0), SizeClass::Tiny);
+        assert_eq!(SizeClass::of(31), SizeClass::Tiny);
+        assert_eq!(SizeClass::of(32), SizeClass::Small);
+        assert_eq!(SizeClass::of(127), SizeClass::Small);
+        assert_eq!(SizeClass::of(128), SizeClass::Medium);
+        assert_eq!(SizeClass::of(511), SizeClass::Medium);
+        assert_eq!(SizeClass::of(512), SizeClass::Large);
+        for c in SizeClass::ALL {
+            assert!(!c.label().is_empty());
+        }
+    }
+
+    #[test]
+    fn metrics_route_by_size_class_and_render_json() {
+        let m = ServeMetrics::new();
+        m.record(16, Duration::from_micros(300));
+        m.record(16, Duration::from_micros(400));
+        m.record(200, Duration::from_millis(50));
+        let snap = m.snapshot();
+        assert_eq!(snap.len(), 4, "every class is reported");
+        assert_eq!(snap[0].1.count, 2, "tiny got both small-n samples");
+        assert_eq!(snap[2].1.count, 1, "medium got the n=200 sample");
+        assert_eq!(snap[1].1.count, 0);
+        let json = m.to_json();
+        assert!(json.contains("\"tiny\""), "{json}");
+        assert!(json.contains("\"medium\""), "{json}");
+        assert!(!json.contains("\"small\""), "empty classes are omitted: {json}");
+    }
+}

@@ -18,12 +18,32 @@
 //!   full key bytes are compared on every hit, the 64-bit hash only
 //!   buckets.
 //!
+//! PR 9 pushes the same tier across process and machine boundaries:
+//!
+//! * [`proto`] — a length-prefixed binary frame codec (f64 *bit
+//!   patterns*, never decimal text) with typed, connection-fatal decode
+//!   errors and a bounded frame size.
+//! * [`NetServer`] / [`NetClient`] ([`net`]) — a blocking acceptor pool
+//!   over TCP or Unix sockets that routes decoded jobs through the same
+//!   [`SubmitHandle`], with admission control (bounded-wait lane entry,
+//!   typed `Overloaded` shed) so a flooded server degrades loudly, not
+//!   slowly.
+//! * [`ShardSupervisor`] ([`supervisor`]) — each size-class shard as a
+//!   *child process* speaking the same frames over stdin/stdout,
+//!   restarted on crash with capped exponential backoff; a dead child
+//!   fails only its in-flight job, with a typed `ShardDown`.
+//! * [`ServeMetrics`] ([`metrics`]) — lock-cheap atomic log2-bucket
+//!   latency histograms per size class, recorded at ticket completion
+//!   and exported through the protocol's `Stats` request.
+//!
 //! Everything is pure std, like the rest of the crate, and everything is
 //! pinned to the same bitwise contract: a result served through
-//! router + queue + cache is bit-for-bit what [`crate::api::reduce_seq`]
+//! router + queue + cache — or through a socket, or through a supervised
+//! child process — is bit-for-bit what [`crate::api::reduce_seq`]
 //! returns for that pencil under the effective (band-clipped) config —
-//! `tests/serve.rs` asserts exactly that, including under mixed-size
-//! floods, cache eviction pressure, and shutdown mid-flood.
+//! `tests/serve.rs`, `tests/serve_net.rs`, and `tests/serve_proc.rs`
+//! assert exactly that, including under mixed-size floods, cache
+//! eviction pressure, shutdown mid-flood, and a child killed mid-job.
 //!
 //! ```no_run
 //! use paraht::serve::{ServeConfig, ShardRouter, SubmitQueue};
@@ -43,10 +63,20 @@
 
 pub mod cache;
 pub mod hash;
+pub mod metrics;
+pub mod net;
+pub mod proto;
 pub mod queue;
 pub mod router;
+pub mod supervisor;
 
 pub use cache::{CacheKey, CacheStats, ResultCache};
-pub use hash::{pencil_fingerprint, FxHasher64};
+pub use hash::{pencil_fingerprint, size_class_shard, FxHasher64};
+pub use metrics::{HistogramSnapshot, LatencyHistogram, ServeMetrics, SizeClass};
+pub use net::{NetClient, NetConfig, NetServer};
+pub use proto::{Frame, WireConfig, MAX_FRAME_BYTES, PROTO_VERSION};
 pub use queue::{JobTicket, QueueStats, SubmitHandle, SubmitQueue};
 pub use router::{RouterStats, ServeConfig, ShardRouter};
+pub use supervisor::{
+    worker_main, ShardProcStats, ShardSupervisor, SupervisorConfig, SupervisorStats,
+};

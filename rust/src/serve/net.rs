@@ -1,0 +1,601 @@
+//! The network front door: a blocking frame-protocol server over TCP or
+//! Unix-domain sockets, backed by either the in-process serving queue or
+//! the multi-process shard supervisor.
+//!
+//! [`NetServer`] binds one listener and runs a small **acceptor pool**:
+//! each acceptor thread accepts a connection and serves it to completion
+//! (frame in → job → frame out, repeated until the client closes), so the
+//! pool size is also the concurrent-connection cap — deliberate for a
+//! blocking pure-std tier, and documented so nobody mistakes it for an
+//! async server. Clients that need parallelism open one connection per
+//! thread, which is exactly what the `serve_net` bench does.
+//!
+//! Two backends, same wire surface:
+//!
+//! * **Queue** ([`NetServer::start`]) — decoded jobs go through the
+//!   existing [`SubmitHandle`] with `submit_timeout` admission control
+//!   ([`crate::serve::router::ServeConfig::admit_timeout_ms`]): a full
+//!   lane past the deadline returns a typed `Overloaded` reply instead of
+//!   stalling the connection. Results are **bitwise identical** to
+//!   in-process submission — the server adds framing, never arithmetic.
+//! * **Procs** ([`NetServer::start_supervised`]) — jobs go to the
+//!   [`ShardSupervisor`]'s per-size-class child processes; a crashed
+//!   child yields a typed `ShardDown` reply and the supervisor respawns
+//!   it with backoff.
+//!
+//! A `Submit` may carry explicit tuning; the server *verifies* it against
+//! its own effective config ([`Config::same_tuning`]) and answers a typed
+//! `Config` error on mismatch rather than silently computing something
+//! else — the serving tier's results are pinned bitwise to its configured
+//! tuning, so "run whatever the client asks" would quietly break the
+//! cache-key contract. The usual client path is the sentinel
+//! ("server default"), which [`NetClient::reduce`] sends.
+//!
+//! Shutdown: flip the closing flag, then self-connect once per acceptor
+//! so every `accept` parked in the kernel wakes and observes the flag;
+//! join the pool; drop the backend (which drains the queue or stops the
+//! children). In-flight connections finish their current frame exchange.
+
+use crate::config::Config;
+use crate::error::{Error, Result};
+use crate::ht::two_stage::HtDecomposition;
+use crate::linalg::matrix::Matrix;
+use crate::serve::cache::CacheStats;
+use crate::serve::proto::{read_frame, write_frame, Frame, WireConfig};
+use crate::serve::queue::{SubmitHandle, SubmitQueue};
+use crate::serve::supervisor::ShardSupervisor;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+#[cfg(unix)]
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Network-tier configuration.
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// Listen address: `host:port` for TCP (port `0` picks a free port —
+    /// the resolved address is available via [`NetServer::addr`]), or a
+    /// `unix:` prefix for a Unix-domain socket path.
+    pub addr: String,
+    /// Acceptor-pool size — also the concurrent-connection cap (see the
+    /// [module docs](self)).
+    pub acceptors: usize,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig { addr: "127.0.0.1:7343".to_string(), acceptors: 2 }
+    }
+}
+
+impl NetConfig {
+    /// Defaults overridden by `PALLAS_NET_ADDR`.
+    pub fn from_env() -> NetConfig {
+        let d = NetConfig::default();
+        NetConfig { addr: crate::util::env::net_addr(&d.addr), ..d }
+    }
+
+    /// Validate the geometry (typed [`Error::Config`]).
+    pub fn validate(&self) -> Result<()> {
+        if self.addr.is_empty() {
+            return Err(Error::config("net: addr must not be empty"));
+        }
+        if self.acceptors < 1 || self.acceptors > 64 {
+            return Err(Error::config(format!(
+                "net: acceptors = {} outside [1, 64]",
+                self.acceptors
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// One listener, TCP or Unix-domain. `accept` takes `&self` on both std
+/// types, so the acceptor pool shares this behind an `Arc`.
+enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(UnixListener),
+}
+
+impl Listener {
+    fn accept(&self) -> std::io::Result<NetStream> {
+        match self {
+            Listener::Tcp(l) => l.accept().map(|(s, _)| NetStream::Tcp(s)),
+            #[cfg(unix)]
+            Listener::Unix(l) => l.accept().map(|(s, _)| NetStream::Unix(s)),
+        }
+    }
+}
+
+/// One connected stream, either family. The frame codec only needs
+/// `Read + Write`; framing keeps syscalls at two reads and one write per
+/// frame, so no userspace buffering layer is needed.
+enum NetStream {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl Read for NetStream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            NetStream::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            NetStream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for NetStream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            NetStream::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            NetStream::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            NetStream::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            NetStream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// The job-execution side of the server: the in-process queue or the
+/// process-per-shard supervisor.
+enum Backend {
+    Queue(SubmitQueue),
+    Procs(ShardSupervisor),
+}
+
+/// State shared by the server handle and the acceptor threads.
+struct ServerShared {
+    backend: Backend,
+    closing: AtomicBool,
+    /// Connections fully served (diagnostics; exported in `Stats`).
+    served: AtomicU64,
+}
+
+/// The blocking socket server (see the [module docs](self)). Construct
+/// with [`NetServer::start`] / [`NetServer::start_supervised`]; stop with
+/// [`NetServer::shutdown`] (drop runs the same protocol).
+pub struct NetServer {
+    shared: Arc<ServerShared>,
+    acceptors: Vec<JoinHandle<()>>,
+    /// Resolved address in the same syntax `connect` takes (`host:port`
+    /// or `unix:/path`) — for TCP this has any port-0 already resolved.
+    addr: String,
+    #[cfg(unix)]
+    unix_path: Option<PathBuf>,
+}
+
+impl std::fmt::Debug for NetServer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("NetServer")
+            .field("addr", &self.addr)
+            .field("acceptors", &self.acceptors.len())
+            .finish_non_exhaustive()
+    }
+}
+
+impl NetServer {
+    /// Serve the in-process queue backend over `cfg.addr`.
+    pub fn start(queue: SubmitQueue, cfg: NetConfig) -> Result<NetServer> {
+        NetServer::start_backend(Backend::Queue(queue), cfg)
+    }
+
+    /// Serve the multi-process supervisor backend over `cfg.addr`.
+    pub fn start_supervised(sup: ShardSupervisor, cfg: NetConfig) -> Result<NetServer> {
+        NetServer::start_backend(Backend::Procs(sup), cfg)
+    }
+
+    fn start_backend(backend: Backend, cfg: NetConfig) -> Result<NetServer> {
+        cfg.validate()?;
+        #[cfg(unix)]
+        let mut unix_path: Option<PathBuf> = None;
+        let (listener, addr) = if let Some(path) = cfg.addr.strip_prefix("unix:") {
+            #[cfg(unix)]
+            {
+                let l = UnixListener::bind(path)?;
+                unix_path = Some(PathBuf::from(path));
+                (Listener::Unix(l), cfg.addr.clone())
+            }
+            #[cfg(not(unix))]
+            {
+                let _ = path;
+                return Err(Error::config(
+                    "net: unix: addresses are only supported on unix targets",
+                ));
+            }
+        } else {
+            let l = TcpListener::bind(&cfg.addr)?;
+            let resolved = l.local_addr()?.to_string();
+            (Listener::Tcp(l), resolved)
+        };
+        let listener = Arc::new(listener);
+        let shared = Arc::new(ServerShared {
+            backend,
+            closing: AtomicBool::new(false),
+            served: AtomicU64::new(0),
+        });
+        let acceptors = (0..cfg.acceptors)
+            .map(|i| {
+                let listener = listener.clone();
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("paraht-net-{i}"))
+                    .spawn(move || acceptor_loop(&listener, &shared))
+                    .expect("spawn net acceptor")
+            })
+            .collect();
+        Ok(NetServer {
+            shared,
+            acceptors,
+            addr,
+            #[cfg(unix)]
+            unix_path,
+        })
+    }
+
+    /// The resolved listen address, in the syntax [`NetClient::connect`]
+    /// takes (`host:port`, or `unix:/path`). For a TCP bind to port 0
+    /// this is the actual port.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Connections fully served so far.
+    pub fn served(&self) -> u64 {
+        self.shared.served.load(Ordering::Relaxed)
+    }
+
+    /// Stop accepting, join the acceptor pool, and shut the backend down
+    /// (queue drain / child stop). Consuming `self` makes further use a
+    /// compile-time error; drop runs the same sequence.
+    pub fn shutdown(self) {
+        drop(self);
+    }
+
+    fn close_and_join(&mut self) {
+        self.shared.closing.store(true, Ordering::SeqCst);
+        // Wake every acceptor parked in `accept` with one self-connect
+        // each; a connect can fail (listener backlog races, file already
+        // unlinked) — best effort, the flag is what actually stops them.
+        for _ in 0..self.acceptors.len() {
+            match &self.addr {
+                a if a.starts_with("unix:") => {
+                    #[cfg(unix)]
+                    {
+                        let _ = UnixStream::connect(a.trim_start_matches("unix:"));
+                    }
+                }
+                a => {
+                    let _ = TcpStream::connect(a);
+                }
+            }
+        }
+        for h in self.acceptors.drain(..) {
+            let _ = h.join();
+        }
+        #[cfg(unix)]
+        if let Some(path) = self.unix_path.take() {
+            let _ = std::fs::remove_file(path);
+        }
+        // The backend (queue or supervisor) shuts down when `shared`
+        // drops with this server — the last owner at this point, since
+        // acceptors are joined.
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.close_and_join();
+    }
+}
+
+/// One acceptor: accept → serve the connection to completion → repeat,
+/// until the closing flag is observed.
+fn acceptor_loop(listener: &Listener, shared: &ServerShared) {
+    loop {
+        if shared.closing.load(Ordering::SeqCst) {
+            return;
+        }
+        let stream = match listener.accept() {
+            Ok(s) => s,
+            // Transient accept errors (EMFILE, aborted handshakes) must
+            // not kill the acceptor; the closing check above bounds the
+            // retry loop.
+            Err(_) => continue,
+        };
+        if shared.closing.load(Ordering::SeqCst) {
+            return; // the wake-up self-connect, not a real client
+        }
+        serve_connection(stream, shared);
+        shared.served.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Serve one connection: frames in, frames out, until clean EOF. A
+/// malformed frame or a dead socket drops the connection (protocol errors
+/// are connection-fatal by the codec's contract); job-level failures are
+/// *replies*, not disconnects.
+fn serve_connection(mut stream: NetStream, shared: &ServerShared) {
+    loop {
+        let frame = match read_frame(&mut stream) {
+            Ok(Some(f)) => f,
+            Ok(None) => return, // client closed between frames
+            Err(_) => return,
+        };
+        let reply = match frame {
+            Frame::Submit { req_id, cfg, a, b } => handle_submit(shared, req_id, cfg, a, b),
+            Frame::StatsReq { req_id } => Frame::StatsReply { req_id, json: stats_json(shared) },
+            // Clients must not send server-to-client kinds; drop them.
+            _ => return,
+        };
+        if write_frame(&mut stream, &reply).is_err() {
+            return;
+        }
+    }
+}
+
+/// Run one submitted job through the backend and build the reply frame.
+fn handle_submit(shared: &ServerShared, req_id: u64, cfg: WireConfig, a: Matrix, b: Matrix) -> Frame {
+    let result = match &shared.backend {
+        Backend::Queue(queue) => {
+            let base = &queue.router().config().base;
+            let clip = queue.router().config().clip_band;
+            check_tuning(&cfg, base, clip, a.rows())
+                .and_then(|()| submit_through_queue(queue.handle(), a, b))
+        }
+        Backend::Procs(sup) => {
+            check_tuning(&cfg, &sup.config().base, sup.config().clip_band, a.rows())
+                .and_then(|()| sup.reduce(&a, &b))
+        }
+    };
+    match result {
+        Ok(d) => Frame::ResultOk {
+            req_id,
+            stage1_secs: d.stage1_secs,
+            stage2_secs: d.stage2_secs,
+            h: d.h.clone(),
+            t: d.t.clone(),
+            q: d.q.clone(),
+            z: d.z.clone(),
+        },
+        Err(err) => Frame::ResultErr { req_id, err },
+    }
+}
+
+/// Admission-controlled queue submission: bounded wait for lane capacity
+/// (`admit_timeout_ms`), then wait for the ticket. The admission deadline
+/// bounds *queue entry*, not job runtime — an accepted job always
+/// completes (the queue's graceful-drain contract).
+fn submit_through_queue(
+    handle: SubmitHandle,
+    a: Matrix,
+    b: Matrix,
+) -> Result<Arc<HtDecomposition>> {
+    let timeout = Duration::from_millis(handle.admit_timeout_ms());
+    handle.submit_timeout(a, b, timeout)?.wait()
+}
+
+/// Verify explicit client tuning against the server's effective config
+/// for this problem size (see the [module docs](self) for why mismatches
+/// are typed errors, not best-effort execution).
+fn check_tuning(wire: &WireConfig, base: &Config, clip: bool, n: usize) -> Result<()> {
+    if wire.is_default() {
+        return Ok(());
+    }
+    let eff = if clip { base.clipped_for(n) } else { base.clone() };
+    let requested = wire.apply_to(&eff);
+    if eff.same_tuning(&requested) {
+        Ok(())
+    } else {
+        Err(Error::config(format!(
+            "net: requested tuning (r={}, p={}, q={}, lookahead={}) does not match \
+             this server's effective tuning (r={}, p={}, q={}, lookahead={}); \
+             submit with the default sentinel or reconfigure the server",
+            requested.r, requested.p, requested.q, requested.lookahead,
+            eff.r, eff.p, eff.q, eff.lookahead
+        )))
+    }
+}
+
+fn cache_stats_json(c: &CacheStats) -> String {
+    format!(
+        "{{\"hits\": {}, \"misses\": {}, \"hit_rate\": {:.4}, \"insertions\": {}, \
+         \"evictions\": {}, \"entries\": {}, \"bytes\": {}}}",
+        c.hits,
+        c.misses,
+        c.hit_rate(),
+        c.insertions,
+        c.evictions,
+        c.entries,
+        c.bytes
+    )
+}
+
+/// The `Stats` reply body (schema documented in EXPERIMENTS.md §Serving).
+fn stats_json(shared: &ServerShared) -> String {
+    let served = shared.served.load(Ordering::Relaxed);
+    match &shared.backend {
+        Backend::Queue(queue) => {
+            let q = queue.stats();
+            let cache = queue
+                .router()
+                .cache_stats()
+                .map_or("null".to_string(), |c| cache_stats_json(&c));
+            format!(
+                "{{\"mode\": \"queue\", \"served_connections\": {served}, \
+                 \"queue\": {{\"submitted\": {}, \"completed\": {}, \"rejected\": {}, \
+                 \"shed\": {}, \"pending\": {}}}, \"cache\": {cache}, \"latency\": {}}}",
+                q.submitted,
+                q.completed,
+                q.rejected,
+                q.shed,
+                q.pending,
+                queue.latency_json()
+            )
+        }
+        Backend::Procs(sup) => {
+            let stats = sup.stats();
+            format!(
+                "{{\"mode\": \"procs\", \"served_connections\": {served}, \
+                 \"restarts\": {}, \"shards\": {}}}",
+                stats.restarts(),
+                sup.stats_json()
+            )
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Client
+// ---------------------------------------------------------------------
+
+/// A blocking protocol client: one connection, synchronous
+/// request/response. Open one client per thread for parallel floods.
+pub struct NetClient {
+    stream: NetStream,
+    next_id: u64,
+}
+
+impl std::fmt::Debug for NetClient {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("NetClient").field("next_id", &self.next_id).finish_non_exhaustive()
+    }
+}
+
+impl NetClient {
+    /// Connect to a server address (`host:port`, or `unix:/path`).
+    pub fn connect(addr: &str) -> Result<NetClient> {
+        let stream = if let Some(path) = addr.strip_prefix("unix:") {
+            #[cfg(unix)]
+            {
+                NetStream::Unix(UnixStream::connect(path)?)
+            }
+            #[cfg(not(unix))]
+            {
+                let _ = path;
+                return Err(Error::config(
+                    "net: unix: addresses are only supported on unix targets",
+                ));
+            }
+        } else {
+            NetStream::Tcp(TcpStream::connect(addr)?)
+        };
+        Ok(NetClient { stream, next_id: 1 })
+    }
+
+    /// Reduce one pencil under the server's configured tuning (the
+    /// sentinel). The returned factors are bitwise what the server
+    /// computed — the wire carries bit patterns.
+    pub fn reduce(&mut self, a: &Matrix, b: &Matrix) -> Result<HtDecomposition> {
+        self.reduce_with(a, b, WireConfig::default_sentinel())
+    }
+
+    /// Reduce with explicit tuning; the server verifies it against its
+    /// own effective config and answers a typed `Config` error on
+    /// mismatch.
+    pub fn reduce_with(
+        &mut self,
+        a: &Matrix,
+        b: &Matrix,
+        cfg: WireConfig,
+    ) -> Result<HtDecomposition> {
+        let req_id = self.fresh_id();
+        write_frame(
+            &mut self.stream,
+            &Frame::Submit { req_id, cfg, a: a.clone(), b: b.clone() },
+        )?;
+        match read_frame(&mut self.stream)? {
+            Some(Frame::ResultOk { req_id: got, stage1_secs, stage2_secs, h, t, q, z }) => {
+                check_echo(got, req_id)?;
+                Ok(HtDecomposition { h, t, q, z, stage1_secs, stage2_secs })
+            }
+            Some(Frame::ResultErr { req_id: got, err }) => {
+                check_echo(got, req_id)?;
+                Err(err)
+            }
+            Some(other) => {
+                Err(Error::protocol(format!("server sent an unexpected frame: {other:?}")))
+            }
+            None => Err(Error::protocol("server closed the connection mid-request")),
+        }
+    }
+
+    /// Fetch the server's statistics JSON.
+    pub fn stats(&mut self) -> Result<String> {
+        let req_id = self.fresh_id();
+        write_frame(&mut self.stream, &Frame::StatsReq { req_id })?;
+        match read_frame(&mut self.stream)? {
+            Some(Frame::StatsReply { req_id: got, json }) => {
+                check_echo(got, req_id)?;
+                Ok(json)
+            }
+            Some(other) => {
+                Err(Error::protocol(format!("server sent an unexpected frame: {other:?}")))
+            }
+            None => Err(Error::protocol("server closed the connection mid-request")),
+        }
+    }
+
+    fn fresh_id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+}
+
+fn check_echo(got: u64, want: u64) -> Result<()> {
+    if got == want {
+        Ok(())
+    } else {
+        Err(Error::protocol(format!("server echoed req {got}, expected {want}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn net_config_validation() {
+        assert!(NetConfig::default().validate().is_ok());
+        let bad = NetConfig { addr: String::new(), ..NetConfig::default() };
+        assert!(matches!(bad.validate().unwrap_err(), Error::Config(_)));
+        let bad = NetConfig { acceptors: 0, ..NetConfig::default() };
+        assert!(matches!(bad.validate().unwrap_err(), Error::Config(_)));
+        let bad = NetConfig { acceptors: 65, ..NetConfig::default() };
+        assert!(matches!(bad.validate().unwrap_err(), Error::Config(_)));
+    }
+
+    #[test]
+    fn tuning_check_accepts_sentinel_and_matching_explicit_only() {
+        let base = Config { r: 8, p: 4, q: 4, ..Config::default() };
+        // Sentinel always passes.
+        assert!(check_tuning(&WireConfig::default_sentinel(), &base, true, 40).is_ok());
+        // Explicit match passes.
+        let ok = WireConfig { r: 8, p: 4, q: 4, lookahead: true };
+        assert!(check_tuning(&ok, &base, true, 40).is_ok());
+        // Explicit mismatch is a typed Config error.
+        let bad = WireConfig { r: 6, p: 4, q: 4, lookahead: true };
+        assert!(matches!(check_tuning(&bad, &base, true, 40).unwrap_err(), Error::Config(_)));
+        // Clipping is applied before comparison: for n = 6 the effective
+        // band is r = 5, so the *clipped* spelling matches and the
+        // unclipped base spelling does not.
+        let clipped = WireConfig { r: 5, p: 4, q: 4, lookahead: true };
+        assert!(check_tuning(&clipped, &base, true, 6).is_ok());
+        let unclipped = WireConfig { r: 8, p: 4, q: 4, lookahead: true };
+        assert!(check_tuning(&unclipped, &base, true, 6).is_err());
+    }
+}

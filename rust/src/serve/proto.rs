@@ -1,0 +1,683 @@
+//! The length-prefixed binary wire protocol of the serving front door.
+//!
+//! One frame format is spoken on every process boundary this crate has:
+//! TCP / Unix-domain connections into [`crate::serve::net::NetServer`],
+//! and the stdin/stdout pipes between a
+//! [`crate::serve::supervisor::ShardSupervisor`] and its `--shard-worker`
+//! children. Keeping the codec in one module (and the framing fully
+//! symmetric — both sides use the same [`read_frame`] / [`write_frame`])
+//! is what lets the supervisor test a child with exactly the bytes a
+//! network client would produce.
+//!
+//! ## Frame layout
+//!
+//! ```text
+//! [u32 LE  payload_len]                    — excludes these 4 bytes
+//! [u8      version]     = PROTO_VERSION
+//! [u8      kind]        = Submit | ResultOk | ResultErr | StatsReq | StatsReply
+//! [u64 LE  req_id]
+//! [kind-specific payload …]
+//! ```
+//!
+//! Matrices travel as `[u32 rows][u32 cols]` followed by `rows*cols`
+//! `u64` LE IEEE-754 **bit patterns** in column-major order — never a
+//! decimal round trip, because the serving tier's whole contract is
+//! bitwise equality with [`crate::api::reduce_seq`]. Configs travel as
+//! [`WireConfig`] (the tuning subset that participates in the determinism
+//! contract); the all-zero encoding is the "use the server's configured
+//! tuning" sentinel.
+//!
+//! ## Error discipline
+//!
+//! Decoding is total: every malformed input — truncated stream, oversized
+//! or undersized length prefix, unknown version or kind, dimension
+//! overflow — comes back as a typed [`Error::Protocol`], never a panic
+//! and never a partially-consumed *well-formed* stream. Clean EOF **at a
+//! frame boundary** is `Ok(None)` (how workers notice supervisor
+//! shutdown); EOF anywhere inside a frame is a protocol error. After any
+//! decode error the stream position is unspecified, so peers treat
+//! protocol errors as connection-fatal — documented here so nobody tries
+//! to resynchronize mid-stream.
+
+use crate::config::Config;
+use crate::error::{Error, Result};
+use crate::linalg::matrix::Matrix;
+use std::io::{Read, Write};
+
+/// Protocol version carried in every frame. Bump on any layout change;
+/// decoders reject other versions with a typed error rather than
+/// misparse.
+pub const PROTO_VERSION: u8 = 1;
+
+/// Hard bound on one frame's payload (256 MiB — a ~2896×2896 four-factor
+/// result still fits). A length prefix above this is rejected *before*
+/// any payload is read, so a corrupt or hostile prefix cannot make the
+/// server allocate unboundedly.
+pub const MAX_FRAME_BYTES: usize = 256 << 20;
+
+/// Matrix dimension bound (per side). `MAX_DIM² · 8` bytes stays inside
+/// [`MAX_FRAME_BYTES`]; anything larger is a malformed frame by
+/// definition.
+const MAX_DIM: u32 = 4096;
+
+// Frame kind tags (wire bytes).
+const KIND_SUBMIT: u8 = 1;
+const KIND_RESULT_OK: u8 = 2;
+const KIND_RESULT_ERR: u8 = 3;
+const KIND_STATS_REQ: u8 = 4;
+const KIND_STATS_REPLY: u8 = 5;
+
+/// The reduction-tuning subset that travels with a `Submit` frame: the
+/// parameters that participate in the bitwise-determinism contract
+/// (`r`, `p`, `q`, lookahead). Thread counts and scheduling mode are
+/// deliberately absent — they are output-invariant, so they remain the
+/// *server's* capacity decision, never the client's.
+///
+/// The all-zero value ([`WireConfig::is_default`]) is the wire sentinel
+/// for "run my job under the server's configured tuning" — what
+/// [`crate::serve::net::NetClient::reduce`] sends.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WireConfig {
+    /// Stage-1 bandwidth `r` (0 = server default).
+    pub r: u32,
+    /// Stage-1 block-height multiplier `p` (0 = server default).
+    pub p: u32,
+    /// Stage-2 sweep-group size `q` (0 = server default).
+    pub q: u32,
+    /// Stage-2 lookahead gate (ignored when the sentinel is in effect).
+    pub lookahead: bool,
+}
+
+impl WireConfig {
+    /// The "server default" sentinel.
+    pub fn default_sentinel() -> WireConfig {
+        WireConfig { r: 0, p: 0, q: 0, lookahead: false }
+    }
+
+    /// Whether this is the all-zero "server default" sentinel.
+    pub fn is_default(&self) -> bool {
+        self.r == 0 && self.p == 0 && self.q == 0
+    }
+
+    /// Capture the determinism-relevant tuning of a concrete [`Config`]
+    /// (what the supervisor sends its workers: always explicit, never the
+    /// sentinel, so a worker needs no config of its own).
+    pub fn from_config(cfg: &Config) -> WireConfig {
+        WireConfig {
+            r: cfg.r.min(u32::MAX as usize) as u32,
+            p: cfg.p.min(u32::MAX as usize) as u32,
+            q: cfg.q.min(u32::MAX as usize) as u32,
+            lookahead: cfg.lookahead,
+        }
+    }
+
+    /// Materialize onto a base config: the sentinel returns `base`
+    /// unchanged; an explicit wire tuning overrides `r`/`p`/`q`/
+    /// `lookahead` and keeps everything capacity-related (threads,
+    /// slices, scheduling, kernel) from `base`.
+    pub fn apply_to(&self, base: &Config) -> Config {
+        if self.is_default() {
+            return base.clone();
+        }
+        Config {
+            r: self.r as usize,
+            p: self.p as usize,
+            q: self.q as usize,
+            lookahead: self.lookahead,
+            ..base.clone()
+        }
+    }
+}
+
+/// One decoded protocol frame (see the [module docs](self) for layout).
+#[derive(Debug)]
+pub enum Frame {
+    /// Client → server: reduce this pencil under `cfg`.
+    Submit {
+        /// Client-chosen id echoed in the reply.
+        req_id: u64,
+        /// Requested tuning (sentinel = server default).
+        cfg: WireConfig,
+        /// Left pencil matrix `A`.
+        a: Matrix,
+        /// Right pencil matrix `B`.
+        b: Matrix,
+    },
+    /// Server → client: the four factors plus phase timings.
+    ResultOk {
+        /// Echo of the submit's id.
+        req_id: u64,
+        /// Stage-1 wall-clock seconds (informational; not bitwise-pinned).
+        stage1_secs: f64,
+        /// Stage-2 wall-clock seconds.
+        stage2_secs: f64,
+        /// Hessenberg factor `H`.
+        h: Matrix,
+        /// Triangular factor `T`.
+        t: Matrix,
+        /// Left orthogonal factor `Q`.
+        q: Matrix,
+        /// Right orthogonal factor `Z`.
+        z: Matrix,
+    },
+    /// Server → client: the job failed with this typed error.
+    ResultErr {
+        /// Echo of the submit's id.
+        req_id: u64,
+        /// The typed failure (error kind survives the wire round trip).
+        err: Error,
+    },
+    /// Client → server: report serving statistics.
+    StatsReq {
+        /// Client-chosen id echoed in the reply.
+        req_id: u64,
+    },
+    /// Server → client: statistics as a JSON document.
+    StatsReply {
+        /// Echo of the request's id.
+        req_id: u64,
+        /// JSON text (schema documented in EXPERIMENTS.md §Serving).
+        json: String,
+    },
+}
+
+// ---------------------------------------------------------------------
+// Encoding
+// ---------------------------------------------------------------------
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_matrix(buf: &mut Vec<u8>, m: &Matrix) {
+    put_u32(buf, m.rows() as u32);
+    put_u32(buf, m.cols() as u32);
+    for &x in m.data() {
+        put_u64(buf, x.to_bits());
+    }
+}
+
+fn put_wire_config(buf: &mut Vec<u8>, cfg: &WireConfig) {
+    put_u32(buf, cfg.r);
+    put_u32(buf, cfg.p);
+    put_u32(buf, cfg.q);
+    buf.push(u8::from(cfg.lookahead));
+}
+
+/// Typed-error code map (wire byte ↔ [`Error`] variant). `Io` collapses
+/// to its message — an `io::Error` does not round-trip and the receiving
+/// side only needs the classification.
+fn error_code(e: &Error) -> u8 {
+    match e {
+        Error::Shape(_) => 1,
+        Error::Config(_) => 2,
+        Error::Numerical(_) => 3,
+        Error::Runtime(_) => 4,
+        Error::Io(_) => 5,
+        Error::Overloaded(_) => 6,
+        Error::ShardDown(_) => 7,
+        Error::Protocol(_) => 8,
+    }
+}
+
+fn error_from_code(code: u8, msg: String) -> Error {
+    match code {
+        1 => Error::Shape(msg),
+        2 => Error::Config(msg),
+        3 => Error::Numerical(msg),
+        4 => Error::Runtime(msg),
+        5 => Error::Io(std::io::Error::other(msg)),
+        6 => Error::Overloaded(msg),
+        7 => Error::ShardDown(msg),
+        8 => Error::Protocol(msg),
+        // Unknown code: a newer peer's variant — degrade to Runtime
+        // rather than failing the decode (the message is preserved).
+        _ => Error::Runtime(msg),
+    }
+}
+
+/// Encode and write one frame (length prefix + version + kind + payload),
+/// then flush. Serialization is into one buffer so the frame hits the
+/// stream as a single write — a reader never observes a torn prefix from
+/// a non-panicking writer.
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> Result<()> {
+    let mut payload = Vec::new();
+    let kind = match frame {
+        Frame::Submit { req_id, cfg, a, b } => {
+            put_u64(&mut payload, *req_id);
+            put_wire_config(&mut payload, cfg);
+            put_matrix(&mut payload, a);
+            put_matrix(&mut payload, b);
+            KIND_SUBMIT
+        }
+        Frame::ResultOk { req_id, stage1_secs, stage2_secs, h, t, q, z } => {
+            put_u64(&mut payload, *req_id);
+            put_u64(&mut payload, stage1_secs.to_bits());
+            put_u64(&mut payload, stage2_secs.to_bits());
+            for m in [h, t, q, z] {
+                put_matrix(&mut payload, m);
+            }
+            KIND_RESULT_OK
+        }
+        Frame::ResultErr { req_id, err } => {
+            put_u64(&mut payload, *req_id);
+            payload.push(error_code(err));
+            let msg = err.to_string();
+            put_u32(&mut payload, msg.len() as u32);
+            payload.extend_from_slice(msg.as_bytes());
+            KIND_RESULT_ERR
+        }
+        Frame::StatsReq { req_id } => {
+            put_u64(&mut payload, *req_id);
+            KIND_STATS_REQ
+        }
+        Frame::StatsReply { req_id, json } => {
+            put_u64(&mut payload, *req_id);
+            put_u32(&mut payload, json.len() as u32);
+            payload.extend_from_slice(json.as_bytes());
+            KIND_STATS_REPLY
+        }
+    };
+    let len = payload.len() + 2; // version + kind
+    if len > MAX_FRAME_BYTES {
+        return Err(Error::protocol(format!(
+            "outgoing frame of {len} bytes exceeds MAX_FRAME_BYTES ({MAX_FRAME_BYTES})"
+        )));
+    }
+    let mut buf = Vec::with_capacity(4 + len);
+    put_u32(&mut buf, len as u32);
+    buf.push(PROTO_VERSION);
+    buf.push(kind);
+    buf.extend_from_slice(&payload);
+    w.write_all(&buf)?;
+    w.flush()?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Decoding
+// ---------------------------------------------------------------------
+
+/// Cursor over one fully-read payload: every accessor is bounds-checked
+/// and returns a typed protocol error on underrun, so a short payload can
+/// never panic the decoder.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| Error::protocol("truncated frame payload"))?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| Error::protocol("frame string is not valid UTF-8"))
+    }
+
+    fn matrix(&mut self) -> Result<Matrix> {
+        let rows = self.u32()?;
+        let cols = self.u32()?;
+        if rows > MAX_DIM || cols > MAX_DIM {
+            return Err(Error::protocol(format!(
+                "matrix dims {rows}x{cols} exceed the wire bound ({MAX_DIM})"
+            )));
+        }
+        let mut m = Matrix::zeros(rows as usize, cols as usize);
+        for x in m.data_mut() {
+            *x = f64::from_bits(self.u64()?);
+        }
+        Ok(m)
+    }
+
+    fn wire_config(&mut self) -> Result<WireConfig> {
+        Ok(WireConfig {
+            r: self.u32()?,
+            p: self.u32()?,
+            q: self.u32()?,
+            lookahead: self.u8()? != 0,
+        })
+    }
+
+    fn finish(self) -> Result<()> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            Err(Error::protocol(format!(
+                "frame payload has {} trailing bytes",
+                self.buf.len() - self.pos
+            )))
+        }
+    }
+}
+
+/// Read exactly `buf.len()` bytes. `Ok(false)` on EOF *before the first
+/// byte* (a clean boundary); EOF after at least one byte is a truncation
+/// and comes back as [`Error::Protocol`].
+fn read_exact_or_eof(r: &mut impl Read, buf: &mut [u8]) -> Result<bool> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                if filled == 0 {
+                    return Ok(false);
+                }
+                return Err(Error::protocol(format!(
+                    "stream truncated mid-frame ({filled} of {} bytes)",
+                    buf.len()
+                )));
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(Error::Io(e)),
+        }
+    }
+    Ok(true)
+}
+
+/// Read one frame. Returns `Ok(None)` on clean EOF at a frame boundary
+/// (the peer closed between frames — normal shutdown); any other
+/// malformation is a typed [`Error::Protocol`]. An oversized or
+/// undersized length prefix is rejected before its payload is read; see
+/// the [module docs](self) for why all decode errors are
+/// connection-fatal.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Frame>> {
+    let mut len_buf = [0u8; 4];
+    if !read_exact_or_eof(r, &mut len_buf)? {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > MAX_FRAME_BYTES {
+        return Err(Error::protocol(format!(
+            "frame length {len} exceeds MAX_FRAME_BYTES ({MAX_FRAME_BYTES})"
+        )));
+    }
+    if len < 2 {
+        return Err(Error::protocol(format!("frame length {len} below the 2-byte header")));
+    }
+    let mut body = vec![0u8; len];
+    if !read_exact_or_eof(r, &mut body)? {
+        return Err(Error::protocol("stream truncated after length prefix"));
+    }
+    let version = body[0];
+    if version != PROTO_VERSION {
+        return Err(Error::protocol(format!(
+            "unsupported protocol version {version} (this build speaks {PROTO_VERSION})"
+        )));
+    }
+    let kind = body[1];
+    let mut c = Cursor::new(&body[2..]);
+    let frame = match kind {
+        KIND_SUBMIT => {
+            let req_id = c.u64()?;
+            let cfg = c.wire_config()?;
+            let a = c.matrix()?;
+            let b = c.matrix()?;
+            Frame::Submit { req_id, cfg, a, b }
+        }
+        KIND_RESULT_OK => {
+            let req_id = c.u64()?;
+            let stage1_secs = f64::from_bits(c.u64()?);
+            let stage2_secs = f64::from_bits(c.u64()?);
+            let h = c.matrix()?;
+            let t = c.matrix()?;
+            let q = c.matrix()?;
+            let z = c.matrix()?;
+            Frame::ResultOk { req_id, stage1_secs, stage2_secs, h, t, q, z }
+        }
+        KIND_RESULT_ERR => {
+            let req_id = c.u64()?;
+            let code = c.u8()?;
+            let msg = c.string()?;
+            Frame::ResultErr { req_id, err: error_from_code(code, msg) }
+        }
+        KIND_STATS_REQ => Frame::StatsReq { req_id: c.u64()? },
+        KIND_STATS_REPLY => {
+            let req_id = c.u64()?;
+            let json = c.string()?;
+            Frame::StatsReply { req_id, json }
+        }
+        other => return Err(Error::protocol(format!("unknown frame kind {other}"))),
+    };
+    c.finish()?;
+    Ok(Some(frame))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pencil::random::random_pencil;
+    use crate::util::proptest::max_abs_diff;
+    use crate::util::rng::Rng;
+
+    fn roundtrip(frame: &Frame) -> Frame {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, frame).unwrap();
+        let mut r = buf.as_slice();
+        let decoded = read_frame(&mut r).unwrap().expect("one frame present");
+        assert!(r.is_empty(), "decode must consume the whole frame");
+        decoded
+    }
+
+    #[test]
+    fn submit_roundtrip_is_bitwise() {
+        let mut rng = Rng::new(0x9_01);
+        for n in [1usize, 2, 7, 23] {
+            let p = random_pencil(n, &mut rng);
+            let f = Frame::Submit {
+                req_id: 42,
+                cfg: WireConfig { r: 4, p: 2, q: 2, lookahead: true },
+                a: p.a.clone(),
+                b: p.b.clone(),
+            };
+            match roundtrip(&f) {
+                Frame::Submit { req_id, cfg, a, b } => {
+                    assert_eq!(req_id, 42);
+                    assert_eq!(cfg, WireConfig { r: 4, p: 2, q: 2, lookahead: true });
+                    assert_eq!(max_abs_diff(&a, &p.a), 0.0, "n={n}: A bits");
+                    assert_eq!(max_abs_diff(&b, &p.b), 0.0, "n={n}: B bits");
+                }
+                other => panic!("wrong kind: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn result_ok_roundtrip_preserves_special_values() {
+        // The wire format carries bit patterns, so NaN payloads, signed
+        // zeros and infinities all survive — bitwise, not just value-wise.
+        let mut m = Matrix::zeros(2, 2);
+        m.data_mut().copy_from_slice(&[f64::NAN, -0.0, f64::INFINITY, f64::MIN_POSITIVE]);
+        let f = Frame::ResultOk {
+            req_id: 7,
+            stage1_secs: 0.25,
+            stage2_secs: f64::NAN,
+            h: m.clone(),
+            t: m.clone(),
+            q: m.clone(),
+            z: m.clone(),
+        };
+        match roundtrip(&f) {
+            Frame::ResultOk { req_id, stage1_secs, stage2_secs, h, .. } => {
+                assert_eq!(req_id, 7);
+                assert_eq!(stage1_secs.to_bits(), 0.25f64.to_bits());
+                assert!(stage2_secs.is_nan());
+                for (got, want) in h.data().iter().zip(m.data()) {
+                    assert_eq!(got.to_bits(), want.to_bits());
+                }
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn error_frames_keep_their_variant_across_the_wire() {
+        let cases: Vec<Error> = vec![
+            Error::shape("bad pencil"),
+            Error::config("bad tuning"),
+            Error::numerical("diverged"),
+            Error::runtime("panicked"),
+            Error::Io(std::io::Error::other("pipe")),
+            Error::overloaded("lane full"),
+            Error::shard_down("child died"),
+            Error::protocol("bad frame"),
+        ];
+        for err in cases {
+            let want = std::mem::discriminant(&err);
+            let f = Frame::ResultErr { req_id: 1, err };
+            match roundtrip(&f) {
+                Frame::ResultErr { err, .. } => {
+                    assert_eq!(std::mem::discriminant(&err), want, "{err}");
+                }
+                other => panic!("wrong kind: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn stats_frames_roundtrip() {
+        match roundtrip(&Frame::StatsReq { req_id: 9 }) {
+            Frame::StatsReq { req_id } => assert_eq!(req_id, 9),
+            other => panic!("wrong kind: {other:?}"),
+        }
+        let json = "{\"hits\": 3}".to_string();
+        match roundtrip(&Frame::StatsReply { req_id: 9, json: json.clone() }) {
+            Frame::StatsReply { req_id, json: j } => {
+                assert_eq!(req_id, 9);
+                assert_eq!(j, json);
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn clean_eof_at_boundary_is_none_mid_frame_is_protocol_error() {
+        // Empty stream: clean boundary.
+        assert!(read_frame(&mut (&[][..])).unwrap().is_none());
+        // Truncations at every prefix of a valid frame: typed error, no
+        // panic (the property the codec tests pin for the whole family).
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::StatsReq { req_id: 3 }).unwrap();
+        for cut in 1..buf.len() {
+            let e = read_frame(&mut (&buf[..cut])).unwrap_err();
+            assert!(matches!(e, Error::Protocol(_)), "cut={cut}: {e}");
+        }
+    }
+
+    #[test]
+    fn oversized_and_undersized_prefixes_are_rejected_without_reading() {
+        // Length prefix over the bound: rejected before any payload read.
+        let huge = ((MAX_FRAME_BYTES + 1) as u32).to_le_bytes();
+        let e = read_frame(&mut (&huge[..])).unwrap_err();
+        assert!(matches!(e, Error::Protocol(_)), "{e}");
+        // Below the 2-byte version+kind header.
+        let tiny = 1u32.to_le_bytes();
+        let e = read_frame(&mut (&tiny[..])).unwrap_err();
+        assert!(matches!(e, Error::Protocol(_)), "{e}");
+    }
+
+    #[test]
+    fn bad_version_unknown_kind_and_bad_dims_are_typed_errors() {
+        // Version mismatch.
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::StatsReq { req_id: 1 }).unwrap();
+        buf[4] = PROTO_VERSION + 1;
+        assert!(matches!(read_frame(&mut buf.as_slice()).unwrap_err(), Error::Protocol(_)));
+        // Unknown kind byte.
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::StatsReq { req_id: 1 }).unwrap();
+        buf[5] = 0xEE;
+        assert!(matches!(read_frame(&mut buf.as_slice()).unwrap_err(), Error::Protocol(_)));
+        // Submit frame whose matrix header claims dims over the wire
+        // bound: rejected by the dim check, not by an allocation attempt.
+        let mut payload = Vec::new();
+        put_u64(&mut payload, 1); // req_id
+        put_wire_config(&mut payload, &WireConfig::default_sentinel());
+        put_u32(&mut payload, MAX_DIM + 1);
+        put_u32(&mut payload, 1);
+        let mut buf = Vec::new();
+        put_u32(&mut buf, (payload.len() + 2) as u32);
+        buf.push(PROTO_VERSION);
+        buf.push(KIND_SUBMIT);
+        buf.extend_from_slice(&payload);
+        let e = read_frame(&mut buf.as_slice()).unwrap_err();
+        assert!(matches!(e, Error::Protocol(_)), "{e}");
+    }
+
+    #[test]
+    fn trailing_garbage_inside_a_frame_is_rejected() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::StatsReq { req_id: 1 }).unwrap();
+        // Grow the declared payload by one byte of garbage.
+        let len = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]) + 1;
+        buf[..4].copy_from_slice(&len.to_le_bytes());
+        buf.push(0xAB);
+        let e = read_frame(&mut buf.as_slice()).unwrap_err();
+        assert!(matches!(e, Error::Protocol(_)), "{e}");
+    }
+
+    #[test]
+    fn back_to_back_frames_decode_in_order() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::StatsReq { req_id: 1 }).unwrap();
+        write_frame(&mut buf, &Frame::StatsReq { req_id: 2 }).unwrap();
+        let mut r = buf.as_slice();
+        for want in [1u64, 2] {
+            match read_frame(&mut r).unwrap().unwrap() {
+                Frame::StatsReq { req_id } => assert_eq!(req_id, want),
+                other => panic!("wrong kind: {other:?}"),
+            }
+        }
+        assert!(read_frame(&mut r).unwrap().is_none(), "then a clean boundary");
+    }
+
+    #[test]
+    fn wire_config_sentinel_and_override_semantics() {
+        let base = Config { r: 8, p: 4, q: 4, ..Config::default() };
+        let sentinel = WireConfig::default_sentinel();
+        assert!(sentinel.is_default());
+        let applied = sentinel.apply_to(&base);
+        assert_eq!((applied.r, applied.p, applied.q), (8, 4, 4));
+        let explicit = WireConfig { r: 6, p: 2, q: 3, lookahead: false };
+        assert!(!explicit.is_default());
+        let applied = explicit.apply_to(&base);
+        assert_eq!((applied.r, applied.p, applied.q), (6, 2, 3));
+        assert!(!applied.lookahead);
+        assert_eq!(applied.threads, base.threads, "capacity knobs stay the server's");
+        let captured = WireConfig::from_config(&base);
+        assert_eq!((captured.r, captured.p, captured.q), (8, 4, 4));
+        assert!(captured.lookahead);
+    }
+}

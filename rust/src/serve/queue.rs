@@ -8,6 +8,22 @@
 //! whose target lane is full blocks until the dispatcher drains it — the
 //! backpressure that keeps a flood from buffering unboundedly.
 //!
+//! **Admission control.** Unbounded blocking is the right default for
+//! in-process batch producers, but a serving front door must be able to
+//! *shed*: [`SubmitHandle::try_submit`] fails immediately with a typed
+//! [`Error::Overloaded`] when the lane is full, and
+//! [`SubmitHandle::submit_timeout`] waits at most a deadline before
+//! shedding — the network tier ([`crate::serve::net`]) admits through the
+//! latter with the `PALLAS_ADMIT_TIMEOUT_MS` knob. A shed job is never
+//! enqueued and gets no ticket; the `shed` counter in [`QueueStats`]
+//! makes load shedding visible next to `rejected` (shutdown refusals).
+//!
+//! **Latency observability.** Each accepted job is stamped at enqueue;
+//! when its dispatcher fills the ticket, the elapsed submit→completion
+//! time is recorded into the per-size-class histograms of
+//! [`crate::serve::metrics::ServeMetrics`] (lock-free atomic buckets).
+//! [`SubmitQueue::latency_snapshot`] exposes p50/p90/p99 per class.
+//!
 //! **Threading model.** Routing happens at submit time (the size-class
 //! hash of [`crate::serve::ShardRouter::shard_for`]), so each dispatcher
 //! owns exactly one lane and locks exactly one shard session — N shards
@@ -35,6 +51,7 @@
 use crate::error::{Error, Result};
 use crate::ht::two_stage::HtDecomposition;
 use crate::linalg::matrix::Matrix;
+use crate::serve::metrics::{HistogramSnapshot, ServeMetrics, SizeClass};
 use crate::serve::router::{check_square_pencil, ShardRouter};
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -43,12 +60,27 @@ use std::sync::atomic::AtomicBool;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 /// One queued job: the pencil plus the ticket to fill.
 struct Job {
     a: Matrix,
     b: Matrix,
+    /// Problem size, captured at submit (selects the latency size class).
+    n: usize,
+    /// Enqueue stamp; completion minus this is the recorded latency.
+    enqueued: Instant,
     ticket: Arc<TicketShared>,
+}
+
+/// How long a submitter is willing to wait for lane capacity.
+enum Admit {
+    /// Block until capacity (the original `submit` semantics).
+    Block,
+    /// Shed immediately when the lane is full.
+    NoWait,
+    /// Shed if the lane stays full past this deadline.
+    Deadline(Instant),
 }
 
 /// Completion slot shared by a dispatcher and one waiter.
@@ -103,12 +135,23 @@ struct Lane {
 struct LaneState {
     jobs: VecDeque<Job>,
     closed: bool,
+    /// Test-only dispatcher brake: while set (and the lane is open), the
+    /// dispatcher parks instead of popping, so a test can fill a lane to
+    /// capacity deterministically and observe `try_submit`/`submit_timeout`
+    /// shedding. `closed` overrides it — shutdown still drains.
+    #[cfg(test)]
+    paused: bool,
 }
 
 impl Lane {
     fn new() -> Lane {
         Lane {
-            state: Mutex::new(LaneState { jobs: VecDeque::new(), closed: false }),
+            state: Mutex::new(LaneState {
+                jobs: VecDeque::new(),
+                closed: false,
+                #[cfg(test)]
+                paused: false,
+            }),
             not_empty: Condvar::new(),
             not_full: Condvar::new(),
         }
@@ -124,6 +167,8 @@ struct QueueShared {
     submitted: AtomicU64,
     completed: AtomicU64,
     rejected: AtomicU64,
+    shed: AtomicU64,
+    metrics: ServeMetrics,
 }
 
 /// Queue-level counters.
@@ -135,6 +180,9 @@ pub struct QueueStats {
     pub completed: u64,
     /// Submissions refused because the queue was shut down.
     pub rejected: u64,
+    /// Submissions shed by admission control (`try_submit` on a full lane,
+    /// `submit_timeout` past its deadline) — never enqueued, no ticket.
+    pub shed: u64,
     /// Jobs currently waiting in the lanes.
     pub pending: usize,
 }
@@ -153,8 +201,40 @@ impl SubmitHandle {
     /// lane is full (backpressure); fails fast with [`Error::Shape`] on a
     /// non-square pencil or [`Error::Runtime`] after shutdown.
     pub fn submit(&self, a: Matrix, b: Matrix) -> Result<JobTicket> {
+        self.submit_with(a, b, Admit::Block)
+    }
+
+    /// Non-blocking enqueue: like [`SubmitHandle::submit`] but a full lane
+    /// sheds immediately with a typed [`Error::Overloaded`] instead of
+    /// blocking. Nothing is enqueued on shed — resubmitting later is safe.
+    pub fn try_submit(&self, a: Matrix, b: Matrix) -> Result<JobTicket> {
+        self.submit_with(a, b, Admit::NoWait)
+    }
+
+    /// Bounded-wait enqueue: wait up to `timeout` for lane capacity, then
+    /// shed with [`Error::Overloaded`]. `Duration::ZERO` behaves like
+    /// [`SubmitHandle::try_submit`]. This is the admission-control entry
+    /// the network front door uses (`PALLAS_ADMIT_TIMEOUT_MS`).
+    pub fn submit_timeout(&self, a: Matrix, b: Matrix, timeout: Duration) -> Result<JobTicket> {
+        self.submit_with(a, b, Admit::Deadline(Instant::now() + timeout))
+    }
+
+    /// The router's configured admission deadline in milliseconds
+    /// ([`crate::serve::router::ServeConfig::admit_timeout_ms`]), so
+    /// front doors holding only a handle can build the
+    /// [`SubmitHandle::submit_timeout`] argument.
+    pub fn admit_timeout_ms(&self) -> u64 {
+        self.shared.router.config().admit_timeout_ms
+    }
+
+    /// The one admission path behind all three submit variants. The
+    /// `closed` / capacity / deadline checks all happen under the lane
+    /// mutex, and the push shares the critical section with the final
+    /// check — identical closed-race discipline for every variant.
+    fn submit_with(&self, a: Matrix, b: Matrix, admit: Admit) -> Result<JobTicket> {
         check_square_pencil(&a, &b)?;
-        let shard = self.shared.router.shard_for(a.rows());
+        let n = a.rows();
+        let shard = self.shared.router.shard_for(n);
         let lane = &self.shared.lanes[shard];
         let ticket = Arc::new(TicketShared {
             slot: Mutex::new(None),
@@ -183,9 +263,34 @@ impl SubmitHandle {
                 if st.jobs.len() < self.shared.capacity {
                     break;
                 }
-                st = lane.not_full.wait(st).unwrap();
+                st = match &admit {
+                    Admit::Block => lane.not_full.wait(st).unwrap(),
+                    Admit::NoWait => {
+                        self.shared.shed.fetch_add(1, Ordering::Relaxed);
+                        return Err(Error::overloaded(format!(
+                            "serve: shard {shard} lane is full ({} jobs)",
+                            self.shared.capacity
+                        )));
+                    }
+                    Admit::Deadline(deadline) => {
+                        let now = Instant::now();
+                        if now >= *deadline {
+                            self.shared.shed.fetch_add(1, Ordering::Relaxed);
+                            return Err(Error::overloaded(format!(
+                                "serve: shard {shard} lane stayed full past the \
+                                 admission deadline ({} jobs)",
+                                self.shared.capacity
+                            )));
+                        }
+                        // Spurious wakeups re-enter this arm and re-derive
+                        // the remaining budget from the absolute deadline,
+                        // so the total wait never exceeds the timeout.
+                        let (guard, _) = lane.not_full.wait_timeout(st, *deadline - now).unwrap();
+                        guard
+                    }
+                };
             }
-            st.jobs.push_back(Job { a, b, ticket: ticket.clone() });
+            st.jobs.push_back(Job { a, b, n, enqueued: Instant::now(), ticket: ticket.clone() });
         }
         lane.not_empty.notify_one();
         self.shared.submitted.fetch_add(1, Ordering::Relaxed);
@@ -196,6 +301,12 @@ impl SubmitHandle {
     pub fn stats(&self) -> QueueStats {
         stats_of(&self.shared)
     }
+
+    /// Per-size-class latency snapshot (submit→completion, recorded when
+    /// the dispatcher fills each ticket).
+    pub fn latency_snapshot(&self) -> Vec<(SizeClass, HistogramSnapshot)> {
+        self.shared.metrics.snapshot()
+    }
 }
 
 fn stats_of(shared: &QueueShared) -> QueueStats {
@@ -203,6 +314,7 @@ fn stats_of(shared: &QueueShared) -> QueueStats {
         submitted: shared.submitted.load(Ordering::Relaxed),
         completed: shared.completed.load(Ordering::Relaxed),
         rejected: shared.rejected.load(Ordering::Relaxed),
+        shed: shared.shed.load(Ordering::Relaxed),
         pending: shared.lanes.iter().map(|l| l.state.lock().unwrap().jobs.len()).sum(),
     }
 }
@@ -216,6 +328,14 @@ fn dispatcher_loop(shared: Arc<QueueShared>, shard: usize) {
             let lane = &shared.lanes[shard];
             let mut st = lane.state.lock().unwrap();
             loop {
+                // Test brake (see `LaneState::paused`): park without
+                // popping so tests can hold a lane at capacity. Closed
+                // lanes ignore it — shutdown always drains.
+                #[cfg(test)]
+                if st.paused && !st.closed {
+                    st = lane.not_empty.wait(st).unwrap();
+                    continue;
+                }
                 if let Some(job) = st.jobs.pop_front() {
                     // Wake one blocked submitter into the freed slot.
                     lane.not_full.notify_one();
@@ -238,6 +358,10 @@ fn dispatcher_loop(shared: Arc<QueueShared>, shard: usize) {
         }))
         .unwrap_or_else(|_| Err(Error::runtime("serve: reduction panicked; job dropped")));
         shared.completed.fetch_add(1, Ordering::Relaxed);
+        // Submit→completion latency into the per-size-class histogram —
+        // recorded at ticket fill so queueing delay is included (that is
+        // the latency a front-door client actually observes).
+        shared.metrics.record(job.n, job.enqueued.elapsed());
         // Ticket lifecycle audit: every accepted ticket is filled
         // (completed-or-poisoned) exactly once. Jobs are moved out of the
         // lane by `pop_front`, so a double fill can only mean a duplicated
@@ -285,6 +409,8 @@ impl SubmitQueue {
             submitted: AtomicU64::new(0),
             completed: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            metrics: ServeMetrics::new(),
         });
         let dispatchers = (0..shards)
             .map(|shard| {
@@ -311,6 +437,27 @@ impl SubmitQueue {
     /// Queue-level counter snapshot.
     pub fn stats(&self) -> QueueStats {
         stats_of(&self.shared)
+    }
+
+    /// Per-size-class latency snapshot (see
+    /// [`SubmitHandle::latency_snapshot`]).
+    pub fn latency_snapshot(&self) -> Vec<(SizeClass, HistogramSnapshot)> {
+        self.shared.metrics.snapshot()
+    }
+
+    /// Per-size-class latency histograms rendered as a JSON object (the
+    /// shape the protocol's `Stats` reply embeds).
+    pub fn latency_json(&self) -> String {
+        self.shared.metrics.to_json()
+    }
+
+    /// Test brake: pause/unpause one shard's dispatcher (see
+    /// `LaneState::paused`).
+    #[cfg(test)]
+    fn set_paused(&self, shard: usize, paused: bool) {
+        let lane = &self.shared.lanes[shard];
+        lane.state.lock().unwrap().paused = paused;
+        lane.not_empty.notify_all();
     }
 
     /// Graceful shutdown (the documented protocol): close every lane,
@@ -475,6 +622,88 @@ mod tests {
             assert_eq!(stats.rejected, total_errs, "every rejection surfaced as an error");
             assert_eq!(stats.pending, 0, "no job left stranded in a lane");
         });
+    }
+
+    #[test]
+    fn try_submit_sheds_on_a_full_lane_and_recovers() {
+        // Pause the single dispatcher, fill the capacity-2 lane, and the
+        // third submission must shed immediately with Overloaded — never
+        // enqueue, never block. Unpausing drains everything.
+        let mut rng = Rng::new(0x0E_10);
+        let q = small_queue(1, 2);
+        let h = q.handle();
+        q.set_paused(0, true);
+        let pencils: Vec<_> = (0..3).map(|_| random_pencil(8, &mut rng)).collect();
+        let t0 = h.try_submit(pencils[0].a.clone(), pencils[0].b.clone()).unwrap();
+        let t1 = h.try_submit(pencils[1].a.clone(), pencils[1].b.clone()).unwrap();
+        let e = h.try_submit(pencils[2].a.clone(), pencils[2].b.clone()).unwrap_err();
+        assert!(matches!(e, Error::Overloaded(_)), "{e}");
+        let stats = h.stats();
+        assert_eq!(stats.shed, 1);
+        assert_eq!(stats.submitted, 2, "the shed job was never enqueued");
+        q.set_paused(0, false);
+        t0.wait().unwrap();
+        t1.wait().unwrap();
+        // With the dispatcher running again, try_submit admits normally.
+        let t2 = h.try_submit(pencils[2].a.clone(), pencils[2].b.clone()).unwrap();
+        let d = t2.wait().unwrap();
+        let eff = q.router().config().base.clipped_for(8);
+        let oracle = reduce_seq(&pencils[2].a, &pencils[2].b, &eff).unwrap();
+        assert_eq!(max_abs_diff(&d.h, &oracle.h), 0.0, "post-shed result is still bitwise");
+        q.shutdown();
+    }
+
+    #[test]
+    fn submit_timeout_sheds_after_the_deadline() {
+        let mut rng = Rng::new(0x0E_11);
+        let q = small_queue(1, 1);
+        let h = q.handle();
+        q.set_paused(0, true);
+        let p0 = random_pencil(8, &mut rng);
+        let p1 = random_pencil(8, &mut rng);
+        let t0 = h.submit(p0.a.clone(), p0.b.clone()).unwrap();
+        let start = Instant::now();
+        let e = h
+            .submit_timeout(p1.a.clone(), p1.b.clone(), Duration::from_millis(30))
+            .unwrap_err();
+        assert!(matches!(e, Error::Overloaded(_)), "{e}");
+        assert!(
+            start.elapsed() >= Duration::from_millis(30),
+            "deadline admission must actually wait out its budget"
+        );
+        assert_eq!(h.stats().shed, 1);
+        // A zero timeout behaves like try_submit.
+        let e = h.submit_timeout(p1.a.clone(), p1.b.clone(), Duration::ZERO).unwrap_err();
+        assert!(matches!(e, Error::Overloaded(_)), "{e}");
+        q.set_paused(0, false);
+        t0.wait().unwrap();
+        // Capacity is back: the deadline path admits without shedding.
+        let t1 = h.submit_timeout(p1.a, p1.b, Duration::from_secs(5)).unwrap();
+        t1.wait().unwrap();
+        q.shutdown();
+    }
+
+    #[test]
+    fn completed_jobs_show_up_in_the_latency_histograms() {
+        let mut rng = Rng::new(0x0E_12);
+        let q = small_queue(2, 8);
+        let h = q.handle();
+        let tickets: Vec<_> = (0..4)
+            .map(|_| {
+                let p = random_pencil(10, &mut rng);
+                h.submit(p.a, p.b).unwrap()
+            })
+            .collect();
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        let snap = q.latency_snapshot();
+        let tiny = snap.iter().find(|(c, _)| *c == crate::serve::metrics::SizeClass::Tiny);
+        let (_, hist) = tiny.expect("tiny class present in every snapshot");
+        assert_eq!(hist.count, 4, "every completion recorded exactly once");
+        assert!(hist.p99_ms() > 0.0);
+        assert!(q.latency_json().contains("\"tiny\""));
+        q.shutdown();
     }
 
     #[test]

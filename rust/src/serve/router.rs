@@ -25,7 +25,6 @@ use crate::error::{Error, Result};
 use crate::ht::two_stage::HtDecomposition;
 use crate::linalg::matrix::Matrix;
 use crate::serve::cache::{CacheKey, CacheStats, ResultCache};
-use crate::serve::hash::FxHasher64;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
 
@@ -67,6 +66,13 @@ pub struct ServeConfig {
     /// default: a serving tier sees arbitrary sizes and should not bounce
     /// small pencils off the paper tuning.
     pub clip_band: bool,
+    /// Admission-control deadline in milliseconds for front-door
+    /// submissions ([`crate::serve::queue::SubmitHandle::submit_timeout`]):
+    /// how long the network tier waits for lane capacity before shedding
+    /// with a typed `Overloaded` reply. `0` sheds immediately on a full
+    /// lane. Direct in-process `submit` calls are unaffected (they keep
+    /// the blocking-backpressure semantics).
+    pub admit_timeout_ms: u64,
     /// Base reduction tuning for every shard (`threads` is overridden by
     /// `threads_per_shard`).
     pub base: Config,
@@ -81,6 +87,7 @@ impl Default for ServeConfig {
             cache_entries: 64,
             cache_bytes: 256 << 20,
             clip_band: true,
+            admit_timeout_ms: 1000,
             base: Config::default(),
         }
     }
@@ -97,6 +104,7 @@ impl ServeConfig {
             queue_capacity: crate::util::env::serve_queue_cap(d.queue_capacity),
             cache_entries: crate::util::env::serve_cache_entries(d.cache_entries),
             cache_bytes: crate::util::env::serve_cache_bytes(d.cache_bytes),
+            admit_timeout_ms: crate::util::env::admit_timeout_ms(d.admit_timeout_ms),
             ..d
         }
     }
@@ -190,15 +198,12 @@ impl ShardRouter {
         self.shards.len()
     }
 
-    /// Size-class routing: the shard responsible for problem size `n`.
-    /// A hash of `n` (not `n % shards`) so that arithmetic size
-    /// progressions don't all land on one shard; every request for the
-    /// same `n` maps to the same shard, which is what keeps that shard's
-    /// per-`n` workspace warm.
+    /// Size-class routing: the shard responsible for problem size `n` —
+    /// the shared [`crate::serve::hash::size_class_shard`] rule, so the
+    /// multi-process supervisor routes a given `n` to the same size class
+    /// this in-process router would.
     pub fn shard_for(&self, n: usize) -> usize {
-        let mut h = FxHasher64::new();
-        h.write_usize(n);
-        (h.finish() % self.shards.len() as u64) as usize
+        crate::serve::hash::size_class_shard(n, self.shards.len())
     }
 
     /// Reduce one pencil through the serving path: shape check → cache
@@ -259,8 +264,17 @@ impl ShardRouter {
     pub fn stats(&self) -> RouterStats {
         RouterStats {
             reduced_per_shard: self.reduced.iter().map(|c| c.load(Ordering::Relaxed)).collect(),
-            cache: self.cache.as_ref().map(|c| lock_recover(c).stats()),
+            cache: self.cache_stats(),
         }
+    }
+
+    /// Atomic cache-counter snapshot, taken in one critical section under
+    /// the cache lock ([`crate::serve::cache::ResultCache::snapshot`]) —
+    /// the printer-facing accessor, so hits/misses/entries/bytes in one
+    /// report always describe the same instant. `None` when caching is
+    /// disabled.
+    pub fn cache_stats(&self) -> Option<CacheStats> {
+        self.cache.as_ref().map(|c| lock_recover(c).snapshot())
     }
 }
 

@@ -1,0 +1,783 @@
+//! Supervised multi-process serving: each size-class shard is a child
+//! process, restarted on crash with capped exponential backoff.
+//!
+//! The in-process tier ([`crate::serve::router`]) contains a panicking job
+//! with `catch_unwind` and mutex poison-recovery — but a segfault, an
+//! abort, or an OOM kill still takes the whole server with it. This module
+//! is the stronger isolation boundary: the [`ShardSupervisor`] runs one
+//! `--shard-worker` child per size class (`std::process::Command`
+//! re-invoking the serving binary), speaks the same frame protocol
+//! ([`crate::serve::proto`]) over the child's stdin/stdout pipes, and when
+//! a child dies it fails only that child's in-flight job — with a typed
+//! [`Error::ShardDown`] — then respawns it lazily with capped exponential
+//! backoff. Reductions are pure, so resubmitting a `ShardDown` job is
+//! always safe.
+//!
+//! **Supervisor state machine** (per shard): `Up` — child alive, jobs
+//! flow; `Dying` — an I/O error or EOF on the pipes marks the child dead,
+//! the in-flight job fails with `ShardDown`, the child is reaped;
+//! `Backoff` — subsequent submissions wait out
+//! `min(backoff_initial << (consecutive_deaths - 1), backoff_max)` before
+//! respawning; `Respawn` — a fresh child is spawned on the next job, and
+//! its first completed job resets the consecutive-death counter. There is
+//! no respawn thread: restart work rides on the next submission (lazy),
+//! so an idle dead shard costs nothing.
+//!
+//! **Determinism across the process boundary.** The supervisor always
+//! sends the *explicit effective* tuning (band-clipped for each pencil's
+//! `n`, exactly like the in-process router), never the wire sentinel, so
+//! a worker needs no configuration of its own and computes bitwise what
+//! [`crate::api::reduce_seq`] computes under that effective config —
+//! `tests/serve_proc.rs` pins this end to end. Workers inherit the parent
+//! environment, so kernel selection (`PALLAS_KERNEL`) resolves
+//! identically on both sides of the pipe; [`SupervisorConfig::validate`]
+//! rejects a base config with an explicit non-default kernel override,
+//! which (unlike the env knob) does not cross the process boundary.
+//!
+//! **Persistence** (peal's supervise-and-persist idiom): when
+//! [`SupervisorConfig::summary_dir`] is set, each shard's lifetime
+//! counters are written to `shard-<i>.run_summary.json` on every spawn,
+//! death and shutdown — a crash post-mortem that survives the process.
+//!
+//! **Locking.** Each shard has two locks, ordered `io → life`:
+//! `io` (the pipe pair) is held for a job's full write→read round trip —
+//! one job at a time per shard, the same serialization the in-process
+//! dispatcher gives — while `life` (child handle + counters) is only ever
+//! held briefly. The chaos hook [`ShardSupervisor::kill_shard`] takes
+//! `life` alone and kills without reaping, so it can fire mid-job
+//! without deadlocking against the in-flight round trip; the job then
+//! discovers the death as an I/O error/EOF and runs the `Dying` path.
+
+use crate::config::Config;
+use crate::error::{Error, Result};
+use crate::ht::two_stage::HtDecomposition;
+use crate::linalg::kernels::KernelChoice;
+use crate::linalg::matrix::Matrix;
+use crate::serve::hash::size_class_shard;
+use crate::serve::proto::{read_frame, write_frame, Frame, WireConfig};
+use crate::serve::router::check_square_pencil;
+use std::io::{BufReader, BufWriter, Write};
+use std::path::PathBuf;
+use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// Serving-tier poison recovery (same rationale as the router's): a panic
+/// between supervisor bookkeeping steps must cost that job, not wedge the
+/// shard forever.
+fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Configuration of the multi-process serving mode.
+#[derive(Clone, Debug)]
+pub struct SupervisorConfig {
+    /// Number of shard child processes (`PALLAS_SHARD_PROCS`; each is a
+    /// full OS process, so the budget is `[1, 64]`).
+    pub procs: usize,
+    /// Worker-pool executors inside each child (exported to the child as
+    /// `PALLAS_SERVE_THREADS`).
+    pub threads_per_proc: usize,
+    /// Base reduction tuning; band-clipped per pencil when `clip_band` is
+    /// set, then sent explicitly with every job.
+    pub base: Config,
+    /// Clip the stage-1 band per pencil size ([`Config::clipped_for`]) —
+    /// on by default, mirroring the in-process router.
+    pub clip_band: bool,
+    /// Worker command line. Empty (the default) means "re-invoke
+    /// `current_exe()` with `--shard-worker`" — correct for the `paraht`
+    /// binary; test/bench binaries override it with their own argv so the
+    /// supervisor never accidentally re-invokes a test harness that
+    /// doesn't speak the protocol.
+    pub worker_argv: Vec<String>,
+    /// Where to persist per-shard `shard-<i>.run_summary.json` files
+    /// (`None` disables persistence).
+    pub summary_dir: Option<PathBuf>,
+    /// First-death respawn delay in milliseconds (doubles per consecutive
+    /// death).
+    pub backoff_initial_ms: u64,
+    /// Backoff ceiling in milliseconds.
+    pub backoff_max_ms: u64,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> Self {
+        SupervisorConfig {
+            procs: 2,
+            threads_per_proc: 1,
+            base: Config::default(),
+            clip_band: true,
+            worker_argv: Vec::new(),
+            summary_dir: None,
+            backoff_initial_ms: 25,
+            backoff_max_ms: 2000,
+        }
+    }
+}
+
+impl SupervisorConfig {
+    /// Defaults overridden by the environment knobs (`PALLAS_SHARD_PROCS`,
+    /// `PALLAS_SERVE_THREADS`).
+    pub fn from_env() -> SupervisorConfig {
+        let d = SupervisorConfig::default();
+        SupervisorConfig {
+            procs: crate::util::env::shard_procs(d.procs),
+            threads_per_proc: crate::util::env::serve_threads(d.threads_per_proc),
+            ..d
+        }
+    }
+
+    /// Validate geometry and base tuning (typed [`Error::Config`]).
+    pub fn validate(&self) -> Result<()> {
+        if self.procs < 1 || self.procs > 64 {
+            return Err(Error::config(format!(
+                "supervisor: procs = {} outside the child-process budget [1, 64]",
+                self.procs
+            )));
+        }
+        if self.backoff_initial_ms == 0 || self.backoff_max_ms < self.backoff_initial_ms {
+            return Err(Error::config(format!(
+                "supervisor: backoff window [{}, {}] ms must be non-empty with a positive floor",
+                self.backoff_initial_ms, self.backoff_max_ms
+            )));
+        }
+        if self.base.kernel != KernelChoice::Auto {
+            return Err(Error::config(
+                "supervisor: an explicit Config::kernel override does not cross the \
+                 process boundary; set PALLAS_KERNEL in the environment instead \
+                 (workers inherit it)",
+            ));
+        }
+        let worker_cfg = Config { threads: self.threads_per_proc, ..self.base.clone() };
+        worker_cfg.validate()
+    }
+
+    /// The worker argv, resolving the empty default to
+    /// `current_exe() --shard-worker`.
+    fn resolved_worker_argv(&self) -> Result<Vec<String>> {
+        if !self.worker_argv.is_empty() {
+            return Ok(self.worker_argv.clone());
+        }
+        let exe = std::env::current_exe().map_err(Error::Io)?;
+        Ok(vec![exe.to_string_lossy().into_owned(), "--shard-worker".to_string()])
+    }
+}
+
+/// The live pipe pair of one child (present iff a child is up).
+struct ChildIo {
+    stdin: ChildStdin,
+    stdout: BufReader<ChildStdout>,
+}
+
+/// Lifecycle state of one shard (the brief-hold lock).
+#[derive(Default)]
+struct Life {
+    /// The child handle, for kill/reap. `Some` iff `ChildIo` is `Some`
+    /// (both are cleared together on death, under `io` then `life`).
+    child: Option<Child>,
+    /// When the current child was spawned (uptime accounting).
+    spawned_at: Option<Instant>,
+    /// Total children ever spawned for this shard.
+    spawns: u64,
+    /// Jobs answered successfully (including typed job errors — the child
+    /// stayed up) by this shard's children, lifetime.
+    jobs_ok: u64,
+    /// Jobs failed with `ShardDown` (child died mid-job), lifetime.
+    jobs_failed: u64,
+    /// Deaths since the last successful job (drives the backoff
+    /// exponent; reset on success).
+    consecutive_deaths: u64,
+    /// Earliest instant the next respawn may happen.
+    backoff_until: Option<Instant>,
+    /// Accumulated uptime of already-dead children (so `uptime_secs` in
+    /// the summary is lifetime-total, not current-child-only).
+    uptime_dead_secs: f64,
+    /// Message of the most recent death, for the run summary.
+    last_error: Option<String>,
+}
+
+/// One supervised shard: the pipe lock and the lifecycle lock (ordered
+/// `io → life`; see the module docs).
+struct Shard {
+    io: Mutex<Option<ChildIo>>,
+    life: Mutex<Life>,
+}
+
+/// Lifetime counters of one shard, exported by
+/// [`ShardSupervisor::stats`].
+#[derive(Clone, Debug, Default)]
+pub struct ShardProcStats {
+    /// Whether a child is currently up.
+    pub up: bool,
+    /// Total children ever spawned (`spawns - 1` = restarts).
+    pub spawns: u64,
+    /// Jobs answered by a live child (success or typed job error).
+    pub jobs_ok: u64,
+    /// Jobs failed with `ShardDown`.
+    pub jobs_failed: u64,
+    /// Lifetime child uptime in seconds (dead children + current).
+    pub uptime_secs: f64,
+    /// Most recent death message, if any child ever died.
+    pub last_error: Option<String>,
+}
+
+/// Counters for all shards.
+#[derive(Clone, Debug, Default)]
+pub struct SupervisorStats {
+    /// Per-shard lifetime counters, indexed by shard.
+    pub shards: Vec<ShardProcStats>,
+}
+
+impl SupervisorStats {
+    /// Total restarts across all shards (spawns beyond each shard's
+    /// first).
+    pub fn restarts(&self) -> u64 {
+        self.shards.iter().map(|s| s.spawns.saturating_sub(1)).sum()
+    }
+}
+
+/// The parent-side supervisor (see the [module docs](self)).
+pub struct ShardSupervisor {
+    cfg: SupervisorConfig,
+    shards: Vec<Shard>,
+    /// Resolved once at build time so a `current_exe` failure surfaces at
+    /// construction, not mid-flood.
+    worker_argv: Vec<String>,
+}
+
+impl std::fmt::Debug for ShardSupervisor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ShardSupervisor")
+            .field("procs", &self.shards.len())
+            .field("threads_per_proc", &self.cfg.threads_per_proc)
+            .finish_non_exhaustive()
+    }
+}
+
+impl ShardSupervisor {
+    /// Validate the config and set up the (empty) shard table. Children
+    /// are spawned lazily on first use — constructing a supervisor is
+    /// cheap and cannot fail on a missing worker binary until a job
+    /// actually needs one.
+    pub fn new(cfg: SupervisorConfig) -> Result<ShardSupervisor> {
+        cfg.validate()?;
+        let worker_argv = cfg.resolved_worker_argv()?;
+        let shards = (0..cfg.procs)
+            .map(|_| Shard { io: Mutex::new(None), life: Mutex::new(Life::default()) })
+            .collect();
+        Ok(ShardSupervisor { cfg, shards, worker_argv })
+    }
+
+    /// The validated configuration.
+    pub fn config(&self) -> &SupervisorConfig {
+        &self.cfg
+    }
+
+    /// Number of shard child processes.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard child responsible for problem size `n` (the shared
+    /// size-class rule, identical to the in-process router's).
+    pub fn shard_for(&self, n: usize) -> usize {
+        size_class_shard(n, self.shards.len())
+    }
+
+    /// Reduce one pencil on its size-class child. Serializes per shard
+    /// (the `io` lock is held for the round trip); different shards run
+    /// concurrently. A dead child fails this job with
+    /// [`Error::ShardDown`] and arms the backoff; the *next* job on the
+    /// shard respawns and succeeds — resubmission is always safe because
+    /// reductions are pure.
+    pub fn reduce(&self, a: &Matrix, b: &Matrix) -> Result<Arc<HtDecomposition>> {
+        check_square_pencil(a, b)?;
+        let n = a.rows();
+        let shard = self.shard_for(n);
+        let eff =
+            if self.cfg.clip_band { self.cfg.base.clipped_for(n) } else { self.cfg.base.clone() };
+        eff.validate_for(n)?;
+        let wire = WireConfig::from_config(&eff);
+
+        let mut io = lock_recover(&self.shards[shard].io);
+        self.ensure_child(shard, &mut io)?;
+        let req_id = {
+            let life = lock_recover(&self.shards[shard].life);
+            // Monotone per shard: spawn count in the high bits keeps ids
+            // from ever repeating across restarts.
+            (life.spawns << 32) | (life.jobs_ok + life.jobs_failed)
+        };
+        let outcome = self.round_trip(&mut io, req_id, &wire, a, b);
+        match outcome {
+            Ok(reply) => {
+                let mut life = lock_recover(&self.shards[shard].life);
+                life.jobs_ok += 1;
+                life.consecutive_deaths = 0;
+                life.backoff_until = None;
+                reply
+            }
+            Err(death_msg) => {
+                self.record_death(shard, &mut io, death_msg);
+                Err(Error::shard_down(format!(
+                    "serve: shard {shard} child died with this job in flight; \
+                     it will be respawned (backoff applies) — resubmit"
+                )))
+            }
+        }
+    }
+
+    /// One write→read round trip on a live child. The outer `Result`
+    /// distinguishes transport death (`Err(message)` → the `Dying` path)
+    /// from a completed exchange whose inner `Result` is the job's typed
+    /// outcome (the child is fine either way).
+    #[allow(clippy::type_complexity)]
+    fn round_trip(
+        &self,
+        io: &mut Option<ChildIo>,
+        req_id: u64,
+        wire: &WireConfig,
+        a: &Matrix,
+        b: &Matrix,
+    ) -> std::result::Result<Result<Arc<HtDecomposition>>, String> {
+        let pipes = io.as_mut().expect("ensure_child leaves a live child on success");
+        let submit =
+            Frame::Submit { req_id, cfg: *wire, a: a.clone(), b: b.clone() };
+        if let Err(e) = write_frame(&mut pipes.stdin, &submit) {
+            return Err(format!("write to child failed: {e}"));
+        }
+        match read_frame(&mut pipes.stdout) {
+            Ok(Some(Frame::ResultOk { req_id: got, stage1_secs, stage2_secs, h, t, q, z })) => {
+                if got != req_id {
+                    return Err(format!("child replied to req {got}, expected {req_id}"));
+                }
+                Ok(Ok(Arc::new(HtDecomposition { h, t, q, z, stage1_secs, stage2_secs })))
+            }
+            Ok(Some(Frame::ResultErr { req_id: got, err })) => {
+                if got != req_id {
+                    return Err(format!("child replied to req {got}, expected {req_id}"));
+                }
+                // Typed job failure with the child still healthy: pass the
+                // error through, count it as an answered job.
+                Ok(Err(err))
+            }
+            Ok(Some(other)) => Err(format!("child sent an unexpected frame: {other:?}")),
+            Ok(None) => Err("child closed its pipe (EOF) mid-job".to_string()),
+            Err(e) => Err(format!("read from child failed: {e}")),
+        }
+    }
+
+    /// Spawn this shard's child if it is not up, honoring the backoff
+    /// window. Called with the shard's `io` lock held, so concurrent jobs
+    /// on the shard cannot double-spawn; the backoff sleep happens under
+    /// that lock (the shard is unusable until the window passes anyway —
+    /// other shards are unaffected).
+    fn ensure_child(&self, shard: usize, io: &mut Option<ChildIo>) -> Result<()> {
+        if io.is_some() {
+            return Ok(());
+        }
+        let wait = {
+            let life = lock_recover(&self.shards[shard].life);
+            life.backoff_until.map(|until| until.saturating_duration_since(Instant::now()))
+        };
+        if let Some(wait) = wait {
+            if !wait.is_zero() {
+                std::thread::sleep(wait);
+            }
+        }
+        let mut cmd = Command::new(&self.worker_argv[0]);
+        cmd.args(&self.worker_argv[1..])
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped())
+            // Worker panics/logs land on the parent's stderr — crash
+            // output must survive the child.
+            .stderr(Stdio::inherit())
+            .env("PALLAS_SERVE_THREADS", self.cfg.threads_per_proc.to_string());
+        let mut child = cmd.spawn().map_err(|e| {
+            Error::shard_down(format!(
+                "serve: cannot spawn shard {shard} worker ({}): {e}",
+                self.worker_argv[0]
+            ))
+        })?;
+        let stdin = child.stdin.take().expect("stdin was piped");
+        let stdout = BufReader::new(child.stdout.take().expect("stdout was piped"));
+        *io = Some(ChildIo { stdin, stdout });
+        {
+            let mut life = lock_recover(&self.shards[shard].life);
+            life.child = Some(child);
+            life.spawned_at = Some(Instant::now());
+            life.spawns += 1;
+        }
+        self.persist_summary(shard);
+        Ok(())
+    }
+
+    /// The `Dying` path: drop the pipes, reap the child, bump the failure
+    /// counters, arm the backoff, persist the summary. Called with the
+    /// shard's `io` lock held (the in-flight job's).
+    fn record_death(&self, shard: usize, io: &mut Option<ChildIo>, msg: String) {
+        *io = None; // dropping ChildIo closes our pipe ends
+        {
+            let mut life = lock_recover(&self.shards[shard].life);
+            if let Some(mut child) = life.child.take() {
+                let _ = child.kill(); // idempotent if already dead
+                let _ = child.wait(); // reap — no zombie
+            }
+            if let Some(spawned) = life.spawned_at.take() {
+                life.uptime_dead_secs += spawned.elapsed().as_secs_f64();
+            }
+            life.jobs_failed += 1;
+            life.consecutive_deaths += 1;
+            let exp = life.consecutive_deaths.min(32) - 1;
+            let backoff_ms = self
+                .cfg
+                .backoff_initial_ms
+                .saturating_mul(1u64 << exp.min(20))
+                .min(self.cfg.backoff_max_ms);
+            life.backoff_until = Some(Instant::now() + Duration::from_millis(backoff_ms));
+            life.last_error = Some(msg);
+        }
+        self.persist_summary(shard);
+    }
+
+    /// Chaos hook (tests, fault drills): kill one shard's child without
+    /// reaping or notifying. Takes only the `life` lock, so it can fire
+    /// while a job round trip holds `io` — that job then observes
+    /// EOF/EPIPE and runs the `Dying` path itself. Returns whether a
+    /// child was there to kill.
+    pub fn kill_shard(&self, shard: usize) -> bool {
+        let mut life = lock_recover(&self.shards[shard].life);
+        match life.child.as_mut() {
+            Some(child) => {
+                let _ = child.kill();
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Lifetime counters for every shard.
+    pub fn stats(&self) -> SupervisorStats {
+        SupervisorStats {
+            shards: (0..self.shards.len()).map(|i| self.shard_stats(i)).collect(),
+        }
+    }
+
+    fn shard_stats(&self, shard: usize) -> ShardProcStats {
+        let life = lock_recover(&self.shards[shard].life);
+        ShardProcStats {
+            up: life.child.is_some(),
+            spawns: life.spawns,
+            jobs_ok: life.jobs_ok,
+            jobs_failed: life.jobs_failed,
+            uptime_secs: life.uptime_dead_secs
+                + life.spawned_at.map_or(0.0, |s| s.elapsed().as_secs_f64()),
+            last_error: life.last_error.clone(),
+        }
+    }
+
+    /// Per-shard stats as a JSON object (embedded in the protocol's
+    /// `Stats` reply when the front door runs in multi-process mode).
+    pub fn stats_json(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::from("[");
+        for (i, s) in self.stats().shards.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            let _ = write!(
+                out,
+                "{{\"shard\": {i}, \"up\": {}, \"spawns\": {}, \"jobs_ok\": {}, \
+                 \"jobs_failed\": {}, \"uptime_secs\": {:.3}}}",
+                s.up, s.spawns, s.jobs_ok, s.jobs_failed, s.uptime_secs
+            );
+        }
+        out.push(']');
+        out
+    }
+
+    /// Best-effort `shard-<i>.run_summary.json` write (no-op without a
+    /// `summary_dir`; I/O errors are swallowed — persistence must never
+    /// fail a job).
+    fn persist_summary(&self, shard: usize) {
+        let Some(dir) = &self.cfg.summary_dir else {
+            return;
+        };
+        let s = self.shard_stats(shard);
+        let json = format!(
+            "{{\n  \"schema_version\": 1,\n  \"shard\": {shard},\n  \"up\": {},\n  \
+             \"spawns\": {},\n  \"restarts\": {},\n  \"jobs_ok\": {},\n  \
+             \"jobs_failed\": {},\n  \"uptime_secs\": {:.3},\n  \"last_error\": {}\n}}\n",
+            s.up,
+            s.spawns,
+            s.spawns.saturating_sub(1),
+            s.jobs_ok,
+            s.jobs_failed,
+            s.uptime_secs,
+            match &s.last_error {
+                Some(e) => format!("\"{}\"", json_escape(e)),
+                None => "null".to_string(),
+            }
+        );
+        let _ = std::fs::create_dir_all(dir);
+        let _ = std::fs::write(dir.join(format!("shard-{shard}.run_summary.json")), json);
+    }
+
+    /// Stop every child: close its stdin (a well-behaved worker exits on
+    /// EOF), wait briefly, then kill. Persists final summaries. Drop runs
+    /// the same sequence.
+    pub fn shutdown(self) {
+        drop(self);
+    }
+
+    fn stop_children(&mut self) {
+        for shard in 0..self.shards.len() {
+            // Dropping ChildIo closes the child's stdin → worker sees a
+            // clean frame-boundary EOF and exits 0.
+            *lock_recover(&self.shards[shard].io) = None;
+            let mut life = lock_recover(&self.shards[shard].life);
+            if let Some(mut child) = life.child.take() {
+                let deadline = Instant::now() + Duration::from_secs(2);
+                loop {
+                    match child.try_wait() {
+                        Ok(Some(_)) => break,
+                        Ok(None) if Instant::now() < deadline => {
+                            std::thread::sleep(Duration::from_millis(10));
+                        }
+                        _ => {
+                            let _ = child.kill();
+                            let _ = child.wait();
+                            break;
+                        }
+                    }
+                }
+                if let Some(spawned) = life.spawned_at.take() {
+                    life.uptime_dead_secs += spawned.elapsed().as_secs_f64();
+                }
+            }
+            drop(life);
+            self.persist_summary(shard);
+        }
+    }
+}
+
+impl Drop for ShardSupervisor {
+    fn drop(&mut self) {
+        self.stop_children();
+    }
+}
+
+/// Minimal JSON string escaping for the run summary (quotes, backslashes,
+/// control characters).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// The worker side
+// ---------------------------------------------------------------------
+
+/// Entry point of the hidden `--shard-worker` mode: serve frames from
+/// stdin to stdout until a clean EOF. Exposed as a library function so
+/// every binary that may be named in [`SupervisorConfig::worker_argv`]
+/// (the `paraht` CLI, the `serve_net` bench, the `serve_proc` test
+/// harness) can dispatch to the *same* worker loop before parsing its own
+/// arguments.
+///
+/// Exit codes: `0` clean EOF (supervisor closed stdin), `2` protocol
+/// misuse on stdin, `3` the reply pipe broke (the parent died).
+///
+/// The worker is deliberately configuration-free: every `Submit` carries
+/// its explicit effective tuning (the supervisor never sends the wire
+/// sentinel), and the worker caches one [`HtSession`] keyed by that
+/// tuning — consecutive same-class jobs reuse the session's per-`n`
+/// workspace exactly like an in-process shard would. Thread count comes
+/// from `PALLAS_SERVE_THREADS` (set by the supervisor at spawn).
+pub fn worker_main() -> i32 {
+    use crate::api::HtSession;
+
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    let mut input = stdin.lock();
+    let mut output = BufWriter::new(stdout.lock());
+    let threads = crate::util::env::serve_threads(1);
+    // (tuning key, session) — rebuilt when a job's tuning differs.
+    let mut cached: Option<(WireConfig, HtSession)> = None;
+    let mut jobs: u64 = 0;
+
+    loop {
+        let frame = match read_frame(&mut input) {
+            Ok(Some(f)) => f,
+            Ok(None) => return 0, // clean frame-boundary EOF: supervisor shutdown
+            Err(e) => {
+                eprintln!("shard-worker: protocol error on stdin: {e}");
+                return 2;
+            }
+        };
+        let reply = match frame {
+            Frame::Submit { req_id, cfg, a, b } => {
+                jobs += 1;
+                match worker_reduce(&mut cached, threads, cfg, &a, &b) {
+                    Ok(d) => Frame::ResultOk {
+                        req_id,
+                        stage1_secs: d.stage1_secs,
+                        stage2_secs: d.stage2_secs,
+                        h: d.h,
+                        t: d.t,
+                        q: d.q,
+                        z: d.z,
+                    },
+                    Err(err) => Frame::ResultErr { req_id, err },
+                }
+            }
+            Frame::StatsReq { req_id } => {
+                Frame::StatsReply { req_id, json: format!("{{\"worker_jobs\": {jobs}}}") }
+            }
+            other => {
+                eprintln!("shard-worker: unexpected frame on stdin: {other:?}");
+                return 2;
+            }
+        };
+        if write_frame(&mut output, &reply).and_then(|()| output.flush().map_err(Error::Io)).is_err()
+        {
+            // Nobody is listening; stderr is the only channel left.
+            eprintln!("shard-worker: reply pipe broke; exiting");
+            return 3;
+        }
+    }
+}
+
+/// One worker-side reduction: resolve the session for this job's tuning
+/// (reusing the cached one when the tuning repeats) and run. A panicking
+/// reduction is *not* caught here — process isolation is the whole point:
+/// the panic unwinds, the worker dies, the supervisor's `Dying` path
+/// turns it into `ShardDown` and a respawn.
+fn worker_reduce(
+    cached: &mut Option<(WireConfig, crate::api::HtSession)>,
+    threads: usize,
+    wire: WireConfig,
+    a: &Matrix,
+    b: &Matrix,
+) -> Result<HtDecomposition> {
+    use crate::api::HtSession;
+    if wire.is_default() {
+        // The supervisor always sends explicit tuning; the sentinel here
+        // means a non-supervisor peer is driving the pipe wrong.
+        return Err(Error::protocol(
+            "shard-worker: Submit carried the default-tuning sentinel; workers \
+             require explicit effective tuning",
+        ));
+    }
+    let cfg = wire.apply_to(&Config { threads, ..Config::default() });
+    let rebuild = match cached {
+        Some((key, _)) => *key != wire,
+        None => true,
+    };
+    if rebuild {
+        // clip_band(true): the tuning is already clipped by the
+        // supervisor, so this is an idempotent safety net, and it lets
+        // hand-driven pipes (tests) submit unclipped tunings too.
+        let session = HtSession::builder().config(cfg).clip_band(true).build()?;
+        *cached = Some((wire, session));
+    }
+    let (_, session) = cached.as_mut().expect("session cached above");
+    let result = session.reduce(a, b);
+    // A worker serves unboundedly many jobs: the per-call phase log must
+    // not grow with traffic (same hygiene as the in-process router).
+    session.clear_phases();
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_validation_rejects_bad_geometry() {
+        let ok = SupervisorConfig::default();
+        assert!(ok.validate().is_ok());
+        let bad = SupervisorConfig { procs: 0, ..SupervisorConfig::default() };
+        assert!(matches!(bad.validate().unwrap_err(), Error::Config(_)));
+        let bad = SupervisorConfig { procs: 65, ..SupervisorConfig::default() };
+        assert!(matches!(bad.validate().unwrap_err(), Error::Config(_)));
+        let bad = SupervisorConfig { backoff_initial_ms: 0, ..SupervisorConfig::default() };
+        assert!(matches!(bad.validate().unwrap_err(), Error::Config(_)));
+        let bad = SupervisorConfig {
+            backoff_initial_ms: 100,
+            backoff_max_ms: 50,
+            ..SupervisorConfig::default()
+        };
+        assert!(matches!(bad.validate().unwrap_err(), Error::Config(_)));
+        let bad = SupervisorConfig {
+            base: Config { kernel: KernelChoice::Scalar, ..Config::default() },
+            ..SupervisorConfig::default()
+        };
+        let e = bad.validate().unwrap_err();
+        assert!(format!("{e}").contains("PALLAS_KERNEL"), "{e}");
+    }
+
+    #[test]
+    fn worker_argv_default_is_current_exe_shard_worker() {
+        let cfg = SupervisorConfig::default();
+        let argv = cfg.resolved_worker_argv().unwrap();
+        assert_eq!(argv.len(), 2);
+        assert_eq!(argv[1], "--shard-worker");
+        let explicit = SupervisorConfig {
+            worker_argv: vec!["/bin/worker".into(), "--flag".into()],
+            ..SupervisorConfig::default()
+        };
+        assert_eq!(explicit.resolved_worker_argv().unwrap(), vec!["/bin/worker", "--flag"]);
+    }
+
+    #[test]
+    fn routing_agrees_with_the_in_process_router_rule() {
+        let sup = ShardSupervisor::new(SupervisorConfig {
+            procs: 3,
+            ..SupervisorConfig::default()
+        })
+        .unwrap();
+        for n in [2usize, 16, 23, 40, 400] {
+            assert_eq!(sup.shard_for(n), size_class_shard(n, 3));
+        }
+        // Nothing spawned yet: construction is lazy.
+        assert!(sup.stats().shards.iter().all(|s| !s.up && s.spawns == 0));
+    }
+
+    #[test]
+    fn json_escaping_covers_quotes_and_control_chars() {
+        assert_eq!(json_escape("plain"), "plain");
+        assert_eq!(json_escape("a\"b\\c"), "a\\\"b\\\\c");
+        assert_eq!(json_escape("line\nbreak\ttab"), "line\\nbreak\\ttab");
+        assert_eq!(json_escape("\u{1}"), "\\u0001");
+    }
+
+    #[test]
+    fn backoff_exponent_caps_at_the_ceiling() {
+        // The arithmetic inside record_death, spot-checked standalone:
+        // initial 25ms doubling, ceiling 2000ms.
+        let initial: u64 = 25;
+        let max: u64 = 2000;
+        let backoff = |deaths: u64| -> u64 {
+            let exp = deaths.min(32) - 1;
+            initial.saturating_mul(1u64 << exp.min(20)).min(max)
+        };
+        assert_eq!(backoff(1), 25);
+        assert_eq!(backoff(2), 50);
+        assert_eq!(backoff(4), 200);
+        assert_eq!(backoff(8), 2000, "capped");
+        assert_eq!(backoff(40), 2000, "huge death counts saturate, no overflow");
+    }
+}

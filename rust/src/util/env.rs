@@ -32,6 +32,9 @@
 //! | `PALLAS_SERVE_CACHE_BYTES` | result-cache byte bound (keys + stored factors) |
 //! | `PALLAS_SERVE_JOBS`      | flood size for the serve bench / `serve-bench` CLI mode |
 //! | `PALLAS_SERVE_SIZES`     | comma-separated pencil sizes for the serve flood mix |
+//! | `PALLAS_NET_ADDR`        | listen/connect address for the `serve-net` front door (`host:port`, or `unix:/path` for a Unix-domain socket) |
+//! | `PALLAS_ADMIT_TIMEOUT_MS`| admission-control deadline for front-door submissions (ms; `0` sheds immediately on a full lane) |
+//! | `PALLAS_SHARD_PROCS`     | shard child-process count for the supervised multi-process mode ([`crate::serve::supervisor`]) |
 
 use crate::config::MAX_THREADS;
 use crate::linalg::kernels::KernelChoice;
@@ -208,6 +211,27 @@ pub fn serve_sizes(default: &[usize]) -> Vec<usize> {
     sizes_or(var("SERVE_SIZES"), default)
 }
 
+/// Listen/connect address for the network front door (`PALLAS_NET_ADDR`).
+/// `host:port` for TCP, or a `unix:` prefix for a Unix-domain socket path
+/// — parsed by [`crate::serve::net::NetConfig`], not here.
+pub fn net_addr(default: &str) -> String {
+    var("NET_ADDR").unwrap_or_else(|| default.to_string())
+}
+
+/// Admission-control deadline in milliseconds for front-door submissions
+/// (`PALLAS_ADMIT_TIMEOUT_MS`; `0` sheds immediately on a full lane).
+pub fn admit_timeout_ms(default: u64) -> u64 {
+    var("ADMIT_TIMEOUT_MS").and_then(|s| s.trim().parse().ok()).unwrap_or(default)
+}
+
+/// Shard child-process count for the supervised multi-process mode
+/// (`PALLAS_SHARD_PROCS`), clamped into `[1, 64]` — each child is a full
+/// OS process with its own session, so the budget is much tighter than
+/// the in-process shard budget.
+pub fn shard_procs(default: usize) -> usize {
+    var("SHARD_PROCS").and_then(|s| parse_usize(&s)).map(|v| v.clamp(1, 64)).unwrap_or(default)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -307,6 +331,21 @@ mod tests {
         assert_eq!(tol_from(Some("0.2".into())), 1.0, "sub-1 tolerances are ignored");
         assert_eq!(tol_from(Some("inf".into())), 1.0, "non-finite tolerances are ignored");
         assert_eq!(tol_from(Some("garbage".into())), 1.0);
+    }
+
+    #[test]
+    fn net_knobs_parse_and_clamp_through_the_alias_chain() {
+        // PALLAS_NET_ADDR resolves through the standard alias lookup.
+        let env = env_of(&[("PARAHT_NET_ADDR", "unix:/tmp/pallas.sock")]);
+        let got = first_from(|n| env.get(n).cloned(), "NET_ADDR");
+        assert_eq!(got.as_deref(), Some("unix:/tmp/pallas.sock"));
+        // Admission deadline: plain u64 millis, junk falls back.
+        assert_eq!("250".trim().parse::<u64>().ok(), Some(250));
+        assert_eq!("junk".trim().parse::<u64>().ok(), None);
+        // Shard-process clamp band [1, 64].
+        assert_eq!(parse_usize("0").map(|v| v.clamp(1, 64)), Some(1));
+        assert_eq!(parse_usize("9000").map(|v| v.clamp(1, 64)), Some(64));
+        assert_eq!(parse_usize("4").map(|v| v.clamp(1, 64)), Some(4));
     }
 
     #[test]

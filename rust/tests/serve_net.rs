@@ -1,0 +1,216 @@
+//! End-to-end tests for the socket front door (`serve::net` + `proto`):
+//! everything served over a real loopback connection must be bitwise
+//! identical to the sequential oracle under the effective (band-clipped)
+//! config, job-level failures must come back as *typed replies* on a
+//! still-healthy connection, and the frame codec must survive hostile
+//! prefixes without panicking. The multi-process door has its own
+//! harness-free suite in `tests/serve_proc.rs`.
+
+use paraht::api::reduce_seq;
+use paraht::config::Config;
+use paraht::ht::two_stage::HtDecomposition;
+use paraht::pencil::random::random_pencil;
+use paraht::pencil::Pencil;
+use paraht::serve::proto::{read_frame, write_frame, Frame};
+use paraht::serve::{
+    NetClient, NetConfig, NetServer, ServeConfig, ShardRouter, SubmitQueue, WireConfig,
+};
+use paraht::util::proptest::max_abs_diff;
+use paraht::util::rng::Rng;
+use paraht::{Error, Matrix};
+
+/// Mixed sizes incl. `n` at or below the default band (clipping path).
+const SIZES: &[usize] = &[2, 6, 10, 17, 23, 40];
+
+fn oracle(p: &Pencil, base: &Config) -> HtDecomposition {
+    reduce_seq(&p.a, &p.b, &base.clipped_for(p.n())).unwrap()
+}
+
+fn assert_bitwise(label: &str, d: &HtDecomposition, want: &HtDecomposition) {
+    assert_eq!(max_abs_diff(&d.h, &want.h), 0.0, "{label}: H diverges");
+    assert_eq!(max_abs_diff(&d.t, &want.t), 0.0, "{label}: T diverges");
+    assert_eq!(max_abs_diff(&d.q, &want.q), 0.0, "{label}: Q diverges");
+    assert_eq!(max_abs_diff(&d.z, &want.z), 0.0, "{label}: Z diverges");
+}
+
+/// Queue-backed server on an OS-assigned loopback port.
+fn start_server(scfg: ServeConfig) -> NetServer {
+    let queue = SubmitQueue::new(ShardRouter::new(scfg).unwrap());
+    let ncfg = NetConfig { addr: "127.0.0.1:0".to_string(), acceptors: 4 };
+    NetServer::start(queue, ncfg).unwrap()
+}
+
+#[test]
+fn socket_flood_is_bitwise_identical_to_the_sequential_oracle() {
+    let base = Config::default();
+    let server = start_server(ServeConfig { base: base.clone(), ..ServeConfig::default() });
+    let mut rng = Rng::new(0xD00);
+    let pencils: Vec<Pencil> = SIZES.iter().map(|&n| random_pencil(n, &mut rng)).collect();
+    let mut client = NetClient::connect(server.addr()).unwrap();
+    // Two rounds: the second is served from the result cache, and must
+    // be bitwise the same bytes.
+    for round in 0..2 {
+        for p in &pencils {
+            let d = client.reduce(&p.a, &p.b).unwrap();
+            assert_bitwise(&format!("round {round} n={}", p.n()), &d, &oracle(p, &base));
+        }
+    }
+    // The cache hits are visible through the protocol's Stats request.
+    let stats = client.stats().unwrap();
+    assert!(stats.contains("\"mode\": \"queue\""), "backend named: {stats}");
+    assert!(
+        stats.contains(&format!("\"hits\": {}", SIZES.len())),
+        "one cache hit per repeated pencil: {stats}"
+    );
+    assert!(stats.contains("\"latency\""), "latency histograms exported: {stats}");
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_clients_share_one_server() {
+    let base = Config::default();
+    let server = start_server(ServeConfig {
+        base: base.clone(),
+        cache_entries: 0, // all work real: exercise concurrent execution
+        ..ServeConfig::default()
+    });
+    let addr = server.addr().to_string();
+    std::thread::scope(|s| {
+        for t in 0..4usize {
+            let addr = &addr;
+            let base = &base;
+            s.spawn(move || {
+                let mut rng = Rng::new(0xC0FFEE + t as u64);
+                let mut client = NetClient::connect(addr).unwrap();
+                for i in 0..3 {
+                    let p = random_pencil(SIZES[(t + i) % SIZES.len()], &mut rng);
+                    let d = client.reduce(&p.a, &p.b).unwrap();
+                    assert_bitwise(&format!("client {t} job {i}"), &d, &oracle(&p, base));
+                }
+            });
+        }
+    });
+    server.shutdown();
+}
+
+#[test]
+fn explicit_tuning_is_verified_against_the_server() {
+    let base = Config::default();
+    let server = start_server(ServeConfig { base: base.clone(), ..ServeConfig::default() });
+    let mut rng = Rng::new(0x7E57);
+    let p = random_pencil(40, &mut rng);
+    let mut client = NetClient::connect(server.addr()).unwrap();
+    // Spelling out the server's own effective tuning is accepted...
+    let wire = WireConfig::from_config(&base.clipped_for(40));
+    let d = client.reduce_with(&p.a, &p.b, wire).unwrap();
+    assert_bitwise("matching explicit tuning", &d, &oracle(&p, &base));
+    // ...a different tuning is a typed Config reply, not silent drift.
+    let wrong = WireConfig { r: 7, ..wire };
+    match client.reduce_with(&p.a, &p.b, wrong) {
+        Err(Error::Config(msg)) => {
+            assert!(msg.contains("tuning"), "actionable message: {msg}")
+        }
+        other => panic!("expected a Config error, got {other:?}"),
+    }
+    server.shutdown();
+}
+
+#[test]
+fn job_failures_are_typed_replies_on_a_healthy_connection() {
+    let base = Config::default();
+    let server = start_server(ServeConfig { base: base.clone(), ..ServeConfig::default() });
+    let mut rng = Rng::new(0xBAD);
+    let mut client = NetClient::connect(server.addr()).unwrap();
+    // A malformed *job* (non-square pencil) is a typed Shape reply...
+    let a = Matrix::randn(6, 6, &mut rng);
+    let b = Matrix::randn(7, 7, &mut rng);
+    assert!(matches!(client.reduce(&a, &b), Err(Error::Shape(_))));
+    // ...and the connection stays usable for the next, well-formed job.
+    let p = random_pencil(10, &mut rng);
+    let d = client.reduce(&p.a, &p.b).unwrap();
+    assert_bitwise("after typed failure", &d, &oracle(&p, &base));
+    server.shutdown();
+}
+
+#[cfg(unix)]
+#[test]
+fn unix_socket_round_trip() {
+    let base = Config::default();
+    let path = std::env::temp_dir().join(format!("paraht-net-{}.sock", std::process::id()));
+    let _ = std::fs::remove_file(&path); // stale socket from a killed run
+    let addr = format!("unix:{}", path.display());
+    let queue = SubmitQueue::new(
+        ShardRouter::new(ServeConfig { base: base.clone(), ..ServeConfig::default() }).unwrap(),
+    );
+    let server =
+        NetServer::start(queue, NetConfig { addr: addr.clone(), acceptors: 1 }).unwrap();
+    assert_eq!(server.addr(), addr);
+    let mut rng = Rng::new(0x0111);
+    let p = random_pencil(17, &mut rng);
+    let mut client = NetClient::connect(server.addr()).unwrap();
+    let d = client.reduce(&p.a, &p.b).unwrap();
+    assert_bitwise("unix socket", &d, &oracle(&p, &base));
+    drop(client);
+    server.shutdown();
+    assert!(!path.exists(), "socket file removed on shutdown");
+}
+
+#[test]
+fn shutdown_closes_the_listener() {
+    let server = start_server(ServeConfig::default());
+    let addr = server.addr().to_string();
+    server.shutdown();
+    // The port is released: a fresh connect must fail outright, or at
+    // most accept the TCP handshake and then yield no reply.
+    if let Ok(mut client) = NetClient::connect(&addr) {
+        let mut rng = Rng::new(1);
+        let p = random_pencil(6, &mut rng);
+        assert!(client.reduce(&p.a, &p.b).is_err(), "no server behind {addr} anymore");
+    }
+}
+
+/// Integration-level codec property: random frames (including NaN and
+/// negative-zero payload entries) survive encode → decode bit-for-bit
+/// through an in-memory buffer, and truncating the buffer anywhere
+/// inside a frame is a typed protocol error, never a panic.
+#[test]
+fn frames_survive_round_trips_and_reject_truncation() {
+    let mut rng = Rng::new(0xF0F0);
+    for case in 0..8u64 {
+        let n = 2 + (case as usize % 5);
+        let mut a = Matrix::randn(n, n, &mut rng);
+        let b = Matrix::randn(n, n, &mut rng);
+        a.data_mut()[0] = f64::NAN;
+        a.data_mut()[1] = -0.0;
+        let frame = Frame::Submit {
+            req_id: 0x1000 + case,
+            cfg: WireConfig { r: 4, p: 2, q: 2, lookahead: case % 2 == 0 },
+            a: a.clone(),
+            b: b.clone(),
+        };
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &frame).unwrap();
+        let got = read_frame(&mut &buf[..]).unwrap().expect("one whole frame");
+        match got {
+            Frame::Submit { req_id, cfg, a: ga, b: gb } => {
+                assert_eq!(req_id, 0x1000 + case);
+                assert_eq!(cfg, WireConfig { r: 4, p: 2, q: 2, lookahead: case % 2 == 0 });
+                // Bit-level comparison — NaN != NaN under ==, so compare
+                // the raw patterns.
+                let bits = |m: &Matrix| m.data().iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&ga), bits(&a), "A payload bits");
+                assert_eq!(bits(&gb), bits(&b), "B payload bits");
+            }
+            other => panic!("wrong frame kind decoded: {other:?}"),
+        }
+        // Truncation at a few depths: empty stream is a clean EOF, any
+        // cut inside the frame is a typed protocol error.
+        assert!(read_frame(&mut &buf[..0]).unwrap().is_none());
+        for cut in [1, 4, buf.len() / 2, buf.len() - 1] {
+            match read_frame(&mut &buf[..cut]) {
+                Err(Error::Protocol(_)) => {}
+                other => panic!("cut at {cut} must be a Protocol error, got {other:?}"),
+            }
+        }
+    }
+}

@@ -1,0 +1,290 @@
+//! Crash-isolation tests for the multi-process serving door
+//! (`serve::supervisor`): child workers really are separate processes,
+//! killing one mid-job fails exactly that job with a typed
+//! `Error::ShardDown`, the supervisor respawns it (with backoff), and
+//! everything served before and after the crash is bitwise the
+//! sequential oracle.
+//!
+//! This suite re-invokes its **own executable** with `--shard-worker` as
+//! the child process, which the stock libtest harness would misparse as
+//! a test filter — so `Cargo.toml` marks it `harness = false` and the
+//! tiny `main` below speaks enough of libtest's dialect for CI:
+//! positional arguments are substring filters, `--ignored` selects only
+//! ignored tests (the `pool_stress_supervisor` hammer), and other
+//! dashed flags (`--nocapture`, ...) are accepted and ignored.
+
+use paraht::api::reduce_seq;
+use paraht::config::Config;
+use paraht::ht::two_stage::HtDecomposition;
+use paraht::pencil::random::random_pencil;
+use paraht::pencil::Pencil;
+use paraht::serve::{ShardSupervisor, SupervisorConfig};
+use paraht::util::proptest::max_abs_diff;
+use paraht::util::rng::Rng;
+use paraht::Error;
+use std::io::Write as _;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+fn assert_bitwise(label: &str, p: &Pencil, base: &Config, d: &HtDecomposition) {
+    let oracle = reduce_seq(&p.a, &p.b, &base.clipped_for(p.n())).unwrap();
+    assert_eq!(max_abs_diff(&d.h, &oracle.h), 0.0, "{label}: H diverges (n={})", p.n());
+    assert_eq!(max_abs_diff(&d.t, &oracle.t), 0.0, "{label}: T diverges (n={})", p.n());
+    assert_eq!(max_abs_diff(&d.q, &oracle.q), 0.0, "{label}: Q diverges (n={})", p.n());
+    assert_eq!(max_abs_diff(&d.z, &oracle.z), 0.0, "{label}: Z diverges (n={})", p.n());
+}
+
+/// A scratch directory that cleans itself up (best effort).
+struct TempDir(std::path::PathBuf);
+
+impl TempDir {
+    fn new(tag: &str) -> TempDir {
+        let p = std::env::temp_dir().join(format!("paraht-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&p);
+        std::fs::create_dir_all(&p).unwrap();
+        TempDir(p)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+/// Mixed sizes (incl. band-clip cases) through two child processes,
+/// bitwise against the oracle, with `run_summary.json` persisted per
+/// shard on shutdown.
+fn supervisor_mixed_sizes_bitwise_and_summary() {
+    let dir = TempDir::new("sup-summary");
+    let base = Config::default();
+    let sup = ShardSupervisor::new(SupervisorConfig {
+        procs: 2,
+        base: base.clone(),
+        summary_dir: Some(dir.0.clone()),
+        ..SupervisorConfig::default()
+    })
+    .unwrap();
+    let mut rng = Rng::new(0x9906);
+    let pencils: Vec<Pencil> =
+        [2usize, 6, 10, 17, 23, 40].iter().map(|&n| random_pencil(n, &mut rng)).collect();
+    for p in &pencils {
+        let d = sup.reduce(&p.a, &p.b).unwrap();
+        assert_bitwise("mixed flood", p, &base, &d);
+    }
+    let stats = sup.stats();
+    assert_eq!(stats.restarts(), 0, "healthy flood must not restart anything");
+    let jobs_ok: u64 = stats.shards.iter().map(|s| s.jobs_ok).sum();
+    assert_eq!(jobs_ok, pencils.len() as u64);
+    sup.shutdown();
+    // Both shards persisted a summary, and the fields survive a
+    // round-trip through a dumb substring check (full JSON parsing is
+    // the monitoring stack's job, not this test's).
+    let mut seen_jobs = 0u64;
+    for shard in 0..2 {
+        let text =
+            std::fs::read_to_string(dir.0.join(format!("shard-{shard}.run_summary.json")))
+                .expect("summary persisted on shutdown");
+        assert!(text.contains("\"schema_version\": 1"), "shard {shard}: {text}");
+        assert!(text.contains(&format!("\"shard\": {shard}")), "shard {shard}: {text}");
+        assert!(text.contains("\"restarts\": 0"), "shard {shard}: {text}");
+        for part in text.split(',') {
+            if let Some(v) = part.split("\"jobs_ok\": ").nth(1) {
+                seen_jobs += v.trim_matches(|c: char| !c.is_ascii_digit()).parse::<u64>().unwrap_or(0);
+            }
+        }
+    }
+    assert_eq!(seen_jobs, pencils.len() as u64, "summaries account for every job");
+}
+
+/// Kill the only child while a large job is in flight: that job fails
+/// with a typed `ShardDown`, the supervisor respawns (spawns >= 2), and
+/// the resubmitted job is bitwise correct.
+fn supervisor_kill_mid_job_shard_down_then_restart() {
+    let base = Config::default();
+    let sup = ShardSupervisor::new(SupervisorConfig {
+        procs: 1,
+        base: base.clone(),
+        ..SupervisorConfig::default()
+    })
+    .unwrap();
+    let mut rng = Rng::new(0xDEAD);
+    // Big enough that the kill below lands mid-reduction with margin
+    // (a single-threaded n=400 two-stage run is comfortably > 100ms).
+    let p = random_pencil(400, &mut rng);
+    let outcome = std::thread::scope(|s| {
+        let job = s.spawn(|| sup.reduce(&p.a, &p.b));
+        std::thread::sleep(std::time::Duration::from_millis(60));
+        assert!(sup.kill_shard(0), "one child to kill");
+        job.join().expect("submitting thread must not panic")
+    });
+    match outcome {
+        Err(Error::ShardDown(msg)) => assert!(msg.contains("resubmit"), "actionable: {msg}"),
+        other => panic!("killed child must fail the in-flight job with ShardDown, got {other:?}"),
+    }
+    // Resubmit until the respawned child answers (the first attempt may
+    // still land inside the backoff window — that's the design).
+    let mut done = None;
+    for _ in 0..20 {
+        match sup.reduce(&p.a, &p.b) {
+            Ok(d) => {
+                done = Some(d);
+                break;
+            }
+            Err(Error::ShardDown(_)) => continue,
+            Err(e) => panic!("unexpected error after restart: {e}"),
+        }
+    }
+    let d = done.expect("supervisor must recover after a kill");
+    assert_bitwise("after restart", &p, &base, &d);
+    let stats = sup.stats();
+    assert!(stats.restarts() >= 1, "the kill must show up as a restart: {stats:?}");
+    assert!(stats.shards[0].jobs_failed >= 1, "the killed job was failed: {stats:?}");
+    sup.shutdown();
+}
+
+/// Ignored hammer (CI pool-stress job): concurrent clients flood the
+/// supervisor while a chaos thread keeps killing random children. Every
+/// job either completes bitwise-correct or fails with a typed
+/// `ShardDown` and succeeds on a bounded retry.
+fn pool_stress_supervisor() {
+    let iters = paraht::util::env::stress_iters(60);
+    let base = Config::default();
+    let sup = ShardSupervisor::new(SupervisorConfig {
+        procs: 2,
+        base: base.clone(),
+        backoff_initial_ms: 5,
+        backoff_max_ms: 50,
+        ..SupervisorConfig::default()
+    })
+    .unwrap();
+    let mut rng = Rng::new(0x57E55);
+    let pool: Vec<Pencil> =
+        (0..12).map(|i| random_pencil([2, 6, 11, 16, 21][i % 5], &mut rng)).collect();
+    let done = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        // Chaos: keep killing alternating children until the clients are
+        // done. The flag must flip *inside* the scope — scoped threads
+        // are joined when the closure returns, flag or no flag.
+        s.spawn(|| {
+            let mut k = 0usize;
+            while !done.load(Ordering::Relaxed) {
+                std::thread::sleep(std::time::Duration::from_millis(23));
+                sup.kill_shard(k % 2);
+                k += 1;
+            }
+        });
+        let clients: Vec<_> = (0..4usize)
+            .map(|t| {
+                let pool = &pool;
+                let sup = &sup;
+                let base = &base;
+                s.spawn(move || {
+                    for i in 0..iters {
+                        let p = &pool[(t * 31 + i) % pool.len()];
+                        let mut served = false;
+                        for _attempt in 0..200 {
+                            match sup.reduce(&p.a, &p.b) {
+                                Ok(d) => {
+                                    assert_bitwise("stress", p, base, &d);
+                                    served = true;
+                                    break;
+                                }
+                                Err(Error::ShardDown(_)) => continue,
+                                Err(e) => panic!("stress job {t}/{i}: unexpected error {e}"),
+                            }
+                        }
+                        assert!(served, "job {t}/{i} starved despite bounded retries");
+                    }
+                })
+            })
+            .collect();
+        let mut client_panic = false;
+        for c in clients {
+            client_panic |= c.join().is_err();
+        }
+        done.store(true, Ordering::Relaxed);
+        assert!(!client_panic, "a stress client failed; see output above");
+    });
+    let stats = sup.stats();
+    eprintln!(
+        "pool_stress_supervisor: {} restarts over {} jobs",
+        stats.restarts(),
+        stats.shards.iter().map(|s| s.jobs_ok).sum::<u64>()
+    );
+    sup.shutdown();
+}
+
+struct TestCase {
+    name: &'static str,
+    ignored: bool,
+    run: fn(),
+}
+
+const TESTS: &[TestCase] = &[
+    TestCase {
+        name: "supervisor_mixed_sizes_bitwise_and_summary",
+        ignored: false,
+        run: supervisor_mixed_sizes_bitwise_and_summary,
+    },
+    TestCase {
+        name: "supervisor_kill_mid_job_shard_down_then_restart",
+        ignored: false,
+        run: supervisor_kill_mid_job_shard_down_then_restart,
+    },
+    TestCase { name: "pool_stress_supervisor", ignored: true, run: pool_stress_supervisor },
+];
+
+fn main() {
+    // Worker mode first: the supervisor under test re-invokes this very
+    // executable, and the worker owns stdin/stdout.
+    if std::env::args().any(|a| a == "--shard-worker") {
+        std::process::exit(paraht::serve::worker_main());
+    }
+    let mut filters: Vec<String> = Vec::new();
+    let mut ignored_only = false;
+    let mut skip_value = false;
+    for a in std::env::args().skip(1) {
+        if skip_value {
+            skip_value = false;
+            continue;
+        }
+        match a.as_str() {
+            "--ignored" => ignored_only = true,
+            // libtest flags that take a value we don't use
+            "--test-threads" | "--skip" | "--color" | "--format" | "--logfile" => {
+                skip_value = true
+            }
+            s if s.starts_with('-') => {} // --nocapture, --exact, ...
+            _ => filters.push(a),
+        }
+    }
+    let mut passed = 0u32;
+    let mut failed = 0u32;
+    for t in TESTS {
+        if t.ignored != ignored_only {
+            continue;
+        }
+        if !filters.is_empty() && !filters.iter().any(|f| t.name.contains(f.as_str())) {
+            continue;
+        }
+        print!("test {} ... ", t.name);
+        let _ = std::io::stdout().flush();
+        match std::panic::catch_unwind(t.run) {
+            Ok(()) => {
+                println!("ok");
+                passed += 1;
+            }
+            Err(_) => {
+                println!("FAILED");
+                failed += 1;
+            }
+        }
+    }
+    println!(
+        "\ntest result: {}. {passed} passed; {failed} failed",
+        if failed == 0 { "ok" } else { "FAILED" }
+    );
+    if failed > 0 {
+        std::process::exit(101);
+    }
+}
