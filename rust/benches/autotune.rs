@@ -1,0 +1,211 @@
+//! Bench: tuned-vs-default end-to-end serving throughput.
+//!
+//! Runs the autotuner (budgeted trace-replay search, see `paraht::tune`),
+//! then floods the serving tier twice with the same mixed-size pencil
+//! stream — once on the untuned defaults, once with the tuned profile
+//! installed — and reports pencils/sec for both.
+//!
+//! Correctness is hard-asserted up front: every flood size is reduced
+//! through a profiled router and compared bitwise against
+//! `api::reduce_seq` under the profile's effective config (overlay then
+//! clip) — tuned profiles may change geometry, never results. Throughput
+//! is timing-sensitive: the `tuned_no_slower_held` bar is evaluated
+//! against the simulator's *prediction discipline* (tuned prediction ≤
+//! default prediction holds structurally; measured wall-clock gets the
+//! usual soft-mode/tolerance treatment), and the JSON artifact is written
+//! *before* the assertion so a hard-mode failure never discards the data.
+//!
+//! Writes `BENCH_autotune.json` (override: `PALLAS_BENCH_OUT`) through
+//! `common::write_bench_json`, sharing the NaN→null envelope with every
+//! other bench artifact.
+//!
+//! Env knobs (canonical `PALLAS_` names; legacy `PARAHT_` aliases):
+//! * `PALLAS_TUNE_SIZES=24,40` — representative sizes (one class each).
+//! * `PALLAS_TUNE_BUDGET=6` — traced candidates per class.
+//! * `PALLAS_SERVE_JOBS=120` — flood length per series.
+//! * `PALLAS_BENCH_SOFT` / `PALLAS_BENCH_TOL` — soften / relax the
+//!   tuned-no-slower assertion.
+
+use paraht::api::reduce_seq;
+use paraht::config::Config;
+use paraht::experiments::common;
+use paraht::pencil::random::random_pencil;
+use paraht::pencil::Pencil;
+use paraht::serve::{ServeConfig, ShardRouter, SubmitQueue};
+use paraht::tune::{Autotuner, TuneOptions, TunedProfile};
+use paraht::util::env;
+use paraht::util::proptest::max_abs_diff;
+use paraht::util::rng::Rng;
+use std::fmt::Write as _;
+use std::time::Instant;
+
+/// Small-pencil serving base (band must fit the smallest flood size).
+fn base_cfg() -> Config {
+    Config { r: 8, p: 4, q: 4, ..Config::default() }
+}
+
+fn serve_cfg(profile: Option<TunedProfile>) -> ServeConfig {
+    ServeConfig {
+        shards: 2,
+        threads_per_shard: 1,
+        cache_entries: 0, // all-distinct flood: isolate reduction speed
+        base: base_cfg(),
+        profile,
+        ..ServeConfig::default()
+    }
+}
+
+fn flood(queue: &SubmitQueue, pool: &[Pencil], jobs: usize) -> f64 {
+    let handle = queue.handle();
+    let t = Instant::now();
+    let tickets: Vec<_> = (0..jobs)
+        .map(|i| {
+            let p = &pool[i % pool.len()];
+            handle.submit(p.a.clone(), p.b.clone()).expect("flood submission accepted")
+        })
+        .collect();
+    for ticket in tickets {
+        ticket.wait().expect("served reduction succeeds");
+    }
+    t.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let tune_sizes = env::tune_sizes(&[24, 40]);
+    let budget = env::tune_budget(6);
+    let jobs = env::serve_jobs(120).max(8);
+    eprintln!(
+        "autotune: classes at {tune_sizes:?}, budget {budget}, {jobs} flood jobs \
+         (set PALLAS_TUNE_SIZES / PALLAS_TUNE_BUDGET / PALLAS_SERVE_JOBS to change)"
+    );
+
+    // ---- Search. ----
+    let opts = TuneOptions { sizes: tune_sizes.clone(), threads: 2, budget, seed: 0x7_0BE };
+    let tuner = Autotuner::new(base_cfg(), opts).expect("tuner inputs validate");
+    let t_search = Instant::now();
+    let (profile, reports) = tuner.run().expect("search completes");
+    let search_secs = t_search.elapsed().as_secs_f64();
+    for (c, rep) in profile.classes.iter().zip(&reports) {
+        eprintln!(
+            "class n>={}: r={} p={} q={} slices={} threads={} \
+             predicted {:.6}s vs default {:.6}s ({} candidates)",
+            c.n_min, c.r, c.p, c.q, c.slices, c.threads, c.predicted_makespan,
+            rep.default_predicted, rep.candidates
+        );
+    }
+
+    // The structural half of "tuned no slower": the simulator-predicted
+    // makespan of every chosen config is ≤ the default's prediction on
+    // the same trace. Hard — the argmin construction guarantees it.
+    for (c, rep) in profile.classes.iter().zip(&reports) {
+        assert!(
+            c.predicted_makespan <= rep.default_predicted,
+            "class n>={}: chosen prediction {} exceeds default {}",
+            c.n_min,
+            c.predicted_makespan,
+            rep.default_predicted
+        );
+    }
+
+    // ---- Hard bitwise gate: a profiled router serves every flood size
+    // exactly like the sequential oracle under the tuned effective
+    // config (profile overlay, then the serving band clip). ----
+    let flood_sizes: Vec<usize> = {
+        // The tuned classes' representative sizes plus edge sizes: a
+        // pencil below every class floor, one below the base band (clip
+        // path), and the n = 2 no-op.
+        let mut v = vec![2usize, 6, 13];
+        v.extend(tune_sizes.iter().copied());
+        v
+    };
+    let mut rng = Rng::new(0xA_07_0E);
+    let gate_router = ShardRouter::new(serve_cfg(Some(profile.clone()))).unwrap();
+    for &n in &flood_sizes {
+        let p = random_pencil(n, &mut rng);
+        let d = gate_router.reduce(&p.a, &p.b).unwrap();
+        let eff = profile.apply(&base_cfg(), n).clipped_for(n);
+        let oracle = reduce_seq(&p.a, &p.b, &eff).unwrap();
+        assert_eq!(max_abs_diff(&d.h, &oracle.h), 0.0, "n={n}: tuned H diverges");
+        assert_eq!(max_abs_diff(&d.t, &oracle.t), 0.0, "n={n}: tuned T diverges");
+        assert_eq!(max_abs_diff(&d.q, &oracle.q), 0.0, "n={n}: tuned Q diverges");
+        assert_eq!(max_abs_diff(&d.z, &oracle.z), 0.0, "n={n}: tuned Z diverges");
+    }
+    drop(gate_router);
+
+    // ---- Tuned-vs-default flood series. ----
+    let pool: Vec<Pencil> = (0..jobs.min(48))
+        .map(|i| random_pencil(flood_sizes[i % flood_sizes.len()], &mut rng))
+        .collect();
+    let mut series: Vec<(&str, f64, f64)> = Vec::new();
+    for (label, prof) in [("default", None), ("tuned", Some(profile.clone()))] {
+        let queue = SubmitQueue::new(ShardRouter::new(serve_cfg(prof)).unwrap());
+        flood(&queue, &pool, jobs.min(24)); // warmup
+        let secs = flood(&queue, &pool, jobs);
+        queue.shutdown();
+        let pps = jobs as f64 / secs;
+        println!("{label:<10}{jobs:>8} jobs{secs:>12.4}s{pps:>14.1} pencils/sec");
+        series.push((label, secs, pps));
+    }
+    let pps_default = series[0].2;
+    let pps_tuned = series[1].2;
+    let speedup = pps_tuned / pps_default;
+    // Timing-sensitive half of the bar: measured tuned throughput must
+    // not trail the default beyond the tolerance. (Predictions already
+    // hold structurally above.)
+    let tuned_no_slower_held = speedup >= 1.0 / common::bench_tol();
+
+    // ---- Emit BENCH_autotune.json (before any soft/hard assertion). ----
+    let mut body = String::new();
+    let _ = writeln!(body, "  \"jobs\": {jobs},");
+    let _ = writeln!(body, "  \"tune_sizes\": {tune_sizes:?},");
+    let _ = writeln!(body, "  \"budget\": {budget},");
+    let _ = writeln!(body, "  \"search_secs\": {:.6},", search_secs);
+    body.push_str("  \"classes\": [\n");
+    for (i, (c, rep)) in profile.classes.iter().zip(&reports).enumerate() {
+        let _ = write!(
+            body,
+            "    {{\"n_min\": {}, \"n_max\": {}, \"r\": {}, \"p\": {}, \"q\": {}, \
+             \"slices\": {}, \"threads\": {}, \"predicted_makespan\": {}, \
+             \"default_makespan\": {}, \"candidates\": {}}}",
+            c.n_min,
+            c.n_max,
+            c.r,
+            c.p,
+            c.q,
+            c.slices,
+            c.threads,
+            common::json_num(c.predicted_makespan),
+            common::json_num(rep.default_predicted),
+            rep.candidates
+        );
+        body.push_str(if i + 1 < profile.classes.len() { ",\n" } else { "\n" });
+    }
+    body.push_str("  ],\n");
+    body.push_str("  \"series\": [\n");
+    for (i, (label, secs, pps)) in series.iter().enumerate() {
+        let _ = write!(
+            body,
+            "    {{\"config\": \"{label}\", \"jobs\": {jobs}, \"secs\": {:.6}, \
+             \"pencils_per_sec\": {}}}",
+            secs,
+            common::json_num(*pps)
+        );
+        body.push_str(if i + 1 < series.len() { ",\n" } else { "\n" });
+    }
+    body.push_str("  ],\n");
+    let _ = writeln!(body, "  \"speedup_tuned\": {},", common::json_num(speedup));
+    let _ = write!(body, "  \"tuned_no_slower_held\": {tuned_no_slower_held}");
+    common::write_bench_json("BENCH_autotune.json", "autotune", &body);
+
+    if common::bench_check(
+        tuned_no_slower_held,
+        &format!(
+            "tuned serving must not trail the default: {pps_tuned:.1} vs {pps_default:.1} \
+             pencils/sec (speedup {speedup:.3}x)"
+        ),
+    ) {
+        println!(
+            "\nshape checks OK (tuned parity exact; predictions ≤ default; tuned no slower)"
+        );
+    }
+}

@@ -51,6 +51,7 @@ use crate::linalg::matrix::Matrix;
 use crate::linalg::verify::max_below_band;
 use crate::pencil::random::pre_triangularize;
 use crate::pencil::Pencil;
+use crate::tune::profile::{ProfileHandle, TunedProfile};
 use crate::util::timer::Timer;
 use std::sync::{Arc, Mutex};
 
@@ -219,6 +220,12 @@ pub struct PhaseTiming {
 /// only on the problem *geometry*, not the matrix values.
 struct Workspace {
     n: usize,
+    /// The geometry the plans below were built for: a profile hot-swap
+    /// can change `r`/`p`/`q` at an unchanged `n`, so staleness is
+    /// keyed on all four.
+    r: usize,
+    p: usize,
+    q: usize,
     /// Stage-1 panel plans (`panel_plans(n, r, p)`).
     plans: Vec<PanelPlan>,
     /// Stage-2 sweep groups (`sweep_groups(n, q)`).
@@ -245,6 +252,7 @@ pub struct HtSessionBuilder {
     clip_band: bool,
     capture: bool,
     sink: Option<Box<dyn TraceSink>>,
+    profile: Option<ProfileHandle>,
 }
 
 impl HtSessionBuilder {
@@ -339,6 +347,24 @@ impl HtSessionBuilder {
         self
     }
 
+    /// Install a tuned profile ([`crate::tune`]): per size class, the
+    /// profile overlays its geometry (`r`, `p`, `q`, `slices`, and
+    /// optionally `threads`) onto the session config before the per-`n`
+    /// clip/validate step. Profiles change geometry only — a profiled
+    /// reduce stays bitwise `reduce_seq` under the same effective config.
+    pub fn profile(self, profile: TunedProfile) -> Self {
+        self.profile_handle(ProfileHandle::of(profile))
+    }
+
+    /// Share a hot-swappable profile slot with this session (the router
+    /// hands one handle to every shard, so
+    /// [`crate::serve::ShardRouter::reload_profile`] retunes them all
+    /// mid-traffic). An empty handle behaves like no profile.
+    pub fn profile_handle(mut self, handle: ProfileHandle) -> Self {
+        self.profile = Some(handle);
+        self
+    }
+
     /// Validate the configuration, resolve the worker-pool handle and
     /// construct the session. Configuration errors (zero threads,
     /// inconsistent blocking, budget violations) surface here as
@@ -355,14 +381,26 @@ impl HtSessionBuilder {
         // sessions deliberately skip the spawn (a trace-only process
         // should not carry a parked worker team); if such a session later
         // calls `reduce_batch` with threads > 1, the team is resolved
-        // lazily inside that first batch instead.
-        let pool = if self.cfg.threads > 1 && !capture { Some(pool::global()) } else { None };
+        // lazily inside that first batch instead. A profile can raise the
+        // thread count per size class (and a hot reload can do so after
+        // build), so the eager warm-up also fires when any *currently
+        // installed* class wants workers; `reduce_graph` still resolves
+        // the team lazily as the backstop.
+        let profile = self.profile.unwrap_or_default();
+        let profiled_threads =
+            profile.snapshot().map(|p| p.max_threads() > 1).unwrap_or(false);
+        let pool = if (self.cfg.threads > 1 || profiled_threads) && !capture {
+            Some(pool::global())
+        } else {
+            None
+        };
         Ok(HtSession {
             cfg: self.cfg,
             clip_band: self.clip_band,
             capture,
             pool,
             sink,
+            profile,
             ws: None,
             phase_log: Vec::new(),
             last_traces: None,
@@ -382,6 +420,7 @@ pub struct HtSession {
     capture: bool,
     pool: Option<&'static WorkerPool>,
     sink: Box<dyn TraceSink>,
+    profile: ProfileHandle,
     ws: Option<Workspace>,
     phase_log: Vec<PhaseTiming>,
     last_traces: Option<(TaskTrace, TaskTrace)>,
@@ -394,6 +433,7 @@ impl std::fmt::Debug for HtSession {
             .field("clip_band", &self.clip_band)
             .field("capture", &self.capture)
             .field("pool_workers", &self.pool.map(|p| p.worker_count()))
+            .field("profile", &self.profile)
             .field("reductions", &self.phase_log.len())
             .finish_non_exhaustive()
     }
@@ -402,7 +442,13 @@ impl std::fmt::Debug for HtSession {
 impl HtSession {
     /// Start building a session from the paper-default [`Config`].
     pub fn builder() -> HtSessionBuilder {
-        HtSessionBuilder { cfg: Config::default(), clip_band: false, capture: false, sink: None }
+        HtSessionBuilder {
+            cfg: Config::default(),
+            clip_band: false,
+            capture: false,
+            sink: None,
+            profile: None,
+        }
     }
 
     /// The session's (validated) configuration.
@@ -435,25 +481,40 @@ impl HtSession {
         self.last_traces.take()
     }
 
-    /// The per-pencil effective configuration: the session config with the
-    /// bandwidth clipped to the problem size (via [`Config::clipped_for`],
-    /// the rule shared with the serving layer's cache keys) when
-    /// [`HtSessionBuilder::clip_band`] is on, validated for `n`.
+    /// The per-pencil effective configuration: the tuned profile's size
+    /// class (if a profile is installed) overlaid on the session config,
+    /// then the bandwidth clipped to the problem size (via
+    /// [`Config::clipped_for`], the rule shared with the serving layer's
+    /// cache keys) when [`HtSessionBuilder::clip_band`] is on, validated
+    /// for `n`. Order matters: the overlay runs *before* the clip, so a
+    /// tuned band wider than a small pencil still clips exactly like an
+    /// untuned one would.
     fn effective_cfg(&self, n: usize) -> Result<Config> {
-        let cfg = if self.clip_band { self.cfg.clipped_for(n) } else { self.cfg.clone() };
+        let base = match self.profile.snapshot() {
+            Some(p) => p.apply(&self.cfg, n),
+            None => self.cfg.clone(),
+        };
+        let cfg = if self.clip_band { base.clipped_for(n) } else { base };
         cfg.validate_for(n)?;
         Ok(cfg)
     }
 
-    /// (Re)build the per-`n` workspace if the problem size changed.
+    /// (Re)build the per-`n` workspace if the problem size *or* the
+    /// blocking geometry changed (a profile hot-swap can retune `r`/`p`/`q`
+    /// between two reductions of the same size).
     fn ensure_workspace(&mut self, n: usize, cfg: &Config) {
-        let stale = self.ws.as_ref().map(|w| w.n != n).unwrap_or(true);
+        let stale = self
+            .ws
+            .as_ref()
+            .map(|w| w.n != n || w.r != cfg.r || w.p != cfg.p || w.q != cfg.q)
+            .unwrap_or(true);
         if stale {
             let plans = panel_plans(n, cfg.r, cfg.p);
             let groups = sweep_groups(n, cfg.q);
             let arena1 = Stage1Arena::new(&plans);
             let arena2 = Stage2Arena::new(n, cfg.r, &groups);
-            self.ws = Some(Workspace { n, plans, groups, arena1, arena2 });
+            self.ws =
+                Some(Workspace { n, r: cfg.r, p: cfg.p, q: cfg.q, plans, groups, arena1, arena2 });
         }
     }
 
@@ -465,6 +526,19 @@ impl HtSession {
     /// threaded, trace-capturing — produces bitwise-identical factors
     /// (pinned by `tests/equivalence.rs`).
     pub fn reduce(&mut self, a: &Matrix, b: &Matrix) -> Result<HtDecomposition> {
+        self.reduce_tracked(a, b).map(|(dec, _)| dec)
+    }
+
+    /// [`HtSession::reduce`], also returning the effective [`Config`] the
+    /// reduction actually ran with (profile overlay + band clip applied).
+    /// The serving layer keys its result cache on this returned config:
+    /// under a concurrent profile hot-swap, the config resolved *inside*
+    /// this call is the only truthful description of the work done.
+    pub fn reduce_tracked(
+        &mut self,
+        a: &Matrix,
+        b: &Matrix,
+    ) -> Result<(HtDecomposition, Config)> {
         check_pencil_shape(a, b)?;
         let n = a.rows();
         let cfg = self.effective_cfg(n)?;
@@ -489,7 +563,7 @@ impl HtSession {
         };
         self.sink.on_reduce(&report);
         self.last_traces = report.traces;
-        Ok(dec)
+        Ok((dec, cfg))
     }
 
     /// Coordinator path: build the stage task graphs over the session
@@ -508,6 +582,12 @@ impl HtSession {
         let _kernel = crate::linalg::kernels::enter(cfg.resolved_kernel());
         self.ensure_workspace(n, cfg);
         let capture = self.capture;
+        // When build-time warm-up skipped the pool (the session was built
+        // single-threaded), resolve the team lazily at the run site: a
+        // hot-reloaded profile can raise a size class's thread count after
+        // build, and that must never panic mid-serve (same lazy rule as
+        // `reduce_batch`). Capture runs never touch the pool at all, so a
+        // trace-only process still spawns no worker team.
         let pool = self.pool;
         // Take the workspace out of the session for the duration of the
         // stage runs: the graphs borrow its plans and arenas, and an owned
@@ -534,8 +614,7 @@ impl HtSession {
             if capture {
                 Some(graph.run_sequential())
             } else {
-                pool.expect("threaded sessions resolve the pool at build")
-                    .run_graph(graph, cfg.threads);
+                pool.unwrap_or_else(pool::global).run_graph(graph, cfg.threads);
                 None
             }
         };
@@ -551,8 +630,7 @@ impl HtSession {
             if capture {
                 Some(graph.run_sequential())
             } else {
-                pool.expect("threaded sessions resolve the pool at build")
-                    .run_graph(graph, cfg.threads);
+                pool.unwrap_or_else(pool::global).run_graph(graph, cfg.threads);
                 None
             }
         };
@@ -833,5 +911,69 @@ mod tests {
             assert_same(d, &oracle, &format!("batch pencil {i} (n={})", p.n()));
         }
         assert_eq!(s.phases().len(), pencils.len());
+    }
+
+    fn one_class_profile(n_min: usize, r: usize, p: usize, q: usize) -> TunedProfile {
+        TunedProfile {
+            classes: vec![crate::tune::ClassProfile {
+                n_min,
+                n_max: 0,
+                r,
+                p,
+                q,
+                slices: 0,
+                threads: 0,
+                predicted_makespan: 0.0,
+                default_makespan: 0.0,
+                trace_n: n_min,
+            }],
+        }
+    }
+
+    #[test]
+    fn profiled_session_is_bitwise_the_oracle_under_the_tuned_config() {
+        // A profile overlay changes the geometry the reduce runs with; the
+        // result must be exactly reduce_seq *under that tuned config*.
+        let mut rng = Rng::new(0xA1_09);
+        let p = random_pencil(28, &mut rng);
+        let profile = one_class_profile(9, 4, 2, 2);
+        let mut s = HtSession::builder().profile(profile).build().unwrap();
+        let (d, ran) = s.reduce_tracked(&p.a, &p.b).unwrap();
+        assert_eq!((ran.r, ran.p, ran.q), (4, 2, 2), "class geometry applied");
+        let oracle = reduce_seq(&p.a, &p.b, &ran).unwrap();
+        assert_same(&d, &oracle, "profiled n=28");
+        // Below the class floor the base config applies untouched — and
+        // the unclipped default base (r = 16) is rejected at n = 5 exactly
+        // like an unprofiled session would reject it.
+        let tiny = random_pencil(5, &mut rng);
+        let e = s.reduce(&tiny.a, &tiny.b).unwrap_err();
+        assert!(matches!(e, Error::Config(_)), "{e}");
+        // With the clip: the uncovered size clips the *base* band, same as
+        // an untuned clip session.
+        let profile = one_class_profile(9, 4, 2, 2);
+        let mut s = HtSession::builder().profile(profile).clip_band(true).build().unwrap();
+        let (_, ran) = s.reduce_tracked(&tiny.a, &tiny.b).unwrap();
+        assert_eq!(ran.r, 4, "n=5 clips the base r=16 to (n-1).max(2) = 4");
+    }
+
+    #[test]
+    fn profile_hot_swap_retunes_at_unchanged_n() {
+        // Same n, different geometry after a reload: the workspace must
+        // rebuild (staleness is keyed on r/p/q, not just n) and the result
+        // must track each installed geometry exactly.
+        let mut rng = Rng::new(0xA1_0A);
+        let p = random_pencil(26, &mut rng);
+        let handle = ProfileHandle::of(one_class_profile(9, 4, 2, 2));
+        let mut s = HtSession::builder().profile_handle(handle.clone()).build().unwrap();
+        let (d1, ran1) = s.reduce_tracked(&p.a, &p.b).unwrap();
+        assert_same(&d1, &reduce_seq(&p.a, &p.b, &ran1).unwrap(), "before swap");
+        handle.install(one_class_profile(9, 8, 2, 4));
+        let (d2, ran2) = s.reduce_tracked(&p.a, &p.b).unwrap();
+        assert_eq!((ran2.r, ran2.q), (8, 4));
+        assert_same(&d2, &reduce_seq(&p.a, &p.b, &ran2).unwrap(), "after swap");
+        handle.clear();
+        let (d3, ran3) = s.reduce_tracked(&p.a, &p.b).unwrap();
+        assert_eq!(ran3.r, Config::default().r, "cleared handle falls back to base");
+        assert_same(&d3, &reduce_seq(&p.a, &p.b, &ran3).unwrap(), "after clear");
     }
 }

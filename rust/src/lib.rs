@@ -50,6 +50,7 @@ pub mod linalg;
 pub mod pencil;
 pub mod runtime;
 pub mod serve;
+pub mod tune;
 pub mod util;
 
 pub use api::{HtSession, HtSessionBuilder, TraceRecorder, TraceSink};
@@ -61,3 +62,4 @@ pub use serve::{
     NetClient, NetConfig, NetServer, ServeConfig, ShardRouter, ShardSupervisor, SubmitQueue,
     SupervisorConfig,
 };
+pub use tune::{Autotuner, ProfileHandle, TunedProfile, TuneOptions};

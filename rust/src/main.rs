@@ -10,6 +10,8 @@
 //!                    [--shard-threads M] [--queue-cap C] [--cache-cap K]
 //! paraht serve-net   [--addr HOST:PORT|unix:PATH] [--acceptors N]
 //!                    [--procs P] [--stats] [serve-bench geometry args]
+//! paraht tune        [--sizes a,b,c] [--threads T] [--budget K] [--seed S]
+//!                    [--r 16 --p 8 --q 8] [--out pallas_profile.json]
 //! paraht validate    [--pjrt]
 //! paraht info
 //! ```
@@ -46,6 +48,7 @@ fn main() {
         "experiment" => cmd_experiment(&args),
         "serve-bench" => cmd_serve_bench(&args),
         "serve-net" => cmd_serve_net(&args),
+        "tune" => cmd_tune(&args),
         "validate" => cmd_validate(&args),
         "info" => cmd_info(),
         _ => {
@@ -430,6 +433,73 @@ fn cmd_serve_net(args: &Args) -> i32 {
     }
 }
 
+/// Record traces, search the geometry space, and write the tuned-profile
+/// artifact in one run ([`paraht::tune`]). Point a serving tier at the
+/// result with `PALLAS_PROFILE=<out>`.
+fn cmd_tune(args: &Args) -> i32 {
+    use paraht::tune::{Autotuner, TuneOptions};
+    let out = args.get_str("out", "pallas_profile.json");
+    let base = Config {
+        r: args.get("r", 16),
+        p: args.get("p", 8),
+        q: args.get("q", 8),
+        slices: args.get("slices", 0),
+        ..Config::default()
+    };
+    let d = TuneOptions::default();
+    let env_sizes = paraht::util::env::tune_sizes(&d.sizes);
+    let opts = TuneOptions {
+        sizes: args.get_list("sizes", &env_sizes),
+        threads: args.get("threads", d.threads),
+        budget: args.get("budget", paraht::util::env::tune_budget(d.budget)),
+        seed: args.get("seed", d.seed),
+    };
+    let tuner = match Autotuner::new(base, opts) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    println!("tuning: tracing candidate geometries and replaying through the makespan simulator...");
+    let (profile, reports) = match tuner.run() {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "{:<16}{:>5}{:>4}{:>4}{:>8}{:>9}{:>13}{:>13}{:>7}",
+        "class", "r", "p", "q", "slices", "threads", "default(s)", "tuned(s)", "cands"
+    );
+    for (c, rep) in profile.classes.iter().zip(&reports) {
+        let range = if c.n_max == 0 {
+            format!("[{}, inf)", c.n_min)
+        } else {
+            format!("[{}, {}]", c.n_min, c.n_max)
+        };
+        println!(
+            "{:<16}{:>5}{:>4}{:>4}{:>8}{:>9}{:>13.6}{:>13.6}{:>7}",
+            range,
+            c.r,
+            c.p,
+            c.q,
+            c.slices,
+            c.threads,
+            rep.default_predicted,
+            c.predicted_makespan,
+            rep.candidates
+        );
+    }
+    if let Err(e) = profile.save(&out) {
+        eprintln!("error writing {out}: {e}");
+        return 1;
+    }
+    println!("wrote {out} — serve with PALLAS_PROFILE={out}");
+    0
+}
+
 fn cmd_validate(args: &Args) -> i32 {
     let n = args.get("n", 200usize);
     let mut rng = Rng::new(7);
@@ -515,6 +585,7 @@ fn print_help() {
            paraht experiment  fig9a|fig9b|fig10|fig11|flops|ablations [--n N] [--sizes a,b,c] [--threads T]\n\
            paraht serve-bench [--jobs J] [--unique U] [--sizes a,b,c] [--shards N] [--shard-threads M] [--queue-cap C] [--cache-cap K]\n\
            paraht serve-net   [--addr HOST:PORT|unix:PATH] [--acceptors N] [--procs P] [--stats] [geometry args as serve-bench]\n\
+           paraht tune        [--sizes a,b,c] [--threads T] [--budget K] [--seed S] [--r 16 --p 8 --q 8] [--out pallas_profile.json]\n\
            paraht validate    [--pjrt] [--n N]\n\
            paraht info"
     );

@@ -36,6 +36,14 @@
 //!   latency histograms per size class, recorded at ticket completion
 //!   and exported through the protocol's `Stats` request.
 //!
+//! The tier is self-tuning ([`crate::tune`]): `PALLAS_PROFILE` (or
+//! [`ServeConfig::profile`]) loads a per-size-class tuned profile at
+//! startup, every shard session shares one hot-swappable profile slot
+//! ([`ShardRouter::reload_profile`]), and cache keys always carry the
+//! effective config a job actually ran with — so tuned geometry differing
+//! across size classes (or changing under a live reload) can never alias
+//! cache entries. `tests/tune.rs` pins all of it.
+//!
 //! Everything is pure std, like the rest of the crate, and everything is
 //! pinned to the same bitwise contract: a result served through
 //! router + queue + cache — or through a socket, or through a supervised

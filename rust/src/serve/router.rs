@@ -25,6 +25,7 @@ use crate::error::{Error, Result};
 use crate::ht::two_stage::HtDecomposition;
 use crate::linalg::matrix::Matrix;
 use crate::serve::cache::{CacheKey, CacheStats, ResultCache};
+use crate::tune::profile::{ProfileHandle, TunedProfile};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
 
@@ -76,6 +77,12 @@ pub struct ServeConfig {
     /// Base reduction tuning for every shard (`threads` is overridden by
     /// `threads_per_shard`).
     pub base: Config,
+    /// Tuned per-size-class profile ([`crate::tune`]), installed into
+    /// every shard at startup; `None` serves the untuned base everywhere.
+    /// [`ServeConfig::from_env`] loads it from the `PALLAS_PROFILE` path
+    /// knob, warning and falling back to `None` on any load failure —
+    /// a corrupt profile degrades the tier to untuned, never down.
+    pub profile: Option<TunedProfile>,
 }
 
 impl Default for ServeConfig {
@@ -89,6 +96,7 @@ impl Default for ServeConfig {
             clip_band: true,
             admit_timeout_ms: 1000,
             base: Config::default(),
+            profile: None,
         }
     }
 }
@@ -105,6 +113,9 @@ impl ServeConfig {
             cache_entries: crate::util::env::serve_cache_entries(d.cache_entries),
             cache_bytes: crate::util::env::serve_cache_bytes(d.cache_bytes),
             admit_timeout_ms: crate::util::env::admit_timeout_ms(d.admit_timeout_ms),
+            profile: crate::util::env::profile()
+                .as_deref()
+                .and_then(TunedProfile::load_or_warn),
             ..d
         }
     }
@@ -125,7 +136,11 @@ impl ServeConfig {
             return Err(Error::config("serve: queue_capacity must be >= 1"));
         }
         let session_cfg = Config { threads: self.threads_per_shard, ..self.base.clone() };
-        session_cfg.validate()
+        session_cfg.validate()?;
+        if let Some(profile) = &self.profile {
+            profile.validate()?;
+        }
+        Ok(())
     }
 }
 
@@ -152,6 +167,9 @@ pub struct ShardRouter {
     shards: Vec<Mutex<HtSession>>,
     reduced: Vec<AtomicU64>,
     cache: Option<Mutex<ResultCache>>,
+    /// The profile slot shared with every shard session;
+    /// [`ShardRouter::reload_profile`] swaps it mid-traffic.
+    profile: ProfileHandle,
 }
 
 impl std::fmt::Debug for ShardRouter {
@@ -171,11 +189,18 @@ impl ShardRouter {
     pub fn new(cfg: ServeConfig) -> Result<ShardRouter> {
         cfg.validate()?;
         let session_cfg = Config { threads: cfg.threads_per_shard, ..cfg.base.clone() };
+        // One shared profile slot for the router and all of its sessions:
+        // a single reload retunes every shard.
+        let profile = ProfileHandle::new();
+        if let Some(p) = &cfg.profile {
+            profile.install(p.clone());
+        }
         let mut shards = Vec::with_capacity(cfg.shards);
         for _ in 0..cfg.shards {
             let session = HtSession::builder()
                 .config(session_cfg.clone())
                 .clip_band(cfg.clip_band)
+                .profile_handle(profile.clone())
                 .build()?;
             shards.push(Mutex::new(session));
         }
@@ -185,7 +210,22 @@ impl ShardRouter {
         } else {
             None
         };
-        Ok(ShardRouter { cfg, shards, reduced, cache })
+        Ok(ShardRouter { cfg, shards, reduced, cache, profile })
+    }
+
+    /// Swap the tuned profile under every shard, mid-traffic (`None`
+    /// reverts to the untuned base). In-flight reductions finish under
+    /// whichever profile they resolved at entry; cache soundness is
+    /// unaffected because inserts are keyed on the config each job
+    /// *actually ran with* (see [`ShardRouter::reduce_on`]). The new
+    /// profile must validate — reloading never degrades a healthy tier
+    /// into one serving invalid geometry.
+    pub fn reload_profile(&self, profile: Option<TunedProfile>) -> Result<()> {
+        if let Some(p) = &profile {
+            p.validate()?;
+        }
+        self.profile.set(profile);
+        Ok(())
     }
 
     /// The validated serving configuration.
@@ -227,32 +267,58 @@ impl ShardRouter {
         check_square_pencil(a, b)?;
         let n = a.rows();
         let Some(cache) = &self.cache else {
-            return Ok(Arc::new(self.run_on_shard(shard, a, b)?));
+            return Ok(Arc::new(self.run_on_shard(shard, a, b)?.0));
         };
-        // Key with the *effective* (clipped) tuning so the key describes
-        // the reduction that actually runs. `threads` is excluded from the
-        // key (determinism contract), so every shard shares entries. The
-        // hit path is allocation-free (`ResultCache::lookup` compares
-        // stored bits against the borrowed pencil); the owned key is only
-        // built on a miss, for the insert.
-        let eff =
-            if self.cfg.clip_band { self.cfg.base.clipped_for(n) } else { self.cfg.base.clone() };
+        // Key with the *effective* tuning — profile overlay then band clip
+        // — so the key describes the reduction that actually runs; tuned
+        // geometry differing across size classes therefore can never
+        // alias. `threads` is excluded from the key (determinism
+        // contract), so every shard shares entries. The hit path is
+        // allocation-free (`ResultCache::lookup` compares stored bits
+        // against the borrowed pencil); the owned key is only built on a
+        // miss, for the insert.
+        let eff = self.effective_for(n);
         if let Some(hit) = lock_recover(cache).lookup(a, b, &eff) {
             return Ok(hit);
         }
         // The lock is *not* held while reducing: two racing misses on the
         // same pencil compute bitwise-identical results and the second
-        // insert degrades to an LRU refresh.
-        let d = Arc::new(self.run_on_shard(shard, a, b)?);
-        lock_recover(cache).insert(CacheKey::new(a, b, &eff), d.clone());
+        // insert degrades to an LRU refresh. The insert is keyed on the
+        // config the session says it *ran* — not on `eff` — so a profile
+        // reload racing between the lookup above and the reduce below can
+        // only cost a spurious miss, never a mislabeled cache entry.
+        let (d, ran) = self.run_on_shard(shard, a, b)?;
+        let d = Arc::new(d);
+        lock_recover(cache).insert(CacheKey::new(a, b, &ran), d.clone());
         Ok(d)
     }
 
-    /// Run the reduction on one shard's session, counting it.
-    fn run_on_shard(&self, shard: usize, a: &Matrix, b: &Matrix) -> Result<HtDecomposition> {
+    /// The effective config the router *expects* size `n` to run with
+    /// right now: the current profile's class overlaid on the base, then
+    /// the band clip — the same pipeline a shard session applies. Used
+    /// for cache lookups only; inserts use the config a job actually ran
+    /// with (see [`ShardRouter::reduce_on`]).
+    fn effective_for(&self, n: usize) -> Config {
+        let base = match self.profile.snapshot() {
+            Some(p) => p.apply(&self.cfg.base, n),
+            None => self.cfg.base.clone(),
+        };
+        if self.cfg.clip_band { base.clipped_for(n) } else { base }
+    }
+
+    /// Run the reduction on one shard's session, counting it. Returns the
+    /// decomposition together with the effective config the session
+    /// resolved for this job (the truthful cache key under profile
+    /// hot-swaps).
+    fn run_on_shard(
+        &self,
+        shard: usize,
+        a: &Matrix,
+        b: &Matrix,
+    ) -> Result<(HtDecomposition, Config)> {
         self.reduced[shard].fetch_add(1, Ordering::Relaxed);
         let mut session = lock_recover(&self.shards[shard]);
-        let result = session.reduce(a, b);
+        let result = session.reduce_tracked(a, b);
         // A serving shard runs unboundedly many reductions: the session's
         // per-call phase log must not grow with traffic (the router's own
         // counters are the serving-tier telemetry).
@@ -406,5 +472,76 @@ mod tests {
         let b = Matrix::zeros(4, 4);
         assert!(matches!(r.reduce(&a, &b).unwrap_err(), Error::Shape(_)));
         assert_eq!(r.stats().reduced_total(), 0, "nothing ran");
+    }
+
+    fn one_class(n_min: usize, r: usize, p: usize, q: usize) -> crate::tune::ClassProfile {
+        crate::tune::ClassProfile {
+            n_min,
+            n_max: 0,
+            r,
+            p,
+            q,
+            slices: 0,
+            threads: 0,
+            predicted_makespan: 0.0,
+            default_makespan: 0.0,
+            trace_n: n_min,
+        }
+    }
+
+    #[test]
+    fn profiled_router_serves_bitwise_under_the_tuned_config() {
+        let mut rng = Rng::new(0x50_05);
+        let profile = TunedProfile { classes: vec![one_class(17, 8, 4, 4)] };
+        let cfg = ServeConfig { profile: Some(profile.clone()), ..small_serve_cfg() };
+        let r = ShardRouter::new(cfg).unwrap();
+        for &n in &[10usize, 17, 40] {
+            let p = random_pencil(n, &mut rng);
+            let d = r.reduce(&p.a, &p.b).unwrap();
+            // Oracle under the same overlay-then-clip pipeline.
+            let eff = profile.apply(&r.config().base, n).clipped_for(n);
+            let oracle = reduce_seq(&p.a, &p.b, &eff).unwrap();
+            assert_eq!(max_abs_diff(&d.h, &oracle.h), 0.0, "n={n}: H");
+            assert_eq!(max_abs_diff(&d.z, &oracle.z), 0.0, "n={n}: Z");
+        }
+    }
+
+    #[test]
+    fn rejects_invalid_profile_at_build_and_reload() {
+        // A class whose band cannot fit its own floor is a typed config
+        // error, both at construction and on hot reload.
+        let bad = TunedProfile { classes: vec![one_class(5, 8, 2, 2)] };
+        let cfg = ServeConfig { profile: Some(bad.clone()), ..small_serve_cfg() };
+        assert!(matches!(ShardRouter::new(cfg).unwrap_err(), Error::Config(_)));
+        let r = ShardRouter::new(small_serve_cfg()).unwrap();
+        assert!(matches!(r.reload_profile(Some(bad)).unwrap_err(), Error::Config(_)));
+        // The failed reload left the tier serving (untuned).
+        let mut rng = Rng::new(0x50_06);
+        let p = random_pencil(12, &mut rng);
+        assert!(r.reduce(&p.a, &p.b).is_ok());
+    }
+
+    #[test]
+    fn reload_retunes_and_cache_stays_sound_across_geometries() {
+        let mut rng = Rng::new(0x50_07);
+        let p = random_pencil(24, &mut rng);
+        let r = ShardRouter::new(small_serve_cfg()).unwrap();
+        let base = r.config().base.clone();
+        let untuned = r.reduce(&p.a, &p.b).unwrap();
+        // Install a profile that changes the geometry for n=24: the same
+        // pencil must now miss the cache (different effective config) and
+        // come back bitwise under the *tuned* oracle.
+        let profile = TunedProfile { classes: vec![one_class(9, 8, 4, 4)] };
+        r.reload_profile(Some(profile.clone())).unwrap();
+        let tuned = r.reduce(&p.a, &p.b).unwrap();
+        let tuned_oracle =
+            reduce_seq(&p.a, &p.b, &profile.apply(&base, 24).clipped_for(24)).unwrap();
+        assert_eq!(max_abs_diff(&tuned.h, &tuned_oracle.h), 0.0, "tuned H");
+        assert_eq!(r.stats().reduced_total(), 2, "tuned geometry cannot reuse untuned entries");
+        // Reverting reuses the original entry: same key, same bits.
+        r.reload_profile(None).unwrap();
+        let again = r.reduce(&p.a, &p.b).unwrap();
+        assert!(Arc::ptr_eq(&untuned, &again), "untuned entry survived the tuned interlude");
+        assert_eq!(r.stats().reduced_total(), 2);
     }
 }

@@ -1,0 +1,32 @@
+//! Self-tuning sessions: telemetry-driven autotuning with persisted
+//! per-size-class profiles.
+//!
+//! The pieces, bottom-up:
+//!
+//! * [`json`] — the minimal pure-std JSON reader the profile artifact is
+//!   loaded with (typed [`Error::Protocol`](crate::error::Error) on any
+//!   malformed byte, never a panic).
+//! * [`profile`] — the versioned [`TunedProfile`] artifact (schema
+//!   version + kind discriminator, one [`ClassProfile`] per size class),
+//!   its save/load round trip, and the hot-swappable [`ProfileHandle`]
+//!   shared by a router and its sessions.
+//! * [`search`] — the [`Autotuner`]: per class, trace candidate
+//!   geometries once sequentially, replay the recorded DAGs through the
+//!   memoized makespan simulator, keep the geometry with the best
+//!   predicted makespan at the knee of its scaling curve.
+//!
+//! Wiring: `pallas tune` records, searches and writes the artifact in
+//! one run; `PALLAS_PROFILE=<path>` (or
+//! [`ServeConfig::profile`](crate::serve::ServeConfig)) loads it at
+//! startup so each size class runs its tuned geometry; a corrupt or
+//! stale artifact degrades to the untuned defaults with a warning, never
+//! an outage. Tuned profiles change *geometry only* — every profiled
+//! reduction stays bitwise-pinned to `api::reduce_seq` under its
+//! effective config (`tests/tune.rs`, `benches/autotune.rs`).
+
+pub mod json;
+pub mod profile;
+pub mod search;
+
+pub use profile::{ClassProfile, ProfileHandle, TunedProfile, PROFILE_KIND, PROFILE_SCHEMA_VERSION};
+pub use search::{Autotuner, ClassReport, TuneOptions};

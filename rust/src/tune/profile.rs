@@ -1,0 +1,476 @@
+//! Versioned tuned-profile artifacts and the shared hot-reload handle.
+//!
+//! A [`TunedProfile`] is the autotuner's output: one [`ClassProfile`] per
+//! size class, each pinning the geometry knobs (`r`, `p`, `q`, `slices`,
+//! `threads`) the search chose for that class, plus the simulator
+//! predictions that justified the choice. Profiles are persisted as a
+//! versioned JSON artifact (the `run_summary.json` idiom: hand-written
+//! writer, schema version + kind discriminator up front) and read back
+//! through the minimal parser in [`crate::tune::json`].
+//!
+//! **Profiles change geometry, never results.** Every knob a class may
+//! override is either result-determining-but-pinned (`r`, `p`, `q` — the
+//! effective config carrying them flows into the serving cache key and
+//! into the oracle comparison) or output-invariant by the determinism
+//! contract (`threads`, `slices`). A profiled reduction is therefore
+//! still bitwise `api::reduce_seq` *under its effective config* — that is
+//! the contract `tests/tune.rs` pins.
+//!
+//! [`ProfileHandle`] is the hot-reload seam: the serving router and its
+//! sessions share one handle, and [`ProfileHandle::set`] swaps the
+//! profile atomically under all of them mid-traffic. Cache soundness
+//! under a racing swap is the router's job (it keys inserts on the config
+//! a job *actually ran with* — see [`crate::serve::router`]).
+
+use crate::config::{Config, MAX_BLOCK_PRODUCT, MAX_SLICES, MAX_THREADS};
+use crate::error::{Error, Result};
+use crate::tune::json::{self, Json};
+use std::path::Path;
+use std::sync::{Arc, RwLock};
+
+/// Schema version of the profile artifact. Bump on any incompatible
+/// change; [`TunedProfile::parse`] rejects every other version with a
+/// typed error (never a silent misread).
+pub const PROFILE_SCHEMA_VERSION: u64 = 1;
+
+/// Kind discriminator stored in the artifact, so a profile path pointed
+/// at some *other* JSON file (a bench artifact, a run summary) fails
+/// loudly instead of half-parsing.
+pub const PROFILE_KIND: &str = "pallas_tuned_profile";
+
+/// Tuned geometry for one size class `[n_min, n_max]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClassProfile {
+    /// Smallest problem size this class covers (inclusive). The tuner
+    /// guarantees `n_min > r`, so the overlaid config passes
+    /// [`Config::validate_for`] everywhere in the class.
+    pub n_min: usize,
+    /// Largest problem size this class covers (inclusive); `0` means
+    /// unbounded (the last class).
+    pub n_max: usize,
+    /// Tuned stage-1 bandwidth / panel width.
+    pub r: usize,
+    /// Tuned stage-1 block-height multiplier.
+    pub p: usize,
+    /// Tuned stage-2 sweep-group size.
+    pub q: usize,
+    /// Tuned slice count (`0` = auto, like [`Config::slices`]).
+    pub slices: usize,
+    /// Tuned worker count (`0` = keep the base config's threads).
+    pub threads: usize,
+    /// Simulator-predicted makespan (seconds) of the chosen config on its
+    /// recorded trace — advisory telemetry, never consulted at run time.
+    pub predicted_makespan: f64,
+    /// Simulator-predicted makespan of the *default* config on the same
+    /// workload, for the tuned-vs-default comparison. The tuner
+    /// guarantees `predicted_makespan <= default_makespan`.
+    pub default_makespan: f64,
+    /// Representative size the class's traces were recorded at.
+    pub trace_n: usize,
+}
+
+impl ClassProfile {
+    /// Whether this class covers problem size `n`.
+    pub fn covers(&self, n: usize) -> bool {
+        n >= self.n_min && (self.n_max == 0 || n <= self.n_max)
+    }
+}
+
+/// A persisted set of per-size-class tuned configurations (see the
+/// [module docs](self)).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TunedProfile {
+    /// The size classes, first match wins in [`TunedProfile::class_for`].
+    pub classes: Vec<ClassProfile>,
+}
+
+impl TunedProfile {
+    /// The class covering problem size `n` (first match), if any. Sizes
+    /// no class covers (e.g. tiny pencils below every `n_min`) fall back
+    /// to the base config untouched.
+    pub fn class_for(&self, n: usize) -> Option<&ClassProfile> {
+        self.classes.iter().find(|c| c.covers(n))
+    }
+
+    /// Overlay the tuned geometry for size `n` onto a base config. Only
+    /// geometry fields change (`r`, `p`, `q`, `slices`, and `threads`
+    /// when the class pins one); everything result-relevant that the
+    /// profile does not own — `lookahead`, `kernel`, `seed` — passes
+    /// through from the base untouched.
+    pub fn apply(&self, base: &Config, n: usize) -> Config {
+        match self.class_for(n) {
+            None => base.clone(),
+            Some(c) => {
+                let mut cfg = base.clone();
+                cfg.r = c.r;
+                cfg.p = c.p;
+                cfg.q = c.q;
+                cfg.slices = c.slices;
+                if c.threads > 0 {
+                    cfg.threads = c.threads;
+                }
+                cfg
+            }
+        }
+    }
+
+    /// The largest per-class thread override (0 when no class pins one) —
+    /// the session builder's hint for resolving the worker pool up front.
+    pub fn max_threads(&self) -> usize {
+        self.classes.iter().map(|c| c.threads).max().unwrap_or(0)
+    }
+
+    /// Semantic validation: every class must hold geometry that the
+    /// config layer would accept anywhere in the class ([`Config`]'s
+    /// budgets, `r < n_min`). [`TunedProfile::parse`] runs this
+    /// automatically; hand-built profiles (tests, tools) can call it
+    /// directly.
+    pub fn validate(&self) -> Result<()> {
+        for (i, c) in self.classes.iter().enumerate() {
+            let reject = |msg: String| Err(Error::config(format!("profile class {i}: {msg}")));
+            if c.r < 2 {
+                return reject(format!("r must be >= 2 (got {})", c.r));
+            }
+            if c.p < 2 {
+                return reject(format!("p must be >= 2 (got {})", c.p));
+            }
+            if c.q < 1 {
+                return reject(format!("q must be >= 1 (got {})", c.q));
+            }
+            match c.p.checked_mul(c.q) {
+                None => return reject(format!("p*q overflows (p = {}, q = {})", c.p, c.q)),
+                Some(pq) if pq > MAX_BLOCK_PRODUCT => {
+                    return reject(format!("p*q = {pq} exceeds the task budget"));
+                }
+                Some(_) => {}
+            }
+            if c.threads > MAX_THREADS {
+                return reject(format!("threads = {} exceeds the thread budget", c.threads));
+            }
+            if c.slices > MAX_SLICES {
+                return reject(format!("slices = {} exceeds the slice budget", c.slices));
+            }
+            if c.n_min < 2 {
+                return reject(format!("n_min must be >= 2 (got {})", c.n_min));
+            }
+            if c.n_max != 0 && c.n_max < c.n_min {
+                return reject(format!("empty class: n_min {} > n_max {}", c.n_min, c.n_max));
+            }
+            // `r >= n` is rejected by validate_for at n >= 3; a class must
+            // not cover any size its own band would be rejected at.
+            if c.n_min >= 3 && c.r >= c.n_min {
+                return reject(format!(
+                    "r = {} does not fit the class floor n_min = {}",
+                    c.r, c.n_min
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialize to the versioned JSON artifact (hand-written like every
+    /// other JSON this crate emits; floats in Rust's shortest round-trip
+    /// `Display` form, non-finite values as `null`).
+    pub fn to_json(&self) -> String {
+        use std::fmt::Write as _;
+        let num = |v: f64| if v.is_finite() { format!("{v}") } else { "null".to_string() };
+        let mut j = String::new();
+        j.push_str("{\n");
+        let _ = writeln!(j, "  \"schema_version\": {PROFILE_SCHEMA_VERSION},");
+        let _ = writeln!(j, "  \"kind\": \"{PROFILE_KIND}\",");
+        j.push_str("  \"classes\": [");
+        for (i, c) in self.classes.iter().enumerate() {
+            if i > 0 {
+                j.push(',');
+            }
+            j.push_str("\n    {");
+            let _ = write!(
+                j,
+                "\"n_min\": {}, \"n_max\": {}, \"r\": {}, \"p\": {}, \"q\": {}, \
+                 \"slices\": {}, \"threads\": {}, \"predicted_makespan\": {}, \
+                 \"default_makespan\": {}, \"trace_n\": {}",
+                c.n_min,
+                c.n_max,
+                c.r,
+                c.p,
+                c.q,
+                c.slices,
+                c.threads,
+                num(c.predicted_makespan),
+                num(c.default_makespan),
+                c.trace_n
+            );
+            j.push('}');
+        }
+        if !self.classes.is_empty() {
+            j.push_str("\n  ");
+        }
+        j.push_str("]\n}\n");
+        j
+    }
+
+    /// Parse and validate a profile document. Malformed JSON is a typed
+    /// [`Error::Protocol`]; a well-formed document with the wrong kind,
+    /// wrong schema version, missing fields or invalid geometry is a
+    /// typed [`Error::Config`]. Never panics on untrusted bytes.
+    pub fn parse(src: &str) -> Result<TunedProfile> {
+        let doc = json::parse(src)?;
+        let kind = doc.get("kind").and_then(Json::as_str).unwrap_or("");
+        if kind != PROFILE_KIND {
+            return Err(Error::config(format!(
+                "profile: kind {kind:?} is not {PROFILE_KIND:?}"
+            )));
+        }
+        let version = doc
+            .get("schema_version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| Error::config("profile: missing schema_version"))?;
+        if version as u64 != PROFILE_SCHEMA_VERSION {
+            return Err(Error::config(format!(
+                "profile: schema_version {version} is not supported (want {PROFILE_SCHEMA_VERSION})"
+            )));
+        }
+        let classes = doc
+            .get("classes")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::config("profile: missing classes array"))?;
+        let field = |c: &Json, name: &str, i: usize| -> Result<usize> {
+            c.get(name).and_then(Json::as_usize).ok_or_else(|| {
+                Error::config(format!("profile class {i}: missing or non-integer {name:?}"))
+            })
+        };
+        let fnum = |c: &Json, name: &str| -> f64 {
+            match c.get(name) {
+                Some(Json::Null) | None => f64::NAN,
+                Some(v) => v.as_f64().unwrap_or(f64::NAN),
+            }
+        };
+        let mut out = TunedProfile { classes: Vec::with_capacity(classes.len()) };
+        for (i, c) in classes.iter().enumerate() {
+            out.classes.push(ClassProfile {
+                n_min: field(c, "n_min", i)?,
+                n_max: field(c, "n_max", i)?,
+                r: field(c, "r", i)?,
+                p: field(c, "p", i)?,
+                q: field(c, "q", i)?,
+                slices: field(c, "slices", i)?,
+                threads: field(c, "threads", i)?,
+                predicted_makespan: fnum(c, "predicted_makespan"),
+                default_makespan: fnum(c, "default_makespan"),
+                trace_n: field(c, "trace_n", i)?,
+            });
+        }
+        out.validate()?;
+        Ok(out)
+    }
+
+    /// Read and parse a profile file (I/O errors are typed [`Error::Io`]).
+    pub fn load(path: impl AsRef<Path>) -> Result<TunedProfile> {
+        let src = std::fs::read_to_string(path.as_ref())?;
+        TunedProfile::parse(&src)
+    }
+
+    /// Write the artifact to `path`.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path.as_ref(), self.to_json())?;
+        Ok(())
+    }
+
+    /// The startup fallback path: load `path`, and on *any* failure
+    /// (missing file, malformed JSON, wrong version) print one warning to
+    /// stderr and return `None` so the caller serves with defaults — a
+    /// bad profile must degrade a serving tier to untuned, never take it
+    /// down. [`crate::serve::ServeConfig::from_env`] routes the
+    /// `PALLAS_PROFILE` knob through here.
+    pub fn load_or_warn(path: &str) -> Option<TunedProfile> {
+        match TunedProfile::load(path) {
+            Ok(p) => Some(p),
+            Err(e) => {
+                eprintln!("warning: ignoring tuned profile {path:?}: {e}; serving with defaults");
+                None
+            }
+        }
+    }
+}
+
+/// A shared, hot-swappable profile slot: the router and all of its
+/// sessions hold clones of one handle, so a single [`ProfileHandle::set`]
+/// retunes every shard mid-traffic. Reads are a brief `RwLock` read +
+/// `Arc` clone per reduction; the lock is never held across any work.
+#[derive(Clone, Default)]
+pub struct ProfileHandle {
+    inner: Arc<RwLock<Option<Arc<TunedProfile>>>>,
+}
+
+impl ProfileHandle {
+    /// An empty handle (no profile installed; every lookup falls through
+    /// to the base config).
+    pub fn new() -> ProfileHandle {
+        ProfileHandle::default()
+    }
+
+    /// A handle with `profile` pre-installed.
+    pub fn of(profile: TunedProfile) -> ProfileHandle {
+        let h = ProfileHandle::new();
+        h.install(profile);
+        h
+    }
+
+    /// The current profile, if one is installed. Lock poisoning is
+    /// recovered, not propagated: the slot holds a plain `Option` swap
+    /// with no invariant a panic could have broken mid-update (same
+    /// policy as the serving tier's `lock_recover`).
+    pub fn snapshot(&self) -> Option<Arc<TunedProfile>> {
+        self.inner.read().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
+    /// Install (replace) the profile.
+    pub fn install(&self, profile: TunedProfile) {
+        self.set(Some(profile));
+    }
+
+    /// Replace or clear the profile atomically.
+    pub fn set(&self, profile: Option<TunedProfile>) {
+        *self.inner.write().unwrap_or_else(|e| e.into_inner()) = profile.map(Arc::new);
+    }
+
+    /// Remove the profile (every later lookup uses the base config).
+    pub fn clear(&self) {
+        self.set(None);
+    }
+}
+
+impl std::fmt::Debug for ProfileHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ProfileHandle")
+            .field("classes", &self.snapshot().map(|p| p.classes.len()).unwrap_or(0))
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TunedProfile {
+        TunedProfile {
+            classes: vec![
+                ClassProfile {
+                    n_min: 9,
+                    n_max: 48,
+                    r: 4,
+                    p: 2,
+                    q: 2,
+                    slices: 8,
+                    threads: 2,
+                    predicted_makespan: 0.125,
+                    default_makespan: 0.25,
+                    trace_n: 32,
+                },
+                ClassProfile {
+                    n_min: 49,
+                    n_max: 0,
+                    r: 8,
+                    p: 4,
+                    q: 4,
+                    slices: 0,
+                    threads: 4,
+                    predicted_makespan: 1.0 / 3.0,
+                    default_makespan: 0.5,
+                    trace_n: 64,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn class_lookup_and_apply_overlay_geometry_only() {
+        let p = sample();
+        assert!(p.class_for(8).is_none(), "below every class: base config");
+        assert_eq!(p.class_for(9).unwrap().trace_n, 32);
+        assert_eq!(p.class_for(48).unwrap().trace_n, 32);
+        assert_eq!(p.class_for(49).unwrap().trace_n, 64);
+        assert_eq!(p.class_for(10_000).unwrap().trace_n, 64, "last class is open-ended");
+        let base = Config { lookahead: false, seed: 99, ..Config::default() };
+        let eff = p.apply(&base, 64);
+        assert_eq!((eff.r, eff.p, eff.q, eff.slices, eff.threads), (8, 4, 4, 0, 4));
+        assert!(!eff.lookahead, "non-geometry fields pass through");
+        assert_eq!(eff.seed, 99);
+        let untouched = p.apply(&base, 5);
+        assert_eq!(untouched.r, base.r, "uncovered sizes keep the base config");
+        assert_eq!(p.max_threads(), 4);
+    }
+
+    #[test]
+    fn zero_threads_means_keep_base() {
+        let mut p = sample();
+        p.classes[0].threads = 0;
+        let base = Config { threads: 3, ..Config::default() };
+        assert_eq!(p.apply(&base, 32).threads, 3);
+    }
+
+    #[test]
+    fn save_load_round_trip_is_identity() {
+        let p = sample();
+        let text = p.to_json();
+        let back = TunedProfile::parse(&text).unwrap();
+        assert_eq!(back, p, "parse(to_json(p)) must be p, bit-exact floats included");
+        assert_eq!(
+            back.classes[1].predicted_makespan.to_bits(),
+            (1.0f64 / 3.0).to_bits(),
+            "float fields survive exactly"
+        );
+        // Empty profiles round-trip too.
+        let empty = TunedProfile::default();
+        assert_eq!(TunedProfile::parse(&empty.to_json()).unwrap(), empty);
+    }
+
+    #[test]
+    fn parse_rejects_wrong_version_kind_and_truncation() {
+        let good = sample().to_json();
+        // Truncated file: typed protocol error.
+        let e = TunedProfile::parse(&good[..good.len() / 2]).unwrap_err();
+        assert!(matches!(e, Error::Protocol(_)), "{e}");
+        // Wrong schema version: typed config error.
+        let e = TunedProfile::parse(&good.replace("\"schema_version\": 1", "\"schema_version\": 2"))
+            .unwrap_err();
+        assert!(matches!(e, Error::Config(_)), "{e}");
+        // Wrong kind (profile path pointed at some other artifact).
+        let e = TunedProfile::parse(&good.replace(PROFILE_KIND, "bench_artifact")).unwrap_err();
+        assert!(matches!(e, Error::Config(_)), "{e}");
+        // Missing field.
+        let e = TunedProfile::parse(&good.replace("\"r\": 4, ", "")).unwrap_err();
+        assert!(matches!(e, Error::Config(_)), "{e}");
+        // Not JSON at all.
+        assert!(TunedProfile::parse("not json").is_err());
+    }
+
+    #[test]
+    fn validation_rejects_impossible_classes() {
+        let mut p = sample();
+        p.classes[0].r = 16; // r >= n_min: rejected at some covered sizes
+        assert!(matches!(p.validate().unwrap_err(), Error::Config(_)));
+        let mut p = sample();
+        p.classes[0].n_max = 5; // empty range
+        assert!(p.validate().is_err());
+        let mut p = sample();
+        p.classes[0].p = 1;
+        assert!(p.validate().is_err());
+        let mut p = sample();
+        p.classes[0].threads = MAX_THREADS + 1;
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn handle_swaps_are_visible_to_clones() {
+        let h = ProfileHandle::new();
+        let h2 = h.clone();
+        assert!(h2.snapshot().is_none());
+        h.install(sample());
+        assert_eq!(h2.snapshot().unwrap().classes.len(), 2, "clones share the slot");
+        h2.clear();
+        assert!(h.snapshot().is_none());
+        let h3 = ProfileHandle::of(sample());
+        assert!(h3.snapshot().is_some());
+    }
+}

@@ -35,6 +35,9 @@
 //! | `PALLAS_NET_ADDR`        | listen/connect address for the `serve-net` front door (`host:port`, or `unix:/path` for a Unix-domain socket) |
 //! | `PALLAS_ADMIT_TIMEOUT_MS`| admission-control deadline for front-door submissions (ms; `0` sheds immediately on a full lane) |
 //! | `PALLAS_SHARD_PROCS`     | shard child-process count for the supervised multi-process mode ([`crate::serve::supervisor`]) |
+//! | `PALLAS_PROFILE`         | path to a tuned-profile artifact loaded at startup ([`crate::tune::TunedProfile`]; unreadable/corrupt profiles warn and fall back to defaults) |
+//! | `PALLAS_TUNE_SIZES`      | comma-separated representative sizes for the `tune` CLI subcommand / autotune bench |
+//! | `PALLAS_TUNE_BUDGET`     | traced candidates per size class for the autotuner (floor 1) |
 
 use crate::config::MAX_THREADS;
 use crate::linalg::kernels::KernelChoice;
@@ -232,6 +235,28 @@ pub fn shard_procs(default: usize) -> usize {
     var("SHARD_PROCS").and_then(|s| parse_usize(&s)).map(|v| v.clamp(1, 64)).unwrap_or(default)
 }
 
+/// Path of the tuned-profile artifact to load at startup
+/// (`PALLAS_PROFILE`). `None` when unset — the untuned defaults. The
+/// *loading* (and the warn-and-fall-back policy for unreadable or corrupt
+/// artifacts) lives in [`crate::tune::TunedProfile::load_or_warn`], not
+/// here.
+pub fn profile() -> Option<String> {
+    var("PROFILE")
+}
+
+/// Representative problem sizes for the autotuner (`PALLAS_TUNE_SIZES`);
+/// an unset or fully malformed list falls back to the default so the
+/// tuner never runs on an empty class set.
+pub fn tune_sizes(default: &[usize]) -> Vec<usize> {
+    sizes_or(var("TUNE_SIZES"), default)
+}
+
+/// Traced candidates per size class for the autotuner
+/// (`PALLAS_TUNE_BUDGET`, floor 1).
+pub fn tune_budget(default: usize) -> usize {
+    var("TUNE_BUDGET").and_then(|s| parse_usize(&s)).map(|v| v.max(1)).unwrap_or(default)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -346,6 +371,21 @@ mod tests {
         assert_eq!(parse_usize("0").map(|v| v.clamp(1, 64)), Some(1));
         assert_eq!(parse_usize("9000").map(|v| v.clamp(1, 64)), Some(64));
         assert_eq!(parse_usize("4").map(|v| v.clamp(1, 64)), Some(4));
+    }
+
+    #[test]
+    fn tune_knobs_resolve_through_the_alias_chain() {
+        // PALLAS_PROFILE is a plain path passthrough over the alias lookup.
+        let env = env_of(&[("PARAHT_PROFILE", "/tmp/pallas_profile.json")]);
+        let got = first_from(|n| env.get(n).cloned(), "PROFILE");
+        assert_eq!(got.as_deref(), Some("/tmp/pallas_profile.json"));
+        assert_eq!(first_from(|_| None, "PROFILE"), None, "unset means untuned defaults");
+        // Tune sizes reuse the never-empty sweep rule.
+        assert_eq!(sizes_or(Some("48, 96".into()), &[32, 64]), vec![48, 96]);
+        assert_eq!(sizes_or(Some("junk".into()), &[32, 64]), vec![32, 64]);
+        // Budget floor of 1: a zero budget would trace nothing.
+        assert_eq!(parse_usize("0").map(|v| v.max(1)), Some(1));
+        assert_eq!(parse_usize("6").map(|v| v.max(1)), Some(6));
     }
 
     #[test]

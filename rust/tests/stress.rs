@@ -450,3 +450,127 @@ fn pool_stress_assist() {
         pool.shutdown(); // joins every worker; a hang here is a claim-wait race
     }
 }
+
+/// Profile-reload hammer for the serving tier: submitter threads flood a
+/// router+queue with mixed-size pencils while a reloader thread hot-swaps
+/// tuned profiles (install / replace / clear) under them the whole time.
+/// Every accepted ticket must complete, and every result must match
+/// `reduce_seq` under *one of* the candidate effective configs — the
+/// reload race decides which geometry a job ran with, never whether its
+/// bits are right. Name keeps the `pool_stress` prefix so the CI
+/// pool-stress job's name filter picks this hammer up too.
+///
+/// Ignored by default; locally:
+/// `cargo test --release pool_stress -- --ignored`.
+#[test]
+#[ignore = "stress hammer; run explicitly or via the CI pool-stress job"]
+fn pool_stress_tune() {
+    use paraht::api::reduce_seq;
+    use paraht::config::Config;
+    use paraht::pencil::random::random_pencil;
+    use paraht::serve::{ServeConfig, ShardRouter, SubmitQueue};
+    use paraht::tune::{ClassProfile, TunedProfile};
+    use paraht::util::proptest::max_abs_diff;
+    use std::sync::atomic::AtomicBool;
+
+    let iters: usize = paraht::util::env::stress_iters(40);
+    let mut rng = Rng::new(0x7_0E_5157);
+
+    // The candidate profiles the reloader cycles through (None = untuned).
+    // Distinct geometry per candidate, so a stale-workspace or mislabeled
+    // cache bug cannot hide behind identical configs.
+    let one_class = |r: usize, p: usize, q: usize| TunedProfile {
+        classes: vec![ClassProfile {
+            n_min: r + 1,
+            n_max: 0,
+            r,
+            p,
+            q,
+            slices: 0,
+            threads: 0,
+            predicted_makespan: 0.0,
+            default_makespan: 0.0,
+            trace_n: 32,
+        }],
+    };
+    let candidates: Vec<Option<TunedProfile>> =
+        vec![None, Some(one_class(4, 2, 2)), Some(one_class(8, 4, 4)), Some(one_class(6, 2, 4))];
+
+    for iter in 0..iters {
+        let scfg = ServeConfig {
+            shards: 1 + rng.below(3),
+            // Small cache some iterations, none on others: both the
+            // hit/miss path and the pure-reduce path race the reloads.
+            cache_entries: if iter % 2 == 0 { 32 } else { 0 },
+            base: Config { r: 8, p: 4, q: 4, ..Config::default() },
+            ..ServeConfig::default()
+        };
+        let base = scfg.base.clone();
+        let queue = SubmitQueue::new(ShardRouter::new(scfg).unwrap());
+        let sizes = [2usize, 6, 12, 20, 33];
+        let pool: Vec<_> = sizes.iter().map(|&n| random_pencil(n, &mut rng)).collect();
+
+        let stop = AtomicBool::new(false);
+        std::thread::scope(|s| {
+            // Reloader: swap profiles as fast as the router accepts them.
+            let reloader = {
+                let queue = &queue;
+                let stop = &stop;
+                let candidates = &candidates;
+                s.spawn(move || {
+                    let mut i = 0usize;
+                    while !stop.load(Ordering::SeqCst) {
+                        let p = candidates[i % candidates.len()].clone();
+                        queue.router().reload_profile(p).unwrap();
+                        i += 1;
+                        std::thread::yield_now();
+                    }
+                })
+            };
+
+            // Submitters: flood while the geometry shifts underneath.
+            let submitters: Vec<_> = (0..3)
+                .map(|_| {
+                    let handle = queue.handle();
+                    let pool = &pool;
+                    let base = &base;
+                    let candidates = &candidates;
+                    s.spawn(move || {
+                        for round in 0..12 {
+                            let p = &pool[round % pool.len()];
+                            let n = p.n();
+                            let d = handle
+                                .submit(p.a.clone(), p.b.clone())
+                                .expect("submission accepted")
+                                .wait()
+                                .expect("served reduction succeeds");
+                            // The job ran under *some* candidate's effective
+                            // config; its bits must match that oracle exactly.
+                            let matched = candidates.iter().any(|cand| {
+                                let eff = match cand {
+                                    Some(prof) => prof.apply(base, n).clipped_for(n),
+                                    None => base.clipped_for(n),
+                                };
+                                let oracle = reduce_seq(&p.a, &p.b, &eff).unwrap();
+                                max_abs_diff(&d.h, &oracle.h) == 0.0
+                                    && max_abs_diff(&d.t, &oracle.t) == 0.0
+                                    && max_abs_diff(&d.q, &oracle.q) == 0.0
+                                    && max_abs_diff(&d.z, &oracle.z) == 0.0
+                            });
+                            assert!(matched, "n={n}: result matches no candidate oracle");
+                        }
+                    })
+                })
+                .collect();
+            // Join the flood first (propagating any assert panic), *then*
+            // stop the reloader — otherwise the scope would wait forever
+            // on a reloader that never sees `stop` flip.
+            for sub in submitters {
+                sub.join().expect("submitter thread panicked");
+            }
+            stop.store(true, Ordering::SeqCst);
+            reloader.join().expect("reloader thread panicked");
+        });
+        queue.shutdown(); // drains accepted jobs; a hang here is a reload race
+    }
+}

@@ -1,0 +1,331 @@
+//! Integration tests for the autotuner (`paraht::tune`): search output
+//! validity, profile persistence, and the serving tier's behaviour with
+//! tuned profiles installed, reloaded, and corrupted.
+//!
+//! The load-bearing contract everywhere below: **tuned profiles change
+//! geometry, never results**. Every profiled reduction must be bitwise
+//! `api::reduce_seq` under its *effective* config — the profile overlay
+//! for that size, then the serving band clip — and a profile that fails
+//! to load must degrade the tier to untuned defaults, never take it down.
+
+use paraht::api::reduce_seq;
+use paraht::config::Config;
+use paraht::error::Error;
+use paraht::pencil::random::random_pencil;
+use paraht::pencil::Pencil;
+use paraht::serve::{ServeConfig, ShardRouter, SubmitQueue};
+use paraht::tune::{Autotuner, ClassProfile, TuneOptions, TunedProfile};
+use paraht::util::proptest::max_abs_diff;
+use paraht::util::rng::Rng;
+
+/// A unique scratch path in the OS temp dir (tests run concurrently in
+/// one process; the tag keeps them from clobbering each other).
+fn temp_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("paraht_tune_test_{}_{tag}.json", std::process::id()))
+}
+
+/// Assert two decompositions are bitwise identical (0.0 max-abs-diff on
+/// all four factors — no tolerance, the determinism contract is exact).
+fn assert_bitwise(d: &paraht::HtDecomposition, o: &paraht::HtDecomposition, what: &str) {
+    assert_eq!(max_abs_diff(&d.h, &o.h), 0.0, "{what}: H diverges");
+    assert_eq!(max_abs_diff(&d.t, &o.t), 0.0, "{what}: T diverges");
+    assert_eq!(max_abs_diff(&d.q, &o.q), 0.0, "{what}: Q diverges");
+    assert_eq!(max_abs_diff(&d.z, &o.z), 0.0, "{what}: Z diverges");
+}
+
+/// Hand-built two-class profile with *distinct* geometry per class, so a
+/// cache-key or workspace bug cannot hide behind identical configs.
+fn two_class_profile() -> TunedProfile {
+    TunedProfile {
+        classes: vec![
+            ClassProfile {
+                n_min: 9,
+                n_max: 20,
+                r: 4,
+                p: 2,
+                q: 2,
+                slices: 0,
+                threads: 0,
+                predicted_makespan: 0.0,
+                default_makespan: 0.0,
+                trace_n: 16,
+            },
+            // Deliberately NOT the tests' base geometry (r=8,p=4,q=4):
+            // the reload test below relies on the retuned effective
+            // config being a *different* cache key than the base's.
+            ClassProfile {
+                n_min: 21,
+                n_max: 0,
+                r: 6,
+                p: 2,
+                q: 4,
+                slices: 0,
+                threads: 0,
+                predicted_makespan: 0.0,
+                default_makespan: 0.0,
+                trace_n: 32,
+            },
+        ],
+    }
+}
+
+// ---------------------------------------------------------------------
+// Satellite: search-output properties.
+// ---------------------------------------------------------------------
+
+/// Property: every config the tuner emits passes `Config::validate_for`
+/// across its whole size class (the floor, the trace size, and sampled
+/// interior/deep sizes), and the chosen config's simulator-predicted
+/// makespan never exceeds the default config's prediction on the same
+/// trace — the argmin construction must make both hold for any seed.
+#[test]
+fn tuner_emits_valid_configs_that_never_predict_slower() {
+    for seed in [1u64, 0xBEE5, 0x7A_57E5] {
+        let opts = TuneOptions { sizes: vec![12, 24], threads: 2, budget: 3, seed };
+        let tuner = Autotuner::new(Config::default(), opts).unwrap();
+        let (profile, reports) = tuner.run().unwrap();
+        profile.validate().expect("emitted profile validates");
+        assert_eq!(profile.classes.len(), 2);
+        assert_eq!(profile.classes.len(), reports.len());
+        let base = Config::default();
+        for (c, rep) in profile.classes.iter().zip(&reports) {
+            assert_eq!(*c, rep.chosen, "report and profile agree on the winner");
+            assert!(
+                c.predicted_makespan <= rep.default_predicted,
+                "class n>={}: chosen {} predicts slower than default {}",
+                c.n_min,
+                c.predicted_makespan,
+                rep.default_predicted
+            );
+            assert!(rep.candidates >= 1 && rep.candidates <= 3, "budget respected");
+            // The overlaid config must be valid at every size the class
+            // covers; sample the floor, the trace size, and deep sizes.
+            let hi = if c.n_max == 0 { c.n_min + 91 } else { c.n_max };
+            for n in [c.n_min, c.trace_n, (c.n_min + hi) / 2, hi] {
+                assert!(c.covers(n), "sampled n={n} inside class");
+                let eff = profile.apply(&base, n);
+                eff.validate_for(n).unwrap_or_else(|e| {
+                    panic!("class n>={}: emitted config invalid at n={n}: {e}", c.n_min)
+                });
+            }
+        }
+        // Classes tile the size axis without overlap: the first class
+        // hands off to the second exactly where the midpoint boundary
+        // fell, and the last class is open-ended.
+        assert_eq!(profile.classes[0].n_max + 1, profile.classes[1].n_min);
+        assert_eq!(profile.classes[1].n_max, 0);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Satellite: persistence round-trip + corrupt-artifact fallback.
+// ---------------------------------------------------------------------
+
+/// Save → load through a real file is the identity, bit-exact floats
+/// included.
+#[test]
+fn profile_save_load_round_trip_is_identity() {
+    let mut p = two_class_profile();
+    // Awkward floats: shortest round-trip Display must preserve bits.
+    p.classes[0].predicted_makespan = 1.0 / 3.0;
+    p.classes[0].default_makespan = 0.1 + 0.2;
+    p.classes[1].predicted_makespan = f64::MIN_POSITIVE;
+    let path = temp_path("round_trip");
+    p.save(&path).unwrap();
+    let back = TunedProfile::load(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(back, p, "load(save(p)) must be p");
+    assert_eq!(
+        back.classes[0].predicted_makespan.to_bits(),
+        (1.0f64 / 3.0).to_bits(),
+        "floats survive the file round trip exactly"
+    );
+}
+
+/// Truncated, corrupt, and wrong-version artifacts fail with *typed*
+/// errors (protocol for malformed JSON, config for semantic problems),
+/// `load_or_warn` turns any of them into a clean `None`, and a router
+/// built without a profile — the fallback path — still serves bitwise.
+#[test]
+fn corrupt_profiles_fail_typed_and_the_tier_falls_back_clean() {
+    let good = two_class_profile().to_json();
+    let cases: [(&str, String, fn(&Error) -> bool); 4] = [
+        ("truncated", good[..good.len() / 2].to_string(), |e| matches!(e, Error::Protocol(_))),
+        ("garbage", "}{ not json at all".to_string(), |e| matches!(e, Error::Protocol(_))),
+        (
+            "wrong_version",
+            good.replace("\"schema_version\": 1", "\"schema_version\": 99"),
+            |e| matches!(e, Error::Config(_)),
+        ),
+        (
+            "bad_geometry",
+            good.replace("\"r\": 4", "\"r\": 1"),
+            |e| matches!(e, Error::Config(_)),
+        ),
+    ];
+    for (tag, text, is_expected) in &cases {
+        let path = temp_path(*tag);
+        std::fs::write(&path, text).unwrap();
+        let err = TunedProfile::load(&path).unwrap_err();
+        assert!(is_expected(&err), "{tag}: unexpected error type: {err}");
+        // The startup path: warn once, fall back to defaults, no panic.
+        assert!(
+            TunedProfile::load_or_warn(path.to_str().unwrap()).is_none(),
+            "{tag}: load_or_warn must swallow the failure"
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+    // Missing file is an Io error (and a clean None through load_or_warn).
+    let gone = temp_path("never_written");
+    assert!(matches!(TunedProfile::load(&gone).unwrap_err(), Error::Io(_)));
+    assert!(TunedProfile::load_or_warn(gone.to_str().unwrap()).is_none());
+
+    // Fallback serving: a tier with no profile is the untuned tier.
+    let cfg = ServeConfig {
+        shards: 2,
+        base: Config { r: 8, p: 4, q: 4, ..Config::default() },
+        profile: None,
+        ..ServeConfig::default()
+    };
+    let base = cfg.base.clone();
+    let router = ShardRouter::new(cfg).unwrap();
+    let mut rng = Rng::new(0xFA11_BACC);
+    for n in [2usize, 6, 24] {
+        let p = random_pencil(n, &mut rng);
+        let d = router.reduce(&p.a, &p.b).unwrap();
+        let oracle = reduce_seq(&p.a, &p.b, &base.clipped_for(n)).unwrap();
+        assert_bitwise(&d, &oracle, "untuned fallback");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Satellite: profiled serving — mixed floods, cache soundness, reloads.
+// ---------------------------------------------------------------------
+
+/// A profiled router fed a mixed-size flood through the submission queue
+/// answers every job bitwise-identical to `reduce_seq` under that size's
+/// effective config — including `n = 2` (the no-op), sizes below the
+/// band (clip path), and sizes below every class floor (base fallback).
+#[test]
+fn profiled_flood_is_bitwise_the_oracle_at_every_size() {
+    let profile = two_class_profile();
+    let cfg = ServeConfig {
+        shards: 2,
+        cache_entries: 16,
+        base: Config { r: 8, p: 4, q: 4, ..Config::default() },
+        profile: Some(profile.clone()),
+        ..ServeConfig::default()
+    };
+    let base = cfg.base.clone();
+    let queue = SubmitQueue::new(ShardRouter::new(cfg).unwrap());
+    let mut rng = Rng::new(0xF100D);
+    // n = 2 and n = 6 sit below every class floor (base config, and 6 is
+    // also below the base band → clip); 10/16 hit class 0, 24/33 class 1.
+    let sizes = [2usize, 6, 10, 16, 24, 33];
+    let pool: Vec<Pencil> = sizes.iter().map(|&n| random_pencil(n, &mut rng)).collect();
+    let handle = queue.handle();
+    let tickets: Vec<_> = (0..2 * pool.len())
+        .map(|i| {
+            let p = &pool[i % pool.len()];
+            (i % pool.len(), handle.submit(p.a.clone(), p.b.clone()).unwrap())
+        })
+        .collect();
+    for (idx, ticket) in tickets {
+        let p = &pool[idx];
+        let n = p.n();
+        let d = ticket.wait().unwrap();
+        let eff = profile.apply(&base, n).clipped_for(n);
+        let oracle = reduce_seq(&p.a, &p.b, &eff).unwrap();
+        assert_bitwise(&d, &oracle, &format!("profiled flood n={n}"));
+    }
+    // The second pass of the flood was bitwise-identical submissions:
+    // with 16 cache entries for 6 distinct pencils every repeat is a hit,
+    // so exactly one reduction ran per distinct pencil — the cache key
+    // (which carries the tuned effective config) neither aliased two
+    // size classes together nor split one pencil into misses.
+    assert_eq!(queue.router().stats().reduced_total(), pool.len() as u64);
+    queue.shutdown();
+}
+
+/// Cache keys stay sound when tuned geometry differs across size classes
+/// and changes under a live reload: re-reducing a pencil after a reload
+/// that changed its effective config re-executes (new key) and matches
+/// the *new* oracle; reloading back restores hits against the original
+/// entry. A stale or mislabeled entry would fail the bitwise gate.
+#[test]
+fn cache_stays_sound_across_reloads_that_retune_a_size() {
+    let profile = two_class_profile();
+    let cfg = ServeConfig {
+        shards: 1,
+        cache_entries: 8,
+        base: Config { r: 8, p: 4, q: 4, ..Config::default() },
+        profile: None, // start untuned
+        ..ServeConfig::default()
+    };
+    let base = cfg.base.clone();
+    let router = ShardRouter::new(cfg).unwrap();
+    let mut rng = Rng::new(0x0C0DE);
+    let p = random_pencil(24, &mut rng);
+
+    // Untuned: base geometry (r=8,p=4,q=4).
+    let d0 = router.reduce(&p.a, &p.b).unwrap();
+    let o0 = reduce_seq(&p.a, &p.b, &base.clipped_for(24)).unwrap();
+    assert_bitwise(&d0, &o0, "untuned first pass");
+    assert_eq!(router.stats().reduced_total(), 1);
+
+    // Reload: n=24 now retunes to class 1's geometry — same pencil, new
+    // effective config, so the cached untuned entry must NOT be served.
+    router.reload_profile(Some(profile.clone())).unwrap();
+    let d1 = router.reduce(&p.a, &p.b).unwrap();
+    let o1 = reduce_seq(&p.a, &p.b, &profile.apply(&base, 24).clipped_for(24)).unwrap();
+    assert_bitwise(&d1, &o1, "tuned second pass");
+    assert_eq!(router.stats().reduced_total(), 2, "retuned config is a distinct cache key");
+
+    // Reload back to untuned: the original entry is still valid for the
+    // base effective config and must be served without re-executing.
+    router.reload_profile(None).unwrap();
+    let d2 = router.reduce(&p.a, &p.b).unwrap();
+    assert_bitwise(&d2, &o0, "untuned third pass");
+    assert_eq!(router.stats().reduced_total(), 2, "restored config hits the original entry");
+
+    // An invalid reload is rejected with a typed error and changes
+    // nothing: the tier keeps serving under the last good profile.
+    let mut bad = profile.clone();
+    bad.classes[0].r = bad.classes[0].n_min; // r >= n_min
+    assert!(matches!(router.reload_profile(Some(bad)).unwrap_err(), Error::Config(_)));
+    let d3 = router.reduce(&p.a, &p.b).unwrap();
+    assert_bitwise(&d3, &o0, "after rejected reload");
+}
+
+/// End-to-end: run the tuner, persist the profile, load it from disk the
+/// way a serving process would, and verify the tier serves bitwise under
+/// the tuned configs — the full record → search → save → load → serve
+/// loop the `tune` CLI subcommand wires together.
+#[test]
+fn tuner_profile_survives_disk_and_serves_bitwise() {
+    let base = Config { r: 8, p: 4, q: 4, ..Config::default() };
+    let opts = TuneOptions { sizes: vec![16, 28], threads: 2, budget: 2, seed: 0xD15C };
+    let (profile, _reports) = Autotuner::new(base.clone(), opts).unwrap().run().unwrap();
+    let path = temp_path("end_to_end");
+    profile.save(&path).unwrap();
+    let loaded = TunedProfile::load_or_warn(path.to_str().unwrap())
+        .expect("freshly saved profile loads");
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(loaded, profile);
+
+    let cfg = ServeConfig {
+        shards: 2,
+        base: base.clone(),
+        profile: Some(loaded.clone()),
+        ..ServeConfig::default()
+    };
+    let router = ShardRouter::new(cfg).unwrap();
+    let mut rng = Rng::new(0xE2E);
+    for n in [2usize, 7, 16, 28, 40] {
+        let p = random_pencil(n, &mut rng);
+        let d = router.reduce(&p.a, &p.b).unwrap();
+        let eff = loaded.apply(&base, n).clipped_for(n);
+        let oracle = reduce_seq(&p.a, &p.b, &eff).unwrap();
+        assert_bitwise(&d, &oracle, &format!("tuned-from-disk n={n}"));
+    }
+}
